@@ -1,0 +1,15 @@
+//! Characterization campaign (paper §3): reproduces Figure 1 and Table 1 by
+//! probing a simulated shared cluster with hundreds of sampling jobs.
+//!
+//! `cargo run --release --example characterize -- --fast false` runs the
+//! full-size campaign (392 + 107 + 27 jobs).
+
+use falcon::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let t0 = std::time::Instant::now();
+    println!("{}", falcon::reports::generate("fig1", &args));
+    println!("{}", falcon::reports::generate("tab1", &args));
+    println!("(campaign took {:.1}s)", t0.elapsed().as_secs_f64());
+}

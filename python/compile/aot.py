@@ -1,0 +1,162 @@
+"""AOT compile path: lower the L2/L1 computations to HLO **text** artifacts.
+
+This is the only place Python runs in the whole system; the Rust coordinator
+(`rust/src/runtime`) loads the emitted ``artifacts/*.hlo.txt`` via
+``HloModuleProto::from_text_file`` and executes them on the PJRT CPU client.
+
+HLO *text* — not ``.serialize()`` — is the interchange format: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Artifacts per model preset (``tiny``/``small``/``base``/``gpt2s``):
+
+* ``train_step_<p>.hlo.txt``   fused fwd+bwd+SGD step (single-replica path)
+* ``grad_step_<p>.hlo.txt``    fwd+bwd only -> (loss, grads) for DP workers
+* ``apply_update_<p>.hlo.txt`` optimizer update after the Rust all-reduce
+* ``forward_<p>.hlo.txt``      logits-only inference (used by examples)
+* ``params_<p>.bin``           initial parameters, raw little-endian f32
+* ``<name>.meta.json``         sidecar: shapes, arg order, hyperparams
+
+Plus one shared ``gemm_bench.hlo.txt`` for FALCON-DETECT's computation
+validation.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import struct
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels.gemm_bench import gemm_bench
+
+GEMM_BENCH_N = 256
+GEMM_BENCH_ITERS = 8
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _write(path: str, text: str) -> None:
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  wrote {path} ({len(text)} chars)")
+
+
+def _spec(shape: Sequence[int], dtype=jnp.float32) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def emit_model_artifacts(preset: str, out_dir: str, batch: int) -> None:
+    cfg = M.PRESETS[preset]
+    shapes = [s for _, s in M.param_specs(cfg)]
+    names = [n for n, _ in M.param_specs(cfg)]
+    p_specs = [_spec(s) for s in shapes]
+    tok_spec = _spec((batch, cfg.n_ctx), jnp.int32)
+
+    # --- fused train step ---------------------------------------------------
+    step = M.make_train_step(cfg)
+    lowered = jax.jit(step).lower(p_specs, p_specs, tok_spec, tok_spec)
+    _write(os.path.join(out_dir, f"train_step_{preset}.hlo.txt"), to_hlo_text(lowered))
+
+    # --- DP split: grad step + apply update ---------------------------------
+    grad = M.make_grad_step(cfg)
+    lowered = jax.jit(grad).lower(p_specs, tok_spec, tok_spec)
+    _write(os.path.join(out_dir, f"grad_step_{preset}.hlo.txt"), to_hlo_text(lowered))
+
+    apply_u = M.make_apply_update(cfg)
+    lowered = jax.jit(apply_u).lower(p_specs, p_specs, p_specs)
+    _write(os.path.join(out_dir, f"apply_update_{preset}.hlo.txt"), to_hlo_text(lowered))
+
+    # --- forward (inference) -------------------------------------------------
+    fwd = lambda params, tokens: (M.forward(cfg, params, tokens),)
+    lowered = jax.jit(fwd).lower(p_specs, tok_spec)
+    _write(os.path.join(out_dir, f"forward_{preset}.hlo.txt"), to_hlo_text(lowered))
+
+    # --- initial parameters ---------------------------------------------------
+    params = M.init_params(cfg, seed=0)
+    flat = np.concatenate([np.asarray(p, dtype=np.float32).ravel() for p in params])
+    bin_path = os.path.join(out_dir, f"params_{preset}.bin")
+    flat.tofile(bin_path)
+    print(f"  wrote {bin_path} ({flat.nbytes} bytes, {flat.size} f32)")
+
+    meta = {
+        "preset": preset,
+        "config": dataclasses.asdict(cfg),
+        "batch": batch,
+        "n_params": int(flat.size),
+        "param_names": names,
+        "param_shapes": [list(s) for s in shapes],
+        "arg_order": {
+            "train_step": "params..., momenta..., tokens(i32), targets(i32)",
+            "grad_step": "params..., tokens(i32), targets(i32)",
+            "apply_update": "params..., momenta..., grads...",
+            "forward": "params..., tokens(i32)",
+        },
+        "returns": {
+            "train_step": "(loss, grad_norm, params'..., momenta'...)",
+            "grad_step": "(loss, grads...)",
+            "apply_update": "(params'..., momenta'...)",
+            "forward": "(logits,)",
+        },
+    }
+    with open(os.path.join(out_dir, f"model_{preset}.meta.json"), "w") as f:
+        json.dump(meta, f, indent=2)
+    print(f"  wrote model_{preset}.meta.json  ({preset}: {cfg.n_params():,} params)")
+
+
+def emit_gemm_bench(out_dir: str) -> None:
+    spec = _spec((GEMM_BENCH_N, GEMM_BENCH_N))
+    fn = lambda x, w: gemm_bench(x, w, iters=GEMM_BENCH_ITERS)
+    lowered = jax.jit(fn).lower(spec, spec)
+    _write(os.path.join(out_dir, "gemm_bench.hlo.txt"), to_hlo_text(lowered))
+    meta = {
+        "n": GEMM_BENCH_N,
+        "iters": GEMM_BENCH_ITERS,
+        "flops_per_call": 2 * GEMM_BENCH_N**3 * GEMM_BENCH_ITERS,
+        "args": "x(f32 n,n), w(f32 n,n)",
+        "returns": "(out, checksum)",
+    }
+    with open(os.path.join(out_dir, "gemm_bench.meta.json"), "w") as f:
+        json.dump(meta, f, indent=2)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--presets", default="tiny,small,base",
+                    help="comma-separated model presets to emit")
+    ap.add_argument("--batch", type=int, default=4, help="micro-batch size baked into HLO")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    emit_gemm_bench(args.out_dir)
+    for preset in args.presets.split(","):
+        preset = preset.strip()
+        if not preset:
+            continue
+        print(f"[aot] preset {preset}")
+        emit_model_artifacts(preset, args.out_dir, args.batch)
+    # Stamp file lets `make` skip re-lowering when inputs are unchanged.
+    with open(os.path.join(args.out_dir, ".stamp"), "w") as f:
+        f.write("ok\n")
+    print("[aot] done")
+
+
+if __name__ == "__main__":
+    main()

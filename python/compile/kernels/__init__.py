@@ -1,0 +1,23 @@
+"""Layer-1 Pallas kernels for the FALCON reproduction.
+
+All kernels are authored for TPU-style execution (VMEM tiling, MXU-shaped
+blocks) but lowered with ``interpret=True`` so the AOT HLO runs on the CPU
+PJRT client used by the Rust coordinator.  Correctness oracles live in
+:mod:`.ref`.
+"""
+
+from .matmul import (
+    tiled_matmul,
+    matmul_block_vmem_bytes,
+    matmul_mxu_utilization,
+)
+from .attention import fused_attention
+from .gemm_bench import gemm_bench
+
+__all__ = [
+    "tiled_matmul",
+    "fused_attention",
+    "gemm_bench",
+    "matmul_block_vmem_bytes",
+    "matmul_mxu_utilization",
+]

@@ -1,0 +1,170 @@
+"""Fused attention Pallas kernel (Layer 1).
+
+Implements the scaled-dot-product attention core ``softmax(QK^T / sqrt(d) +
+causal_mask) V`` for one (batch*head) slice, fused so the ``S = QK^T`` score
+matrix never round-trips to HBM.
+
+Hardware adaptation: the CUDA lineage here is FlashAttention — threadblocks
+stream K/V tiles through shared memory and keep running softmax statistics
+in registers.  The TPU rethink:
+
+* grid = (batch*heads, q_blocks); each step holds one q tile plus the full
+  K/V for that head in VMEM (context lengths in this repro are small enough
+  that K/V fit comfortably; the BlockSpec expresses the HBM->VMEM schedule
+  that threadblock tiling expressed in CUDA).
+* the numerically-stable softmax (row max subtraction) happens on VPU
+  registers between the two MXU contractions (QK^T, then PV).
+* causal masking is applied with ``broadcasted_iota`` — TPU requires >=2D
+  iota, another place where a mechanical CUDA port would fail.
+
+``interpret=True`` as everywhere; see matmul.py for why.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _attention_kernel(q_ref, k_ref, v_ref, o_ref, *, scale: float, causal: bool, bq: int):
+    """One (bh, qi) grid step over a (bq, d) query tile."""
+    qi = pl.program_id(1)
+    q = q_ref[0]  # (bq, d)
+    k = k_ref[0]  # (s, d)
+    v = v_ref[0]  # (s, d)
+
+    # MXU contraction #1: scores.
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # (bq, s)
+
+    if causal:
+        q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        k_pos = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(q_pos >= k_pos, s, jnp.float32(-1e30))
+
+    # Numerically-stable softmax on the VPU.
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    p = p / l
+
+    # MXU contraction #2: weighted values.
+    o_ref[0] = jnp.dot(p.astype(v.dtype), v, preferred_element_type=jnp.float32).astype(
+        o_ref.dtype
+    )
+
+
+def _attention_fwd_pallas(q, k, v, causal: bool, block_q: int):
+    bh, s, d = q.shape
+    from .matmul import pick_block
+
+    bq = pick_block(s, block_q)
+    scale = 1.0 / math.sqrt(d)
+
+    return pl.pallas_call(
+        functools.partial(_attention_kernel, scale=scale, causal=causal, bq=bq),
+        grid=(bh, s // bq),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, s, d), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, s, d), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, d), q.dtype),
+        interpret=True,
+    )(q, k, v)
+
+
+def _attention_bwd_kernel(q_ref, k_ref, v_ref, do_ref, dq_ref, dk_ref, dv_ref, *,
+                          scale: float, causal: bool):
+    """Backward pass, one head per grid step (full-seq tiles in VMEM).
+
+    Recomputes the probability matrix (rematerialization — the fused forward
+    never wrote it to HBM) and applies the standard softmax-attention VJP:
+      dV = P^T dO;  dP = dO V^T;  dS = P*(dP - rowsum(dP*P));
+      dQ = dS K * scale;  dK = dS^T Q * scale.
+    """
+    q = q_ref[0]
+    k = k_ref[0]
+    v = v_ref[0]
+    do = do_ref[0]
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    if causal:
+        q_pos = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        k_pos = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(q_pos >= k_pos, s, jnp.float32(-1e30))
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+
+    dv = jnp.dot(p.T, do.astype(jnp.float32), preferred_element_type=jnp.float32)
+    dp = jnp.dot(do.astype(jnp.float32), v.T, preferred_element_type=jnp.float32)
+    ds = p * (dp - jnp.sum(dp * p, axis=-1, keepdims=True))
+    dq = jnp.dot(ds, k.astype(jnp.float32), preferred_element_type=jnp.float32) * scale
+    dk = jnp.dot(ds.T, q.astype(jnp.float32), preferred_element_type=jnp.float32) * scale
+
+    dq_ref[0] = dq.astype(dq_ref.dtype)
+    dk_ref[0] = dk.astype(dk_ref.dtype)
+    dv_ref[0] = dv.astype(dv_ref.dtype)
+
+
+def _attention_bwd_pallas(q, k, v, do, causal: bool):
+    bh, s, d = q.shape
+    scale = 1.0 / math.sqrt(d)
+    full = pl.BlockSpec((1, s, d), lambda b: (b, 0, 0))
+    return pl.pallas_call(
+        functools.partial(_attention_bwd_kernel, scale=scale, causal=causal),
+        grid=(bh,),
+        in_specs=[full, full, full, full],
+        out_specs=[full, full, full],
+        out_shape=[jax.ShapeDtypeStruct((bh, s, d), q.dtype)] * 3,
+        interpret=True,
+    )(q, k, v, do)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def _fused_attention(q, k, v, causal, block_q):
+    return _attention_fwd_pallas(q, k, v, causal, block_q)
+
+
+def _fused_attention_fwd(q, k, v, causal, block_q):
+    return _attention_fwd_pallas(q, k, v, causal, block_q), (q, k, v)
+
+
+def _fused_attention_bwd(causal, block_q, res, g):
+    q, k, v = res
+    dq, dk, dv = _attention_bwd_pallas(q, k, v, g, causal)
+    return dq, dk, dv
+
+
+_fused_attention.defvjp(_fused_attention_fwd, _fused_attention_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q"))
+def fused_attention(q, k, v, *, causal: bool = True, block_q: int = 128):
+    """Fused attention over ``(bh, s, d)`` tensors.
+
+    Args:
+      q, k, v: ``(batch*heads, seq, head_dim)`` arrays, same dtype.
+      causal: apply a causal mask.
+      block_q: query-tile rows per grid step (clamped to a divisor of seq).
+
+    Differentiable: the VJP is itself a Pallas kernel that rematerializes
+    the probability matrix per head.
+    """
+    bh, s, d = q.shape
+    assert k.shape == (bh, s, d) and v.shape == (bh, s, d)
+    return _fused_attention(q, k, v, causal, block_q)
+
+
+def attention_vmem_bytes(bq: int, s: int, d: int, dtype_bytes: int = 4) -> int:
+    """VMEM-resident bytes per grid step (q tile + K + V + scores + out)."""
+    q_tile = bq * d * dtype_bytes
+    kv = 2 * s * d * dtype_bytes
+    scores = bq * s * 4
+    out = bq * d * 4
+    return 2 * (q_tile + kv) + scores + out

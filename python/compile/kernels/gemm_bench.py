@@ -1,0 +1,40 @@
+"""GEMM validation-benchmark kernel (Layer 1).
+
+FALCON-DETECT's computation validation (§4.3) dispatches "standard GEMM
+tests" to every GPU in a suspicious group and flags devices whose measured
+time is an outlier.  This module provides that benchmark computation as an
+AOT artifact: a fixed-size chained GEMM with enough arithmetic depth that
+its wallclock is compute-bound rather than dispatch-bound, built on the same
+tiled Pallas matmul the model uses.
+
+The Rust TestDispatcher loads ``artifacts/gemm_bench.hlo.txt`` once and
+executes it per (simulated) device, timing each run.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .matmul import tiled_matmul
+
+
+@functools.partial(jax.jit, static_argnames=("iters",))
+def gemm_bench(x, w, *, iters: int = 4):
+    """``iters`` chained square GEMMs: x <- normalize(x @ w).
+
+    Normalization keeps magnitudes bounded so repeated application is
+    numerically safe, and adds a VPU phase between MXU phases, mimicking the
+    mixed profile of a transformer block.
+    """
+    def body(i, acc):
+        y = tiled_matmul(acc, w)
+        # Rough row-scale normalization to keep values in range.
+        scale = jnp.max(jnp.abs(y)) + 1e-6
+        return y / scale
+
+    out = jax.lax.fori_loop(0, iters, body, x)
+    # Scalar checksum lets the Rust side validate numerics cheaply.
+    return out, jnp.sum(out)

@@ -1,0 +1,46 @@
+"""Pure-jnp correctness oracles for the Layer-1 Pallas kernels.
+
+Every kernel in this package has a reference implementation here written
+with plain ``jax.numpy`` ops only (no Pallas), used by pytest/hypothesis to
+assert numerical equivalence.  These are the CORE correctness signal for the
+compute layer: if kernel == ref and ref is obviously right, the AOT HLO the
+Rust coordinator executes is right.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(x, y):
+    """Oracle for :func:`kernels.matmul.tiled_matmul`."""
+    return jnp.matmul(x, y)
+
+
+def attention_ref(q, k, v, *, causal: bool = True):
+    """Oracle for :func:`kernels.attention.fused_attention`.
+
+    Materializes the full score matrix — exactly what the fused kernel
+    avoids — so agreement demonstrates the fusion preserves semantics.
+    """
+    bh, s, d = q.shape
+    scale = 1.0 / math.sqrt(d)
+    scores = jnp.einsum("bqd,bkd->bqk", q, k).astype(jnp.float32) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+        scores = jnp.where(mask[None, :, :], scores, jnp.float32(-1e30))
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", probs.astype(v.dtype), v).astype(q.dtype)
+
+
+def gemm_bench_ref(x, w, *, iters: int = 4):
+    """Oracle for :func:`kernels.gemm_bench.gemm_bench`."""
+    acc = x
+    for _ in range(iters):
+        y = jnp.matmul(acc, w)
+        scale = jnp.max(jnp.abs(y)) + 1e-6
+        acc = y / scale
+    return acc, jnp.sum(acc)

@@ -1,0 +1,225 @@
+"""Layer-2: GPT-2-style transformer train step in JAX (build-time only).
+
+The FALCON paper trains GPT-2 variants (7B/11B/13B) with Megatron-LM.  This
+module is the CPU-feasible twin: the same architecture family (pre-LN
+transformer decoder, learned positions, tied LM head) at configurable size,
+with forward, cross-entropy loss, backward, and an SGD-with-momentum update
+fused into a single jitted ``train_step`` that the Rust coordinator executes
+via PJRT after AOT lowering.
+
+All dense projections route through the Layer-1 Pallas ``tiled_matmul`` and
+the attention core through ``fused_attention``, so the kernels lower into
+the very HLO the Rust side runs.
+
+Parameters are a flat list of arrays (ordered by :func:`param_specs`), which
+keeps the Rust-side buffer management trivial: the train step takes
+``(*params, *opt_state, tokens, targets)`` and returns
+``(loss, *new_params, *new_opt_state)``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.matmul import tiled_matmul
+from .kernels.attention import fused_attention
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """GPT-2-family hyperparameters."""
+
+    vocab: int = 256          # char-level vocabulary
+    n_ctx: int = 64           # context length
+    n_layer: int = 4
+    n_head: int = 4
+    d_model: int = 128
+    d_ff: int = 512
+    lr: float = 0.1
+    momentum: float = 0.9
+    grad_clip: float = 1.0
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_head == 0
+        return self.d_model // self.n_head
+
+    def n_params(self) -> int:
+        return sum(int(math.prod(s)) for _, s in param_specs(self))
+
+
+# Preset sizes referenced by the Makefile / Rust config system.
+PRESETS = {
+    # ~0.8M params: unit-test scale, instant on CPU.
+    "tiny": ModelConfig(vocab=96, n_ctx=32, n_layer=2, n_head=2, d_model=64, d_ff=256),
+    # ~3.3M params: default live-trainer scale (fast enough for hundreds of
+    # steps x D data-parallel replicas on CPU).
+    "small": ModelConfig(vocab=256, n_ctx=64, n_layer=4, n_head=4, d_model=192, d_ff=768),
+    # ~12.7M params: the EXPERIMENTS.md end-to-end run.
+    "base": ModelConfig(vocab=256, n_ctx=128, n_layer=6, n_head=8, d_model=384, d_ff=1536),
+    # ~85M params: GPT-2-small-class; a few steps only, proves scale path.
+    "gpt2s": ModelConfig(vocab=512, n_ctx=256, n_layer=12, n_head=12, d_model=768, d_ff=3072),
+}
+
+
+def param_specs(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Ordered (name, shape) list defining the flat parameter layout."""
+    specs: List[Tuple[str, Tuple[int, ...]]] = [
+        ("wte", (cfg.vocab, cfg.d_model)),
+        ("wpe", (cfg.n_ctx, cfg.d_model)),
+    ]
+    for l in range(cfg.n_layer):
+        specs += [
+            (f"h{l}.ln1_g", (cfg.d_model,)),
+            (f"h{l}.ln1_b", (cfg.d_model,)),
+            (f"h{l}.qkv_w", (cfg.d_model, 3 * cfg.d_model)),
+            (f"h{l}.qkv_b", (3 * cfg.d_model,)),
+            (f"h{l}.proj_w", (cfg.d_model, cfg.d_model)),
+            (f"h{l}.proj_b", (cfg.d_model,)),
+            (f"h{l}.ln2_g", (cfg.d_model,)),
+            (f"h{l}.ln2_b", (cfg.d_model,)),
+            (f"h{l}.fc_w", (cfg.d_model, cfg.d_ff)),
+            (f"h{l}.fc_b", (cfg.d_ff,)),
+            (f"h{l}.out_w", (cfg.d_ff, cfg.d_model)),
+            (f"h{l}.out_b", (cfg.d_model,)),
+        ]
+    specs += [("lnf_g", (cfg.d_model,)), ("lnf_b", (cfg.d_model,))]
+    # LM head tied to wte — no extra matrix.
+    return specs
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> List[jax.Array]:
+    """GPT-2-style init: N(0, 0.02), residual projections scaled by depth."""
+    key = jax.random.PRNGKey(seed)
+    params = []
+    resid_scale = 0.02 / math.sqrt(2 * cfg.n_layer)
+    for name, shape in param_specs(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith(("_g",)):
+            params.append(jnp.ones(shape, jnp.float32))
+        elif name.endswith(("_b",)):
+            params.append(jnp.zeros(shape, jnp.float32))
+        elif name.endswith(("proj_w", "out_w")):
+            params.append(jax.random.normal(sub, shape, jnp.float32) * resid_scale)
+        else:
+            params.append(jax.random.normal(sub, shape, jnp.float32) * 0.02)
+    return params
+
+
+def _layer_norm(x, g, b, eps: float = 1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * g + b
+
+
+def _dense(x, w, b):
+    """(B, T, C_in) @ (C_in, C_out) through the Pallas tiled matmul."""
+    B, T, C = x.shape
+    y = tiled_matmul(x.reshape(B * T, C), w)
+    return y.reshape(B, T, w.shape[1]) + b
+
+
+def forward(cfg: ModelConfig, params: List[jax.Array], tokens: jax.Array) -> jax.Array:
+    """Logits for ``tokens`` of shape (B, T)."""
+    it = iter(params)
+    wte, wpe = next(it), next(it)
+    B, T = tokens.shape
+    x = wte[tokens] + wpe[:T][None, :, :]
+    for _ in range(cfg.n_layer):
+        ln1_g, ln1_b = next(it), next(it)
+        qkv_w, qkv_b = next(it), next(it)
+        proj_w, proj_b = next(it), next(it)
+        ln2_g, ln2_b = next(it), next(it)
+        fc_w, fc_b = next(it), next(it)
+        out_w, out_b = next(it), next(it)
+
+        h = _layer_norm(x, ln1_g, ln1_b)
+        qkv = _dense(h, qkv_w, qkv_b)  # (B, T, 3C)
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+
+        def heads(t):  # (B, T, C) -> (B*H, T, dh)
+            return (
+                t.reshape(B, T, cfg.n_head, cfg.d_head)
+                .transpose(0, 2, 1, 3)
+                .reshape(B * cfg.n_head, T, cfg.d_head)
+            )
+
+        att = fused_attention(heads(q), heads(k), heads(v), causal=True)
+        att = (
+            att.reshape(B, cfg.n_head, T, cfg.d_head)
+            .transpose(0, 2, 1, 3)
+            .reshape(B, T, cfg.d_model)
+        )
+        x = x + _dense(att, proj_w, proj_b)
+
+        h = _layer_norm(x, ln2_g, ln2_b)
+        h = _dense(h, fc_w, fc_b)
+        h = jax.nn.gelu(h)
+        x = x + _dense(h, out_w, out_b)
+
+    lnf_g, lnf_b = next(it), next(it)
+    x = _layer_norm(x, lnf_g, lnf_b)
+    # Tied LM head.
+    logits = tiled_matmul(x.reshape(B * T, cfg.d_model), wte.T)
+    return logits.reshape(B, T, cfg.vocab)
+
+
+def loss_fn(cfg: ModelConfig, params: List[jax.Array], tokens, targets) -> jax.Array:
+    """Mean next-token cross-entropy."""
+    logits = forward(cfg, params, tokens)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+def make_train_step(cfg: ModelConfig):
+    """Returns ``step(params, momenta, tokens, targets) -> (loss, grad_norm, params', momenta')``.
+
+    SGD with momentum + global-norm clipping.  The learning rate is baked at
+    trace time (cfg.lr); the Rust side treats the whole update as opaque.
+    """
+
+    def step(params, momenta, tokens, targets):
+        loss, grads = jax.value_and_grad(lambda p: loss_fn(cfg, p, tokens, targets))(params)
+        gnorm = jnp.sqrt(sum(jnp.sum(g * g) for g in grads))
+        scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-6))
+        new_m = [cfg.momentum * m + g * scale for m, g in zip(momenta, grads)]
+        new_p = [p - cfg.lr * m for p, m in zip(params, new_m)]
+        return loss, gnorm, new_p, new_m
+
+    return step
+
+
+def make_grad_step(cfg: ModelConfig):
+    """Returns ``grad(params, tokens, targets) -> (loss, *grads)``.
+
+    Used by the data-parallel live trainer: each DP worker computes local
+    gradients via this artifact, the Rust coordinator all-reduces them (real
+    f32 tree reduction in rust/src/collectives), then applies the update via
+    the ``apply_update`` artifact.  Splitting grad/update around the
+    all-reduce is exactly how Megatron-style DP composes.
+    """
+
+    def grad_step(params, tokens, targets):
+        loss, grads = jax.value_and_grad(lambda p: loss_fn(cfg, p, tokens, targets))(params)
+        return (loss, *grads)
+
+    return grad_step
+
+
+def make_apply_update(cfg: ModelConfig):
+    """Returns ``apply(params, momenta, grads) -> (*params', *momenta')``."""
+
+    def apply(params, momenta, grads):
+        gnorm = jnp.sqrt(sum(jnp.sum(g * g) for g in grads))
+        scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-6))
+        new_m = [cfg.momentum * m + g * scale for m, g in zip(momenta, grads)]
+        new_p = [p - cfg.lr * m for p, m in zip(params, new_m)]
+        return (*new_p, *new_m)
+
+    return apply

@@ -1,0 +1,252 @@
+"""Kernel-vs-oracle correctness: the CORE compute-layer signal.
+
+Hypothesis sweeps shapes/dtypes of the Pallas kernels and asserts
+``assert_allclose`` against the pure-jnp oracles in ``compile.kernels.ref``.
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.matmul import (
+    tiled_matmul,
+    pick_block,
+    matmul_block_vmem_bytes,
+    matmul_mxu_utilization,
+    matmul_arithmetic_intensity,
+    MXU_DIM,
+    VMEM_BUDGET,
+)
+from compile.kernels.attention import fused_attention, attention_vmem_bytes
+from compile.kernels.gemm_bench import gemm_bench
+from compile.kernels import ref
+
+
+def rand(key, shape, dtype=jnp.float32, scale=1.0):
+    return (jax.random.normal(jax.random.PRNGKey(key), shape) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# tiled_matmul
+# ---------------------------------------------------------------------------
+
+
+class TestTiledMatmul:
+    @pytest.mark.parametrize(
+        "m,k,n", [(4, 4, 4), (16, 32, 8), (128, 128, 128), (48, 96, 64), (256, 64, 192)]
+    )
+    def test_matches_oracle(self, m, k, n):
+        x, y = rand(0, (m, k)), rand(1, (k, n))
+        np.testing.assert_allclose(
+            tiled_matmul(x, y), ref.matmul_ref(x, y), rtol=1e-5, atol=1e-5
+        )
+
+    @pytest.mark.parametrize("bm,bk,bn", [(8, 8, 8), (16, 32, 8), (64, 64, 64)])
+    def test_block_shape_invariance(self, bm, bk, bn):
+        """Result must not depend on the chosen tiling."""
+        x, y = rand(2, (64, 64)), rand(3, (64, 64))
+        base = tiled_matmul(x, y)
+        np.testing.assert_allclose(
+            tiled_matmul(x, y, bm=bm, bk=bk, bn=bn), base, rtol=1e-5, atol=1e-5
+        )
+
+    def test_non_square(self):
+        x, y = rand(4, (8, 256)), rand(5, (256, 8))
+        np.testing.assert_allclose(
+            tiled_matmul(x, y), ref.matmul_ref(x, y), rtol=1e-5, atol=1e-5
+        )
+
+    def test_identity(self):
+        x = rand(6, (32, 32))
+        np.testing.assert_allclose(
+            tiled_matmul(x, jnp.eye(32)), x, rtol=1e-6, atol=1e-6
+        )
+
+    def test_vjp_matches_oracle(self):
+        x, y = rand(7, (24, 36)), rand(8, (36, 12))
+
+        def f(mm):
+            return lambda a, b: jnp.sum(jnp.sin(mm(a, b)))
+
+        g_kernel = jax.grad(f(tiled_matmul), argnums=(0, 1))(x, y)
+        g_ref = jax.grad(f(jnp.matmul), argnums=(0, 1))(x, y)
+        for a, b in zip(g_kernel, g_ref):
+            np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        m=st.integers(1, 96),
+        k=st.integers(1, 96),
+        n=st.integers(1, 96),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_property_sweep(self, m, k, n, seed):
+        """Arbitrary (possibly prime) shapes: pick_block must always tile."""
+        kx, ky = jax.random.split(jax.random.PRNGKey(seed))
+        x = jax.random.normal(kx, (m, k), jnp.float32)
+        y = jax.random.normal(ky, (k, n), jnp.float32)
+        np.testing.assert_allclose(
+            tiled_matmul(x, y), ref.matmul_ref(x, y), rtol=2e-5, atol=2e-5
+        )
+
+    @settings(max_examples=10, deadline=None)
+    @given(scale=st.sampled_from([1e-3, 1.0, 1e3]), seed=st.integers(0, 1000))
+    def test_property_magnitudes(self, scale, seed):
+        x = rand(seed, (32, 32), scale=scale)
+        y = rand(seed + 1, (32, 32), scale=scale)
+        np.testing.assert_allclose(
+            tiled_matmul(x, y), ref.matmul_ref(x, y), rtol=1e-4, atol=1e-5 * scale**2
+        )
+
+
+class TestPickBlock:
+    @settings(max_examples=50, deadline=None)
+    @given(dim=st.integers(1, 4096), target=st.integers(1, 256))
+    def test_divides_and_bounded(self, dim, target):
+        b = pick_block(dim, target)
+        assert dim % b == 0
+        assert b <= max(target, 1) or b == dim and dim <= target
+
+    def test_exact(self):
+        assert pick_block(256, 128) == 128
+        assert pick_block(192, 128) == 96
+        assert pick_block(7, 128) == 7
+
+
+# ---------------------------------------------------------------------------
+# fused_attention
+# ---------------------------------------------------------------------------
+
+
+class TestFusedAttention:
+    @pytest.mark.parametrize("bh,s,d", [(1, 8, 4), (4, 32, 16), (8, 64, 32), (2, 128, 64)])
+    def test_matches_oracle_causal(self, bh, s, d):
+        q, k, v = rand(0, (bh, s, d)), rand(1, (bh, s, d)), rand(2, (bh, s, d))
+        np.testing.assert_allclose(
+            fused_attention(q, k, v, causal=True),
+            ref.attention_ref(q, k, v, causal=True),
+            rtol=1e-4,
+            atol=1e-4,
+        )
+
+    @pytest.mark.parametrize("bh,s,d", [(2, 16, 8), (4, 64, 16)])
+    def test_matches_oracle_bidirectional(self, bh, s, d):
+        q, k, v = rand(3, (bh, s, d)), rand(4, (bh, s, d)), rand(5, (bh, s, d))
+        np.testing.assert_allclose(
+            fused_attention(q, k, v, causal=False),
+            ref.attention_ref(q, k, v, causal=False),
+            rtol=1e-4,
+            atol=1e-4,
+        )
+
+    def test_block_q_invariance(self):
+        q, k, v = rand(6, (2, 64, 16)), rand(7, (2, 64, 16)), rand(8, (2, 64, 16))
+        base = fused_attention(q, k, v, block_q=64)
+        for bq in (8, 16, 32):
+            np.testing.assert_allclose(
+                fused_attention(q, k, v, block_q=bq), base, rtol=1e-5, atol=1e-5
+            )
+
+    def test_causal_first_token_copies_v(self):
+        """Row 0 of a causal attention can only attend to position 0."""
+        q, k, v = rand(9, (1, 16, 8)), rand(10, (1, 16, 8)), rand(11, (1, 16, 8))
+        out = fused_attention(q, k, v, causal=True)
+        np.testing.assert_allclose(out[0, 0], v[0, 0], rtol=1e-5, atol=1e-5)
+
+    def test_softmax_rows_bounded(self):
+        """Output rows are convex combinations of V rows -> bounded by V."""
+        q, k, v = rand(12, (2, 32, 8)), rand(13, (2, 32, 8)), rand(14, (2, 32, 8))
+        out = np.asarray(fused_attention(q, k, v, causal=False))
+        vmin, vmax = np.min(np.asarray(v)), np.max(np.asarray(v))
+        assert out.min() >= vmin - 1e-4 and out.max() <= vmax + 1e-4
+
+    def test_vjp_matches_oracle(self):
+        q, k, v = rand(15, (2, 24, 8)), rand(16, (2, 24, 8)), rand(17, (2, 24, 8))
+
+        def loss(att):
+            return lambda a, b, c: jnp.sum(jnp.tanh(att(a, b, c)))
+
+        g_kernel = jax.grad(loss(fused_attention), argnums=(0, 1, 2))(q, k, v)
+        g_ref = jax.grad(loss(ref.attention_ref), argnums=(0, 1, 2))(q, k, v)
+        for a, b in zip(g_kernel, g_ref):
+            np.testing.assert_allclose(a, b, rtol=1e-3, atol=1e-4)
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        bh=st.integers(1, 4),
+        s=st.sampled_from([4, 8, 12, 16, 24, 32, 48]),
+        d=st.sampled_from([4, 8, 16, 32]),
+        causal=st.booleans(),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_property_sweep(self, bh, s, d, causal, seed):
+        ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+        q, k, v = (jax.random.normal(kk, (bh, s, d), jnp.float32) for kk in ks)
+        np.testing.assert_allclose(
+            fused_attention(q, k, v, causal=causal),
+            ref.attention_ref(q, k, v, causal=causal),
+            rtol=2e-4,
+            atol=2e-4,
+        )
+
+
+# ---------------------------------------------------------------------------
+# gemm_bench
+# ---------------------------------------------------------------------------
+
+
+class TestGemmBench:
+    def test_matches_oracle(self):
+        x, w = rand(20, (64, 64)), rand(21, (64, 64))
+        out_k, cs_k = gemm_bench(x, w, iters=4)
+        out_r, cs_r = ref.gemm_bench_ref(x, w, iters=4)
+        np.testing.assert_allclose(out_k, out_r, rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(cs_k, cs_r, rtol=1e-4, atol=1e-4)
+
+    def test_bounded_output(self):
+        """Normalization keeps every element in [-1, 1]."""
+        x, w = rand(22, (32, 32), scale=50.0), rand(23, (32, 32), scale=50.0)
+        out, _ = gemm_bench(x, w, iters=8)
+        assert float(jnp.max(jnp.abs(out))) <= 1.0 + 1e-5
+
+    @settings(max_examples=8, deadline=None)
+    @given(iters=st.integers(1, 6), seed=st.integers(0, 1000))
+    def test_property_iters(self, iters, seed):
+        x, w = rand(seed, (32, 32)), rand(seed + 1, (32, 32))
+        out_k, cs_k = gemm_bench(x, w, iters=iters)
+        out_r, cs_r = ref.gemm_bench_ref(x, w, iters=iters)
+        np.testing.assert_allclose(out_k, out_r, rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Analytical perf model sanity (DESIGN.md §Perf inputs)
+# ---------------------------------------------------------------------------
+
+
+class TestPerfModel:
+    def test_mxu_native_tile_is_full_utilization(self):
+        assert matmul_mxu_utilization(MXU_DIM, MXU_DIM, MXU_DIM) == 1.0
+
+    def test_small_blocks_waste_lanes(self):
+        assert matmul_mxu_utilization(64, 64, 64) == 0.125
+
+    def test_default_block_fits_vmem(self):
+        assert matmul_block_vmem_bytes(MXU_DIM, MXU_DIM, MXU_DIM) < VMEM_BUDGET
+
+    def test_vmem_monotone_in_block(self):
+        assert matmul_block_vmem_bytes(256, 128, 256) > matmul_block_vmem_bytes(
+            128, 128, 128
+        )
+
+    def test_arithmetic_intensity_grows_with_tiles(self):
+        assert matmul_arithmetic_intensity(256, 128, 256) > matmul_arithmetic_intensity(
+            64, 128, 64
+        )
+
+    def test_attention_vmem_reasonable(self):
+        # base preset head: s=128, d=48 tiles easily fit VMEM
+        assert attention_vmem_bytes(128, 128, 64) < VMEM_BUDGET

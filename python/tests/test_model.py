@@ -1,0 +1,171 @@
+"""Layer-2 model tests: shapes, loss semantics, training dynamics, DP split."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+
+CFG = M.PRESETS["tiny"]
+
+
+def make_batch(cfg, batch=2, seed=0):
+    tokens = jax.random.randint(jax.random.PRNGKey(seed), (batch, cfg.n_ctx), 0, cfg.vocab)
+    targets = jnp.roll(tokens, -1, axis=1)
+    return tokens, targets
+
+
+class TestParamLayout:
+    def test_spec_count_matches_init(self):
+        params = M.init_params(CFG)
+        assert len(params) == len(M.param_specs(CFG))
+
+    def test_shapes_match_specs(self):
+        params = M.init_params(CFG)
+        for p, (name, shape) in zip(params, M.param_specs(CFG)):
+            assert p.shape == shape, name
+
+    def test_n_params_consistent(self):
+        params = M.init_params(CFG)
+        assert sum(int(np.prod(p.shape)) for p in params) == CFG.n_params()
+
+    @pytest.mark.parametrize("preset", list(M.PRESETS))
+    def test_presets_valid(self, preset):
+        cfg = M.PRESETS[preset]
+        assert cfg.d_model % cfg.n_head == 0
+        assert cfg.n_params() > 0
+
+    def test_layernorm_gains_init_to_one(self):
+        params = M.init_params(CFG)
+        for p, (name, _) in zip(params, M.param_specs(CFG)):
+            if name.endswith("_g"):
+                assert float(jnp.min(p)) == 1.0 and float(jnp.max(p)) == 1.0
+
+
+class TestForward:
+    def test_logits_shape(self):
+        params = M.init_params(CFG)
+        tokens, _ = make_batch(CFG, batch=3)
+        logits = M.forward(CFG, params, tokens)
+        assert logits.shape == (3, CFG.n_ctx, CFG.vocab)
+
+    def test_causality(self):
+        """Changing a future token must not affect earlier logits."""
+        params = M.init_params(CFG, seed=1)
+        tokens, _ = make_batch(CFG, batch=1, seed=2)
+        logits_a = M.forward(CFG, params, tokens)
+        tokens_b = tokens.at[0, -1].set((tokens[0, -1] + 1) % CFG.vocab)
+        logits_b = M.forward(CFG, params, tokens_b)
+        half = CFG.n_ctx // 2
+        np.testing.assert_allclose(
+            logits_a[0, :half], logits_b[0, :half], rtol=1e-5, atol=1e-5
+        )
+        # ...but the last position must change.
+        assert not np.allclose(logits_a[0, -1], logits_b[0, -1], rtol=1e-3)
+
+    def test_deterministic(self):
+        params = M.init_params(CFG)
+        tokens, _ = make_batch(CFG)
+        a = M.forward(CFG, params, tokens)
+        b = M.forward(CFG, params, tokens)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+class TestLoss:
+    def test_uniform_logits_loss_is_log_vocab(self):
+        """With zeroed embeddings/head the logits are ~uniform."""
+        params = [jnp.zeros_like(p) for p in M.init_params(CFG)]
+        # restore LN gains to 1 to avoid degenerate normalization
+        for i, (name, _) in enumerate(M.param_specs(CFG)):
+            if name.endswith("_g"):
+                params[i] = jnp.ones_like(params[i])
+        tokens, targets = make_batch(CFG)
+        loss = M.loss_fn(CFG, params, tokens, targets)
+        np.testing.assert_allclose(float(loss), np.log(CFG.vocab), rtol=1e-3)
+
+    def test_loss_positive(self):
+        params = M.init_params(CFG)
+        tokens, targets = make_batch(CFG)
+        assert float(M.loss_fn(CFG, params, tokens, targets)) > 0
+
+
+class TestTrainStep:
+    def test_loss_decreases_overfit(self):
+        """A few fused steps on one batch must reduce the loss markedly."""
+        step = jax.jit(M.make_train_step(CFG))
+        params = M.init_params(CFG)
+        mom = [jnp.zeros_like(p) for p in params]
+        tokens, targets = make_batch(CFG)
+        loss0, _, params, mom = step(params, mom, tokens, targets)
+        for _ in range(15):
+            loss, _, params, mom = step(params, mom, tokens, targets)
+        assert float(loss) < 0.6 * float(loss0)
+
+    def test_grad_norm_finite_and_positive(self):
+        step = jax.jit(M.make_train_step(CFG))
+        params = M.init_params(CFG)
+        mom = [jnp.zeros_like(p) for p in params]
+        tokens, targets = make_batch(CFG)
+        _, gnorm, _, _ = step(params, mom, tokens, targets)
+        g = float(gnorm)
+        assert np.isfinite(g) and g > 0
+
+    def test_split_equals_fused(self):
+        """grad_step + apply_update must equal the fused train_step.
+
+        This is the contract the Rust DP trainer relies on: it computes
+        grads per worker, all-reduces, then applies — and the single-worker
+        case must match the fused artifact bit-for-bit (same HLO graphs).
+        """
+        fused = jax.jit(M.make_train_step(CFG))
+        grad = jax.jit(M.make_grad_step(CFG))
+        apply_u = jax.jit(M.make_apply_update(CFG))
+
+        params = M.init_params(CFG)
+        mom = [jnp.zeros_like(p) for p in params]
+        tokens, targets = make_batch(CFG)
+
+        loss_f, _, p_f, m_f = fused(params, mom, tokens, targets)
+        out = grad(params, tokens, targets)
+        loss_g, grads = out[0], list(out[1:])
+        upd = apply_u(params, mom, grads)
+        p_g, m_g = list(upd[: len(params)]), list(upd[len(params):])
+
+        np.testing.assert_allclose(float(loss_f), float(loss_g), rtol=1e-6)
+        for a, b in zip(p_f, p_g):
+            np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-7)
+        for a, b in zip(m_f, m_g):
+            np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-7)
+
+    def test_dp_grad_averaging_matches_big_batch(self):
+        """Mean of per-shard grads == grad of the concatenated batch.
+
+        Justifies the Rust all-reduce-then-average data-parallel scheme.
+        """
+        grad = jax.jit(M.make_grad_step(CFG))
+        params = M.init_params(CFG)
+        t1, y1 = make_batch(CFG, batch=2, seed=10)
+        t2, y2 = make_batch(CFG, batch=2, seed=11)
+        g1 = grad(params, t1, y1)[1:]
+        g2 = grad(params, t2, y2)[1:]
+        big = grad(params, jnp.concatenate([t1, t2]), jnp.concatenate([y1, y2]))[1:]
+        for a, b, c in zip(g1, g2, big):
+            np.testing.assert_allclose((a + b) / 2, c, rtol=1e-4, atol=1e-6)
+
+    def test_grad_clip_bounds_update(self):
+        """With clipping, ||param delta|| <= lr * clip (first step, zero momentum)."""
+        cfg = M.ModelConfig(
+            vocab=CFG.vocab, n_ctx=CFG.n_ctx, n_layer=CFG.n_layer, n_head=CFG.n_head,
+            d_model=CFG.d_model, d_ff=CFG.d_ff, lr=0.1, momentum=0.9, grad_clip=0.5,
+        )
+        step = jax.jit(M.make_train_step(cfg))
+        params = M.init_params(cfg)
+        mom = [jnp.zeros_like(p) for p in params]
+        tokens, targets = make_batch(cfg)
+        _, _, new_p, _ = step(params, mom, tokens, targets)
+        delta = np.sqrt(
+            sum(float(jnp.sum((a - b) ** 2)) for a, b in zip(new_p, params))
+        )
+        assert delta <= cfg.lr * cfg.grad_clip * 1.01

@@ -1,0 +1,80 @@
+//! Shared micro-benchmark harness (criterion is unavailable offline).
+//!
+//! `bench_fn` warms up, then runs timed batches until a target elapsed time
+//! or iteration cap, reporting mean/median/p95 per-call latency. Every
+//! `cargo bench` target links this module.
+
+use std::time::{Duration, Instant};
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub p95_ns: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>10} iters  mean {:>12}  median {:>12}  p95 {:>12}",
+            self.name,
+            self.iters,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.median_ns),
+            fmt_ns(self.p95_ns)
+        )
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} us", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Benchmark a closure. Runs for ~`budget_ms` of measurement after warm-up.
+pub fn bench_fn<T>(name: &str, budget_ms: u64, mut f: impl FnMut() -> T) -> BenchResult {
+    // Warm-up: a few calls or 10% of budget.
+    let warm_deadline = Instant::now() + Duration::from_millis(budget_ms / 10 + 1);
+    let mut warm = 0;
+    while Instant::now() < warm_deadline || warm < 2 {
+        std::hint::black_box(f());
+        warm += 1;
+        if warm > 1_000_000 {
+            break;
+        }
+    }
+
+    let mut samples: Vec<f64> = Vec::new();
+    let deadline = Instant::now() + Duration::from_millis(budget_ms);
+    let mut iters: u64 = 0;
+    while Instant::now() < deadline && samples.len() < 100_000 {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed().as_nanos() as f64);
+        iters += 1;
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = samples.iter().sum::<f64>() / samples.len().max(1) as f64;
+    let median = samples[samples.len() / 2];
+    let p95 = samples[((samples.len() as f64 * 0.95) as usize).min(samples.len() - 1)];
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_ns: mean,
+        median_ns: median,
+        p95_ns: p95,
+    }
+}
+
+/// Print a section header.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}

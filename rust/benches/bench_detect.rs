@@ -1,0 +1,65 @@
+//! Micro-benchmarks of FALCON-DETECT's hot paths: ACF period inference,
+//! BOCD per-observation cost (the R2 "linear time" claim), episode
+//! detection over full traces, and the O(1) validation plan construction.
+
+#[path = "bench_common.rs"]
+mod bench_common;
+use bench_common::{bench_fn, section};
+
+use falcon::detect::acf;
+use falcon::detect::bocd::{Bocd, BocdConfig};
+use falcon::detect::detector::detect_episodes;
+use falcon::detect::validate::{ring_plan, tree_plan};
+use falcon::util::rng::Rng;
+
+fn series(n: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|i| {
+            let level = if i > n / 2 { 1.4 } else { 1.0 };
+            level * (1.0 + 0.015 * rng.normal())
+        })
+        .collect()
+}
+
+fn main() {
+    section("ACF period inference");
+    for ops in [4usize, 8, 16] {
+        let sig: Vec<f64> = (0..2048).map(|i| (i % ops) as f64 + 1.0).collect();
+        let r = bench_fn(&format!("find_period(len=2048, period={ops})"), 300, || {
+            acf::find_period(&sig, 64, 0.95)
+        });
+        println!("{}", r.report());
+    }
+
+    section("BOCD per-observation (linear-time claim)");
+    for n in [1_000usize, 10_000, 100_000] {
+        let xs = series(n, 7);
+        let r = bench_fn(&format!("bocd stream of {n} obs"), 500, || {
+            let mut b = Bocd::new(BocdConfig::default());
+            let mut fired = 0;
+            for &x in &xs {
+                if b.push(x).is_some() {
+                    fired += 1;
+                }
+            }
+            fired
+        });
+        println!("{}  ({:.1} ns/obs)", r.report(), r.mean_ns / n as f64);
+    }
+
+    section("BOCD+V full-trace episode detection");
+    let xs = series(2_000, 9);
+    let r = bench_fn("detect_episodes(2000 obs)", 500, || {
+        detect_episodes(&xs, BocdConfig::default()).len()
+    });
+    println!("{}", r.report());
+
+    section("O(1) validation plan construction");
+    for n in [8usize, 64, 1024] {
+        let r = bench_fn(&format!("ring_plan({n})"), 200, || ring_plan(n).passes.len());
+        println!("{}", r.report());
+        let r = bench_fn(&format!("tree_plan({n})"), 200, || tree_plan(n).passes.len());
+        println!("{}", r.report());
+    }
+}

@@ -1,0 +1,30 @@
+//! Regenerates every FIGURE in the paper:
+//!   fig1 (campaign), fig2-6 (case studies), fig8 (periodicity),
+//!   fig12 (estimation accuracy), fig13-17 (mitigation), fig18 (overhead),
+//!   fig19 (ckpt paths), fig20 (64-GPU end-to-end).
+//! Pass figure ids as CLI args to run a subset.
+
+use falcon::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let only: Vec<String> = args
+        .positional
+        .iter()
+        .filter(|s| s.starts_with("fig"))
+        .cloned()
+        .collect();
+    let ids: Vec<&str> = if only.is_empty() {
+        vec![
+            "fig1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig8", "fig12",
+            "fig13", "fig14", "fig15", "fig16", "fig17", "fig18", "fig19", "fig20",
+        ]
+    } else {
+        only.iter().map(|s| s.as_str()).collect()
+    };
+    for id in ids {
+        let t0 = std::time::Instant::now();
+        println!("{}", falcon::reports::generate(id, &args));
+        println!("[{id} took {:.1}s]\n", t0.elapsed().as_secs_f64());
+    }
+}

@@ -1,0 +1,68 @@
+//! Micro-benchmarks of FALCON-MITIGATE: the exact micro-batch solver
+//! (Table 6's scaling), the topology swap-search planner, and the
+//! checkpoint paths backing S3/S4.
+
+#[path = "bench_common.rs"]
+mod bench_common;
+use bench_common::{bench_fn, section};
+
+use falcon::ckpt::{DiskStore, MemoryStore};
+use falcon::inject::{FailSlowEvent, FailSlowKind, Target};
+use falcon::mitigate::microbatch;
+use falcon::mitigate::topology;
+use falcon::pipeline::ParallelConfig;
+use falcon::sim::{demo_spec, TrainingSim};
+use falcon::util::rng::Rng;
+
+fn main() {
+    section("micro-batch solver (Table 6 scaling; paper cvxpy: 36 s at D=512)");
+    let mut rng = Rng::new(1);
+    for d in [16usize, 64, 256, 512, 2048] {
+        let times: Vec<f64> = (0..d).map(|_| 0.5 + rng.f64()).collect();
+        let r = bench_fn(&format!("solve(D={d}, M={})", d * 8), 300, || {
+            microbatch::solve(&times, d * 8).makespan
+        });
+        println!("{}", r.report());
+    }
+
+    section("topology swap-search planner");
+    for (tp, dp, pp, nodes) in [(8usize, 2usize, 2usize, 4usize), (1, 16, 4, 8)] {
+        let mut spec = demo_spec(ParallelConfig::new(tp, dp, pp), 3);
+        spec.jitter = 0.0;
+        spec.gpus_per_node = spec.cfg.world().div_ceil(nodes);
+        let mut sim = TrainingSim::new(spec);
+        sim.inject(vec![FailSlowEvent {
+            kind: FailSlowKind::NetworkCongestion,
+            target: Target::Link(0, 1),
+            start: 0,
+            duration: u64::MAX / 2,
+            scale: 0.2,
+        }]);
+        sim.step();
+        let r = bench_fn(&format!("plan({tp}T{dp}D{pp}P, {nodes} nodes)"), 400, || {
+            topology::plan(&mut sim, 1).swaps.len()
+        });
+        println!("{}", r.report());
+    }
+
+    section("checkpoint dump+load (64 MiB payload)");
+    let data: Vec<u8> = (0..64 << 20).map(|i| (i * 31) as u8).collect();
+    let mut mem = MemoryStore::new();
+    let r = bench_fn("memory round-trip 64MiB", 800, || {
+        mem.dump("b", &data);
+        let mut out = Vec::new();
+        mem.load("b", &mut out).unwrap();
+        out.len()
+    });
+    println!("{}", r.report());
+    let dir = std::env::temp_dir().join("falcon_bench_ckpt");
+    let disk = DiskStore::new(&dir).unwrap();
+    let r = bench_fn("disk round-trip 64MiB (fsync)", 1500, || {
+        disk.dump("b", &data).unwrap();
+        let mut out = Vec::new();
+        disk.load("b", &mut out).unwrap();
+        out.len()
+    });
+    println!("{}", r.report());
+    let _ = std::fs::remove_dir_all(dir);
+}

@@ -1,0 +1,79 @@
+//! Benchmarks of the PJRT execution hot path: artifact compile time, the
+//! GEMM validation benchmark per call, grad_step / apply_update latency,
+//! one full live DP iteration, and the in-process all-reduce. These are
+//! the L3 §Perf numbers in EXPERIMENTS.md.
+
+#[path = "bench_common.rs"]
+mod bench_common;
+use bench_common::{bench_fn, section};
+
+use falcon::collectives::tree_allreduce_live;
+use falcon::runtime::{literal_f32, Runtime};
+use falcon::trainer::{LiveTrainer, TrainerConfig};
+
+fn main() {
+    let dir = std::path::Path::new("artifacts");
+    if !dir.join(".stamp").exists() {
+        println!("artifacts missing — run `make artifacts` first");
+        return;
+    }
+    let rt = Runtime::new(dir).expect("runtime");
+
+    section("artifact load+compile (one-time costs)");
+    for name in ["gemm_bench", "grad_step_tiny", "apply_update_tiny"] {
+        let t0 = std::time::Instant::now();
+        let _a = rt.load(name).expect(name);
+        println!("  {:<28} {:.3} s", name, t0.elapsed().as_secs_f64());
+    }
+
+    section("GEMM validation benchmark (per dispatch)");
+    let gemm = rt.load("gemm_bench").unwrap();
+    let n = 256usize;
+    let x: Vec<f32> = (0..n * n).map(|i| ((i % 13) as f32 - 6.0) / 6.0).collect();
+    let w: Vec<f32> = (0..n * n).map(|i| ((i % 7) as f32 - 3.0) / 3.0).collect();
+    let r = bench_fn("gemm_bench(256x256 x8)", 1500, || {
+        gemm.run_f32(&[
+            literal_f32(&x, &[n as i64, n as i64]).unwrap(),
+            literal_f32(&w, &[n as i64, n as i64]).unwrap(),
+        ])
+        .unwrap()[1][0]
+    });
+    println!("{}", r.report());
+    let flops = 2.0 * (n as f64).powi(3) * 8.0;
+    println!("  -> {:.2} GFLOP/s effective", flops / (r.mean_ns / 1e9) / 1e9);
+
+    section("live trainer iteration (tiny preset, real HLO)");
+    let mut t = LiveTrainer::new(
+        &rt,
+        &TrainerConfig { preset: "tiny".into(), dp: 2, microbatches: 1, seed: 1 },
+    )
+    .unwrap();
+    let r = bench_fn("live DP iteration (dp=2, 1 mb)", 4000, || {
+        t.step().unwrap().loss
+    });
+    println!("{}", r.report());
+
+    section("in-process gradient all-reduce");
+    for n in [1usize << 16, 1 << 20] {
+        let bufs: Vec<Vec<f32>> = (0..8).map(|w| vec![w as f32; n]).collect();
+        let r = bench_fn(&format!("tree_allreduce_live(8 x {n} f32)"), 500, || {
+            tree_allreduce_live(bufs.clone())[0]
+        });
+        println!("{}", r.report());
+        let bytes = 8.0 * n as f64 * 4.0;
+        println!("  -> {:.2} GB/s reduced", bytes / (r.mean_ns / 1e9) / 1e9);
+    }
+
+    section("simulator iteration cost (at-scale feasibility)");
+    use falcon::pipeline::ParallelConfig;
+    use falcon::sim::{demo_spec, TrainingSim};
+    for (cfg, label) in [
+        (ParallelConfig::new(2, 4, 1), "8 GPUs"),
+        (ParallelConfig::new(1, 16, 4), "64 GPUs"),
+        (ParallelConfig::new(8, 32, 4), "1024 GPUs"),
+    ] {
+        let mut sim = TrainingSim::new(demo_spec(cfg, 5));
+        let r = bench_fn(&format!("sim.step() {label}"), 400, || sim.step().duration);
+        println!("{}", r.report());
+    }
+}

@@ -1,0 +1,26 @@
+//! Regenerates every TABLE in the paper's evaluation:
+//!   tab1 (root causes), tab2 (comm CoV), tab4/tab5 (detection accuracy),
+//!   tab6 (solver time), tab7 (end-to-end effectiveness).
+//! Pass a table id as the first CLI arg to run just one.
+
+use falcon::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let only: Vec<String> = args
+        .positional
+        .iter()
+        .filter(|s| s.starts_with("tab"))
+        .cloned()
+        .collect();
+    let ids: Vec<&str> = if only.is_empty() {
+        vec!["tab1", "tab2", "tab4", "tab5", "tab6", "tab7"]
+    } else {
+        only.iter().map(|s| s.as_str()).collect()
+    };
+    for id in ids {
+        let t0 = std::time::Instant::now();
+        println!("{}", falcon::reports::generate(id, &args));
+        println!("[{id} took {:.1}s]\n", t0.elapsed().as_secs_f64());
+    }
+}

@@ -1,0 +1,199 @@
+//! Checkpoint subsystem: parameter dump/restore over memory and disk.
+//!
+//! Backs two paper mechanisms: S3's lightweight parameter swap ("temporally
+//! dumping parameters into main memory ... via RDMA", §5.3) and S4's
+//! checkpoint-and-restart. Fig 19 compares the memory path (M) against the
+//! disk baseline (D) across GPU-memory-utilization levels — here measured
+//! on *real* buffers so the ratio is an honest measurement on this host —
+//! and a calibrated cost model extrapolates to paper-scale jobs (a
+//! GPT2-100B dump is ~100 minutes, §5.1).
+
+use anyhow::{Context, Result};
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+/// In-memory checkpoint store (S3's fast path).
+#[derive(Default)]
+pub struct MemoryStore {
+    slots: std::collections::HashMap<String, Vec<u8>>,
+}
+
+impl MemoryStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Dump a buffer; returns elapsed seconds.
+    pub fn dump(&mut self, key: &str, data: &[u8]) -> f64 {
+        let t0 = Instant::now();
+        self.slots.insert(key.to_string(), data.to_vec());
+        t0.elapsed().as_secs_f64()
+    }
+
+    /// Restore into a caller buffer; returns elapsed seconds.
+    pub fn load(&self, key: &str, out: &mut Vec<u8>) -> Result<f64> {
+        let t0 = Instant::now();
+        let src = self.slots.get(key).context("missing checkpoint slot")?;
+        out.clear();
+        out.extend_from_slice(src);
+        Ok(t0.elapsed().as_secs_f64())
+    }
+
+    pub fn contains(&self, key: &str) -> bool {
+        self.slots.contains_key(key)
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.slots.values().map(|v| v.len()).sum()
+    }
+}
+
+/// Disk checkpoint store (S4 / Fig 19's baseline).
+pub struct DiskStore {
+    dir: PathBuf,
+}
+
+impl DiskStore {
+    pub fn new(dir: impl AsRef<Path>) -> Result<Self> {
+        std::fs::create_dir_all(dir.as_ref())?;
+        Ok(DiskStore { dir: dir.as_ref().to_path_buf() })
+    }
+
+    fn path(&self, key: &str) -> PathBuf {
+        self.dir.join(format!("{key}.ckpt"))
+    }
+
+    /// Dump with fsync (a checkpoint that can be lost is not a checkpoint);
+    /// returns elapsed seconds.
+    pub fn dump(&self, key: &str, data: &[u8]) -> Result<f64> {
+        let t0 = Instant::now();
+        let mut f = std::fs::File::create(self.path(key))?;
+        f.write_all(data)?;
+        f.sync_all()?;
+        Ok(t0.elapsed().as_secs_f64())
+    }
+
+    pub fn load(&self, key: &str, out: &mut Vec<u8>) -> Result<f64> {
+        let t0 = Instant::now();
+        let mut f = std::fs::File::open(self.path(key))
+            .with_context(|| format!("open checkpoint {key}"))?;
+        out.clear();
+        f.read_to_end(out)?;
+        Ok(t0.elapsed().as_secs_f64())
+    }
+}
+
+/// Cost model for paper-scale checkpoints, calibrated by two effective
+/// bandwidths (bytes/sec). Defaults: host-memory dump over NVLink+PCIe
+/// ~20 GB/s; shared-filesystem dump ~3 GB/s (both per the ratios in
+/// Fig 19's ~6.7x gap once load+dump are combined).
+#[derive(Clone, Copy, Debug)]
+pub struct CkptCostModel {
+    pub mem_bw: f64,
+    pub disk_bw: f64,
+    /// Fixed orchestration cost per dump/restore (seconds).
+    pub fixed_s: f64,
+}
+
+impl Default for CkptCostModel {
+    fn default() -> Self {
+        CkptCostModel { mem_bw: 20e9, disk_bw: 3e9, fixed_s: 4.0 }
+    }
+}
+
+impl CkptCostModel {
+    pub fn mem_roundtrip_s(&self, bytes: f64) -> f64 {
+        2.0 * (bytes / self.mem_bw) + self.fixed_s
+    }
+
+    pub fn disk_roundtrip_s(&self, bytes: f64) -> f64 {
+        2.0 * (bytes / self.disk_bw) + self.fixed_s
+    }
+
+    /// Full checkpoint-restart cost for S4: dump + reschedule + restore.
+    pub fn restart_cost_s(&self, bytes: f64, reschedule_s: f64) -> f64 {
+        self.disk_roundtrip_s(bytes) + reschedule_s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn payload(n: usize, seed: u8) -> Vec<u8> {
+        (0..n).map(|i| (i as u8).wrapping_mul(31).wrapping_add(seed)).collect()
+    }
+
+    #[test]
+    fn memory_round_trip_exact() {
+        let mut store = MemoryStore::new();
+        let data = payload(1 << 20, 7);
+        store.dump("params", &data);
+        let mut out = Vec::new();
+        store.load("params", &mut out).unwrap();
+        assert_eq!(out, data);
+    }
+
+    #[test]
+    fn disk_round_trip_exact() {
+        let dir = std::env::temp_dir().join("falcon_ckpt_test");
+        let store = DiskStore::new(&dir).unwrap();
+        let data = payload(1 << 20, 9);
+        store.dump("params", &data).unwrap();
+        let mut out = Vec::new();
+        store.load("params", &mut out).unwrap();
+        assert_eq!(out, data);
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn missing_key_errors() {
+        let store = MemoryStore::new();
+        let mut out = Vec::new();
+        assert!(store.load("nope", &mut out).is_err());
+    }
+
+    #[test]
+    fn memory_faster_than_disk_on_real_buffers() {
+        // The Fig 19 direction on this host: memory round-trip beats
+        // fsync'd disk for a multi-MB buffer.
+        let dir = std::env::temp_dir().join("falcon_ckpt_bench_test");
+        let disk = DiskStore::new(&dir).unwrap();
+        let mut mem = MemoryStore::new();
+        let data = payload(8 << 20, 3);
+
+        let mut out = Vec::new();
+        let t_mem = mem.dump("p", &data) + mem.load("p", &mut out).unwrap();
+        let t_disk = disk.dump("p", &data).unwrap() + {
+            let mut o2 = Vec::new();
+            disk.load("p", &mut o2).unwrap()
+        };
+        assert!(t_mem < t_disk, "mem {t_mem} vs disk {t_disk}");
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn cost_model_paper_anchors() {
+        let m = CkptCostModel::default();
+        // GPT2-100B-class checkpoint (params+optimizer ~ 1.2 TB): disk
+        // round-trip lands in the tens-of-minutes band (§5.1 cites ~100 min
+        // for dump infrastructure; our default bw is optimistic-modern).
+        let bytes = 1.2e12;
+        let t = m.disk_roundtrip_s(bytes) / 60.0;
+        assert!(t > 10.0 && t < 120.0, "{t} min");
+        // Memory path is several times faster (Fig 19: up to 6.7x).
+        let ratio = m.disk_roundtrip_s(bytes) / m.mem_roundtrip_s(bytes);
+        assert!(ratio > 4.0 && ratio < 8.0, "ratio {ratio}");
+    }
+
+    #[test]
+    fn ratio_grows_with_size() {
+        // Fig 19: gains more pronounced at higher memory utilization
+        // (fixed costs amortize away).
+        let m = CkptCostModel::default();
+        let small = m.disk_roundtrip_s(1e9) / m.mem_roundtrip_s(1e9);
+        let large = m.disk_roundtrip_s(1e12) / m.mem_roundtrip_s(1e12);
+        assert!(large > small);
+    }
+}

@@ -1,0 +1,258 @@
+//! Collective-communication substrate (the "NCCL" of the simulator).
+//!
+//! Implements ring and tree collective topologies over rank groups, an
+//! α–β cost model evaluated against live cluster health (so congested
+//! uplinks slow exactly the collectives whose rings cross them), and the
+//! edge enumeration shared with FALCON-DETECT's O(1) validator (§4.3).
+//!
+//! The *live* trainer uses `reduce_inplace`/`tree_allreduce_live` for real
+//! f32 gradient reductions between DP worker threads.
+
+use crate::fabric::{Cluster, GpuId};
+use crate::util::rng::Rng;
+
+/// Collective op kinds logged by the monitor shim (Fig 8's vocabulary).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum CollOp {
+    AllReduce,
+    ReduceScatter,
+    AllGather,
+    Send,
+    Recv,
+    Broadcast,
+}
+
+impl CollOp {
+    pub fn name(self) -> &'static str {
+        match self {
+            CollOp::AllReduce => "AR",
+            CollOp::ReduceScatter => "RS",
+            CollOp::AllGather => "AG",
+            CollOp::Send => "SEND",
+            CollOp::Recv => "RECV",
+            CollOp::Broadcast => "BC",
+        }
+    }
+}
+
+/// Communicator topology used by a group.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Topology {
+    Ring,
+    Tree,
+}
+
+/// A communication group: ordered ranks plus their physical GPUs.
+#[derive(Clone, Debug)]
+pub struct CommGroup {
+    pub ranks: Vec<usize>,
+    pub gpus: Vec<GpuId>,
+    pub topology: Topology,
+}
+
+impl CommGroup {
+    pub fn new(ranks: Vec<usize>, gpus: Vec<GpuId>, topology: Topology) -> Self {
+        assert_eq!(ranks.len(), gpus.len());
+        CommGroup { ranks, gpus, topology }
+    }
+
+    pub fn len(&self) -> usize {
+        self.ranks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ranks.is_empty()
+    }
+
+    /// Directed edges the collective traverses.
+    ///
+    /// Ring: i -> i+1 (mod n). Tree: parent<->child edges of the binary
+    /// tree rooted at index 0 (NCCL-style rank-order tree).
+    pub fn edges(&self) -> Vec<(usize, usize)> {
+        match self.topology {
+            Topology::Ring => {
+                let n = self.len();
+                (0..n).map(|i| (i, (i + 1) % n)).collect()
+            }
+            Topology::Tree => {
+                let n = self.len();
+                let mut out = Vec::new();
+                for i in 0..n {
+                    for c in [2 * i + 1, 2 * i + 2] {
+                        if c < n {
+                            out.push((i, c));
+                        }
+                    }
+                }
+                out
+            }
+        }
+    }
+
+    /// Ring all-reduce time (seconds): 2(n-1) steps moving `bytes`/n each,
+    /// paced by the slowest edge at current health.
+    pub fn allreduce_time_s(&self, cluster: &Cluster, bytes: f64, rng: &mut Rng) -> f64 {
+        let n = self.len();
+        if n <= 1 {
+            return 0.0;
+        }
+        match self.topology {
+            Topology::Ring => {
+                let chunk = bytes / n as f64;
+                let mut worst_edge = 0.0f64;
+                // Edge times sampled with noise; steps are synchronous so the
+                // slowest edge paces every step.
+                for (a, b) in self.edges() {
+                    let t = cluster.transfer_time_nominal_s(self.gpus[a], self.gpus[b], chunk);
+                    let t = t * (1.0 + cluster.link_class(self.gpus[a], self.gpus[b]).base_cov() * rng.normal()).max(0.05);
+                    worst_edge = worst_edge.max(t);
+                }
+                2.0 * (n - 1) as f64 * worst_edge
+            }
+            Topology::Tree => {
+                // Reduce up + broadcast down: 2 * depth rounds of `bytes`.
+                let depth = (usize::BITS - (self.len()).leading_zeros()) as f64;
+                let mut worst = 0.0f64;
+                for (a, b) in self.edges() {
+                    let t = cluster.transfer_time_nominal_s(self.gpus[a], self.gpus[b], bytes);
+                    let t = t * (1.0 + cluster.link_class(self.gpus[a], self.gpus[b]).base_cov() * rng.normal()).max(0.05);
+                    worst = worst.max(t);
+                }
+                2.0 * depth * worst
+            }
+        }
+    }
+
+    /// Point-to-point transfer time between two member indices.
+    pub fn p2p_time_s(&self, cluster: &mut Cluster, from: usize, to: usize, bytes: f64, rng: &mut Rng) -> f64 {
+        cluster.transfer_time_s(self.gpus[from], self.gpus[to], bytes, rng)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Live (real-data) reductions for the in-process DP trainer.
+// ---------------------------------------------------------------------------
+
+/// Sum `src` into `dst` elementwise (the core of a real all-reduce).
+pub fn reduce_inplace(dst: &mut [f32], src: &[f32]) {
+    assert_eq!(dst.len(), src.len());
+    for (d, s) in dst.iter_mut().zip(src) {
+        *d += *s;
+    }
+}
+
+/// Real tree all-reduce over per-worker gradient buffers: pairwise sums up
+/// a binary tree then averages. Returns the averaged buffer.
+pub fn tree_allreduce_live(mut bufs: Vec<Vec<f32>>) -> Vec<f32> {
+    assert!(!bufs.is_empty());
+    let n = bufs.len();
+    let mut stride = 1;
+    while stride < n {
+        let mut i = 0;
+        while i + stride < n {
+            // Split borrow: sum bufs[i+stride] into bufs[i].
+            let (left, right) = bufs.split_at_mut(i + stride);
+            reduce_inplace(&mut left[i], &right[0]);
+            i += 2 * stride;
+        }
+        stride *= 2;
+    }
+    let inv = 1.0 / n as f32;
+    let mut out = std::mem::take(&mut bufs[0]);
+    for x in &mut out {
+        *x *= inv;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::{ClusterSpec, GpuClass};
+
+    fn group(cluster: &Cluster, ranks: &[usize], topo: Topology) -> CommGroup {
+        let gpus = ranks.iter().map(|&r| cluster.gpu_by_flat(r)).collect();
+        CommGroup::new(ranks.to_vec(), gpus, topo)
+    }
+
+    #[test]
+    fn ring_edges_close_cycle() {
+        let c = Cluster::new(ClusterSpec::new(2, 4, GpuClass::A100));
+        let g = group(&c, &[0, 1, 2, 3], Topology::Ring);
+        assert_eq!(g.edges(), vec![(0, 1), (1, 2), (2, 3), (3, 0)]);
+    }
+
+    #[test]
+    fn tree_edges_cover_all_non_roots() {
+        let c = Cluster::new(ClusterSpec::new(2, 4, GpuClass::A100));
+        let g = group(&c, &[0, 1, 2, 3, 4, 5, 6], Topology::Tree);
+        let edges = g.edges();
+        assert_eq!(edges.len(), 6); // n-1 edges
+        let mut has_parent = vec![false; 7];
+        for (_, b) in edges {
+            assert!(!has_parent[b], "single parent");
+            has_parent[b] = true;
+        }
+        assert!(!has_parent[0], "root has no parent");
+        assert!(has_parent[1..].iter().all(|&x| x));
+    }
+
+    #[test]
+    fn congested_edge_slows_ring_allreduce() {
+        let mut c = Cluster::new(ClusterSpec::new(4, 2, GpuClass::H800));
+        let mut rng = Rng::new(3);
+        // DP ring across nodes: GPUs 0,2,4,6 (one per node).
+        let g = group(&c, &[0, 2, 4, 6], Topology::Ring);
+        let healthy = g.allreduce_time_s(&c, 1e9, &mut rng);
+        c.uplinks[2].bandwidth_scale = 0.2;
+        let congested = g.allreduce_time_s(&c, 1e9, &mut rng);
+        assert!(congested > 3.0 * healthy, "{congested} vs {healthy}");
+    }
+
+    #[test]
+    fn intra_node_ring_immune_to_uplink_congestion() {
+        let mut c = Cluster::new(ClusterSpec::new(2, 4, GpuClass::H800));
+        let mut rng = Rng::new(4);
+        let g = group(&c, &[0, 1, 2, 3], Topology::Ring); // all on node 0
+        let before = g.allreduce_time_s(&c, 1e8, &mut rng);
+        c.uplinks[0].bandwidth_scale = 0.1;
+        let after = g.allreduce_time_s(&c, 1e8, &mut rng);
+        assert!((after - before).abs() / before < 0.2, "{after} vs {before}");
+    }
+
+    #[test]
+    fn allreduce_scales_with_bytes() {
+        let c = Cluster::new(ClusterSpec::new(4, 2, GpuClass::H800));
+        let mut rng = Rng::new(5);
+        let g = group(&c, &[0, 2, 4, 6], Topology::Ring);
+        let t1 = g.allreduce_time_s(&c, 1e8, &mut rng);
+        let t10 = g.allreduce_time_s(&c, 1e9, &mut rng);
+        assert!(t10 > 5.0 * t1, "{t10} vs {t1}");
+    }
+
+    #[test]
+    fn singleton_group_is_free() {
+        let c = Cluster::new(ClusterSpec::new(1, 8, GpuClass::A100));
+        let mut rng = Rng::new(6);
+        let g = group(&c, &[0], Topology::Ring);
+        assert_eq!(g.allreduce_time_s(&c, 1e9, &mut rng), 0.0);
+    }
+
+    #[test]
+    fn reduce_inplace_sums() {
+        let mut a = vec![1.0, 2.0, 3.0];
+        reduce_inplace(&mut a, &[10.0, 20.0, 30.0]);
+        assert_eq!(a, vec![11.0, 22.0, 33.0]);
+    }
+
+    #[test]
+    fn tree_allreduce_live_averages() {
+        for n in 1..=9 {
+            let bufs: Vec<Vec<f32>> = (0..n).map(|i| vec![i as f32, 2.0 * i as f32]).collect();
+            let out = tree_allreduce_live(bufs);
+            let expect0 = (0..n).map(|i| i as f32).sum::<f32>() / n as f32;
+            assert!((out[0] - expect0).abs() < 1e-5, "n={n}: {} vs {expect0}", out[0]);
+            assert!((out[1] - 2.0 * expect0).abs() < 1e-4);
+        }
+    }
+}

@@ -1,0 +1,438 @@
+//! The FALCON coordinator: GlobalController + GlobalAnalyzer (§4.1's
+//! master) driving the three-phase detection workflow and the mitigation
+//! planner against a running job.
+//!
+//! Per iteration the coordinator:
+//!  1. (tracking) feeds the measured iteration time to BOCD+V;
+//!  2. on a verified onset, runs the profiling phase (suspicious groups via
+//!     the 1.1x-median rule) and the validation phase (GEMM dispatch +
+//!     O(1) P2P passes) under a lightweight training suspension, yielding a
+//!     root cause;
+//!  3. while the episode persists, advances the ski-rental planner and
+//!     executes whatever strategy it escalates to (S1–S4) on the job.
+//!
+//! The same coordinator drives the simulator (`TrainingSim`) and, through
+//! the `Job` trait, the live PJRT trainer — the paper's R1 framework
+//! independence realized as an interface.
+
+use crate::detect::bocd::BocdConfig;
+use crate::detect::detector::Detector;
+use crate::detect::profiler::{self, GroupProfile};
+use crate::detect::validate::{self, SlowEdge, SlowGpu};
+use crate::inject::FailSlowKind;
+use crate::mitigate::microbatch;
+use crate::mitigate::planner::{MitigationPlanner, Overheads, Strategy};
+use crate::mitigate::topology;
+use crate::sim::TrainingSim;
+use crate::simkit::{from_secs, Time};
+
+/// Coordinator configuration.
+#[derive(Clone, Debug)]
+pub struct FalconConfig {
+    pub bocd: BocdConfig,
+    pub overheads: Overheads,
+    /// Run FALCON-MITIGATE (off = detection-only, the §3 probe mode).
+    pub mitigate: bool,
+    /// Cost of the brief validation suspension (trap NCCL calls, run
+    /// benches, §4.3's "lightweight training suspension").
+    pub validation_pause: Time,
+    /// Cost of an S3 topology adjustment pause (§5.3: under a minute).
+    pub topology_pause: Time,
+    /// Cost of an S4 checkpoint-restart.
+    pub restart_cost: Time,
+}
+
+impl Default for FalconConfig {
+    fn default() -> Self {
+        FalconConfig {
+            bocd: BocdConfig::default(),
+            overheads: Overheads::default(),
+            mitigate: true,
+            validation_pause: from_secs(5.0),
+            topology_pause: from_secs(45.0),
+            restart_cost: from_secs(20.0 * 60.0),
+        }
+    }
+}
+
+/// Diagnosis produced by the profiling + validation phases.
+#[derive(Clone, Debug)]
+pub struct Diagnosis {
+    pub kind: FailSlowKind,
+    pub slow_gpus: Vec<SlowGpu>,
+    pub slow_edges: Vec<SlowEdge>,
+    pub suspicious_groups: usize,
+}
+
+/// One coordinator action, for logs and figure annotations.
+#[derive(Clone, Debug)]
+pub struct Action {
+    pub at: Time,
+    pub iter: usize,
+    pub what: ActionKind,
+}
+
+#[derive(Clone, Debug)]
+pub enum ActionKind {
+    EpisodeOpened,
+    Diagnosed(Diagnosis),
+    Applied(Strategy),
+    EpisodeClosed,
+}
+
+/// The coordinator state machine.
+pub struct Falcon {
+    pub cfg: FalconConfig,
+    pub detector: Detector,
+    planner: Option<MitigationPlanner>,
+    pub diagnosis: Option<Diagnosis>,
+    pub actions: Vec<Action>,
+    restarts: usize,
+}
+
+impl Falcon {
+    pub fn new(cfg: FalconConfig) -> Self {
+        Falcon {
+            detector: Detector::new(cfg.bocd),
+            cfg,
+            planner: None,
+            diagnosis: None,
+            actions: Vec::new(),
+            restarts: 0,
+        }
+    }
+
+    /// Process one finished iteration of the simulated job.
+    pub fn on_iteration(&mut self, sim: &mut TrainingSim, iter: usize, iter_time_s: f64) {
+        let verdict = self.detector.push(iter_time_s);
+
+        match verdict {
+            Some(true) => {
+                self.actions.push(Action { at: sim.now, iter, what: ActionKind::EpisodeOpened });
+                let diag = self.diagnose(sim);
+                self.planner = Some(MitigationPlanner::new(diag.kind, self.cfg.overheads));
+                self.actions.push(Action {
+                    at: sim.now,
+                    iter,
+                    what: ActionKind::Diagnosed(diag.clone()),
+                });
+                self.diagnosis = Some(diag);
+            }
+            Some(false) => {
+                self.actions.push(Action { at: sim.now, iter, what: ActionKind::EpisodeClosed });
+                self.planner = None;
+                self.diagnosis = None;
+                if self.cfg.mitigate {
+                    // Re-solve the allocation for the *current* replica
+                    // speeds: if the underlying degradation healed this is
+                    // even again; if the relief came from S2 itself, the
+                    // skew is preserved (no oscillation).
+                    let times = sim.replica_microbatch_times();
+                    let total = sim.spec.wl.microbatches * sim.spec.cfg.dp;
+                    sim.set_microbatch_alloc(microbatch::solve(&times, total).m);
+                }
+            }
+            None => {}
+        }
+
+        if self.detector.slow_now() && self.cfg.mitigate {
+            // Compound escalation (Fig 17): a further verified upward shift
+            // inside the episode means a NEW root cause arrived — re-run
+            // profiling + validation and retarget the planner, carrying the
+            // accumulated impact forward.
+            if self.detector.take_escalation() {
+                let diag = self.diagnose(sim);
+                if self.diagnosis.as_ref().map(|d| d.kind) != Some(diag.kind) {
+                    self.planner = Some(MitigationPlanner::new(diag.kind, self.cfg.overheads));
+                }
+                self.actions.push(Action {
+                    at: sim.now,
+                    iter,
+                    what: ActionKind::Diagnosed(diag.clone()),
+                });
+                self.diagnosis = Some(diag);
+            }
+            let healthy = self.detector.baseline();
+            let escalate = self
+                .planner
+                .as_mut()
+                .and_then(|p| p.on_slow_iter(iter_time_s, healthy));
+            if let Some(strategy) = escalate {
+                self.apply(sim, iter, strategy);
+            }
+        } else if self.cfg.mitigate && iter % 20 == 19 {
+            // Housekeeping while healthy: drop stale S2 skew once the
+            // replicas are homogeneous again (episodes can close while a
+            // later-expiring event still held the skew in place).
+            let times = sim.replica_microbatch_times();
+            let total = sim.spec.wl.microbatches * sim.spec.cfg.dp;
+            let solved = microbatch::solve(&times, total).m;
+            if solved != sim.microbatch_alloc {
+                sim.set_microbatch_alloc(solved);
+            }
+        }
+    }
+
+    /// Profiling + validation under a lightweight suspension (§4.3).
+    fn diagnose(&mut self, sim: &mut TrainingSim) -> Diagnosis {
+        sim.now += self.cfg.validation_pause;
+
+        // --- profiling: find suspicious groups, per class so medians
+        // compare like with like (DP rings vs DP rings, PP chains vs PP).
+        let raw = sim.profile_groups();
+        let mut suspicious: Vec<GroupProfile> = Vec::new();
+        for class in [crate::sim::GroupClass::Dp, crate::sim::GroupClass::Pp] {
+            let set: Vec<(u64, Vec<usize>, f64)> = raw
+                .iter()
+                .filter(|g| g.class == class)
+                .map(|g| (g.id, g.ranks.clone(), g.mean_time))
+                .collect();
+            let profs = profiler::to_profiles(&set);
+            suspicious.extend(profiler::suspicious_groups(&profs, profiler::SUSPICION_FACTOR));
+        }
+        let n_suspicious = suspicious.len();
+
+        // --- validation: GEMM per candidate GPU, P2P passes per group ----
+        // When profiling finds nothing (e.g. pure computation fail-slow in a
+        // dp=1 job, or uniform degradation), validate all ranks.
+        let candidates = if suspicious.is_empty() {
+            (0..sim.spec.cfg.world()).collect()
+        } else {
+            profiler::candidate_ranks(&suspicious)
+        };
+        let mut slow_gpus = validate::validate_compute(&candidates, &mut |r| sim.bench_gpu(r));
+
+        // Communication validation: run the O(1) P2P passes over every
+        // suspicious group, pooling edge timings with the *healthy* groups
+        // of the same class as reference (a 2-member ring has no internal
+        // healthy edge to compare against — the pooled median supplies it).
+        let mut slow_edges: Vec<SlowEdge> = Vec::new();
+        if !suspicious.is_empty() {
+            let suspicious_ids: std::collections::HashSet<u64> =
+                suspicious.iter().map(|g| g.id).collect();
+            let mut measurements: Vec<(u64, usize, usize, f64)> = Vec::new();
+            for g in &raw {
+                let group = crate::collectives::CommGroup::new(
+                    g.ranks.clone(),
+                    g.ranks.iter().map(|&r| sim.grid.gpu_of(r)).collect(),
+                    crate::collectives::Topology::Ring,
+                );
+                let plan = validate::plan_for(&group);
+                for pass in &plan.passes {
+                    for &(a, b) in pass {
+                        let t = sim.bench_edge(group.ranks[a], group.ranks[b]);
+                        measurements.push((g.id, group.ranks[a], group.ranks[b], t));
+                    }
+                }
+            }
+            let all_times: Vec<f64> = measurements.iter().map(|m| m.3).collect();
+            let med = crate::util::stats::median(&all_times);
+            for (gid, from, to, t) in measurements {
+                if suspicious_ids.contains(&gid) && t > validate::SLOW_FACTOR * med {
+                    slow_edges.push(SlowEdge { from_rank: from, to_rank: to, slowdown: t / med });
+                }
+            }
+        }
+
+        // Profiling is a noisy, *relative* filter: if the narrowed
+        // validation confirmed nothing, widen to a full-job GEMM sweep
+        // before concluding (otherwise a jitter-flagged group would mask a
+        // real slow GPU elsewhere).
+        if slow_gpus.is_empty() && slow_edges.is_empty() && !suspicious.is_empty() {
+            let all: Vec<usize> = (0..sim.spec.cfg.world()).collect();
+            slow_gpus = validate::validate_compute(&all, &mut |r| sim.bench_gpu(r));
+        }
+
+        // Root cause: slow links beat slow GPUs when both appear (comm
+        // affects the whole ring); GEMM-clean + link-clean slow iterations
+        // with suspicious compute point to host (CPU) contention — exactly
+        // the paper's Case-1 reasoning.
+        let kind = if !slow_edges.is_empty() {
+            FailSlowKind::NetworkCongestion
+        } else if !slow_gpus.is_empty() {
+            FailSlowKind::GpuDegradation
+        } else {
+            FailSlowKind::CpuContention
+        };
+
+        Diagnosis { kind, slow_gpus, slow_edges, suspicious_groups: n_suspicious }
+    }
+
+    /// Execute an escalated strategy on the job.
+    fn apply(&mut self, sim: &mut TrainingSim, iter: usize, strategy: Strategy) {
+        match strategy {
+            Strategy::Ignore => {}
+            Strategy::AdjustMicrobatch => {
+                let times = sim.replica_microbatch_times();
+                let total = sim.spec.wl.microbatches * sim.spec.cfg.dp;
+                let alloc = microbatch::solve(&times, total);
+                sim.set_microbatch_alloc(alloc.m);
+            }
+            Strategy::AdjustTopology => {
+                let plan = topology::plan(sim, 2);
+                if !plan.swaps.is_empty() {
+                    topology::apply(sim, &plan, self.cfg.topology_pause);
+                } else {
+                    sim.now += self.cfg.topology_pause / 4; // aborted pause
+                }
+            }
+            Strategy::CkptRestart => {
+                sim.restart(self.cfg.restart_cost);
+                self.restarts += 1;
+                self.planner = None;
+                self.diagnosis = None;
+            }
+        }
+        self.actions.push(Action { at: sim.now, iter, what: ActionKind::Applied(strategy) });
+    }
+
+    pub fn restarts(&self) -> usize {
+        self.restarts
+    }
+
+    /// Strategies applied so far (for assertions and figure annotations).
+    pub fn applied_strategies(&self) -> Vec<Strategy> {
+        self.actions
+            .iter()
+            .filter_map(|a| match a.what {
+                ActionKind::Applied(s) => Some(s),
+                _ => None,
+            })
+            .collect()
+    }
+}
+
+/// Run a simulated job for `iters` iterations under FALCON control,
+/// returning (outcome, coordinator).
+pub fn run_with_falcon(
+    sim: &mut TrainingSim,
+    cfg: FalconConfig,
+    iters: usize,
+) -> Falcon {
+    let mut falcon = Falcon::new(cfg);
+    for _ in 0..iters {
+        let obs = sim.step();
+        falcon.on_iteration(sim, obs.iter, obs.duration as f64 / 1e6);
+    }
+    falcon
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::inject::{FailSlowEvent, Severity, Target};
+    use crate::pipeline::ParallelConfig;
+    use crate::sim::{demo_spec, TrainingSim};
+    use crate::simkit::MINUTE;
+
+    fn gpu_event(start_iter_s: f64, dur_min: u64, scale: f64, gpu: usize) -> FailSlowEvent {
+        FailSlowEvent {
+            kind: FailSlowKind::GpuDegradation,
+            target: Target::Gpu(gpu),
+            start: from_secs(start_iter_s),
+            duration: dur_min * MINUTE,
+            scale,
+        }
+    }
+
+    #[test]
+    fn detects_and_diagnoses_gpu_degradation() {
+        let mut sim = TrainingSim::new(demo_spec(ParallelConfig::new(1, 8, 1), 21));
+        let onset = sim.ideal_iter_s * 60.0;
+        sim.inject(vec![gpu_event(onset, 120, Severity::Medium.scale(), 2)]);
+        let falcon = run_with_falcon(&mut sim, FalconConfig::default(), 160);
+        let diag = falcon
+            .actions
+            .iter()
+            .find_map(|a| match &a.what {
+                ActionKind::Diagnosed(d) => Some(d.clone()),
+                _ => None,
+            })
+            .expect("episode must be diagnosed");
+        assert_eq!(diag.kind, FailSlowKind::GpuDegradation);
+        assert!(diag.slow_gpus.iter().any(|g| g.rank == 2), "{:?}", diag.slow_gpus);
+    }
+
+    #[test]
+    fn mitigation_improves_throughput_vs_ignore() {
+        let mk = |mitigate: bool| {
+            let mut sim = TrainingSim::new(demo_spec(ParallelConfig::new(1, 8, 1), 33));
+            let onset = sim.ideal_iter_s * 40.0;
+            sim.inject(vec![gpu_event(onset, 600, Severity::Severe.scale(), 0)]);
+            let cfg = FalconConfig { mitigate, ..FalconConfig::default() };
+            run_with_falcon(&mut sim, cfg, 300);
+            sim.timeline.mean_throughput()
+        };
+        let with = mk(true);
+        let without = mk(false);
+        assert!(with > 1.1 * without, "with {with} vs without {without}");
+    }
+
+    #[test]
+    fn s2_applied_for_compute_failslow() {
+        let mut sim = TrainingSim::new(demo_spec(ParallelConfig::new(1, 8, 1), 35));
+        let onset = sim.ideal_iter_s * 30.0;
+        sim.inject(vec![gpu_event(onset, 600, Severity::Medium.scale(), 1)]);
+        let falcon = run_with_falcon(&mut sim, FalconConfig::default(), 200);
+        let applied = falcon.applied_strategies();
+        assert!(applied.contains(&Strategy::AdjustMicrobatch), "{applied:?}");
+        // Allocation actually skewed away from replica 1.
+        assert!(sim.microbatch_alloc[1] < sim.microbatch_alloc[0]);
+    }
+
+    #[test]
+    fn congestion_diagnosed_and_topology_adjusted() {
+        // 4-node job with a congested DP path.
+        let mut spec = demo_spec(ParallelConfig::new(8, 2, 2), 37);
+        spec.jitter = 0.01;
+        let mut sim = TrainingSim::new(spec);
+        let onset = sim.ideal_iter_s * 30.0;
+        sim.inject(vec![FailSlowEvent {
+            kind: FailSlowKind::NetworkCongestion,
+            target: Target::Link(0, 1),
+            start: from_secs(onset),
+            duration: 600 * MINUTE,
+            scale: 0.15,
+        }]);
+        // Ski-rental: S3 escalates only once the accumulated impact matches
+        // its ~45 s overhead, hence the longer horizon.
+        let falcon = run_with_falcon(&mut sim, FalconConfig::default(), 700);
+        let diag = falcon
+            .actions
+            .iter()
+            .find_map(|a| match &a.what {
+                ActionKind::Diagnosed(d) => Some(d.clone()),
+                _ => None,
+            })
+            .expect("diagnosed");
+        assert_eq!(diag.kind, FailSlowKind::NetworkCongestion);
+        let applied = falcon.applied_strategies();
+        assert!(applied.contains(&Strategy::AdjustTopology), "{applied:?}");
+        // S2 must NOT be applied for pure congestion (Table 3).
+        assert!(!applied.contains(&Strategy::AdjustMicrobatch), "{applied:?}");
+    }
+
+    #[test]
+    fn healthy_job_triggers_nothing() {
+        let mut sim = TrainingSim::new(demo_spec(ParallelConfig::new(2, 4, 1), 39));
+        let falcon = run_with_falcon(&mut sim, FalconConfig::default(), 150);
+        assert!(falcon.actions.is_empty(), "{:?}", falcon.actions);
+    }
+
+    #[test]
+    fn persistent_failslow_escalates_to_restart() {
+        let mut sim = TrainingSim::new(demo_spec(ParallelConfig::new(1, 4, 1), 41));
+        let onset = sim.ideal_iter_s * 20.0;
+        // Brutal, unmitigable-by-rebalancing slowdown on ALL replicas.
+        sim.inject(
+            (0..4)
+                .map(|g| gpu_event(onset, 100_000, 0.2, g))
+                .collect(),
+        );
+        let mut cfg = FalconConfig::default();
+        cfg.overheads.ckpt_restart_s = 120.0; // cheap restart for the test
+        cfg.restart_cost = from_secs(120.0);
+        let falcon = run_with_falcon(&mut sim, cfg, 400);
+        assert!(falcon.restarts() >= 1, "{:?}", falcon.applied_strategies());
+    }
+}

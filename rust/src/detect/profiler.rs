@@ -1,0 +1,107 @@
+//! Profiling phase (§4.3): narrow the search space to suspicious groups.
+//!
+//! The GlobalAnalyzer aggregates per-group transfer times (gathered by the
+//! monitor's injected CUDA events) and classifies a communication group as
+//! *suspicious* when its mean transfer time exceeds `1.1x` the median
+//! across comparable groups — prolonged transfer indicates degradation,
+//! eager idling indicates health.
+
+use crate::util::stats;
+
+/// Suspicion multiplier over the median (paper: 1.1x).
+pub const SUSPICION_FACTOR: f64 = 1.1;
+
+/// One profiled group: opaque id, member ranks, mean seconds per op.
+#[derive(Clone, Debug)]
+pub struct GroupProfile {
+    pub id: u64,
+    pub ranks: Vec<usize>,
+    pub mean_time: f64,
+}
+
+/// Groups whose transfer time exceeds `factor` x median. Compares within
+/// the given set, which callers keep homogeneous (DP rings with DP rings,
+/// PP chains with PP chains) since their nominal volumes differ.
+pub fn suspicious_groups(profiles: &[GroupProfile], factor: f64) -> Vec<GroupProfile> {
+    if profiles.is_empty() {
+        return vec![];
+    }
+    let times: Vec<f64> = profiles.iter().map(|p| p.mean_time).collect();
+    let med = stats::median(&times);
+    profiles
+        .iter()
+        .filter(|p| p.mean_time > factor * med)
+        .cloned()
+        .collect()
+}
+
+/// Partition raw (id, ranks, time) tuples into profiles.
+pub fn to_profiles(raw: &[(u64, Vec<usize>, f64)]) -> Vec<GroupProfile> {
+    raw.iter()
+        .map(|(id, ranks, t)| GroupProfile { id: *id, ranks: ranks.clone(), mean_time: *t })
+        .collect()
+}
+
+/// Union of ranks across suspicious groups — the validation phase's scope.
+pub fn candidate_ranks(suspicious: &[GroupProfile]) -> Vec<usize> {
+    let mut out: Vec<usize> = suspicious.iter().flat_map(|g| g.ranks.iter().cloned()).collect();
+    out.sort_unstable();
+    out.dedup();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn prof(id: u64, ranks: &[usize], t: f64) -> GroupProfile {
+        GroupProfile { id, ranks: ranks.to_vec(), mean_time: t }
+    }
+
+    #[test]
+    fn flags_only_outliers() {
+        let groups = vec![
+            prof(1, &[0, 1], 1.0),
+            prof(2, &[2, 3], 1.02),
+            prof(3, &[4, 5], 2.5),
+            prof(4, &[6, 7], 0.98),
+        ];
+        let sus = suspicious_groups(&groups, SUSPICION_FACTOR);
+        assert_eq!(sus.len(), 1);
+        assert_eq!(sus[0].id, 3);
+    }
+
+    #[test]
+    fn healthy_cluster_yields_none() {
+        let groups: Vec<GroupProfile> =
+            (0..8).map(|i| prof(i, &[i as usize], 1.0 + 0.01 * i as f64)).collect();
+        assert!(suspicious_groups(&groups, SUSPICION_FACTOR).is_empty());
+    }
+
+    #[test]
+    fn all_slow_is_relative() {
+        // If EVERY group is equally slow (e.g. model change) nothing stands
+        // out — profiling is a relative filter, by design.
+        let groups: Vec<GroupProfile> = (0..4).map(|i| prof(i, &[i as usize], 5.0)).collect();
+        assert!(suspicious_groups(&groups, SUSPICION_FACTOR).is_empty());
+    }
+
+    #[test]
+    fn candidate_ranks_dedup() {
+        let sus = vec![prof(1, &[4, 2, 0], 2.0), prof(2, &[2, 6], 2.0)];
+        assert_eq!(candidate_ranks(&sus), vec![0, 2, 4, 6]);
+    }
+
+    #[test]
+    fn search_space_reduction() {
+        // 64 groups, one degraded: validation scope shrinks from 128 ranks
+        // to 2 — the R4 "lightweight" claim quantified.
+        let mut groups: Vec<GroupProfile> = (0..64)
+            .map(|i| prof(i, &[2 * i as usize, 2 * i as usize + 1], 1.0))
+            .collect();
+        groups[17].mean_time = 3.0;
+        let sus = suspicious_groups(&groups, SUSPICION_FACTOR);
+        let ranks = candidate_ranks(&sus);
+        assert_eq!(ranks, vec![34, 35]);
+    }
+}

@@ -1,0 +1,274 @@
+//! Validation phase (§4.3): pinpoint slow GPUs and congested links inside
+//! suspicious groups, in O(1) parallel passes.
+//!
+//! Communication validation decomposes the collective topology into
+//! non-overlapping P2P send/receive passes (Fig 9): even rings take 2
+//! passes, odd rings 3, trees 4 — independent of group size, so wall-clock
+//! is constant (R2). All transfers within a pass run concurrently; a pass's
+//! per-edge times are compared and slow edges flagged.
+//!
+//! Computation validation dispatches the GEMM benchmark to every candidate
+//! GPU in parallel and flags outliers vs the group median. (The live
+//! system runs the AOT `gemm_bench.hlo.txt` artifact via PJRT; the
+//! simulator models it with `TrainingSim::bench_gpu`.)
+
+use crate::collectives::{CommGroup, Topology};
+use crate::util::stats;
+
+/// Outlier multiplier for flagging slow components vs group median.
+pub const SLOW_FACTOR: f64 = 1.3;
+
+/// The P2P validation plan: passes of disjoint (from, to) index pairs.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ValidationPlan {
+    pub passes: Vec<Vec<(usize, usize)>>,
+}
+
+impl ValidationPlan {
+    /// Total edges covered.
+    pub fn n_edges(&self) -> usize {
+        self.passes.iter().map(|p| p.len()).sum()
+    }
+
+    /// No rank appears twice within a pass (concurrency invariant).
+    pub fn passes_disjoint(&self) -> bool {
+        self.passes.iter().all(|pass| {
+            let mut seen = std::collections::HashSet::new();
+            pass.iter().all(|&(a, b)| seen.insert(a) && seen.insert(b))
+        })
+    }
+}
+
+/// Decompose a ring of `n` members (Fig 9, left & center).
+///
+/// Even ring: pass 1 covers even->odd edges, pass 2 odd->even. Odd ring
+/// needs a third pass for the wrap-around remainder.
+pub fn ring_plan(n: usize) -> ValidationPlan {
+    assert!(n >= 2);
+    let mut p1 = Vec::new();
+    let mut p2 = Vec::new();
+    let mut p3 = Vec::new();
+    for i in 0..n {
+        let j = (i + 1) % n;
+        let edge = (i, j);
+        if i % 2 == 0 && j % 2 == 1 {
+            p1.push(edge);
+        } else if i % 2 == 1 && j % 2 == 0 && j != 0 {
+            p2.push(edge);
+        } else {
+            // Wrap edges that break parity (odd rings; and the n-1 -> 0
+            // edge of even rings falls in p2 naturally).
+            if n % 2 == 0 {
+                p2.push(edge);
+            } else {
+                p3.push(edge);
+            }
+        }
+    }
+    let mut passes = vec![p1, p2];
+    if !p3.is_empty() {
+        passes.push(p3);
+    }
+    ValidationPlan { passes }
+}
+
+/// Decompose a binary tree of `n` members (Fig 9, right): four passes —
+/// left children at even depth, right children at even depth, then the
+/// same from odd depth.
+pub fn tree_plan(n: usize) -> ValidationPlan {
+    assert!(n >= 2);
+    let depth = |mut i: usize| {
+        let mut d = 0;
+        while i > 0 {
+            i = (i - 1) / 2;
+            d += 1;
+        }
+        d
+    };
+    let mut passes = vec![Vec::new(), Vec::new(), Vec::new(), Vec::new()];
+    for c in 1..n {
+        let parent = (c - 1) / 2;
+        let is_left = c == 2 * parent + 1;
+        let even_level = depth(parent) % 2 == 0;
+        let idx = match (even_level, is_left) {
+            (true, true) => 0,
+            (true, false) => 1,
+            (false, true) => 2,
+            (false, false) => 3,
+        };
+        passes[idx].push((parent, c));
+    }
+    passes.retain(|p| !p.is_empty());
+    ValidationPlan { passes }
+}
+
+/// Plan for a comm group according to its topology.
+pub fn plan_for(group: &CommGroup) -> ValidationPlan {
+    match group.topology {
+        Topology::Ring => ring_plan(group.len()),
+        Topology::Tree => tree_plan(group.len()),
+    }
+}
+
+/// Result of communication validation: flagged slow edges with their
+/// measured-vs-median slowdown.
+#[derive(Clone, Debug)]
+pub struct SlowEdge {
+    pub from_rank: usize,
+    pub to_rank: usize,
+    pub slowdown: f64,
+}
+
+/// Execute a plan with a caller-supplied measurement function
+/// `measure(member_a, member_b) -> seconds` (simulator benches in tests,
+/// real PJRT-timed transfers in the live system). Equal transfer sizes mean
+/// slow links simply measure longer (§4.3).
+pub fn validate_comm(
+    group: &CommGroup,
+    measure: &mut dyn FnMut(usize, usize) -> f64,
+) -> Vec<SlowEdge> {
+    let plan = plan_for(group);
+    let mut timings = Vec::new();
+    for pass in &plan.passes {
+        for &(a, b) in pass {
+            timings.push((a, b, measure(a, b)));
+        }
+    }
+    let ts: Vec<f64> = timings.iter().map(|&(_, _, t)| t).collect();
+    let med = stats::median(&ts);
+    timings
+        .into_iter()
+        .filter(|&(_, _, t)| t > SLOW_FACTOR * med)
+        .map(|(a, b, t)| SlowEdge {
+            from_rank: group.ranks[a],
+            to_rank: group.ranks[b],
+            slowdown: t / med,
+        })
+        .collect()
+}
+
+/// Result of computation validation: flagged slow GPUs (by candidate index).
+#[derive(Clone, Debug)]
+pub struct SlowGpu {
+    pub rank: usize,
+    pub slowdown: f64,
+}
+
+/// GEMM-validate a set of ranks with a caller-supplied benchmark function.
+pub fn validate_compute(
+    ranks: &[usize],
+    bench: &mut dyn FnMut(usize) -> f64,
+) -> Vec<SlowGpu> {
+    let times: Vec<(usize, f64)> = ranks.iter().map(|&r| (r, bench(r))).collect();
+    let ts: Vec<f64> = times.iter().map(|&(_, t)| t).collect();
+    let med = stats::median(&ts);
+    times
+        .into_iter()
+        .filter(|&(_, t)| t > SLOW_FACTOR * med)
+        .map(|(rank, t)| SlowGpu { rank, slowdown: t / med })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::GpuId;
+
+    fn ring_group(n: usize) -> CommGroup {
+        CommGroup::new(
+            (0..n).collect(),
+            (0..n).map(|i| GpuId { node: i / 8, index: i % 8 }).collect(),
+            Topology::Ring,
+        )
+    }
+
+    #[test]
+    fn even_ring_two_passes() {
+        for n in [2, 4, 8, 16, 64] {
+            let plan = ring_plan(n);
+            assert_eq!(plan.passes.len(), 2, "n={n}");
+            assert_eq!(plan.n_edges(), n, "n={n}");
+            assert!(plan.passes_disjoint(), "n={n}");
+        }
+    }
+
+    #[test]
+    fn odd_ring_three_passes() {
+        for n in [3, 5, 7, 15, 63] {
+            let plan = ring_plan(n);
+            assert_eq!(plan.passes.len(), 3, "n={n}");
+            assert_eq!(plan.n_edges(), n, "n={n}");
+            assert!(plan.passes_disjoint(), "n={n}");
+        }
+    }
+
+    #[test]
+    fn tree_at_most_four_passes() {
+        for n in [2, 3, 4, 7, 8, 15, 16, 33, 64, 127] {
+            let plan = tree_plan(n);
+            assert!(plan.passes.len() <= 4, "n={n}: {}", plan.passes.len());
+            assert_eq!(plan.n_edges(), n - 1, "n={n}");
+            assert!(plan.passes_disjoint(), "n={n}");
+        }
+    }
+
+    #[test]
+    fn plans_are_o1_in_group_size() {
+        // Pass count must not grow with n — the O(1) claim.
+        assert_eq!(ring_plan(4).passes.len(), ring_plan(1024).passes.len());
+        assert!(tree_plan(1024).passes.len() <= 4);
+    }
+
+    #[test]
+    fn ring_plan_covers_every_ring_edge_exactly_once() {
+        for n in [4, 5, 8, 9] {
+            let plan = ring_plan(n);
+            let mut edges: Vec<(usize, usize)> = plan.passes.concat();
+            edges.sort_unstable();
+            let mut expect: Vec<(usize, usize)> = (0..n).map(|i| (i, (i + 1) % n)).collect();
+            expect.sort_unstable();
+            assert_eq!(edges, expect, "n={n}");
+        }
+    }
+
+    #[test]
+    fn validate_comm_flags_slow_edge() {
+        let group = ring_group(8);
+        let mut measure = |a: usize, b: usize| {
+            if (a, b) == (3, 4) {
+                5.0
+            } else {
+                1.0 + 0.01 * (a + b) as f64
+            }
+        };
+        let slow = validate_comm(&group, &mut measure);
+        assert_eq!(slow.len(), 1);
+        assert_eq!((slow[0].from_rank, slow[0].to_rank), (3, 4));
+        assert!(slow[0].slowdown > 4.0);
+    }
+
+    #[test]
+    fn validate_comm_healthy_is_clean() {
+        let group = ring_group(9);
+        let mut measure = |a: usize, b: usize| 1.0 + 0.02 * ((a * 7 + b) % 5) as f64;
+        assert!(validate_comm(&group, &mut measure).is_empty());
+    }
+
+    #[test]
+    fn validate_compute_flags_slow_gpu() {
+        let ranks = vec![0, 1, 2, 3];
+        let mut bench = |r: usize| if r == 2 { 2.0 } else { 1.0 };
+        let slow = validate_compute(&ranks, &mut bench);
+        assert_eq!(slow.len(), 1);
+        assert_eq!(slow[0].rank, 2);
+        assert!((slow[0].slowdown - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn validate_compute_multiple_stragglers() {
+        let ranks: Vec<usize> = (0..8).collect();
+        let mut bench = |r: usize| if r < 2 { 3.0 } else { 1.0 };
+        let slow = validate_compute(&ranks, &mut bench);
+        assert_eq!(slow.len(), 2);
+    }
+}

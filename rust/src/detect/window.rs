@@ -1,0 +1,82 @@
+//! Sliding-window baseline detector (Tables 4–5's "SlideWindow").
+//!
+//! Reports a fail-slow when the current observation deviates from the
+//! window median by more than 10% — simple, cheap, but it misses gradual
+//! or compound degradations and re-baselines itself onto long-lived
+//! fail-slows (the source of its FNR in the paper).
+
+use std::collections::VecDeque;
+
+use crate::util::stats;
+
+#[derive(Clone, Debug)]
+pub struct SlideWindow {
+    window: VecDeque<f64>,
+    cap: usize,
+    threshold: f64,
+}
+
+impl SlideWindow {
+    pub fn new(cap: usize, threshold: f64) -> Self {
+        SlideWindow { window: VecDeque::with_capacity(cap), cap, threshold }
+    }
+
+    /// Feed one observation; returns true when it deviates >threshold from
+    /// the current window median.
+    pub fn push(&mut self, x: f64) -> bool {
+        let slow = if self.window.len() >= self.cap / 2 {
+            let med = stats::median(&self.window.iter().cloned().collect::<Vec<_>>());
+            med > 0.0 && (x - med).abs() / med > self.threshold
+        } else {
+            false
+        };
+        self.window.push_back(x);
+        if self.window.len() > self.cap {
+            self.window.pop_front();
+        }
+        slow
+    }
+}
+
+/// Offline run over a series: indices flagged as deviating.
+pub fn detect_slow_points(xs: &[f64], cap: usize, threshold: f64) -> Vec<usize> {
+    let mut w = SlideWindow::new(cap, threshold);
+    xs.iter()
+        .enumerate()
+        .filter_map(|(i, &x)| if w.push(x) { Some(i) } else { None })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flags_step_change_onset() {
+        let xs: Vec<f64> = (0..60).map(|i| if i < 30 { 1.0 } else { 1.3 }).collect();
+        let flagged = detect_slow_points(&xs, 20, 0.1);
+        assert!(flagged.contains(&30));
+    }
+
+    #[test]
+    fn rebaselines_onto_long_failslow() {
+        // After the window fills with slow iterations, flags stop — the
+        // baseline's documented weakness.
+        let xs: Vec<f64> = (0..100).map(|i| if i < 30 { 1.0 } else { 1.3 }).collect();
+        let flagged = detect_slow_points(&xs, 20, 0.1);
+        assert!(flagged.iter().all(|&i| i < 55), "{flagged:?}");
+    }
+
+    #[test]
+    fn quiet_series_clean() {
+        let xs = vec![1.0; 100];
+        assert!(detect_slow_points(&xs, 20, 0.1).is_empty());
+    }
+
+    #[test]
+    fn small_drift_missed() {
+        // 8% shift stays under the 10% rule -> FNR source.
+        let xs: Vec<f64> = (0..80).map(|i| if i < 40 { 1.0 } else { 1.08 }).collect();
+        assert!(detect_slow_points(&xs, 20, 0.1).is_empty());
+    }
+}

@@ -1,0 +1,364 @@
+//! Fail-slow injection substrate.
+//!
+//! Reproduces the paper's two injection mechanisms (§7.1) and its measured
+//! fail-slow phenomenology (§3): GPU frequency locking -> `GpuDegradation`
+//! (compute-rate scale), side-channel traffic -> `NetworkCongestion`
+//! (uplink bandwidth scale), plus `CpuContention` for the §3.2 cases.
+//! Durations/severities are drawn from distributions fit to Figure 1 and
+//! Table 1 so the characterization campaign reproduces the paper's rates.
+
+use crate::fabric::Cluster;
+use crate::simkit::{Time, MINUTE, SEC};
+use crate::util::rng::Rng;
+
+/// Root cause taxonomy (Table 1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum FailSlowKind {
+    CpuContention,
+    GpuDegradation,
+    NetworkCongestion,
+}
+
+impl FailSlowKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            FailSlowKind::CpuContention => "CPU Contention",
+            FailSlowKind::GpuDegradation => "GPU Degradation",
+            FailSlowKind::NetworkCongestion => "Network Congestion",
+        }
+    }
+
+    pub fn is_compute(self) -> bool {
+        !matches!(self, FailSlowKind::NetworkCongestion)
+    }
+}
+
+/// Severity presets used throughout §7.3 (weak/medium/severe).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Severity {
+    Weak,
+    Medium,
+    Severe,
+}
+
+impl Severity {
+    /// Residual performance scale of the degraded component.
+    pub fn scale(self) -> f64 {
+        match self {
+            Severity::Weak => 0.8,
+            Severity::Medium => 0.5,
+            Severity::Severe => 0.25,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Severity::Weak => "W",
+            Severity::Medium => "M",
+            Severity::Severe => "S",
+        }
+    }
+
+    pub const ALL: [Severity; 3] = [Severity::Weak, Severity::Medium, Severity::Severe];
+}
+
+/// Which component is degraded.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Target {
+    /// Flat GPU index within the job's cluster.
+    Gpu(usize),
+    /// Node index (CPU contention affects every rank on the node).
+    Node(usize),
+    /// Node uplink index (congestion at a leaf port: slows every inter-node
+    /// path touching the node).
+    Uplink(usize),
+    /// Specific inter-node path (congestion on one spine-leaf route: the
+    /// granularity of Fig 10's "congested link between nodes 3 and 4").
+    Link(usize, usize),
+}
+
+/// One injected fail-slow episode.
+#[derive(Clone, Copy, Debug)]
+pub struct FailSlowEvent {
+    pub kind: FailSlowKind,
+    pub target: Target,
+    pub start: Time,
+    pub duration: Time,
+    /// Residual performance scale in (0, 1]; lower = more severe.
+    pub scale: f64,
+}
+
+impl FailSlowEvent {
+    pub fn end(&self) -> Time {
+        self.start.saturating_add(self.duration)
+    }
+
+    pub fn active_at(&self, t: Time) -> bool {
+        t >= self.start && t < self.end()
+    }
+
+    /// Apply onset to the cluster.
+    pub fn apply(&self, cluster: &mut Cluster) {
+        match (self.kind, self.target) {
+            (FailSlowKind::GpuDegradation, Target::Gpu(flat)) => {
+                cluster.gpus[flat].compute_scale = self.scale;
+                // Thermal-throttling signature (Fig 3's bottom-right).
+                cluster.gpus[flat].temp_c = 70.0;
+            }
+            (FailSlowKind::CpuContention, Target::Node(n)) => {
+                cluster.nodes[n].cpu_satisfaction = self.scale;
+                cluster.nodes[n].high_cpu_jobs = ((1.0 - self.scale) * 20.0) as u32;
+            }
+            (FailSlowKind::NetworkCongestion, Target::Uplink(u)) => {
+                cluster.uplinks[u].bandwidth_scale = self.scale;
+            }
+            (FailSlowKind::NetworkCongestion, Target::Link(a, b)) => {
+                cluster.set_pair_scale(a, b, self.scale);
+            }
+            (k, t) => panic!("mismatched injection {k:?} on {t:?}"),
+        }
+    }
+
+    /// Revert (episode ends / transient self-recovers).
+    pub fn revert(&self, cluster: &mut Cluster) {
+        match (self.kind, self.target) {
+            (FailSlowKind::GpuDegradation, Target::Gpu(flat)) => {
+                cluster.gpus[flat].compute_scale = 1.0;
+                cluster.gpus[flat].temp_c = 45.0;
+            }
+            (FailSlowKind::CpuContention, Target::Node(n)) => {
+                cluster.nodes[n].cpu_satisfaction = 1.0;
+                cluster.nodes[n].high_cpu_jobs = 0;
+            }
+            (FailSlowKind::NetworkCongestion, Target::Uplink(u)) => {
+                cluster.uplinks[u].bandwidth_scale = 1.0;
+            }
+            (FailSlowKind::NetworkCongestion, Target::Link(a, b)) => {
+                cluster.set_pair_scale(a, b, 1.0);
+            }
+            _ => unreachable!(),
+        }
+    }
+}
+
+/// Campaign-level generator reproducing §3's occurrence statistics.
+///
+/// Occurrence probabilities are per job; durations are lognormal with the
+/// paper's means (10 min computation, 24 min communication at small scale,
+/// 72 min at >=512-GPU scale — Fig 1 right).
+#[derive(Clone, Debug)]
+pub struct InjectionModel {
+    /// P[a given job sees CPU contention] at single-node scale (4/392).
+    pub p_cpu_1node: f64,
+    /// P[GPU degradation] at single-node scale (2/392).
+    pub p_gpu_1node: f64,
+    /// P[network congestion per inter-node link per job] calibrated so a
+    /// 4-node job sees congestion with probability ~42/107.
+    pub p_congestion_per_link: f64,
+    pub mean_comp_duration: Time,
+    pub mean_comm_duration: Time,
+}
+
+impl Default for InjectionModel {
+    fn default() -> Self {
+        InjectionModel {
+            p_cpu_1node: 4.0 / 392.0,
+            p_gpu_1node: 2.0 / 392.0,
+            // 1 - (1-p)^4 = 42/107  =>  p ≈ 0.115 per node-uplink.
+            p_congestion_per_link: 0.115,
+            mean_comp_duration: 10 * MINUTE,
+            mean_comm_duration: 24 * MINUTE,
+        }
+    }
+}
+
+impl InjectionModel {
+    /// Sample the fail-slow episodes one job experiences.
+    ///
+    /// `nodes`/`gpus` describe the job's footprint; `job_duration` bounds
+    /// episode starts. Multi-node jobs can accumulate several episodes
+    /// (§3.4's compounding at scale).
+    pub fn sample_job(
+        &self,
+        nodes: usize,
+        gpus_per_node: usize,
+        job_duration: Time,
+        rng: &mut Rng,
+    ) -> Vec<FailSlowEvent> {
+        let mut out = Vec::new();
+        let dur_sigma_frac = 0.8; // heavy tail: CDF spans seconds..hours (Fig 1)
+
+        for node in 0..nodes {
+            if rng.bernoulli(self.p_cpu_1node) {
+                out.push(self.event(
+                    FailSlowKind::CpuContention,
+                    Target::Node(node),
+                    self.mean_comp_duration,
+                    dur_sigma_frac,
+                    job_duration,
+                    rng.range_f64(0.3, 0.7),
+                    rng,
+                ));
+            }
+            for g in 0..gpus_per_node {
+                if rng.bernoulli(self.p_gpu_1node / gpus_per_node as f64) {
+                    out.push(self.event(
+                        FailSlowKind::GpuDegradation,
+                        Target::Gpu(node * gpus_per_node + g),
+                        self.mean_comp_duration,
+                        dur_sigma_frac,
+                        job_duration,
+                        rng.range_f64(0.6, 0.85),
+                        rng,
+                    ));
+                }
+            }
+            // Congestion only matters when the job spans nodes.
+            if nodes > 1 && rng.bernoulli(self.p_congestion_per_link) {
+                out.push(self.event(
+                    FailSlowKind::NetworkCongestion,
+                    Target::Uplink(node),
+                    self.mean_comm_duration,
+                    dur_sigma_frac,
+                    job_duration,
+                    rng.range_f64(0.2, 0.6),
+                    rng,
+                ));
+            }
+        }
+        out.sort_by_key(|e| e.start);
+        out
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn event(
+        &self,
+        kind: FailSlowKind,
+        target: Target,
+        mean_dur: Time,
+        sigma_frac: f64,
+        job_duration: Time,
+        scale: f64,
+        rng: &mut Rng,
+    ) -> FailSlowEvent {
+        let mean = mean_dur as f64 / SEC as f64;
+        let dur_s = rng.lognormal_mean_std(mean, sigma_frac * mean).max(20.0);
+        let start = rng.below(job_duration.max(1)) as Time;
+        FailSlowEvent {
+            kind,
+            target,
+            start,
+            duration: (dur_s * SEC as f64) as Time,
+            scale,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::{ClusterSpec, GpuClass};
+    use crate::simkit::HOUR;
+
+    #[test]
+    fn apply_revert_round_trip() {
+        let mut c = Cluster::new(ClusterSpec::new(2, 4, GpuClass::H800));
+        let ev = FailSlowEvent {
+            kind: FailSlowKind::NetworkCongestion,
+            target: Target::Uplink(1),
+            start: 0,
+            duration: MINUTE,
+            scale: 0.3,
+        };
+        ev.apply(&mut c);
+        assert_eq!(c.uplinks[1].bandwidth_scale, 0.3);
+        ev.revert(&mut c);
+        assert_eq!(c.uplinks[1].bandwidth_scale, 1.0);
+    }
+
+    #[test]
+    fn gpu_injection_sets_thermal_signature() {
+        let mut c = Cluster::new(ClusterSpec::new(1, 4, GpuClass::H800));
+        let ev = FailSlowEvent {
+            kind: FailSlowKind::GpuDegradation,
+            target: Target::Gpu(2),
+            start: 0,
+            duration: MINUTE,
+            scale: 0.8,
+        };
+        ev.apply(&mut c);
+        assert!(c.gpus[2].temp_c > 65.0);
+        assert_eq!(c.gpus[2].compute_scale, 0.8);
+    }
+
+    #[test]
+    fn active_window() {
+        let ev = FailSlowEvent {
+            kind: FailSlowKind::CpuContention,
+            target: Target::Node(0),
+            start: 10 * SEC,
+            duration: 5 * SEC,
+            scale: 0.5,
+        };
+        assert!(!ev.active_at(9 * SEC));
+        assert!(ev.active_at(10 * SEC));
+        assert!(ev.active_at(14 * SEC));
+        assert!(!ev.active_at(15 * SEC));
+    }
+
+    #[test]
+    fn campaign_rates_match_table1_single_node() {
+        // 392 single-node jobs -> expect ~4 CPU + ~2 GPU episodes.
+        let model = InjectionModel::default();
+        let mut rng = Rng::new(2024);
+        let mut cpu = 0;
+        let mut gpu = 0;
+        let mut net = 0;
+        for _ in 0..392 {
+            for ev in model.sample_job(1, 4, HOUR, &mut rng) {
+                match ev.kind {
+                    FailSlowKind::CpuContention => cpu += 1,
+                    FailSlowKind::GpuDegradation => gpu += 1,
+                    FailSlowKind::NetworkCongestion => net += 1,
+                }
+            }
+        }
+        assert_eq!(net, 0, "single-node jobs see no congestion");
+        assert!((1..=10).contains(&cpu), "cpu {cpu}");
+        assert!(gpu <= 7, "gpu {gpu}");
+    }
+
+    #[test]
+    fn campaign_rates_match_table1_four_node() {
+        // 107 4-node jobs -> ~40% see congestion.
+        let model = InjectionModel::default();
+        let mut rng = Rng::new(7);
+        let mut jobs_with_congestion = 0;
+        for _ in 0..107 {
+            let evs = model.sample_job(4, 2, 5 * HOUR, &mut rng);
+            if evs.iter().any(|e| e.kind == FailSlowKind::NetworkCongestion) {
+                jobs_with_congestion += 1;
+            }
+        }
+        let frac = jobs_with_congestion as f64 / 107.0;
+        assert!((0.25..=0.55).contains(&frac), "congestion frac {frac}");
+    }
+
+    #[test]
+    fn durations_heavy_tailed() {
+        let model = InjectionModel::default();
+        let mut rng = Rng::new(99);
+        let mut durs = Vec::new();
+        for _ in 0..4000 {
+            for ev in model.sample_job(4, 2, 5 * HOUR, &mut rng) {
+                durs.push(ev.duration as f64 / MINUTE as f64);
+            }
+        }
+        assert!(durs.len() > 500);
+        let p10 = crate::util::stats::quantile(&durs, 0.1);
+        let p95 = crate::util::stats::quantile(&durs, 0.95);
+        // Fig 1 right: spans sub-minute to hours.
+        assert!(p10 < 10.0, "p10 {p10}");
+        assert!(p95 > 45.0, "p95 {p95}");
+    }
+}

@@ -1,0 +1,25 @@
+//! FALCON: Pinpointing and Mitigating Stragglers for Large-Scale
+//! Hybrid-Parallel Training — full reproduction.
+//!
+//! Layer 3 (this crate) hosts the paper's contribution — FALCON-DETECT and
+//! FALCON-MITIGATE — plus every substrate they run on: a deterministic
+//! cluster/fabric/collective/pipeline simulator for at-scale experiments and
+//! a live PJRT trainer that executes the AOT-compiled JAX/Pallas train step
+//! for end-to-end validation. See DESIGN.md for the system inventory.
+
+pub mod collectives;
+pub mod coordinator;
+pub mod detect;
+pub mod fabric;
+pub mod inject;
+pub mod ckpt;
+pub mod metrics;
+pub mod mitigate;
+pub mod monitor;
+pub mod pipeline;
+pub mod reports;
+pub mod runtime;
+pub mod sim;
+pub mod simkit;
+pub mod trainer;
+pub mod util;

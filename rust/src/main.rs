@@ -1,0 +1,163 @@
+//! `falcon` — CLI for the FALCON reproduction.
+//!
+//! Subcommands:
+//!   report <id|all> [--iters N] [--seed S] [--fast true|false]
+//!       Regenerate a paper table/figure (fig1..fig20, tab1..tab7).
+//!   train [--preset tiny|small|base] [--dp D] [--steps N] [--inject true]
+//!       Live data-parallel training through the AOT PJRT artifacts with
+//!       FALCON detection + mitigation in the loop.
+//!   sim [--tp T] [--dp D] [--pp P] [--iters N] [--inject gpu|cpu|net]
+//!       One simulated hybrid-parallel job with FALCON attached.
+//!   campaign [--fast true|false]
+//!       The §3 characterization campaign (Fig 1 + Table 1).
+//!   list
+//!       List available report ids.
+
+use falcon::coordinator::{run_with_falcon, FalconConfig};
+use falcon::inject::{FailSlowEvent, FailSlowKind, Target};
+use falcon::pipeline::ParallelConfig;
+use falcon::sim::{demo_spec, TrainingSim};
+use falcon::simkit::from_secs;
+use falcon::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "report" => {
+            let id = args.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
+            if id == "all" {
+                for id in falcon::reports::ALL {
+                    println!("{}", falcon::reports::generate(id, &args));
+                }
+            } else {
+                println!("{}", falcon::reports::generate(id, &args));
+            }
+        }
+        "list" => {
+            for id in falcon::reports::ALL {
+                println!("{id}");
+            }
+        }
+        "sim" => run_sim(&args),
+        "campaign" => {
+            println!("{}", falcon::reports::generate("fig1", &args));
+            println!("{}", falcon::reports::generate("tab1", &args));
+        }
+        "train" => run_train(&args),
+        _ => {
+            println!(
+                "usage: falcon <report|train|sim|campaign|list> [flags]\n\
+                 see `falcon list` for report ids; DESIGN.md for the experiment index"
+            );
+        }
+    }
+}
+
+fn run_sim(args: &Args) {
+    let cfg = ParallelConfig::new(
+        args.usize_or("tp", 2),
+        args.usize_or("dp", 4),
+        args.usize_or("pp", 1),
+    );
+    let iters = args.usize_or("iters", 300);
+    let mut sim = TrainingSim::new(demo_spec(cfg, args.u64_or("seed", 1)));
+    let onset = sim.ideal_iter_s * iters as f64 * 0.25;
+    let dur = sim.ideal_iter_s * iters as f64 * 0.4;
+    match args.get("inject") {
+        Some("gpu") => sim.inject(vec![FailSlowEvent {
+            kind: FailSlowKind::GpuDegradation,
+            target: Target::Gpu(0),
+            start: from_secs(onset),
+            duration: (dur * 1e6) as u64,
+            scale: args.f64_or("scale", 0.5),
+        }]),
+        Some("cpu") => sim.inject(vec![FailSlowEvent {
+            kind: FailSlowKind::CpuContention,
+            target: Target::Node(0),
+            start: from_secs(onset),
+            duration: (dur * 1e6) as u64,
+            scale: args.f64_or("scale", 0.4),
+        }]),
+        Some("net") => sim.inject(vec![FailSlowEvent {
+            kind: FailSlowKind::NetworkCongestion,
+            target: Target::Link(0, 1),
+            start: from_secs(onset),
+            duration: (dur * 1e6) as u64,
+            scale: args.f64_or("scale", 0.25),
+        }]),
+        _ => {}
+    }
+    let falcon = run_with_falcon(
+        &mut sim,
+        FalconConfig { mitigate: args.bool_or("mitigate", true), ..FalconConfig::default() },
+        iters,
+    );
+    println!(
+        "{}",
+        falcon::util::plot::line_chart(
+            &format!("throughput ({} on {} nodes, iters/s)", cfg.label(), sim.grid.n_nodes()),
+            &sim.timeline.xs_mins(),
+            &sim.timeline.ys(),
+            70,
+            10,
+        )
+    );
+    for a in &falcon.actions {
+        println!("  t={:.1}min iter={} {:?}", falcon::simkit::mins(a.at), a.iter, a.what);
+    }
+    println!(
+        "mean throughput {:.3} iters/s (ideal {:.3})",
+        sim.timeline.mean_throughput(),
+        1.0 / sim.ideal_iter_s
+    );
+}
+
+fn run_train(args: &Args) {
+    use falcon::detect::{BocdConfig, Detector};
+    use falcon::mitigate::microbatch;
+    use falcon::runtime::Runtime;
+    use falcon::trainer::{LiveTrainer, TrainerConfig};
+
+    let preset = args.str_or("preset", "tiny");
+    let dp = args.usize_or("dp", 2);
+    let steps = args.usize_or("steps", 40);
+    let rt = Runtime::new(args.str_or("artifacts", "artifacts")).expect("runtime");
+    let mut t = LiveTrainer::new(
+        &rt,
+        &TrainerConfig {
+            preset,
+            dp,
+            microbatches: args.usize_or("microbatches", 2),
+            seed: args.u64_or("seed", 0),
+        },
+    )
+    .expect("trainer (run `make artifacts` first)");
+
+    // Optional injected compute fail-slow on worker 0 mid-run.
+    let inject_at = args.usize_or("inject-at", steps / 3);
+    let inject_scale = args.f64_or("scale", 0.4);
+    let inject = args.bool_or("inject", false);
+
+    let mut detector = Detector::new(BocdConfig::default());
+    println!("step, loss, iter_time_s, alloc");
+    for step in 0..steps {
+        if inject && step == inject_at {
+            t.compute_scale[0] = inject_scale;
+            eprintln!("[inject] worker 0 compute scale -> {inject_scale}");
+        }
+        let obs = t.step().expect("step");
+        if let Some(true) = detector.push(obs.iter_time_s) {
+            // Fail-slow confirmed: rebalance micro-batches (S2) live.
+            let times = t.microbatch_times(&obs);
+            let total: usize = t.alloc.iter().sum();
+            let alloc = microbatch::solve(&times, total).m;
+            eprintln!("[falcon] fail-slow verified at step {step}; S2 realloc {alloc:?}");
+            t.set_alloc(alloc);
+        }
+        println!(
+            "{}, {:.4}, {:.3}, {:?}",
+            obs.iter, obs.loss, obs.iter_time_s, t.alloc
+        );
+    }
+}

@@ -1,0 +1,92 @@
+//! Metrics accounting: throughput timelines, JCT slowdown, fail-slow impact.
+
+use crate::simkit::{secs, Time};
+
+/// Throughput timeline: (time, iterations/sec) samples plus iteration marks.
+#[derive(Clone, Debug, Default)]
+pub struct Timeline {
+    pub points: Vec<(Time, f64)>,
+}
+
+impl Timeline {
+    pub fn push(&mut self, at: Time, iters_per_sec: f64) {
+        self.points.push((at, iters_per_sec));
+    }
+
+    pub fn xs_mins(&self) -> Vec<f64> {
+        self.points.iter().map(|&(t, _)| secs(t) / 60.0).collect()
+    }
+
+    pub fn ys(&self) -> Vec<f64> {
+        self.points.iter().map(|&(_, y)| y).collect()
+    }
+
+    pub fn mean_throughput(&self) -> f64 {
+        crate::util::stats::mean(&self.ys())
+    }
+}
+
+/// Job-completion accounting for the characterization campaign.
+#[derive(Clone, Debug)]
+pub struct JobOutcome {
+    pub iters: usize,
+    /// Ideal completion time with no fail-slow.
+    pub ideal: Time,
+    /// Actual completion time.
+    pub actual: Time,
+    pub timeline: Timeline,
+}
+
+impl JobOutcome {
+    /// JCT slowdown factor (1.0 = no slowdown). Fig 1 center.
+    pub fn slowdown(&self) -> f64 {
+        self.actual as f64 / self.ideal.max(1) as f64
+    }
+
+    pub fn slowdown_pct(&self) -> f64 {
+        (self.slowdown() - 1.0) * 100.0
+    }
+}
+
+/// Fraction of a slowdown removed by mitigation (the paper's headline
+/// "reduces the slowdown by 60.1%" in Table 7), computed in *throughput*
+/// space as the paper does: reduction = (mitigated - slow) / (healthy - slow).
+pub fn slowdown_reduction(healthy: f64, slow: f64, mitigated: f64) -> f64 {
+    if (healthy - slow).abs() < 1e-12 {
+        return 0.0;
+    }
+    (mitigated - slow) / (healthy - slow)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simkit::SEC;
+
+    #[test]
+    fn slowdown_factor() {
+        let j = JobOutcome {
+            iters: 100,
+            ideal: 100 * SEC,
+            actual: 134 * SEC,
+            timeline: Timeline::default(),
+        };
+        assert!((j.slowdown() - 1.34).abs() < 1e-9);
+        assert!((j.slowdown_pct() - 34.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn reduction_formula_matches_paper_semantics() {
+        // Table 7: healthy 17.1, fail-slow 14.8, mitigated 16.2 iters/min.
+        let red = slowdown_reduction(17.1, 14.8, 16.2);
+        assert!((red - 0.601).abs() < 0.02, "reduction {red}");
+    }
+
+    #[test]
+    fn timeline_mean() {
+        let mut t = Timeline::default();
+        t.push(0, 1.0);
+        t.push(SEC, 3.0);
+        assert_eq!(t.mean_throughput(), 2.0);
+    }
+}

@@ -1,0 +1,228 @@
+//! S2 — micro-batch distribution adjustment (§5.3, Eq. 1).
+//!
+//! Given per-replica micro-batch processing times t_i (profiled by
+//! FALCON-DETECT) and M total micro-batches, find integer allocations m_i
+//! minimizing the slowest replica's total time max_i m_i·t_i, subject to
+//! Σ m_i = M and m_i >= 1.
+//!
+//! The paper solves this as a QP via cvxpy (Table 6: up to ~36 s at
+//! D = 512). Because the micro-batches are *identical unit jobs on uniform
+//! machines*, the greedy that repeatedly gives the next micro-batch to the
+//! replica whose completion time would stay smallest is *exactly optimal* —
+//! a classic exchange argument, verified here against brute force — and
+//! runs in O(M log D), replacing the QP solver entirely.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// Result of the solver.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Allocation {
+    pub m: Vec<usize>,
+    /// Predicted slowest-replica time max_i m_i t_i.
+    pub makespan: f64,
+}
+
+/// Exact greedy solver. `times[i]` = per-micro-batch time of replica i,
+/// `total` = M. Requires total >= replicas (each replica keeps >= 1).
+pub fn solve(times: &[f64], total: usize) -> Allocation {
+    let d = times.len();
+    assert!(d > 0 && total >= d, "need at least one micro-batch per replica");
+    assert!(times.iter().all(|&t| t > 0.0), "times must be positive");
+
+    // Min-heap on (completion time if given one more, index).
+    #[derive(PartialEq)]
+    struct Slot(f64, usize);
+    impl Eq for Slot {}
+    impl PartialOrd for Slot {
+        fn partial_cmp(&self, o: &Self) -> Option<std::cmp::Ordering> {
+            Some(self.cmp(o))
+        }
+    }
+    impl Ord for Slot {
+        fn cmp(&self, o: &Self) -> std::cmp::Ordering {
+            self.0
+                .partial_cmp(&o.0)
+                .unwrap()
+                .then(self.1.cmp(&o.1))
+        }
+    }
+
+    let mut m = vec![1usize; d]; // m_i in N+ (paper constraint)
+    let mut heap: BinaryHeap<Reverse<Slot>> = (0..d)
+        .map(|i| Reverse(Slot(2.0 * times[i], i))) // completion if given a 2nd
+        .collect();
+    for _ in 0..total - d {
+        let Reverse(Slot(_, i)) = heap.pop().unwrap();
+        m[i] += 1;
+        heap.push(Reverse(Slot((m[i] + 1) as f64 * times[i], i)));
+    }
+    let makespan = m
+        .iter()
+        .zip(times)
+        .map(|(&mi, &t)| mi as f64 * t)
+        .fold(0.0, f64::max);
+    Allocation { m, makespan }
+}
+
+/// Brute-force oracle for small instances (tests): enumerate compositions.
+pub fn solve_brute(times: &[f64], total: usize) -> Allocation {
+    let d = times.len();
+    let mut best: Option<Allocation> = None;
+    let mut m = vec![1usize; d];
+
+    fn rec(
+        i: usize,
+        remaining: usize,
+        m: &mut Vec<usize>,
+        times: &[f64],
+        best: &mut Option<Allocation>,
+    ) {
+        let d = times.len();
+        if i == d - 1 {
+            m[i] = 1 + remaining;
+            let makespan = m
+                .iter()
+                .zip(times)
+                .map(|(&mi, &t)| mi as f64 * t)
+                .fold(0.0, f64::max);
+            if best.as_ref().map(|b| makespan < b.makespan).unwrap_or(true) {
+                *best = Some(Allocation { m: m.clone(), makespan });
+            }
+            return;
+        }
+        for extra in 0..=remaining {
+            m[i] = 1 + extra;
+            rec(i + 1, remaining - extra, m, times, best);
+        }
+    }
+    rec(0, total - d, &mut m, times, &mut best);
+    best.unwrap()
+}
+
+/// Predicted slowdown factor of an allocation vs the all-healthy ideal.
+pub fn predicted_slowdown(times: &[f64], alloc: &[usize], healthy_time: f64, even_m: usize) -> f64 {
+    let makespan = alloc
+        .iter()
+        .zip(times)
+        .map(|(&m, &t)| m as f64 * t)
+        .fold(0.0, f64::max);
+    makespan / (even_m as f64 * healthy_time)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn even_when_healthy() {
+        let a = solve(&[1.0, 1.0, 1.0, 1.0], 32);
+        assert_eq!(a.m, vec![8, 8, 8, 8]);
+        assert!((a.makespan - 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sheds_load_from_slow_replica() {
+        // Replica 0 is 2x slower: it should get roughly half the work.
+        let a = solve(&[2.0, 1.0, 1.0, 1.0], 32);
+        assert!(a.m[0] < 8, "{:?}", a.m);
+        assert_eq!(a.m.iter().sum::<usize>(), 32);
+        // Near-balanced completion times.
+        assert!(a.makespan < 2.0 * 8.0 * 0.7, "makespan {}", a.makespan);
+    }
+
+    #[test]
+    fn respects_min_one() {
+        // Pathologically slow replica still gets exactly 1.
+        let a = solve(&[100.0, 1.0, 1.0, 1.0], 16);
+        assert_eq!(a.m[0], 1);
+        assert_eq!(a.m.iter().sum::<usize>(), 16);
+    }
+
+    #[test]
+    fn matches_brute_force() {
+        prop::check(
+            "greedy-optimal",
+            0xFA1C0,
+            300,
+            |rng: &mut Rng| {
+                let d = 2 + rng.below(4) as usize;
+                let total = d + rng.below(14) as usize;
+                let times: Vec<f64> =
+                    (0..d).map(|_| 0.2 + rng.f64() * 3.0).collect();
+                (times, total)
+            },
+            |(times, total)| {
+                let g = solve(times, *total);
+                let b = solve_brute(times, *total);
+                if (g.makespan - b.makespan).abs() < 1e-9 {
+                    Ok(())
+                } else {
+                    Err(format!("greedy {} vs brute {}", g.makespan, b.makespan))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn allocation_conserves_global_batch() {
+        prop::check(
+            "sum-preserved",
+            7,
+            200,
+            |rng: &mut Rng| {
+                let d = 1 + rng.below(64) as usize;
+                let total = d + rng.below(256) as usize;
+                let times: Vec<f64> = (0..d).map(|_| 0.1 + rng.f64() * 5.0).collect();
+                (times, total)
+            },
+            |(times, total)| {
+                let a = solve(times, *total);
+                if a.m.iter().sum::<usize>() == *total && a.m.iter().all(|&m| m >= 1) {
+                    Ok(())
+                } else {
+                    Err(format!("bad allocation {:?}", a.m))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn fig14_no_room_when_all_slow() {
+        // All replicas equally degraded -> allocation stays even, no gain.
+        let healthy = solve(&[1.0; 4], 32);
+        let all_slow = solve(&[1.5; 4], 32);
+        assert_eq!(healthy.m, all_slow.m);
+        assert!((all_slow.makespan / healthy.makespan - 1.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fig14_gain_shrinks_with_more_slow_groups() {
+        // 4 DP groups; degrading more of them leaves less headroom (Fig 14).
+        let m_total = 32;
+        let mk = |n_slow: usize| {
+            let times: Vec<f64> =
+                (0..4).map(|i| if i < n_slow { 1.9 } else { 1.0 }).collect();
+            solve(&times, m_total).makespan
+        };
+        let even = |n_slow: usize| {
+            let worst = if n_slow > 0 { 1.9 } else { 1.0 };
+            8.0 * worst
+        };
+        let gain = |n: usize| (even(n) - mk(n)) / even(n);
+        assert!(gain(1) > gain(2) && gain(2) > gain(3) && gain(3) > gain(4) - 1e-12);
+        assert!(gain(4) < 1e-9, "no room with all slow");
+    }
+
+    #[test]
+    fn large_instance_fast() {
+        // Table 6 scale: D = 512 solves in well under a millisecond-scale
+        // budget (exact timing in bench_tables tab6).
+        let mut rng = Rng::new(1);
+        let times: Vec<f64> = (0..512).map(|_| 0.5 + rng.f64()).collect();
+        let a = solve(&times, 512 * 8);
+        assert_eq!(a.m.iter().sum::<usize>(), 512 * 8);
+    }
+}

@@ -1,0 +1,15 @@
+//! FALCON-MITIGATE (§5): the adaptive multi-level mitigation mechanism.
+//!
+//! `planner` implements Algorithm 1 (ski-rental escalation across S1–S4);
+//! `microbatch` solves Eq. 1 exactly (S2); `topology` plans node swaps for
+//! congestion reassignment and straggler consolidation (S3); S4 uses
+//! `crate::ckpt` for its cost and `TrainingSim::restart` / the live
+//! trainer's reload path for its effect.
+
+pub mod microbatch;
+pub mod planner;
+pub mod topology;
+
+pub use microbatch::{solve as solve_microbatch, Allocation};
+pub use planner::{find_strategies, MitigationPlanner, Overheads, Strategy};
+pub use topology::{plan as plan_topology, TopologyPlan};

@@ -1,0 +1,252 @@
+//! Adaptive multi-level mitigation planner — Algorithm 1 (§5.2).
+//!
+//! The ski-rental insight: the fail-slow duration is unknown, so start with
+//! the cheapest strategy and escalate to the next (costlier, more
+//! effective) one only when the *accumulated* slowdown impact of the
+//! ongoing episode equals that strategy's action overhead. Checkpoint-and-
+//! restart is the last resort.
+
+use crate::inject::FailSlowKind;
+
+/// Mitigation strategies in escalation order (Table 3).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Strategy {
+    /// S1 — do nothing, hope for self-recovery.
+    Ignore,
+    /// S2 — redistribute micro-batches across DP groups.
+    AdjustMicrobatch,
+    /// S3 — adjust parallelism topology (node swaps).
+    AdjustTopology,
+    /// S4 — checkpoint and restart on healthy nodes.
+    CkptRestart,
+}
+
+impl Strategy {
+    pub fn name(self) -> &'static str {
+        match self {
+            Strategy::Ignore => "S1:Ignore",
+            Strategy::AdjustMicrobatch => "S2:AdjustMicrobatch",
+            Strategy::AdjustTopology => "S3:AdjustTopology",
+            Strategy::CkptRestart => "S4:CkptRestart",
+        }
+    }
+
+    /// Whether the strategy can help the given root cause (Table 3):
+    /// micro-batch adjustment cannot fix a congested link.
+    pub fn effective_against(self, kind: FailSlowKind) -> bool {
+        match self {
+            Strategy::Ignore => true,
+            Strategy::AdjustMicrobatch => kind.is_compute(),
+            Strategy::AdjustTopology | Strategy::CkptRestart => true,
+        }
+    }
+}
+
+/// Action overheads in seconds (configurable; defaults follow §5.3/§7.4:
+/// S2 solver is sub-second to seconds, S3 pause is under a minute, S4 costs
+/// checkpoint dump + scheduling + restore, i.e. many minutes).
+#[derive(Clone, Copy, Debug)]
+pub struct Overheads {
+    pub adjust_microbatch_s: f64,
+    pub adjust_topology_s: f64,
+    pub ckpt_restart_s: f64,
+}
+
+impl Default for Overheads {
+    fn default() -> Self {
+        Overheads {
+            adjust_microbatch_s: 2.0,
+            adjust_topology_s: 45.0,
+            ckpt_restart_s: 20.0 * 60.0,
+        }
+    }
+}
+
+impl Overheads {
+    pub fn of(&self, s: Strategy) -> f64 {
+        match s {
+            Strategy::Ignore => 0.0,
+            Strategy::AdjustMicrobatch => self.adjust_microbatch_s,
+            Strategy::AdjustTopology => self.adjust_topology_s,
+            Strategy::CkptRestart => self.ckpt_restart_s,
+        }
+    }
+}
+
+/// FindStrategies(root_cause): applicable strategies sorted by overhead
+/// (Algorithm 1, lines 3–4).
+pub fn find_strategies(kind: FailSlowKind, ov: &Overheads) -> Vec<Strategy> {
+    let mut cands: Vec<Strategy> = [
+        Strategy::Ignore,
+        Strategy::AdjustMicrobatch,
+        Strategy::AdjustTopology,
+        Strategy::CkptRestart,
+    ]
+    .into_iter()
+    .filter(|s| s.effective_against(kind))
+    .collect();
+    cands.sort_by(|a, b| ov.of(*a).partial_cmp(&ov.of(*b)).unwrap());
+    cands
+}
+
+/// Escalation decision for one ongoing fail-slow event.
+pub struct MitigationPlanner {
+    pub candidates: Vec<Strategy>,
+    pub overheads: Overheads,
+    /// Next strategy index to apply (Algorithm 1's `id`).
+    id: usize,
+    /// Accumulated impact: Σ over slow iterations of (t_slow - t_healthy).
+    impact_s: f64,
+    /// Log of applied strategies with the impact level that triggered them.
+    pub applied: Vec<(Strategy, f64)>,
+}
+
+impl MitigationPlanner {
+    pub fn new(kind: FailSlowKind, overheads: Overheads) -> Self {
+        MitigationPlanner {
+            candidates: find_strategies(kind, &overheads),
+            overheads,
+            id: 0,
+            impact_s: 0.0,
+            applied: Vec::new(),
+        }
+    }
+
+    /// Account one slow iteration (Algorithm 1, lines 9–11) and decide
+    /// whether to escalate now (lines 13–15). Returns the strategy to
+    /// apply, if any. S1 (Ignore, overhead 0) is "applied" immediately,
+    /// which matches the paper: the system starts by doing nothing.
+    pub fn on_slow_iter(&mut self, t_slow_s: f64, t_healthy_s: f64) -> Option<Strategy> {
+        self.impact_s += (t_slow_s - t_healthy_s).max(0.0);
+        if self.id >= self.candidates.len() {
+            return None;
+        }
+        let next = self.candidates[self.id];
+        if self.impact_s > self.overheads.of(next) {
+            self.applied.push((next, self.impact_s));
+            self.id += 1;
+            Some(next)
+        } else {
+            None
+        }
+    }
+
+    /// Impact accumulated so far (diagnostics / Fig 17 annotations).
+    pub fn impact_s(&self) -> f64 {
+        self.impact_s
+    }
+
+    /// Reset for a new episode (event resolved).
+    pub fn reset(&mut self) {
+        self.id = 0;
+        self.impact_s = 0.0;
+        self.applied.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strategies_ordered_by_overhead() {
+        let ov = Overheads::default();
+        let s = find_strategies(FailSlowKind::GpuDegradation, &ov);
+        assert_eq!(
+            s,
+            vec![
+                Strategy::Ignore,
+                Strategy::AdjustMicrobatch,
+                Strategy::AdjustTopology,
+                Strategy::CkptRestart
+            ]
+        );
+    }
+
+    #[test]
+    fn microbatch_skipped_for_congestion() {
+        // Table 3: S2 has no effect on slow communication.
+        let ov = Overheads::default();
+        let s = find_strategies(FailSlowKind::NetworkCongestion, &ov);
+        assert!(!s.contains(&Strategy::AdjustMicrobatch));
+        assert_eq!(s[0], Strategy::Ignore);
+        assert_eq!(*s.last().unwrap(), Strategy::CkptRestart);
+    }
+
+    #[test]
+    fn short_episode_stays_at_ignore() {
+        let mut p = MitigationPlanner::new(FailSlowKind::GpuDegradation, Overheads::default());
+        // S1 fires immediately (zero overhead), nothing else for a brief blip.
+        let first = p.on_slow_iter(1.5, 1.0);
+        assert_eq!(first, Some(Strategy::Ignore));
+        for _ in 0..3 {
+            assert_eq!(p.on_slow_iter(1.5, 1.0), None);
+        }
+        assert_eq!(p.applied.len(), 1);
+    }
+
+    #[test]
+    fn escalates_as_impact_accumulates() {
+        let ov = Overheads { adjust_microbatch_s: 2.0, adjust_topology_s: 40.0, ckpt_restart_s: 300.0 };
+        let mut p = MitigationPlanner::new(FailSlowKind::GpuDegradation, ov);
+        let mut seen = Vec::new();
+        // 1 s of excess per slow iteration.
+        for _ in 0..400 {
+            if let Some(s) = p.on_slow_iter(2.0, 1.0) {
+                seen.push((s, p.impact_s()));
+            }
+        }
+        assert_eq!(
+            seen.iter().map(|&(s, _)| s).collect::<Vec<_>>(),
+            vec![
+                Strategy::Ignore,
+                Strategy::AdjustMicrobatch,
+                Strategy::AdjustTopology,
+                Strategy::CkptRestart
+            ]
+        );
+        // Ski-rental property: each strategy fires only once its overhead is
+        // matched by accumulated impact.
+        for &(s, at) in &seen {
+            assert!(at >= ov.of(s), "{s:?} fired early at {at}");
+            assert!(at <= ov.of(s) + 2.0, "{s:?} fired late at {at}");
+        }
+    }
+
+    #[test]
+    fn ski_rental_never_pays_more_than_damage() {
+        // The ski-rental guarantee as the planner realizes it: an action's
+        // overhead is paid only once the accumulated impact has matched it,
+        // so at every instant the total overhead paid is bounded by
+        // (levels x impact) and, with geometrically-spaced overheads as
+        // here, by 2x the impact suffered.
+        let ov = Overheads { adjust_microbatch_s: 10.0, adjust_topology_s: 100.0, ckpt_restart_s: 1000.0 };
+        for dur in [5usize, 50, 500, 5000] {
+            let mut p = MitigationPlanner::new(FailSlowKind::GpuDegradation, ov);
+            let mut paid = 0.0;
+            for _ in 0..dur {
+                if let Some(s) = p.on_slow_iter(2.0, 1.0) {
+                    paid += ov.of(s);
+                }
+                assert!(
+                    paid <= 2.0 * p.impact_s() + 1e-9,
+                    "dur {dur}: paid {paid} > 2x impact {}",
+                    p.impact_s()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn reset_clears_state() {
+        let mut p = MitigationPlanner::new(FailSlowKind::GpuDegradation, Overheads::default());
+        for _ in 0..100 {
+            p.on_slow_iter(3.0, 1.0);
+        }
+        assert!(p.impact_s() > 0.0);
+        p.reset();
+        assert_eq!(p.impact_s(), 0.0);
+        assert!(p.applied.is_empty());
+        assert_eq!(p.on_slow_iter(3.0, 1.0), Some(Strategy::Ignore));
+    }
+}

@@ -1,0 +1,207 @@
+//! S3 — parallelism-topology adjustment (§5.3, Fig 10–11).
+//!
+//! Two mechanisms, both realized as *node swaps* in the rank grid:
+//!
+//! 1. **Congested-link reassignment**: move the traffic crossing a congested
+//!    uplink from heavy DP rings onto light PP chains by exchanging node
+//!    positions (Fig 10).
+//! 2. **Straggler consolidation**: gather slow GPUs into the minimal number
+//!    of PP stages — workers in a stage run at the slowest member's pace,
+//!    so co-locating stragglers bounds the damage to one stage (Fig 11) —
+//!    preferring interior stages (first/last carry embedding/LM-head).
+//!
+//! The planner searches single swaps (and greedy sequences of them) scoring
+//! each candidate with the simulator's own iteration-time estimate, so any
+//! improvement it claims is real under the current health picture.
+
+use crate::sim::TrainingSim;
+
+/// A planned adjustment: sequence of logical-node swaps plus the predicted
+/// iteration time after applying them.
+#[derive(Clone, Debug)]
+pub struct TopologyPlan {
+    pub swaps: Vec<(usize, usize)>,
+    pub predicted_iter_s: f64,
+    pub baseline_iter_s: f64,
+}
+
+impl TopologyPlan {
+    pub fn improvement(&self) -> f64 {
+        if self.baseline_iter_s <= 0.0 {
+            return 0.0;
+        }
+        1.0 - self.predicted_iter_s / self.baseline_iter_s
+    }
+}
+
+/// Estimate current iteration time without mutating sim state.
+fn estimate_iter_s(sim: &mut TrainingSim) -> f64 {
+    // Use the replica makespans + a nominal DP time through the public
+    // estimator: temporarily run the internal model via profile of replica
+    // times and the ideal pipeline formula. Simplest faithful probe: save
+    // clock, run one noiseless estimate.
+    sim.estimate_iter_time_s()
+}
+
+/// Greedy swap search: try all node pairs, keep the best improving swap,
+/// repeat up to `max_swaps` times.
+pub fn plan(sim: &mut TrainingSim, max_swaps: usize) -> TopologyPlan {
+    let baseline = estimate_iter_s(sim);
+    let n = sim.grid.n_nodes();
+    let mut swaps = Vec::new();
+    let mut best_overall = baseline;
+
+    for _round in 0..max_swaps {
+        let mut round_best: Option<(usize, usize, f64)> = None;
+        for a in 0..n {
+            for b in a + 1..n {
+                sim.grid.swap_nodes(a, b);
+                let t = estimate_iter_s(sim);
+                sim.grid.swap_nodes(a, b); // revert
+                if t < best_overall * 0.999
+                    && round_best.map(|(_, _, bt)| t < bt).unwrap_or(true)
+                {
+                    round_best = Some((a, b, t));
+                }
+            }
+        }
+        match round_best {
+            Some((a, b, t)) => {
+                sim.grid.swap_nodes(a, b);
+                swaps.push((a, b));
+                best_overall = t;
+            }
+            None => break,
+        }
+    }
+    // Leave the grid as found: revert applied swaps (the planner only
+    // *plans*; applying is the strategy executor's job, which also charges
+    // the pause overhead).
+    for &(a, b) in swaps.iter().rev() {
+        sim.grid.swap_nodes(a, b);
+    }
+    TopologyPlan { swaps, predicted_iter_s: best_overall, baseline_iter_s: baseline }
+}
+
+/// Apply a plan to the sim, charging the pause overhead per §5.3 (dump to
+/// memory, swap parameters via RDMA, restore — "typically within one
+/// minute"; cost supplied by the caller from the ckpt model).
+pub fn apply(sim: &mut TrainingSim, plan: &TopologyPlan, pause: crate::simkit::Time) {
+    for &(a, b) in &plan.swaps {
+        sim.grid.swap_nodes(a, b);
+    }
+    sim.now += pause;
+}
+
+/// Minimal number of PP stages that can contain `n_stragglers` stragglers
+/// (paper formula: ceil(#stragglers / GPUs-per-stage)).
+pub fn min_straggler_stages(n_stragglers: usize, gpus_per_stage: usize) -> usize {
+    n_stragglers.div_ceil(gpus_per_stage.max(1))
+}
+
+/// Preferred consolidation stages: interior first (§5.3).
+pub fn preferred_stages(pp: usize) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..pp).collect();
+    // Sort by distance from the boundary, descending (interior first).
+    order.sort_by_key(|&s| {
+        let d = s.min(pp - 1 - s);
+        std::cmp::Reverse(d)
+    });
+    order
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::inject::{FailSlowEvent, FailSlowKind, Target};
+    use crate::pipeline::ParallelConfig;
+    use crate::sim::demo_spec;
+    use crate::simkit::{MINUTE, SEC};
+
+    #[test]
+    fn min_stages_formula() {
+        assert_eq!(min_straggler_stages(2, 4), 1);
+        assert_eq!(min_straggler_stages(6, 4), 2);
+        assert_eq!(min_straggler_stages(4, 4), 1);
+        assert_eq!(min_straggler_stages(0, 4), 0);
+    }
+
+    #[test]
+    fn interior_stages_preferred() {
+        let order = preferred_stages(4);
+        assert!(order[0] == 1 || order[0] == 2);
+        assert!(order[3] == 0 || order[3] == 3);
+        let order8 = preferred_stages(8);
+        assert!(order8.ends_with(&[0]) || order8.ends_with(&[7]) || {
+            let last2: Vec<usize> = order8[6..].to_vec();
+            last2.contains(&0) && last2.contains(&7)
+        });
+    }
+
+    #[test]
+    fn congestion_swap_improves_iteration() {
+        // Fig 10's scenario: 4 nodes (one per TP group), DP rings between
+        // same-stage nodes. Congest the path between the two stage-0 nodes
+        // (physical 0 and 1) — a heavy DP link. The planner must find a
+        // swap that turns that path into a light PP link.
+        let mut spec = demo_spec(ParallelConfig::new(8, 2, 2), 7);
+        spec.jitter = 0.0;
+        let mut sim = TrainingSim::new(spec);
+        assert_eq!(sim.grid.n_nodes(), 4);
+        sim.inject(vec![FailSlowEvent {
+            kind: FailSlowKind::NetworkCongestion,
+            target: Target::Link(0, 1),
+            start: 0,
+            duration: 600 * MINUTE,
+            scale: 0.15,
+        }]);
+        sim.step();
+        let p = plan(&mut sim, 2);
+        assert!(
+            p.improvement() > 0.05,
+            "planner should relieve congestion: {:?} improvement {}",
+            p.swaps,
+            p.improvement()
+        );
+    }
+
+    #[test]
+    fn healthy_cluster_needs_no_swap() {
+        let mut spec = demo_spec(ParallelConfig::new(8, 2, 2), 9);
+        spec.jitter = 0.0;
+        let mut sim = TrainingSim::new(spec);
+        sim.step();
+        let p = plan(&mut sim, 2);
+        assert!(p.swaps.is_empty(), "{:?}", p.swaps);
+    }
+
+    #[test]
+    fn plan_does_not_mutate_grid() {
+        let mut spec = demo_spec(ParallelConfig::new(8, 2, 2), 11);
+        spec.jitter = 0.0;
+        let mut sim = TrainingSim::new(spec);
+        sim.inject(vec![FailSlowEvent {
+            kind: FailSlowKind::NetworkCongestion,
+            target: Target::Uplink(0),
+            start: 0,
+            duration: 600 * MINUTE,
+            scale: 0.2,
+        }]);
+        sim.step();
+        let before = sim.grid.node_map.clone();
+        let _ = plan(&mut sim, 2);
+        assert_eq!(sim.grid.node_map, before);
+    }
+
+    #[test]
+    fn apply_charges_pause() {
+        let mut spec = demo_spec(ParallelConfig::new(8, 2, 2), 13);
+        spec.jitter = 0.0;
+        let mut sim = TrainingSim::new(spec);
+        let t0 = sim.now;
+        let p = TopologyPlan { swaps: vec![(0, 1)], predicted_iter_s: 1.0, baseline_iter_s: 1.0 };
+        apply(&mut sim, &p, 30 * SEC);
+        assert_eq!(sim.now - t0, 30 * SEC);
+        assert_eq!(sim.grid.node_map[0], 1);
+    }
+}

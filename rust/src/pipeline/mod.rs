@@ -1,0 +1,331 @@
+//! Hybrid-parallelism substrate: rank grid, communication groups, the
+//! transformer cost model (paper Appendix 9.2), and the 1F1B pipeline
+//! iteration-time model.
+//!
+//! This is the "Megatron-LM" the simulator trains with: given a parallel
+//! strategy (T, D, P), a model size, and the current cluster health, it
+//! computes per-replica microbatch times, the pipeline makespan, collective
+//! times, and the end-to-end iteration time — and emits the per-rank
+//! communication-op timeline FALCON-DETECT observes.
+
+use crate::fabric::{Cluster, GpuId};
+
+pub mod schedule;
+pub use schedule::{one_f1b_makespan, StageTimes};
+
+/// Parallel strategy: (TP, DP, PP) sizes. Written xTyDzP in the paper.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ParallelConfig {
+    pub tp: usize,
+    pub dp: usize,
+    pub pp: usize,
+}
+
+impl ParallelConfig {
+    pub fn new(tp: usize, dp: usize, pp: usize) -> Self {
+        ParallelConfig { tp, dp, pp }
+    }
+
+    pub fn world(&self) -> usize {
+        self.tp * self.dp * self.pp
+    }
+
+    pub fn label(&self) -> String {
+        format!("{}T{}D{}P", self.tp, self.dp, self.pp)
+    }
+}
+
+/// Global rank coordinates. Megatron ordering: TP fastest (contiguous, so TP
+/// stays intra-node), then DP, then PP (stages span nodes).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct RankCoord {
+    pub tp: usize,
+    pub dp: usize,
+    pub pp: usize,
+}
+
+/// Maps ranks onto cluster GPUs, with a mutable node permutation so
+/// FALCON-MITIGATE's topology adjustment (S3) can swap nodes.
+#[derive(Clone, Debug)]
+pub struct RankGrid {
+    pub cfg: ParallelConfig,
+    pub gpus_per_node: usize,
+    /// node_map[i] = physical node hosting "logical node" i. S3 permutes it.
+    pub node_map: Vec<usize>,
+}
+
+impl RankGrid {
+    pub fn new(cfg: ParallelConfig, gpus_per_node: usize) -> Self {
+        let nodes = cfg.world().div_ceil(gpus_per_node);
+        RankGrid { cfg, gpus_per_node, node_map: (0..nodes).collect() }
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.node_map.len()
+    }
+
+    pub fn rank_of(&self, c: RankCoord) -> usize {
+        c.pp * (self.cfg.dp * self.cfg.tp) + c.dp * self.cfg.tp + c.tp
+    }
+
+    pub fn coord_of(&self, rank: usize) -> RankCoord {
+        let tp = rank % self.cfg.tp;
+        let dp = (rank / self.cfg.tp) % self.cfg.dp;
+        let pp = rank / (self.cfg.tp * self.cfg.dp);
+        RankCoord { tp, dp, pp }
+    }
+
+    /// Physical GPU hosting a global rank, via the (mutable) node map.
+    pub fn gpu_of(&self, rank: usize) -> GpuId {
+        let logical_node = rank / self.gpus_per_node;
+        let index = rank % self.gpus_per_node;
+        GpuId { node: self.node_map[logical_node], index }
+    }
+
+    pub fn gpu_of_coord(&self, c: RankCoord) -> GpuId {
+        self.gpu_of(self.rank_of(c))
+    }
+
+    /// All ranks in the TP group of (dp, pp).
+    pub fn tp_group(&self, dp: usize, pp: usize) -> Vec<usize> {
+        (0..self.cfg.tp).map(|tp| self.rank_of(RankCoord { tp, dp, pp })).collect()
+    }
+
+    /// All ranks in the DP group of (tp, pp) — the gradient all-reduce ring.
+    pub fn dp_group(&self, tp: usize, pp: usize) -> Vec<usize> {
+        (0..self.cfg.dp).map(|dp| self.rank_of(RankCoord { tp, dp, pp })).collect()
+    }
+
+    /// All ranks in the PP group (pipeline) of (tp, dp).
+    pub fn pp_group(&self, tp: usize, dp: usize) -> Vec<usize> {
+        (0..self.cfg.pp).map(|pp| self.rank_of(RankCoord { tp, dp, pp })).collect()
+    }
+
+    /// Swap two logical nodes' physical hosts (S3 topology adjustment).
+    pub fn swap_nodes(&mut self, a: usize, b: usize) {
+        self.node_map.swap(a, b);
+    }
+}
+
+/// Transformer size parameters (Appendix 9.2 notation).
+#[derive(Clone, Copy, Debug)]
+pub struct ModelDims {
+    pub layers: usize,   // L
+    pub hidden: usize,   // h
+    pub heads: usize,    // n_h
+    pub vocab: usize,    // v
+    pub ctx: usize,      // n_ctx (tokens per sample)
+}
+
+impl ModelDims {
+    /// N ≈ 12 L h² (Eq. 6).
+    pub fn n_params(&self) -> f64 {
+        let (l, h) = (self.layers as f64, self.hidden as f64);
+        let d = (self.hidden / self.heads) as f64;
+        h * (self.vocab as f64 + self.ctx as f64 + l * (4.0 * d * self.heads as f64 + 8.0 * h + 5.0))
+    }
+
+    /// Training FLOPs per token ≈ 6 N (fwd+bwd).
+    pub fn flops_per_token(&self) -> f64 {
+        6.0 * self.n_params()
+    }
+
+    /// GPT-2 presets used by the paper's sampling jobs and evaluation.
+    pub fn gpt2(name: &str) -> ModelDims {
+        match name {
+            "gpt2-7b" => ModelDims { layers: 32, hidden: 4096, heads: 32, vocab: 50257, ctx: 2048 },
+            "gpt2-11b" => ModelDims { layers: 40, hidden: 4736, heads: 37, vocab: 50257, ctx: 2048 },
+            "gpt2-13b" => ModelDims { layers: 40, hidden: 5120, heads: 40, vocab: 50257, ctx: 2048 },
+            _ => panic!("unknown model {name}"),
+        }
+    }
+}
+
+/// Per-iteration workload: global batch split into micro-batches.
+#[derive(Clone, Copy, Debug)]
+pub struct Workload {
+    pub model: ModelDims,
+    /// Micro-batch size b (samples).
+    pub micro_batch: usize,
+    /// Micro-batches per DP replica per iteration (m), before S2 rebalance.
+    pub microbatches: usize,
+}
+
+impl Workload {
+    /// Eq. 8: TP volume per microbatch per stage (bytes, bf16 activations).
+    pub fn tp_bytes_per_microbatch(&self, cfg: ParallelConfig) -> f64 {
+        if cfg.tp == 1 {
+            return 0.0;
+        }
+        let m = &self.model;
+        let b = self.micro_batch as f64;
+        8.0 * b * m.ctx as f64 * m.hidden as f64 * (m.layers as f64 / cfg.pp as f64)
+            * ((cfg.tp - 1) as f64 / cfg.tp as f64)
+            * 2.0 // bytes per bf16 element
+    }
+
+    /// Eq. 9: DP gradient volume per rank per iteration (bytes, f32 grads).
+    pub fn dp_bytes(&self, cfg: ParallelConfig) -> f64 {
+        self.model.n_params() / (cfg.pp * cfg.tp) as f64 * 4.0
+    }
+
+    /// Eq. 10: PP activation volume per microbatch (bytes).
+    pub fn pp_bytes_per_microbatch(&self) -> f64 {
+        let m = &self.model;
+        self.micro_batch as f64 * m.ctx as f64 * m.hidden as f64 * 2.0
+    }
+
+    /// Compute FLOPs per microbatch per pipeline stage per TP shard
+    /// (fwd + bwd, bwd counted at 2x fwd).
+    pub fn flops_per_microbatch_per_stage(&self, cfg: ParallelConfig) -> f64 {
+        let tokens = (self.micro_batch * self.model.ctx) as f64;
+        tokens * self.model.flops_per_token() / (cfg.pp * cfg.tp) as f64
+    }
+}
+
+/// Compute + host time (seconds) for one microbatch (fwd+bwd) on the TP
+/// group of (dp, pp), at current cluster health. The TP group advances at
+/// the pace of its slowest member (synchronous tensor parallelism), and CPU
+/// contention on the hosting node adds per-microbatch host overhead.
+pub fn microbatch_time_s(
+    cluster: &Cluster,
+    grid: &RankGrid,
+    wl: &Workload,
+    dp: usize,
+    pp: usize,
+    mfu: f64,
+) -> f64 {
+    let flops = wl.flops_per_microbatch_per_stage(grid.cfg);
+    let mut worst = 0.0f64;
+    for rank in grid.tp_group(dp, pp) {
+        let gpu = grid.gpu_of(rank);
+        let rate = cluster.gpu_rate(gpu) * mfu;
+        let compute = flops / rate;
+        // Host-side launch/dataloading overhead: ~6% of nominal compute,
+        // inflated by CPU contention (Fig 2's mechanism).
+        let node = &cluster.nodes[gpu.node];
+        let host = 0.06 * flops / (cluster.spec.gpu_class.tflops() * 1e12 * mfu)
+            / node.cpu_satisfaction.max(0.05);
+        // TP collective per microbatch (intra-node, stable).
+        let tp_comm = if grid.cfg.tp > 1 {
+            let nbytes = wl.tp_bytes_per_microbatch(grid.cfg) / wl.microbatches.max(1) as f64;
+            let peer = grid.gpu_of(grid.tp_group(dp, pp)[(grid.coord_of(rank).tp + 1) % grid.cfg.tp]);
+            cluster.transfer_time_nominal_s(gpu, peer, nbytes)
+        } else {
+            0.0
+        };
+        worst = worst.max(compute + host + tp_comm);
+    }
+    worst
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::{ClusterSpec, GpuClass};
+
+    #[test]
+    fn rank_round_trip() {
+        let grid = RankGrid::new(ParallelConfig::new(2, 4, 2), 8);
+        for rank in 0..16 {
+            assert_eq!(grid.rank_of(grid.coord_of(rank)), rank);
+        }
+    }
+
+    #[test]
+    fn tp_groups_are_contiguous() {
+        let grid = RankGrid::new(ParallelConfig::new(4, 2, 2), 8);
+        let g = grid.tp_group(1, 0);
+        assert_eq!(g, vec![4, 5, 6, 7]);
+        // Contiguous => same node when tp <= gpus_per_node.
+        let nodes: Vec<usize> = g.iter().map(|&r| grid.gpu_of(r).node).collect();
+        assert!(nodes.windows(2).all(|w| w[0] == w[1]));
+    }
+
+    #[test]
+    fn dp_group_strides_tp() {
+        let grid = RankGrid::new(ParallelConfig::new(2, 4, 1), 8);
+        assert_eq!(grid.dp_group(0, 0), vec![0, 2, 4, 6]);
+        assert_eq!(grid.dp_group(1, 0), vec![1, 3, 5, 7]);
+    }
+
+    #[test]
+    fn pp_group_strides_dp_tp() {
+        let grid = RankGrid::new(ParallelConfig::new(2, 2, 4), 4);
+        assert_eq!(grid.pp_group(0, 0), vec![0, 4, 8, 12]);
+    }
+
+    #[test]
+    fn groups_partition_world() {
+        // Every rank belongs to exactly one TP group, one DP group, one PP group.
+        let grid = RankGrid::new(ParallelConfig::new(2, 4, 2), 8);
+        let mut seen = vec![0u32; grid.cfg.world()];
+        for dp in 0..4 {
+            for pp in 0..2 {
+                for r in grid.tp_group(dp, pp) {
+                    seen[r] += 1;
+                }
+            }
+        }
+        assert!(seen.iter().all(|&c| c == 1));
+    }
+
+    #[test]
+    fn node_swap_remaps_gpus() {
+        let mut grid = RankGrid::new(ParallelConfig::new(2, 4, 2), 4);
+        assert_eq!(grid.gpu_of(0).node, 0);
+        grid.swap_nodes(0, 3);
+        assert_eq!(grid.gpu_of(0).node, 3);
+        assert_eq!(grid.gpu_of(15).node, 0);
+    }
+
+    #[test]
+    fn param_count_matches_12lh2_scale() {
+        let m = ModelDims::gpt2("gpt2-13b");
+        let approx = 12.0 * m.layers as f64 * (m.hidden as f64).powi(2);
+        let exact = m.n_params();
+        assert!((exact / approx - 1.0).abs() < 0.15, "{exact} vs {approx}");
+        assert!(exact > 12.5e9 && exact < 14.5e9, "13B-class: {exact}");
+    }
+
+    #[test]
+    fn comm_volume_ordering() {
+        // Appendix: Comm_TP ≫ Comm_DP ≫ Comm_PP per iteration at scale.
+        let wl = Workload {
+            model: ModelDims::gpt2("gpt2-13b"),
+            micro_batch: 1,
+            microbatches: 8,
+        };
+        let cfg = ParallelConfig::new(8, 16, 4);
+        let tp_iter = wl.tp_bytes_per_microbatch(cfg) * wl.microbatches as f64;
+        let dp_iter = wl.dp_bytes(cfg);
+        let pp_iter = wl.pp_bytes_per_microbatch() * wl.microbatches as f64;
+        assert!(tp_iter > dp_iter, "tp {tp_iter} dp {dp_iter}");
+        assert!(dp_iter > pp_iter, "dp {dp_iter} pp {pp_iter}");
+    }
+
+    #[test]
+    fn slow_gpu_slows_microbatch() {
+        let mut cluster = Cluster::new(ClusterSpec::new(2, 4, GpuClass::H800));
+        let grid = RankGrid::new(ParallelConfig::new(2, 2, 2), 4);
+        let wl = Workload { model: ModelDims::gpt2("gpt2-7b"), micro_batch: 1, microbatches: 4 };
+        let healthy = microbatch_time_s(&cluster, &grid, &wl, 0, 0, 0.4);
+        cluster.gpus[0].compute_scale = 0.5;
+        let degraded = microbatch_time_s(&cluster, &grid, &wl, 0, 0, 0.4);
+        assert!(degraded > 1.4 * healthy, "{degraded} vs {healthy}");
+        // Other DP replica untouched.
+        let other = microbatch_time_s(&cluster, &grid, &wl, 1, 0, 0.4);
+        assert!((other - healthy).abs() / healthy < 1e-9);
+    }
+
+    #[test]
+    fn cpu_contention_slows_microbatch() {
+        let mut cluster = Cluster::new(ClusterSpec::new(1, 4, GpuClass::H800));
+        let grid = RankGrid::new(ParallelConfig::new(2, 2, 1), 4);
+        let wl = Workload { model: ModelDims::gpt2("gpt2-7b"), micro_batch: 1, microbatches: 4 };
+        let healthy = microbatch_time_s(&cluster, &grid, &wl, 0, 0, 0.4);
+        cluster.nodes[0].cpu_satisfaction = 0.3;
+        let contended = microbatch_time_s(&cluster, &grid, &wl, 0, 0, 0.4);
+        assert!(contended > 1.05 * healthy, "{contended} vs {healthy}");
+    }
+}

@@ -1,0 +1,310 @@
+//! Characterization campaign (Fig 1 + Table 1): reproduce §3's probing
+//! methodology — many small sampling jobs plus a batch of at-scale jobs,
+//! fail-slows drawn from the paper-calibrated `InjectionModel`, detection
+//! via FALCON-DETECT's BOCD+V on the per-job iteration-time series.
+
+use crate::detect::detector::detect_episodes;
+use crate::detect::BocdConfig;
+use crate::inject::{FailSlowKind, InjectionModel};
+use crate::pipeline::{ModelDims, ParallelConfig, Workload};
+use crate::sim::{JobSpec, TrainingSim};
+use crate::simkit::{mins, HOUR};
+use crate::util::cli::Args;
+use crate::util::plot;
+use crate::util::rng::Rng;
+use crate::util::stats;
+
+/// Outcome of one probe job.
+#[derive(Clone, Debug)]
+pub struct ProbeResult {
+    pub root_causes: Vec<FailSlowKind>,
+    pub slowdown_pct: f64,
+    pub episode_mins: Vec<f64>,
+    pub detected_episodes: usize,
+}
+
+/// One campaign class: (label, jobs, spec-builder, iters).
+pub struct CampaignClass {
+    pub label: &'static str,
+    pub jobs: usize,
+    pub nodes: usize,
+    pub cfg: ParallelConfig,
+    pub model: &'static str,
+    pub iters: usize,
+}
+
+pub fn classes(fast: bool) -> Vec<CampaignClass> {
+    let scale = if fast { 8 } else { 1 };
+    vec![
+        // §3.2: 392 single-node GPT2-11B jobs, (2T,1D,2P) on 4 H800s.
+        CampaignClass {
+            label: "1-Node",
+            jobs: 392 / scale,
+            nodes: 1,
+            cfg: ParallelConfig::new(2, 1, 2),
+            model: "gpt2-11b",
+            iters: if fast { 400 } else { 1500 },
+        },
+        // §3.3: 107 four-node GPT2-7B jobs, (2T,4D,1P).
+        CampaignClass {
+            label: "4-Node",
+            jobs: 107 / scale.min(4),
+            nodes: 4,
+            cfg: ParallelConfig::new(2, 4, 1),
+            model: "gpt2-7b",
+            iters: if fast { 400 } else { 1500 },
+        },
+        // §3.4: 27 at-scale jobs (>=512 GPUs), (8T,16D,4P) = 512 GPUs.
+        CampaignClass {
+            label: "At Scale (>=512 GPUs)",
+            jobs: 27 / scale.min(3),
+            nodes: 64,
+            cfg: ParallelConfig::new(8, 16, 4),
+            model: "gpt2-13b",
+            iters: if fast { 250 } else { 800 },
+        },
+    ]
+}
+
+/// Run one probe job and classify it.
+pub fn run_probe(class: &CampaignClass, seed: u64) -> ProbeResult {
+    // GPUs per node follows the class's node count (probes used 4-GPU and
+    // 2-GPU slices; at-scale jobs full 8-GPU nodes).
+    let gpus_per_node = class.cfg.world().div_ceil(class.nodes);
+    let spec = JobSpec {
+        cfg: class.cfg,
+        wl: Workload { model: ModelDims::gpt2(class.model), micro_batch: 1, microbatches: 8 },
+        gpus_per_node,
+        gpu_class: crate::fabric::GpuClass::H800,
+        mfu: 0.42,
+        jitter: 0.015,
+        spike_p: 0.01,
+        seed,
+    };
+    let mut sim = TrainingSim::new(spec);
+
+    // Sample this job's fail-slows from the §3-calibrated model. At-scale
+    // jobs are exclusive (no CPU contention — Table 1).
+    let model = if class.nodes >= 64 {
+        InjectionModel { p_cpu_1node: 0.0, p_gpu_1node: 0.02, p_congestion_per_link: 0.013,
+                         mean_comm_duration: 72 * crate::simkit::MINUTE,
+                         ..InjectionModel::default() }
+    } else {
+        InjectionModel::default()
+    };
+    let mut rng = Rng::new(seed ^ 0xCA);
+    let horizon = (sim.ideal_iter_s * class.iters as f64 * 1e6) as u64;
+    let events = model.sample_job(class.nodes, sim.spec.gpus_per_node, horizon.max(HOUR / 4), &mut rng);
+    let root_causes: Vec<FailSlowKind> = {
+        let mut k: Vec<FailSlowKind> = events.iter().map(|e| e.kind).collect();
+        k.sort_by_key(|k| k.name());
+        k.dedup();
+        k
+    };
+    let episode_mins = events.iter().map(|e| mins(e.duration)).collect();
+    sim.inject(events);
+
+    let outcome = sim.run(class.iters);
+    let series: Vec<f64> = outcome
+        .timeline
+        .points
+        .iter()
+        .map(|&(_, thpt)| 1.0 / thpt.max(1e-9))
+        .collect();
+    let detected = detect_episodes(&series, BocdConfig::default());
+
+    ProbeResult {
+        root_causes,
+        slowdown_pct: outcome.slowdown_pct(),
+        episode_mins,
+        detected_episodes: detected.len(),
+    }
+}
+
+pub struct CampaignSummary {
+    pub label: &'static str,
+    pub no_failslow: usize,
+    pub cpu: usize,
+    pub gpu: usize,
+    pub net: usize,
+    pub multi: usize,
+    pub total: usize,
+    pub avg_slowdown_pct: f64,
+    pub durations_mins: Vec<f64>,
+    pub slowdowns: Vec<f64>,
+}
+
+pub fn run_campaign(fast: bool, seed: u64) -> Vec<CampaignSummary> {
+    classes(fast)
+        .iter()
+        .map(|class| {
+            let mut s = CampaignSummary {
+                label: class.label,
+                no_failslow: 0,
+                cpu: 0,
+                gpu: 0,
+                net: 0,
+                multi: 0,
+                total: class.jobs,
+                avg_slowdown_pct: 0.0,
+                durations_mins: Vec::new(),
+                slowdowns: Vec::new(),
+            };
+            let mut slow_sum = 0.0;
+            let mut slow_n = 0usize;
+            for j in 0..class.jobs {
+                let r = run_probe(class, seed.wrapping_add(j as u64 * 7919));
+                match r.root_causes.len() {
+                    0 => s.no_failslow += 1,
+                    1 => match r.root_causes[0] {
+                        FailSlowKind::CpuContention => s.cpu += 1,
+                        FailSlowKind::GpuDegradation => s.gpu += 1,
+                        FailSlowKind::NetworkCongestion => s.net += 1,
+                    },
+                    _ => s.multi += 1,
+                }
+                if !r.root_causes.is_empty() {
+                    slow_sum += r.slowdown_pct;
+                    slow_n += 1;
+                    s.durations_mins.extend(r.episode_mins);
+                    s.slowdowns.push(r.slowdown_pct);
+                }
+            }
+            s.avg_slowdown_pct = if slow_n > 0 { slow_sum / slow_n as f64 } else { 0.0 };
+            s
+        })
+        .collect()
+}
+
+pub fn tab1(args: &Args) -> String {
+    let fast = args.bool_or("fast", true);
+    let seed = args.u64_or("seed", 2024);
+    let summaries = run_campaign(fast, seed);
+    let rows: Vec<Vec<String>> = [
+        ("No fail-slow", 0usize),
+        ("CPU Contention", 1),
+        ("GPU Degradation", 2),
+        ("Network Congestion", 3),
+        ("Multiple Issues", 4),
+        ("Total # Jobs", 5),
+        ("Avg. JCT Slowdown", 6),
+    ]
+    .iter()
+    .map(|&(name, row)| {
+        let mut cells = vec![name.to_string()];
+        for s in &summaries {
+            let v = match row {
+                0 => s.no_failslow.to_string(),
+                1 => s.cpu.to_string(),
+                2 => s.gpu.to_string(),
+                3 => s.net.to_string(),
+                4 => s.multi.to_string(),
+                5 => s.total.to_string(),
+                _ => format!("{:.2}%", s.avg_slowdown_pct),
+            };
+            cells.push(v);
+        }
+        cells
+    })
+    .collect();
+    let mut out = String::from(
+        "Table 1 — Root causes and JCT slowdown of fail-slow issues (campaign reproduction)\n",
+    );
+    out.push_str(&plot::table(
+        &["Category", "1-Node", "4-Node", "At Scale (>=512 GPUs)"],
+        &rows,
+    ));
+    out.push_str("\npaper: 386/4/2/0/0 of 392 | 64/1/0/42/0 of 107 | 11/0/0/13/3 of 27; slowdowns 11.79% / 15.45% / 34.59%\n");
+    out
+}
+
+pub fn fig1(args: &Args) -> String {
+    let fast = args.bool_or("fast", true);
+    let seed = args.u64_or("seed", 2024);
+    let summaries = run_campaign(fast, seed);
+
+    let mut out = String::from("Figure 1 — fail-slow occurrence, JCT impact, duration CDF\n\n");
+
+    // Left: occurrence rates.
+    let labels: Vec<String> = summaries.iter().map(|s| s.label.to_string()).collect();
+    let rates: Vec<f64> = summaries
+        .iter()
+        .map(|s| 100.0 * (s.total - s.no_failslow) as f64 / s.total.max(1) as f64)
+        .collect();
+    out.push_str(&plot::bar_chart("occurrence rate (% of jobs)", &labels, &rates, 40));
+
+    // Center: JCT slowdown distribution of slow jobs at scale.
+    let at_scale = &summaries[2];
+    if !at_scale.slowdowns.is_empty() {
+        let over50 = at_scale.slowdowns.iter().filter(|&&s| s > 50.0).count();
+        out.push_str(&format!(
+            "\nJCT impact at scale: mean {:.1}%, {:.0}% of slow jobs delayed >50%\n",
+            at_scale.avg_slowdown_pct,
+            100.0 * over50 as f64 / at_scale.slowdowns.len() as f64
+        ));
+    }
+
+    // Right: duration CDF across all classes.
+    let mut durs: Vec<f64> = summaries.iter().flat_map(|s| s.durations_mins.clone()).collect();
+    if durs.is_empty() {
+        durs.push(0.0);
+    }
+    let cdf = stats::ecdf(&durs, 20);
+    let xs: Vec<f64> = cdf.iter().map(|&(v, _)| v).collect();
+    let ys: Vec<f64> = cdf.iter().map(|&(_, f)| f).collect();
+    out.push_str(&plot::line_chart("\nfail-slow duration CDF (minutes)", &xs, &ys, 50, 10));
+    out.push_str(&plot::csv(
+        &["duration_min", "cdf"],
+        &cdf.iter().map(|&(v, f)| vec![v, f]).collect::<Vec<_>>(),
+    ));
+    out.push_str(&format!(
+        "median {:.1} min, p90 {:.1} min (paper: tens of seconds to ~10 h, small-job mean 10–24 min, at-scale 72 min)\n",
+        stats::median(&durs),
+        stats::quantile(&durs, 0.9)
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn probe_classifies_single_node() {
+        let class = &classes(true)[0];
+        // Over a handful of seeds, most jobs are clean (paper: 386/392).
+        let mut clean = 0;
+        for seed in 0..12 {
+            let r = run_probe(class, seed * 131);
+            if r.root_causes.is_empty() {
+                clean += 1;
+                assert!(r.slowdown_pct < 8.0, "clean job slowed {:.2}%", r.slowdown_pct);
+            }
+        }
+        assert!(clean >= 9, "only {clean}/12 clean");
+    }
+
+    #[test]
+    fn injected_jobs_slow_and_detected() {
+        let class = &classes(true)[1]; // 4-node, congestion-prone
+        let mut hit = false;
+        for seed in 0..24 {
+            let r = run_probe(class, seed * 977 + 5);
+            if r.root_causes.contains(&FailSlowKind::NetworkCongestion)
+                && r.slowdown_pct > 5.0
+            {
+                hit = true;
+                assert!(r.detected_episodes > 0, "fail-slow not detected");
+                break;
+            }
+        }
+        assert!(hit, "no congested 4-node probe in 24 seeds");
+    }
+
+    #[test]
+    fn tab1_renders() {
+        let out = tab1(&Args::parse(["--fast".to_string(), "--seed".into(), "3".into()]));
+        assert!(out.contains("Network Congestion"));
+        assert!(out.contains("Avg. JCT Slowdown"));
+    }
+}

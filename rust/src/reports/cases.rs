@@ -1,0 +1,385 @@
+//! Case studies (Fig 2–6), the communication-stability table (Table 2) and
+//! the recurring-period illustration (Fig 8).
+
+use crate::fabric::{Cluster, ClusterSpec, GpuClass, GpuId, LinkClass};
+use crate::inject::{FailSlowEvent, FailSlowKind, Target};
+use crate::pipeline::{ModelDims, ParallelConfig, Workload};
+use crate::sim::{JobSpec, TrainingSim};
+use crate::simkit::from_secs;
+use crate::util::cli::Args;
+use crate::util::plot;
+use crate::util::rng::Rng;
+use crate::util::stats;
+
+fn case_sim(cfg: ParallelConfig, model: &str, nodes_hint: usize, seed: u64) -> TrainingSim {
+    let gpus_per_node = cfg.world().div_ceil(nodes_hint).max(1);
+    TrainingSim::new(JobSpec {
+        cfg,
+        wl: Workload { model: ModelDims::gpt2(model), micro_batch: 1, microbatches: 8 },
+        gpus_per_node,
+        gpu_class: GpuClass::H800,
+        mfu: 0.42,
+        jitter: 0.015,
+        spike_p: 0.01,
+        seed,
+    })
+}
+
+/// Run `iters`, sampling throughput + an auxiliary signal every iteration.
+fn run_case(
+    sim: &mut TrainingSim,
+    iters: usize,
+    mut aux: impl FnMut(&TrainingSim) -> f64,
+) -> (Vec<f64>, Vec<f64>, Vec<f64>, Vec<f64>) {
+    let mut t_mins = Vec::new();
+    let mut thpt = Vec::new();
+    let mut sm = Vec::new();
+    let mut extra = Vec::new();
+    for _ in 0..iters {
+        let obs = sim.step();
+        t_mins.push(crate::simkit::mins(obs.start));
+        thpt.push(1e6 / obs.duration as f64);
+        sm.push(obs.sm_util * 100.0);
+        extra.push(aux(sim));
+    }
+    (t_mins, thpt, sm, extra)
+}
+
+/// Fig 2 — CPU-contention case: two contention bursts, SM util dips,
+/// high-CPU job count and CPU satisfaction trace the root cause.
+pub fn fig2(args: &Args) -> String {
+    let iters = args.usize_or("iters", 600);
+    let mut sim = case_sim(ParallelConfig::new(2, 1, 2), "gpt2-11b", 1, 2);
+    let it = sim.ideal_iter_s;
+    sim.inject(vec![
+        FailSlowEvent {
+            kind: FailSlowKind::CpuContention,
+            target: Target::Node(0),
+            start: from_secs(it * iters as f64 * 0.25),
+            duration: (it * iters as f64 * 0.12 * 1e6) as u64,
+            scale: 0.35,
+        },
+        FailSlowEvent {
+            kind: FailSlowKind::CpuContention,
+            target: Target::Node(0),
+            start: from_secs(it * iters as f64 * 0.62),
+            duration: (it * iters as f64 * 0.10 * 1e6) as u64,
+            scale: 0.45,
+        },
+    ]);
+    let (t, thpt, sm, cpu) = run_case(&mut sim, iters, |s| s.cluster.nodes[0].cpu_satisfaction);
+    let jobs: Vec<f64> = cpu.iter().map(|&c| if c < 0.99 { (1.0 - c) * 20.0 } else { 1.0 }).collect();
+
+    let mut out = String::from("Figure 2 — fail-slow from CPU contention (1-node GPT2-11B, 2T1D2P)\n");
+    out.push_str(&plot::line_chart("throughput (iters/s)", &t, &thpt, 60, 8));
+    out.push_str(&plot::line_chart("GPU SM utilization (%)", &t, &sm, 60, 6));
+    out.push_str(&plot::line_chart("# high-CPU colocated jobs", &t, &jobs, 60, 5));
+    out.push_str(&plot::line_chart("CPU satisfaction rate", &t, &cpu, 60, 5));
+    let drop = 100.0 * (1.0 - thpt.iter().cloned().fold(f64::MAX, f64::min)
+        / stats::quantile(&thpt, 0.9));
+    out.push_str(&format!("max throughput drop: {drop:.1}% (paper case: 21.6%)\n"));
+    out
+}
+
+/// Fig 3 — GPU performance degradation (thermal): GPU0 20% slower, 70 C.
+pub fn fig3(args: &Args) -> String {
+    let iters = args.usize_or("iters", 500);
+    let mut sim = case_sim(ParallelConfig::new(2, 1, 2), "gpt2-11b", 1, 3);
+    let it = sim.ideal_iter_s;
+    sim.inject(vec![FailSlowEvent {
+        kind: FailSlowKind::GpuDegradation,
+        target: Target::Gpu(0),
+        start: 0,
+        duration: (it * iters as f64 * 0.3 * 1e6) as u64,
+        scale: 0.8,
+    }]);
+    let (t, thpt, sm, temp) = run_case(&mut sim, iters, |s| s.cluster.gpus[0].temp_c);
+    let perf: Vec<f64> = (0..4)
+        .map(|g| if g == 0 { 0.8 } else { 1.0 })
+        .collect();
+
+    let mut out = String::from("Figure 3 — fail-slow from GPU degradation (thermal throttling)\n");
+    out.push_str(&plot::line_chart("throughput (iters/s)", &t, &thpt, 60, 8));
+    out.push_str(&plot::line_chart("GPU SM utilization (%)", &t, &sm, 60, 6));
+    out.push_str(&plot::bar_chart(
+        "normalized GPU performance during fail-slow",
+        &(0..4).map(|g| format!("GPU{g}")).collect::<Vec<_>>(),
+        &perf,
+        30,
+    ));
+    out.push_str(&plot::line_chart("GPU0 temperature (C)", &t, &temp, 60, 5));
+    out.push_str("paper case: GPU0 20% slower at ~70C for the first 10 minutes\n");
+    out
+}
+
+/// Fig 4 — network congestion on a 4-node GPT2-7B job: two events, CNP
+/// surges correlate with throughput dips.
+pub fn fig4(args: &Args) -> String {
+    let iters = args.usize_or("iters", 700);
+    let mut sim = case_sim(ParallelConfig::new(2, 4, 1), "gpt2-7b", 4, 4);
+    let it = sim.ideal_iter_s;
+    let span = it * iters as f64;
+    sim.inject(vec![
+        FailSlowEvent {
+            kind: FailSlowKind::NetworkCongestion,
+            target: Target::Uplink(2),
+            start: from_secs(span * 0.27),
+            duration: (span * 0.2 * 1e6) as u64,
+            scale: 0.45,
+        },
+        FailSlowEvent {
+            kind: FailSlowKind::NetworkCongestion,
+            target: Target::Uplink(2),
+            start: from_secs(span * 0.75),
+            duration: (span * 0.18 * 1e6) as u64,
+            scale: 0.25,
+        },
+    ]);
+    let mut last_cnp = 0u64;
+    let (t, thpt, sm, cnp_rate) = run_case(&mut sim, iters, |s| {
+        let total: u64 = s.cluster.uplinks.iter().map(|u| u.cnp_count).sum();
+        let rate = (total - last_cnp) as f64 / 1000.0;
+        last_cnp = total;
+        rate
+    });
+
+    let mut out = String::from("Figure 4 — fail-slow from network congestion (4-node GPT2-7B, 2T4D1P)\n");
+    out.push_str(&plot::line_chart("throughput (iters/s)", &t, &thpt, 60, 8));
+    out.push_str(&plot::line_chart("CNPs sent by NICs (x1000/iter)", &t, &cnp_rate, 60, 6));
+    out.push_str(&plot::line_chart("avg GPU SM utilization (%)", &t, &sm, 60, 6));
+    let lo = thpt.iter().cloned().fold(f64::MAX, f64::min);
+    let hi = stats::quantile(&thpt, 0.9);
+    out.push_str(&format!(
+        "throughput {hi:.2} -> {lo:.2} iters/s across the two events (paper: 0.57 -> 0.41 -> 0.31)\n"
+    ));
+    out
+}
+
+/// Table 2 — CoV of communication components. RDMA samples include the
+/// campaign's congestion episodes (that's what makes its CoV 0.29-class).
+pub fn tab2(args: &Args) -> String {
+    let n = args.usize_or("samples", 4000);
+    let mut rng = Rng::new(args.u64_or("seed", 7));
+    let mut cluster = Cluster::new(ClusterSpec::new(4, 8, GpuClass::A100));
+    let bytes = 64.0 * 1024.0 * 1024.0;
+
+    let mut rows: Vec<Vec<String>> = Vec::new();
+    let mut record = |name: &str, cov: f64, paper: f64| {
+        rows.push(vec![name.to_string(), format!("{cov:.2}"), format!("{paper:.2}")]);
+    };
+
+    // Intra-GPU / NVL: direct class sampling.
+    let a = GpuId { node: 0, index: 0 };
+    let same = GpuId { node: 0, index: 1 };
+    let covs = |cluster: &mut Cluster, rng: &mut Rng, from: GpuId, to: GpuId, n: usize| {
+        let xs: Vec<f64> = (0..n).map(|_| cluster.transfer_time_s(from, to, bytes, rng)).collect();
+        stats::cov(&xs)
+    };
+    record("Intra-GPU (A100)", covs(&mut cluster, &mut rng, a, a, n), 0.01);
+    record("Intra-GPU (H800)", {
+        let mut c2 = Cluster::new(ClusterSpec::new(1, 8, GpuClass::H800));
+        covs(&mut c2, &mut rng, a, a, n)
+    }, 0.01);
+    record("NVL", covs(&mut cluster, &mut rng, a, same, n), 0.02);
+    // PIX: pcie-switch path modeled via its class noise directly.
+    let pix: Vec<f64> = (0..n)
+        .map(|_| {
+            let base = LinkClass::PcieSwitch.latency_s()
+                + bytes / (LinkClass::PcieSwitch.gbytes_per_sec(GpuClass::A100) * 1e9);
+            base * (1.0 + LinkClass::PcieSwitch.base_cov() * rng.normal()).max(0.05)
+        })
+        .collect();
+    record("PIX", stats::cov(&pix), 0.09);
+    // RDMA with intermittent congestion (as the sampling jobs experienced).
+    let b = GpuId { node: 1, index: 0 };
+    let xs: Vec<f64> = (0..n)
+        .map(|i| {
+            // ~8% of samples fall inside a congestion episode.
+            let congested = (i % 100) < 8;
+            cluster.uplinks[1].bandwidth_scale = if congested { 0.3 } else { 1.0 };
+            cluster.transfer_time_s(a, b, bytes, &mut rng)
+        })
+        .collect();
+    cluster.uplinks[1].bandwidth_scale = 1.0;
+    record("RDMA (incl. congestion episodes)", stats::cov(&xs), 0.29);
+
+    let mut out = String::from("Table 2 — performance variation (CoV) of communication components\n");
+    out.push_str(&plot::table(&["Comm. Type", "CoV (measured)", "CoV (paper)"], &rows));
+    out
+}
+
+/// Fig 5 — two 1024-GPU jobs failing slow from congestion (LLM steady-ish
+/// with early turbulence; MoE with ladder-shaped degradations).
+pub fn fig5(args: &Args) -> String {
+    let iters = args.usize_or("iters", 400);
+    let mut out = String::from("Figure 5 — 1024-GPU jobs under network congestion\n");
+
+    // LLM job: heavy congestion in the initial phase.
+    let mut sim = case_sim(ParallelConfig::new(8, 32, 4), "gpt2-13b", 128, 5);
+    let span = sim.ideal_iter_s * iters as f64;
+    sim.inject(vec![
+        FailSlowEvent {
+            kind: FailSlowKind::NetworkCongestion,
+            target: Target::Uplink(3),
+            start: 0,
+            duration: (span * 0.3 * 1e6) as u64,
+            scale: 0.3,
+        },
+        FailSlowEvent {
+            kind: FailSlowKind::NetworkCongestion,
+            target: Target::Uplink(40),
+            start: from_secs(span * 0.1),
+            duration: (span * 0.1 * 1e6) as u64,
+            scale: 0.5,
+        },
+    ]);
+    let (t, thpt, _, _) = run_case(&mut sim, iters, |_| 0.0);
+    out.push_str(&plot::line_chart("LLM job throughput (iters/s)", &t, &thpt, 60, 8));
+
+    // MoE job: ladder of persistent congestions through the run.
+    let mut sim2 = case_sim(ParallelConfig::new(8, 32, 4), "gpt2-13b", 128, 6);
+    let span2 = sim2.ideal_iter_s * iters as f64;
+    let mut evs = Vec::new();
+    for (i, frac) in [0.1, 0.35, 0.6, 0.8].iter().enumerate() {
+        evs.push(FailSlowEvent {
+            kind: FailSlowKind::NetworkCongestion,
+            target: Target::Uplink(10 + i * 7),
+            start: from_secs(span2 * frac),
+            duration: (span2 * 0.18 * 1e6) as u64,
+            scale: 0.5 - 0.08 * i as f64,
+        });
+    }
+    sim2.inject(evs);
+    let (t2, thpt2, _, _) = run_case(&mut sim2, iters, |_| 0.0);
+    out.push_str(&plot::line_chart(
+        "MoE job throughput (ladder-shaped, iters/s)",
+        &t2,
+        &thpt2,
+        60,
+        8,
+    ));
+    let cov = stats::cov(&thpt2);
+    out.push_str(&format!("MoE throughput CoV {cov:.2} (paper: high variance + ladder shape)\n"));
+    out
+}
+
+/// Fig 6 — compound congestion + thermal throttling on a 1024-GPU job.
+pub fn fig6(args: &Args) -> String {
+    let iters = args.usize_or("iters", 500);
+    let mut sim = case_sim(ParallelConfig::new(8, 32, 4), "gpt2-13b", 128, 7);
+    let span = sim.ideal_iter_s * iters as f64;
+    sim.inject(vec![
+        // t=62 min analogue: severe congestion, -80% throughput.
+        FailSlowEvent {
+            kind: FailSlowKind::NetworkCongestion,
+            target: Target::Uplink(9),
+            start: from_secs(span * 0.2),
+            duration: (span * 0.25 * 1e6) as u64,
+            scale: 0.06,
+        },
+        // t=80: thermal throttling while congestion unabated.
+        FailSlowEvent {
+            kind: FailSlowKind::GpuDegradation,
+            target: Target::Gpu(9 * 8 + 3),
+            start: from_secs(span * 0.28),
+            duration: (span * 0.17 * 1e6) as u64,
+            scale: 0.5,
+        },
+        // t=120 onward: another two-hour congestion, -85%.
+        FailSlowEvent {
+            kind: FailSlowKind::NetworkCongestion,
+            target: Target::Uplink(33),
+            start: from_secs(span * 0.55),
+            duration: (span * 0.35 * 1e6) as u64,
+            scale: 0.05,
+        },
+    ]);
+    let (t, thpt, sm, _) = run_case(&mut sim, iters, |_| 0.0);
+
+    let mut out = String::from("Figure 6 — compound fail-slow (congestion + GPU thermal) at 1024 GPUs\n");
+    out.push_str(&plot::line_chart("throughput (iters/s)", &t, &thpt, 60, 8));
+    out.push_str(&plot::line_chart("GPU SM utilization (%)", &t, &sm, 60, 6));
+    let hi = stats::quantile(&thpt, 0.95);
+    let lo = thpt.iter().cloned().fold(f64::MAX, f64::min);
+    out.push_str(&format!(
+        "worst-case throughput {:.0}% of normal (paper: compound issues cut to ~10%)\n",
+        100.0 * lo / hi
+    ));
+    out
+}
+
+/// Fig 8 — recurring communication pattern in the monitor's op log.
+pub fn fig8(args: &Args) -> String {
+    let iters = args.usize_or("iters", 24);
+    let mut sim = case_sim(ParallelConfig::new(2, 2, 2), "gpt2-7b", 1, 8);
+    for _ in 0..iters {
+        sim.step();
+    }
+    let log = &sim.monitor.logs[0];
+    let kinds = log.op_kinds();
+    let period = crate::detect::acf::find_period(&kinds, 16, 0.9).unwrap_or(0);
+
+    let mut out = String::from("Figure 8 — periodic communication pattern (rank 0 op log)\n  ");
+    for op in log.ops.iter().take(4 * period.max(3)) {
+        out.push_str(&format!("[{} @{:.2}s] ", op.op.name(), crate::simkit::secs(op.at)));
+    }
+    out.push_str(&format!(
+        "\n  ACF-detected recurring period: {period} ops/iteration\n"
+    ));
+    let acf_vals: Vec<f64> = (1..=8).map(|k| stats::acf(&kinds, k)).collect();
+    out.push_str(&plot::csv(
+        &["lag", "acf"],
+        &acf_vals
+            .iter()
+            .enumerate()
+            .map(|(i, &a)| vec![(i + 1) as f64, a])
+            .collect::<Vec<_>>(),
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args() -> Args {
+        Args::parse(["--iters".to_string(), "120".into()])
+    }
+
+    #[test]
+    fn fig2_shows_throughput_drop() {
+        let out = fig2(&args());
+        assert!(out.contains("CPU contention"));
+        assert!(out.contains("max throughput drop"));
+    }
+
+    #[test]
+    fn fig4_emits_cnps() {
+        let out = fig4(&args());
+        assert!(out.contains("CNPs"));
+    }
+
+    #[test]
+    fn tab2_rdma_least_stable() {
+        let out = tab2(&Args::parse(["--samples".to_string(), "1500".into()]));
+        // RDMA row must carry the largest measured CoV.
+        let covs: Vec<f64> = out
+            .lines()
+            .filter(|l| l.starts_with('|') && !l.contains("Comm. Type") && !l.contains("---"))
+            .filter_map(|l| {
+                let cells: Vec<&str> = l.split('|').map(str::trim).collect();
+                cells.get(2).and_then(|c| c.parse::<f64>().ok())
+            })
+            .collect();
+        assert!(covs.len() >= 4, "{out}");
+        let rdma = covs.last().unwrap();
+        assert!(covs[..covs.len() - 1].iter().all(|c| c < rdma), "{covs:?}");
+    }
+
+    #[test]
+    fn fig8_finds_period() {
+        let out = fig8(&Args::parse(["--iters".to_string(), "30".into()]));
+        assert!(out.contains("recurring period"));
+        assert!(!out.contains("period: 0"), "{out}");
+    }
+}

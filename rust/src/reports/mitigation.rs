@@ -1,0 +1,356 @@
+//! Mitigation effectiveness experiments: Fig 13–17.
+
+use crate::coordinator::{run_with_falcon, FalconConfig};
+use crate::inject::{FailSlowEvent, FailSlowKind, Severity, Target};
+use crate::mitigate::microbatch;
+use crate::pipeline::{ModelDims, ParallelConfig, Workload};
+use crate::sim::{JobSpec, TrainingSim};
+use crate::simkit::{from_secs, MINUTE};
+use crate::util::cli::Args;
+use crate::util::plot;
+
+fn spec(cfg: ParallelConfig, nodes: usize, model: &str, seed: u64) -> JobSpec {
+    JobSpec {
+        cfg,
+        wl: Workload { model: ModelDims::gpt2(model), micro_batch: 1, microbatches: 8 },
+        gpus_per_node: cfg.world().div_ceil(nodes),
+        gpu_class: crate::fabric::GpuClass::H800,
+        mfu: 0.42,
+        jitter: 0.0,
+        spike_p: 0.0,
+        seed,
+    }
+}
+
+/// Slowdown factor of a sim against its own ideal, averaged over `iters`.
+fn slowdown(sim: &mut TrainingSim, iters: usize) -> f64 {
+    let outcome = sim.run(iters);
+    outcome.slowdown()
+}
+
+/// Mitigated-vs-unmitigated slowdown reduction (%) for one scenario built
+/// by `build`. S2-only evaluation applies the micro-batch solve directly
+/// (isolating the strategy, as §7.3 does).
+fn s2_reduction(build: impl Fn() -> TrainingSim, iters: usize) -> (f64, f64, f64) {
+    // Unmitigated.
+    let mut sim = build();
+    let slow = slowdown(&mut sim, iters);
+    // Mitigated: profile replica speeds, re-solve allocation.
+    let mut sim = build();
+    sim.step();
+    let times = sim.replica_microbatch_times();
+    let total = sim.spec.wl.microbatches * sim.spec.cfg.dp;
+    sim.set_microbatch_alloc(microbatch::solve(&times, total).m);
+    let mitigated = slowdown(&mut sim, iters);
+    let reduction = if slow > 1.0 {
+        100.0 * (slow - mitigated) / (slow - 1.0)
+    } else {
+        0.0
+    };
+    (slow, mitigated, reduction)
+}
+
+/// Fig 13 — S2 vs severity (W/M/S) across DP in {2,4,8} on one 8-GPU node.
+pub fn fig13(args: &Args) -> String {
+    let iters = args.usize_or("iters", 60);
+    let mut labels = Vec::new();
+    let mut slows = Vec::new();
+    let mut mitigs = Vec::new();
+    let mut rows = Vec::new();
+    for (dp, tp) in [(2usize, 4usize), (4, 2), (8, 1)] {
+        for sev in Severity::ALL {
+            let build = || {
+                let mut sim = TrainingSim::new(spec(ParallelConfig::new(tp, dp, 1), 1, "gpt2-7b", 13));
+                sim.inject(vec![FailSlowEvent {
+                    kind: FailSlowKind::GpuDegradation,
+                    target: Target::Gpu(0),
+                    start: 0,
+                    duration: 10_000 * MINUTE,
+                    scale: sev.scale(),
+                }]);
+                sim
+            };
+            let (slow, mitig, red) = s2_reduction(build, iters);
+            labels.push(format!("DP{dp}-{}", sev.name()));
+            slows.push(slow);
+            mitigs.push(mitig);
+            rows.push(vec![dp as f64, sev.scale(), slow, mitig, red]);
+        }
+    }
+
+    let mut out = String::from(
+        "Figure 13 — micro-batch adjustment (S2) vs fail-slow severity and DP width\n",
+    );
+    out.push_str("  (bars: iteration slowdown factor; left=unmitigated, right=with S2)\n");
+    let mut merged_labels = Vec::new();
+    let mut merged = Vec::new();
+    for (i, l) in labels.iter().enumerate() {
+        merged_labels.push(format!("{l} raw"));
+        merged.push(slows[i]);
+        merged_labels.push(format!("{l} +S2"));
+        merged.push(mitigs[i]);
+    }
+    out.push_str(&plot::bar_chart("slowdown (x)", &merged_labels, &merged, 40));
+    out.push_str(&plot::csv(&["dp", "sev_scale", "slow_x", "mitigated_x", "reduction_pct"], &rows));
+    let avg: f64 = rows.iter().map(|r| r[4]).sum::<f64>() / rows.len() as f64;
+    let max = rows.iter().map(|r| r[4]).fold(0.0, f64::max);
+    out.push_str(&format!(
+        "mean reduction {avg:.1}%, max {max:.1}% (paper: 55.3–77.8% means, up to 82.9%)\n"
+    ));
+    out
+}
+
+/// Fig 14 — S2 vs number of degraded DP groups (0–4 of 4).
+pub fn fig14(args: &Args) -> String {
+    let iters = args.usize_or("iters", 60);
+    let mut rows = Vec::new();
+    for n_slow in 0..=4usize {
+        let build = || {
+            let mut sim = TrainingSim::new(spec(ParallelConfig::new(2, 4, 1), 1, "gpt2-7b", 14));
+            let evs: Vec<FailSlowEvent> = (0..n_slow)
+                .map(|d| FailSlowEvent {
+                    kind: FailSlowKind::GpuDegradation,
+                    // Degrade one GPU of replica d's TP pair: GPUs 2d.
+                    target: Target::Gpu(2 * d),
+                    start: 0,
+                    duration: 10_000 * MINUTE,
+                    scale: 0.52, // ~1.9x replica slowdown, the paper's case
+                })
+                .collect();
+            sim.inject(evs);
+            sim
+        };
+        let (slow, mitig, red) = s2_reduction(build, iters);
+        rows.push(vec![n_slow as f64, slow, mitig, red]);
+    }
+    let mut out = String::from("Figure 14 — S2 vs number of fail-slow DP groups (of 4)\n");
+    out.push_str(&plot::csv(&["n_slow_groups", "slow_x", "mitigated_x", "reduction_pct"], &rows));
+    out.push_str(&plot::bar_chart(
+        "reduction (%)",
+        &rows.iter().map(|r| format!("{} slow", r[0] as usize)).collect::<Vec<_>>(),
+        &rows.iter().map(|r| r[3].max(0.0)).collect::<Vec<_>>(),
+        40,
+    ));
+    out.push_str("paper: best 79.7% with 1 slow group (1.9x -> 1.2x); no room when all 4 degraded\n");
+    out
+}
+
+/// Fig 15 — topology adjustment (S3) vs congestion severity, PP in {4, 8}
+/// on 2 nodes x 8 GPUs.
+pub fn fig15(args: &Args) -> String {
+    let iters = args.usize_or("iters", 400);
+    let mut rows = Vec::new();
+    for (pp, dp) in [(4usize, 4usize), (8, 2)] {
+        for sev in Severity::ALL {
+            // 16 ranks, one per node: stage-0's DP ring crosses the
+            // congested pair in both PP depths. Deeper pipelines shard the
+            // gradient volume (Eq. 9: N/(P*T)), so congestion hurts less
+            // and S3 has less to recover — the paper's PP=4 > PP=8 shape.
+            let nodes = 16;
+            let build = |mitigate: bool| {
+                let cfg = ParallelConfig::new(1, dp, pp);
+                let mut sim = TrainingSim::new(spec(cfg, nodes, "gpt2-7b", 15 + pp as u64));
+                sim.spec.jitter = 0.01;
+                let onset = sim.ideal_iter_s * 20.0;
+                // Congest the path between the first two nodes (carries DP
+                // when dp>1, PP when dp=1 — both the paper's cases).
+                sim.inject(vec![FailSlowEvent {
+                    kind: FailSlowKind::NetworkCongestion,
+                    target: Target::Link(0, 1),
+                    start: from_secs(onset),
+                    duration: 10_000 * MINUTE,
+                    scale: sev.scale() * 0.5,
+                }]);
+                let mut fc = FalconConfig::default();
+                fc.mitigate = mitigate;
+                fc.overheads.adjust_topology_s = 20.0;
+                fc.topology_pause = from_secs(20.0);
+                let _ = run_with_falcon(&mut sim, fc, iters);
+                // Slowdown over the post-onset window.
+                let outcome_thpt = sim.timeline.mean_throughput();
+                1.0 / outcome_thpt / sim.ideal_iter_s
+            };
+            let slow = build(false);
+            let mitig = build(true);
+            let red = if slow > 1.0 { 100.0 * (slow - mitig) / (slow - 1.0) } else { 0.0 };
+            rows.push(vec![pp as f64, sev.scale(), slow, mitig, red]);
+        }
+    }
+    let mut out = String::from("Figure 15 — topology adjustment (S3) vs congestion severity and PP depth\n");
+    out.push_str(&plot::csv(&["pp", "sev_scale", "slow_x", "mitigated_x", "reduction_pct"], &rows));
+    let mean4: f64 = rows.iter().filter(|r| r[0] == 4.0).map(|r| r[4]).sum::<f64>() / 3.0;
+    let mean8: f64 = rows.iter().filter(|r| r[0] == 8.0).map(|r| r[4]).sum::<f64>() / 3.0;
+    out.push_str(&format!(
+        "mean reduction: PP=4 {mean4:.1}%, PP=8 {mean8:.1}% (paper: 53.7% and 24.8%, max 61.5%; PP=4 benefits more)\n"
+    ));
+    out
+}
+
+/// Fig 16 — straggler consolidation with 1–4 congested links on (4D,4P).
+///
+/// The paper congests links that slow pairs of GPUs in PP stages and shows
+/// consolidation bounds the damage: 16 GPUs (4D,4P) on 8 nodes, stage s on
+/// the node pair (2s, 2s+1) whose interconnect carries that stage's DP
+/// ring. Congesting k of those pairs slows k stages; the S3 planner swaps
+/// nodes so the slow paths collapse onto the fewest stages (and dodges
+/// them entirely when clean pairs remain).
+pub fn fig16(args: &Args) -> String {
+    let iters = args.usize_or("iters", 40);
+    let cfg = ParallelConfig::new(1, 4, 4);
+    let mut rows = Vec::new();
+    for n_links in 1..=4usize {
+        let build = || {
+            let mut sim = TrainingSim::new(spec(cfg, 8, "gpt2-7b", 16));
+            let evs: Vec<FailSlowEvent> = (0..n_links)
+                .map(|s| FailSlowEvent {
+                    // Each injected straggler slows one GPU pair's stage —
+                    // the per-stage slowdown Fig 11's makespan analysis is
+                    // about. (Congestion-on-links in our volume-accurate
+                    // model hits the all-reduce MAX instead, where
+                    // consolidation is a no-op by construction; see
+                    // EXPERIMENTS.md for the substitution note.)
+                    kind: FailSlowKind::GpuDegradation,
+                    target: Target::Gpu(s * 4),
+                    start: 0,
+                    duration: 10_000 * MINUTE,
+                    scale: 0.6,
+                })
+                .collect();
+            sim.inject(evs);
+            sim
+        };
+        // Unmitigated: k congested stage interconnects.
+        let mut sim = build();
+        let congested = slowdown(&mut sim, iters);
+        // Mitigated: S3 swap search (up to k+1 swaps) — an uplink travels
+        // with its node, so the only lever is CONSOLIDATING congested
+        // nodes into the fewest PP stages (Fig 11's argument).
+        let mut sim = build();
+        sim.step();
+        let plan = crate::mitigate::topology::plan(&mut sim, n_links + 1);
+        crate::mitigate::topology::apply(&mut sim, &plan, 0);
+        let mitigated = slowdown(&mut sim, iters);
+        rows.push(vec![n_links as f64, congested, mitigated]);
+    }
+    let mut out = String::from("Figure 16 — straggler consolidation across PP stages (4D,4P)\n");
+    out.push_str(&plot::csv(&["n_slow_links", "congested_x", "mitigated_x"], &rows));
+    for r in &rows {
+        out.push_str(&format!(
+            "  {} slow link(s): {:.2}x -> {:.2}x\n",
+            r[0] as usize, r[1], r[2]
+        ));
+    }
+    out.push_str("paper: 1.6x->1.3x (1 link), 1.7x->1.3x (2 links), 1.9x->1.7x (3), no room at 4\n");
+    out
+}
+
+/// Fig 17 — compound computation + communication fail-slow handled by the
+/// multi-level planner (S3 at the congestion, S2 at the GPU degradation,
+/// restart once the impact passes the threshold).
+pub fn fig17(args: &Args) -> String {
+    let iters = args.usize_or("iters", 900);
+    let cfg = ParallelConfig::new(2, 4, 2);
+    let run = |mitigate: bool| {
+        let mut sim = TrainingSim::new(spec(cfg, 8, "gpt2-7b", 17));
+        sim.spec.jitter = 0.01;
+        let it = sim.ideal_iter_s;
+        let span = it * iters as f64;
+        sim.inject(vec![
+            FailSlowEvent {
+                kind: FailSlowKind::NetworkCongestion,
+                target: Target::Link(0, 1),
+                start: from_secs(span * 0.08),
+                duration: (span * 1.2 * 1e6) as u64,
+                scale: 0.25,
+            },
+            FailSlowEvent {
+                kind: FailSlowKind::GpuDegradation,
+                target: Target::Gpu(2),
+                start: from_secs(span * 0.4),
+                duration: (span * 1.2 * 1e6) as u64,
+                scale: 0.45,
+            },
+        ]);
+        let mut fc = FalconConfig::default();
+        fc.mitigate = mitigate;
+        fc.overheads.adjust_topology_s = 25.0;
+        fc.topology_pause = from_secs(25.0);
+        fc.overheads.ckpt_restart_s = span * 0.35;
+        fc.restart_cost = from_secs(span * 0.12);
+        let falcon = run_with_falcon(&mut sim, fc, iters);
+        (sim, falcon)
+    };
+
+    let (sim_m, falcon) = run(true);
+    let (sim_u, _) = run(false);
+
+    let t: Vec<f64> = sim_m.timeline.xs_mins();
+    let y: Vec<f64> = sim_m.timeline.ys();
+    let mut out = String::from("Figure 17 — compound comp+comm fail-slow under multi-level mitigation\n");
+    out.push_str(&plot::line_chart("throughput WITH FALCON (iters/s)", &t, &y, 64, 9));
+    let tu: Vec<f64> = sim_u.timeline.xs_mins();
+    let yu: Vec<f64> = sim_u.timeline.ys();
+    out.push_str(&plot::line_chart("throughput WITHOUT (iters/s)", &tu, &yu, 64, 9));
+    out.push_str("actions:\n");
+    for a in &falcon.actions {
+        out.push_str(&format!(
+            "  t={:.1}min iter={} {:?}\n",
+            crate::simkit::mins(a.at),
+            a.iter,
+            match &a.what {
+                crate::coordinator::ActionKind::Diagnosed(d) => format!("Diagnosed({:?})", d.kind),
+                other => format!("{other:?}"),
+            }
+        ));
+    }
+    let mean_m = sim_m.timeline.mean_throughput();
+    let mean_u = sim_u.timeline.mean_throughput();
+    out.push_str(&format!(
+        "mean throughput: {mean_m:.3} with FALCON vs {mean_u:.3} without ({:.1}% recovered)\n",
+        100.0 * (mean_m - mean_u) / mean_u.max(1e-12)
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick() -> Args {
+        Args::parse(["--iters".to_string(), "40".into()])
+    }
+
+    #[test]
+    fn fig13_s2_reduces_slowdown() {
+        let out = fig13(&quick());
+        let mean_line = out.lines().find(|l| l.starts_with("mean reduction")).unwrap();
+        let mean: f64 = mean_line.split_whitespace().nth(2).unwrap().trim_end_matches("%,").parse().unwrap();
+        assert!(mean > 30.0, "S2 mean reduction too low: {mean}% \n{out}");
+    }
+
+    #[test]
+    fn fig14_monotone_room() {
+        let out = fig14(&quick());
+        // Extract reductions for 1..4 slow groups from the CSV.
+        let reds: Vec<f64> = out
+            .lines()
+            .filter(|l| l.chars().next().map(|c| c.is_ascii_digit()).unwrap_or(false))
+            .map(|l| l.split(',').last().unwrap().parse::<f64>().unwrap())
+            .collect();
+        assert_eq!(reds.len(), 5);
+        assert!(reds[1] > reds[3], "room must shrink: {reds:?}");
+        assert!(reds[4].abs() < 15.0, "no room with all slow: {reds:?}");
+    }
+
+    #[test]
+    fn fig16_consolidation_helps_when_possible() {
+        let out = fig16(&Args::parse(["--iters".to_string(), "25".into()]));
+        let rows: Vec<Vec<f64>> = out
+            .lines()
+            .filter(|l| l.chars().next().map(|c| c.is_ascii_digit()).unwrap_or(false))
+            .map(|l| l.split(',').map(|x| x.parse::<f64>().unwrap()).collect())
+            .collect();
+        // With 2 stragglers, consolidation must improve on scattered.
+        assert!(rows[1][2] <= rows[1][1] + 1e-9, "{rows:?}");
+    }
+}

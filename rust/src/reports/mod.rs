@@ -1,0 +1,74 @@
+//! Experiment report generators: one function per paper table and figure.
+//!
+//! Each generator runs the corresponding experiment on the simulator (or
+//! the live trainer / real buffers where the artifact is measurable on this
+//! host), then renders an ASCII figure + CSV block mirroring the paper's
+//! plot. `bench_tables`/`bench_figures` and the `falcon report` CLI all
+//! dispatch through [`generate`].
+
+pub mod campaign;
+pub mod cases;
+pub mod detection;
+pub mod mitigation;
+pub mod overhead;
+pub mod scale;
+
+use crate::util::cli::Args;
+
+/// All report ids, in paper order.
+pub const ALL: &[&str] = &[
+    "fig1", "tab1", "fig2", "fig3", "fig4", "tab2", "fig5", "fig6", "fig8",
+    "fig12", "tab4", "tab5", "fig13", "fig14", "fig15", "fig16", "fig17",
+    "fig18", "tab6", "fig19", "fig20", "tab7",
+];
+
+/// Generate one report by id. `args` supplies knobs like `--iters`,
+/// `--seed`, `--fast`.
+pub fn generate(id: &str, args: &Args) -> String {
+    match id {
+        "fig1" => campaign::fig1(args),
+        "tab1" => campaign::tab1(args),
+        "fig2" => cases::fig2(args),
+        "fig3" => cases::fig3(args),
+        "fig4" => cases::fig4(args),
+        "tab2" => cases::tab2(args),
+        "fig5" => cases::fig5(args),
+        "fig6" => cases::fig6(args),
+        "fig8" => cases::fig8(args),
+        "fig12" => detection::fig12(args),
+        "tab4" => detection::tab4(args),
+        "tab5" => detection::tab5(args),
+        "fig13" => mitigation::fig13(args),
+        "fig14" => mitigation::fig14(args),
+        "fig15" => mitigation::fig15(args),
+        "fig16" => mitigation::fig16(args),
+        "fig17" => mitigation::fig17(args),
+        "fig18" => overhead::fig18(args),
+        "tab6" => overhead::tab6(args),
+        "fig19" => overhead::fig19(args),
+        "fig20" => scale::fig20(args),
+        "tab7" => scale::tab7(args),
+        other => format!("unknown report '{other}'; available: {ALL:?}\n"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_covers_all_ids() {
+        let args = Args::parse(["--fast".to_string()]);
+        // Smoke the cheapest reports end to end.
+        for id in ["fig8", "tab6"] {
+            let out = generate(id, &args);
+            assert!(out.len() > 50, "{id} produced: {out}");
+        }
+    }
+
+    #[test]
+    fn unknown_id_reports_availability() {
+        let out = generate("fig99", &Args::parse([]));
+        assert!(out.contains("unknown report"));
+    }
+}

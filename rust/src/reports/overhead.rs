@@ -1,0 +1,181 @@
+//! Overhead experiments: Fig 18 (detector), Table 6 (micro-batch solve
+//! time) and Fig 19 (topology-adjustment pause, memory vs disk — measured
+//! on real buffers).
+
+use crate::mitigate::microbatch;
+use crate::pipeline::{ModelDims, ParallelConfig, Workload};
+use crate::sim::{JobSpec, TrainingSim};
+use crate::util::cli::Args;
+use crate::util::plot;
+use crate::util::rng::Rng;
+use std::time::Instant;
+
+/// Fig 18 — detector overhead across parallel strategies: iteration time
+/// with the monitor shim attached vs detached.
+pub fn fig18(args: &Args) -> String {
+    let iters = args.usize_or("iters", 150);
+    let configs: Vec<(&str, ParallelConfig, usize)> = vec![
+        ("4T1D1P", ParallelConfig::new(4, 1, 1), 1),
+        ("2T2D1P", ParallelConfig::new(2, 2, 1), 1),
+        ("2T1D2P", ParallelConfig::new(2, 1, 2), 1),
+        ("1T4D1P", ParallelConfig::new(1, 4, 1), 1),
+        ("2T2D2P", ParallelConfig::new(2, 2, 2), 2),
+        ("2T4D1P", ParallelConfig::new(2, 4, 1), 4),
+    ];
+    let mut labels = Vec::new();
+    let mut overheads = Vec::new();
+    for (label, cfg, nodes) in configs {
+        let mk = |attached: bool, seed: u64| {
+            let mut sim = TrainingSim::new(JobSpec {
+                cfg,
+                wl: Workload { model: ModelDims::gpt2("gpt2-7b"), micro_batch: 1, microbatches: 8 },
+                gpus_per_node: cfg.world().div_ceil(nodes),
+                gpu_class: crate::fabric::GpuClass::H800,
+                mfu: 0.42,
+                jitter: 0.012, // real runs jitter — hence the paper's "0.0%" cells
+            spike_p: 0.01,
+                seed,
+            });
+            sim.monitor_attached = attached;
+            let outcome = sim.run(iters);
+            outcome.actual as f64 / iters as f64
+        };
+        let with = mk(true, 18);
+        let without = mk(false, 19); // different seed = run-to-run variability
+        labels.push(label.to_string());
+        overheads.push((100.0 * (with - without) / without).max(0.0));
+    }
+    let mut out = String::from("Figure 18 — FALCON-DETECT overhead per parallel strategy (%)\n");
+    out.push_str(&plot::bar_chart("overhead (%)", &labels, &overheads, 40));
+    let mean: f64 = overheads.iter().sum::<f64>() / overheads.len() as f64;
+    let max = overheads.iter().cloned().fold(0.0, f64::max);
+    out.push_str(&format!(
+        "mean {mean:.2}%, max {max:.2}% (paper: mean 0.39%, max 1.1%; some cells 0.0% from run variability)\n"
+    ));
+    out
+}
+
+/// Table 6 — time to find the optimal micro-batch distribution vs DP count.
+/// Our exact greedy replaces the paper's cvxpy QP; the table shows both.
+pub fn tab6(args: &Args) -> String {
+    let mut rng = Rng::new(args.u64_or("seed", 6));
+    let mut rows = Vec::new();
+    for d in [16usize, 32, 64, 128, 256, 512] {
+        let times: Vec<f64> = (0..d).map(|_| 0.5 + rng.f64()).collect();
+        let total = d * 8;
+        // Warm up + time repeated solves for a stable measurement.
+        let reps = 50;
+        let t0 = Instant::now();
+        let mut sink = 0usize;
+        for _ in 0..reps {
+            sink += microbatch::solve(&times, total).m[0];
+        }
+        let secs = t0.elapsed().as_secs_f64() / reps as f64;
+        std::hint::black_box(sink);
+        let paper = match d {
+            16 | 32 | 64 => 0.01,
+            128 => 0.11,
+            256 => 6.78,
+            _ => 35.93,
+        };
+        rows.push(vec![
+            d.to_string(),
+            format!("{:.6}", secs),
+            format!("{paper:.2}"),
+        ]);
+    }
+    let mut out = String::from("Table 6 — micro-batch distribution solve time vs #DP groups\n");
+    out.push_str(&plot::table(&["# DPs", "ours (s, exact greedy)", "paper cvxpy QP (s)"], &rows));
+    out.push_str("the greedy is provably optimal for Eq. 1 (see mitigate::microbatch tests), replacing the QP\n");
+    out
+}
+
+/// Fig 19 — topology-adjustment overhead: memory (M) vs disk (D) parameter
+/// dump+load, measured on real buffers at several sizes ("GPU memory
+/// utilization" levels scaled to this host).
+pub fn fig19(args: &Args) -> String {
+    let mbs: Vec<usize> = if args.bool_or("fast", true) {
+        vec![16, 64, 192]
+    } else {
+        vec![16, 64, 256, 512, 1024]
+    };
+    let dir = std::env::temp_dir().join("falcon_fig19");
+    let disk = crate::ckpt::DiskStore::new(&dir).expect("tmp dir");
+    let mut mem = crate::ckpt::MemoryStore::new();
+
+    let mut rows = Vec::new();
+    for &mb in &mbs {
+        let data: Vec<u8> = (0..mb * 1024 * 1024).map(|i| (i * 31 + 7) as u8).collect();
+        let mut out_buf = Vec::new();
+        let t_mem = mem.dump("k", &data) + mem.load("k", &mut out_buf).unwrap();
+        let t_disk = disk.dump("k", &data).unwrap() + disk.load("k", &mut out_buf).unwrap();
+        rows.push(vec![mb as f64, t_mem, t_disk, t_disk / t_mem.max(1e-9)]);
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let mut out = String::from(
+        "Figure 19 — topology-adjustment pause: memory (M) vs disk (D) dump+load, real buffers\n",
+    );
+    out.push_str(&plot::csv(&["size_mb", "mem_s", "disk_s", "speedup_x"], &rows));
+    for r in &rows {
+        out.push_str(&format!(
+            "  {:>5} MB: M {:.4}s  D {:.4}s  ({:.1}x)\n",
+            r[0] as usize, r[1], r[2], r[3]
+        ));
+    }
+    let max_speedup = rows.iter().map(|r| r[3]).fold(0.0, f64::max);
+    out.push_str(&format!(
+        "max speedup {max_speedup:.1}x (paper: up to 6.72x, growing with memory utilization)\n"
+    ));
+    // Model extrapolation to paper-scale checkpoints.
+    let model = crate::ckpt::CkptCostModel::default();
+    out.push_str(&format!(
+        "cost-model extrapolation @80GB/GPU x8: M {:.0}s vs D {:.0}s\n",
+        model.mem_roundtrip_s(640e9),
+        model.disk_roundtrip_s(640e9)
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tab6_solver_fast_at_512() {
+        let out = tab6(&Args::parse([]));
+        assert!(out.contains("512"));
+        // Extract our 512-DP solve time; must be far below the paper's 36 s.
+        let line = out.lines().find(|l| l.starts_with("| 512")).unwrap();
+        let ours: f64 = line.split('|').nth(2).unwrap().trim().parse().unwrap();
+        assert!(ours < 0.1, "greedy too slow: {ours}s");
+    }
+
+    #[test]
+    fn fig19_memory_wins() {
+        let out = fig19(&Args::parse(["--fast".to_string()]));
+        let speedup_line = out.lines().find(|l| l.starts_with("max speedup")).unwrap();
+        let x: f64 = speedup_line
+            .split_whitespace()
+            .nth(2)
+            .unwrap()
+            .trim_end_matches('x')
+            .parse()
+            .unwrap();
+        assert!(x > 1.0, "memory must beat disk: {x}");
+    }
+
+    #[test]
+    fn fig18_overhead_small() {
+        let out = fig18(&Args::parse(["--iters".to_string(), "60".into()]));
+        let mean_line = out.lines().find(|l| l.starts_with("mean")).unwrap();
+        let mean: f64 = mean_line
+            .split_whitespace()
+            .nth(1)
+            .unwrap()
+            .trim_end_matches("%,")
+            .parse()
+            .unwrap();
+        assert!(mean < 5.0, "detector overhead too large: {mean}%");
+    }
+}

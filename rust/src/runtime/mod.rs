@@ -1,0 +1,255 @@
+//! PJRT runtime: load AOT-compiled HLO text artifacts and execute them.
+//!
+//! This is the only place Rust touches XLA. Python lowered the Layer-2 JAX
+//! train step (with its Layer-1 Pallas kernels) to `artifacts/*.hlo.txt` at
+//! build time; here the text parses into an `HloModuleProto` (the parser
+//! reassigns instruction ids — why text, not serialized protos, is the
+//! interchange format), compiles once per process, and executes on the
+//! PJRT CPU client. Nothing on this path imports or spawns Python.
+
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+/// Model hyperparameters mirrored from `model_<preset>.meta.json`.
+#[derive(Clone, Debug)]
+pub struct ModelMeta {
+    pub preset: String,
+    pub n_params: usize,
+    pub param_names: Vec<String>,
+    pub param_shapes: Vec<Vec<usize>>,
+    pub batch: usize,
+    pub vocab: usize,
+    pub n_ctx: usize,
+    pub lr: f64,
+    pub momentum: f64,
+}
+
+impl ModelMeta {
+    pub fn load(dir: &Path, preset: &str) -> Result<ModelMeta> {
+        let path = dir.join(format!("model_{preset}.meta.json"));
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {path:?} — run `make artifacts` first"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("parse {path:?}: {e}"))?;
+        let cfg = j.get("config").context("meta missing config")?;
+        let shapes = j
+            .get("param_shapes")
+            .and_then(|s| s.as_arr())
+            .context("meta missing param_shapes")?
+            .iter()
+            .map(|row| {
+                row.as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .filter_map(|d| d.as_usize())
+                    .collect()
+            })
+            .collect();
+        let names = j
+            .get("param_names")
+            .and_then(|s| s.as_arr())
+            .context("meta missing param_names")?
+            .iter()
+            .filter_map(|n| n.as_str().map(|s| s.to_string()))
+            .collect();
+        Ok(ModelMeta {
+            preset: preset.to_string(),
+            n_params: j.get("n_params").and_then(|v| v.as_usize()).context("n_params")?,
+            param_names: names,
+            param_shapes: shapes,
+            batch: j.get("batch").and_then(|v| v.as_usize()).unwrap_or(4),
+            vocab: cfg.get("vocab").and_then(|v| v.as_usize()).context("vocab")?,
+            n_ctx: cfg.get("n_ctx").and_then(|v| v.as_usize()).context("n_ctx")?,
+            lr: cfg.get("lr").and_then(|v| v.as_f64()).unwrap_or(0.1),
+            momentum: cfg.get("momentum").and_then(|v| v.as_f64()).unwrap_or(0.9),
+        })
+    }
+
+    /// Number of elements of parameter i.
+    pub fn param_len(&self, i: usize) -> usize {
+        self.param_shapes[i].iter().product::<usize>().max(1)
+    }
+}
+
+/// A compiled executable plus its origin.
+pub struct Artifact {
+    pub name: String,
+    pub exe: xla::PjRtLoadedExecutable,
+}
+
+/// The PJRT runtime: one CPU client, many compiled artifacts.
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+    pub dir: PathBuf,
+}
+
+impl Runtime {
+    /// CPU PJRT client over the artifact directory.
+    pub fn new(artifact_dir: impl AsRef<Path>) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(Runtime { client, dir: artifact_dir.as_ref().to_path_buf() })
+    }
+
+    /// Load + compile `<name>.hlo.txt`.
+    pub fn load(&self, name: &str) -> Result<Artifact> {
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        if !path.exists() {
+            bail!("artifact {path:?} missing — run `make artifacts`");
+        }
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+            .map_err(|e| anyhow::anyhow!("parse {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile {name}: {e:?}"))?;
+        Ok(Artifact { name: name.to_string(), exe })
+    }
+
+    /// Read the flat f32 initial-parameter dump and split per parameter.
+    pub fn load_params(&self, meta: &ModelMeta) -> Result<Vec<Vec<f32>>> {
+        let path = self.dir.join(format!("params_{}.bin", meta.preset));
+        let bytes = std::fs::read(&path).with_context(|| format!("read {path:?}"))?;
+        if bytes.len() != meta.n_params * 4 {
+            bail!("{path:?}: {} bytes, expected {}", bytes.len(), meta.n_params * 4);
+        }
+        let mut flat = vec![0f32; meta.n_params];
+        for (i, chunk) in bytes.chunks_exact(4).enumerate() {
+            flat[i] = f32::from_le_bytes(chunk.try_into().unwrap());
+        }
+        let mut out = Vec::with_capacity(meta.param_shapes.len());
+        let mut off = 0;
+        for i in 0..meta.param_shapes.len() {
+            let len = self_param_len(&meta.param_shapes[i]);
+            out.push(flat[off..off + len].to_vec());
+            off += len;
+        }
+        debug_assert_eq!(off, meta.n_params);
+        Ok(out)
+    }
+}
+
+fn self_param_len(shape: &[usize]) -> usize {
+    shape.iter().product::<usize>().max(1)
+}
+
+impl Artifact {
+    /// Execute with literal inputs; unpack the (return_tuple=True) tuple
+    /// output into per-element f32 vectors.
+    pub fn run_f32(&self, inputs: &[xla::Literal]) -> Result<Vec<Vec<f32>>> {
+        let bufs = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow::anyhow!("execute {}: {e:?}", self.name))?;
+        let lit = bufs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch {}: {e:?}", self.name))?;
+        let parts = lit
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("untuple {}: {e:?}", self.name))?;
+        parts
+            .into_iter()
+            .map(|p| p.to_vec::<f32>().map_err(|e| anyhow::anyhow!("to_vec: {e:?}")))
+            .collect()
+    }
+}
+
+/// Build an f32 literal of the given shape.
+pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    let n: i64 = dims.iter().product();
+    if n as usize != data.len() {
+        bail!("literal_f32: {} elements for shape {dims:?}", data.len());
+    }
+    xla::Literal::vec1(data)
+        .reshape(dims)
+        .map_err(|e| anyhow::anyhow!("reshape: {e:?}"))
+}
+
+/// Build an i32 literal of the given shape.
+pub fn literal_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+    let n: i64 = dims.iter().product();
+    if n as usize != data.len() {
+        bail!("literal_i32: {} elements for shape {dims:?}", data.len());
+    }
+    xla::Literal::vec1(data)
+        .reshape(dims)
+        .map_err(|e| anyhow::anyhow!("reshape: {e:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn art_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn have_artifacts() -> bool {
+        art_dir().join(".stamp").exists()
+    }
+
+    #[test]
+    fn meta_loads_and_is_consistent() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        }
+        let meta = ModelMeta::load(&art_dir(), "tiny").unwrap();
+        assert_eq!(meta.vocab, 96);
+        let total: usize = meta.param_shapes.iter().map(|s| self_param_len(s)).sum();
+        assert_eq!(total, meta.n_params);
+        assert_eq!(meta.param_names.len(), meta.param_shapes.len());
+    }
+
+    #[test]
+    fn params_bin_splits_cleanly() {
+        if !have_artifacts() {
+            return;
+        }
+        let rt = Runtime::new(art_dir()).unwrap();
+        let meta = ModelMeta::load(&art_dir(), "tiny").unwrap();
+        let params = rt.load_params(&meta).unwrap();
+        assert_eq!(params.len(), meta.param_shapes.len());
+        for (i, p) in params.iter().enumerate() {
+            assert_eq!(p.len(), meta.param_len(i));
+        }
+        // LN gains are exactly 1.0 at init — spot-check the layout split.
+        for (i, name) in meta.param_names.iter().enumerate() {
+            if name.ends_with("_g") {
+                assert!(params[i].iter().all(|&x| x == 1.0), "{name}");
+            }
+        }
+    }
+
+    #[test]
+    fn literal_shape_validation() {
+        assert!(literal_f32(&[1.0, 2.0], &[3, 1]).is_err());
+        assert!(literal_f32(&[1.0, 2.0, 3.0], &[3, 1]).is_ok());
+        assert!(literal_i32(&[1, 2, 3, 4], &[2, 2]).is_ok());
+    }
+
+    #[test]
+    fn gemm_bench_artifact_runs() {
+        if !have_artifacts() {
+            return;
+        }
+        let rt = Runtime::new(art_dir()).unwrap();
+        let art = rt.load("gemm_bench").unwrap();
+        let n = 256usize;
+        let x: Vec<f32> = (0..n * n).map(|i| ((i % 13) as f32 - 6.0) / 6.0).collect();
+        let w: Vec<f32> = (0..n * n).map(|i| ((i % 7) as f32 - 3.0) / 3.0).collect();
+        let out = art
+            .run_f32(&[
+                literal_f32(&x, &[n as i64, n as i64]).unwrap(),
+                literal_f32(&w, &[n as i64, n as i64]).unwrap(),
+            ])
+            .unwrap();
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].len(), n * n);
+        assert_eq!(out[1].len(), 1);
+        assert!(out[1][0].is_finite());
+        // Normalization bounds the output.
+        assert!(out[0].iter().all(|v| v.abs() <= 1.0 + 1e-4));
+    }
+}

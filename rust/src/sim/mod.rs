@@ -1,0 +1,665 @@
+//! Simulated hybrid-parallel training job.
+//!
+//! Composes the fabric, pipeline, collective and injection substrates into
+//! an iteration-by-iteration training simulation: each step evaluates
+//! per-replica 1F1B makespans and DP all-reduce times at the *current*
+//! cluster health, advances the clock, emits the monitor's op log, and
+//! exposes the hooks FALCON needs (profiling queries, validation
+//! benchmarks, micro-batch reallocation, node swaps, restart).
+//!
+//! This is the system under test for every at-scale experiment: the
+//! characterization campaign (Fig 1/Table 1), the case studies (Fig 2–6),
+//! detection accuracy (Fig 12, Tables 4–5) and mitigation effectiveness
+//! (Fig 13–17, 20, Table 7).
+
+use crate::collectives::{CollOp, CommGroup, Topology};
+use crate::fabric::{Cluster, ClusterSpec, GpuClass};
+use crate::inject::FailSlowEvent;
+use crate::metrics::{JobOutcome, Timeline};
+use crate::monitor::{group_id, Monitor};
+use crate::pipeline::{
+    microbatch_time_s, one_f1b_makespan, ParallelConfig, RankGrid, StageTimes, Workload,
+};
+use crate::simkit::{from_secs, Time};
+use crate::util::rng::Rng;
+
+/// Everything needed to instantiate a simulated job.
+#[derive(Clone, Debug)]
+pub struct JobSpec {
+    pub cfg: ParallelConfig,
+    pub wl: Workload,
+    pub gpus_per_node: usize,
+    pub gpu_class: GpuClass,
+    /// Model FLOPs utilization (fraction of peak the kernels achieve).
+    pub mfu: f64,
+    /// Iteration-time measurement jitter (CoV of healthy iterations).
+    pub jitter: f64,
+    /// Probability of a single-iteration stall spike (dataloader hiccup,
+    /// GC pause, ...): the transient jitter that raw BOCD mistakes for a
+    /// fail-slow and BOCD+V's verification dismisses (Tables 4-5).
+    pub spike_p: f64,
+    pub seed: u64,
+}
+
+impl JobSpec {
+    pub fn n_nodes(&self) -> usize {
+        self.cfg.world().div_ceil(self.gpus_per_node)
+    }
+}
+
+/// Communication-group class (profiling compares like with like).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GroupClass {
+    Dp,
+    Pp,
+}
+
+/// Output of the profiling phase for one communication group.
+#[derive(Clone, Debug)]
+pub struct ProfiledGroup {
+    pub id: u64,
+    pub ranks: Vec<usize>,
+    pub mean_time: f64,
+    pub class: GroupClass,
+}
+
+/// Per-iteration observation surfaced to FALCON-DETECT.
+#[derive(Clone, Debug)]
+pub struct IterObs {
+    pub iter: usize,
+    pub start: Time,
+    pub duration: Time,
+    /// Compute makespan per DP replica (seconds).
+    pub replica_makespan: Vec<f64>,
+    /// DP all-reduce time (slowest gradient ring, seconds).
+    pub dp_time: f64,
+    /// Mean GPU SM utilization proxy (Fig 2/3/4's right panels).
+    pub sm_util: f64,
+}
+
+pub struct TrainingSim {
+    pub spec: JobSpec,
+    pub cluster: Cluster,
+    pub grid: RankGrid,
+    pub monitor: Monitor,
+    pub rng: Rng,
+    pub now: Time,
+    pub iter: usize,
+    /// Scheduled fail-slow episodes (absolute sim time).
+    pub events: Vec<FailSlowEvent>,
+    applied: Vec<bool>,
+    /// Micro-batches currently assigned to each DP replica (S2 mutates).
+    pub microbatch_alloc: Vec<usize>,
+    /// Healthy-cluster iteration time with even allocation (seconds).
+    pub ideal_iter_s: f64,
+    /// Whether the monitor shim is attached (adds its overhead — Fig 18).
+    pub monitor_attached: bool,
+    pub timeline: Timeline,
+}
+
+impl TrainingSim {
+    pub fn new(spec: JobSpec) -> Self {
+        let cluster = Cluster::new(ClusterSpec::new(
+            spec.n_nodes(),
+            spec.gpus_per_node,
+            spec.gpu_class,
+        ));
+        let grid = RankGrid::new(spec.cfg, spec.gpus_per_node);
+        let world = spec.cfg.world();
+        let rng = Rng::new(spec.seed);
+        let monitor = Monitor::new(world, 4096);
+        let alloc = even_alloc(spec.wl.microbatches * spec.cfg.dp, spec.cfg.dp);
+        let mut sim = TrainingSim {
+            spec,
+            cluster,
+            grid,
+            monitor,
+            rng,
+            now: 0,
+            iter: 0,
+            events: Vec::new(),
+            applied: Vec::new(),
+            microbatch_alloc: alloc,
+            ideal_iter_s: 0.0,
+            monitor_attached: true,
+            timeline: Timeline::default(),
+        };
+        sim.ideal_iter_s = sim.iter_time_s(false).0;
+        sim
+    }
+
+    /// Schedule fail-slow episodes (absolute times).
+    pub fn inject(&mut self, events: Vec<FailSlowEvent>) {
+        self.applied.extend(std::iter::repeat(false).take(events.len()));
+        self.events.extend(events);
+    }
+
+    /// Apply/revert episodes whose boundaries we crossed.
+    fn update_health(&mut self) {
+        for i in 0..self.events.len() {
+            let ev = self.events[i];
+            if !self.applied[i] && ev.active_at(self.now) {
+                ev.apply(&mut self.cluster);
+                self.applied[i] = true;
+            } else if self.applied[i] && !ev.active_at(self.now) {
+                ev.revert(&mut self.cluster);
+                self.applied[i] = false;
+            }
+        }
+    }
+
+    /// Compute the current iteration time (seconds) and per-replica detail.
+    /// `noisy` adds measurement jitter (off when computing the ideal).
+    fn iter_time_s(&mut self, noisy: bool) -> (f64, Vec<f64>, f64) {
+        let cfg = self.spec.cfg;
+        let mfu = self.spec.mfu;
+
+        // Per-replica 1F1B makespan with its current micro-batch allocation.
+        let mut makespans = Vec::with_capacity(cfg.dp);
+        for d in 0..cfg.dp {
+            let m = self.microbatch_alloc[d].max(1);
+            let mut fwd = Vec::with_capacity(cfg.pp);
+            let mut p2p = Vec::new();
+            for s in 0..cfg.pp {
+                let total = microbatch_time_s(&self.cluster, &self.grid, &self.spec.wl, d, s, mfu);
+                fwd.push(total / 3.0);
+                if s + 1 < cfg.pp {
+                    let a = self.grid.gpu_of_coord(crate::pipeline::RankCoord { tp: 0, dp: d, pp: s });
+                    let b = self.grid.gpu_of_coord(crate::pipeline::RankCoord { tp: 0, dp: d, pp: s + 1 });
+                    p2p.push(self.cluster.transfer_time_nominal_s(
+                        a,
+                        b,
+                        self.spec.wl.pp_bytes_per_microbatch(),
+                    ));
+                }
+            }
+            let st = StageTimes { bwd: fwd.iter().map(|f| 2.0 * f).collect(), fwd, p2p };
+            makespans.push(one_f1b_makespan(&st, m));
+        }
+
+        // Gradient all-reduce: slowest DP ring paces the sync.
+        let mut dp_time = 0.0f64;
+        if cfg.dp > 1 {
+            let bytes = self.spec.wl.dp_bytes(cfg);
+            for pp in 0..cfg.pp {
+                // One ring per (tp, pp); tp=0 ring is representative since
+                // TP peers sit on the same nodes.
+                let group = self.dp_comm_group(0, pp);
+                let t = group.allreduce_time_s(&self.cluster, bytes, &mut self.rng);
+                dp_time = dp_time.max(t);
+            }
+        }
+
+        let compute = makespans.iter().cloned().fold(0.0, f64::max);
+        let mut total = compute + dp_time;
+        if self.monitor_attached {
+            total *= 1.0 + self.monitor.overhead_frac;
+        }
+        if noisy && self.spec.jitter > 0.0 {
+            total *= (1.0 + self.spec.jitter * self.rng.normal()).max(0.2);
+        }
+        if noisy && self.spec.spike_p > 0.0 && self.rng.bernoulli(self.spec.spike_p) {
+            total *= self.rng.range_f64(1.2, 1.8);
+        }
+        (total, makespans, dp_time)
+    }
+
+    /// Noiseless estimate of the current iteration time (seconds) at the
+    /// present health and topology — does not advance the clock, log ops,
+    /// or perturb the RNG stream. Planners (S3 swap search) call this many
+    /// times per decision.
+    pub fn estimate_iter_time_s(&mut self) -> f64 {
+        let saved_rng = self.rng.clone();
+        let (t, _, _) = self.iter_time_s(false);
+        self.rng = saved_rng;
+        t
+    }
+
+    pub fn dp_comm_group(&self, tp: usize, pp: usize) -> CommGroup {
+        let ranks = self.grid.dp_group(tp, pp);
+        let gpus = ranks.iter().map(|&r| self.grid.gpu_of(r)).collect();
+        CommGroup::new(ranks, gpus, Topology::Ring)
+    }
+
+    pub fn pp_comm_group(&self, tp: usize, dp: usize) -> CommGroup {
+        let ranks = self.grid.pp_group(tp, dp);
+        let gpus = ranks.iter().map(|&r| self.grid.gpu_of(r)).collect();
+        CommGroup::new(ranks, gpus, Topology::Ring)
+    }
+
+    pub fn tp_comm_group(&self, dp: usize, pp: usize) -> CommGroup {
+        let ranks = self.grid.tp_group(dp, pp);
+        let gpus = ranks.iter().map(|&r| self.grid.gpu_of(r)).collect();
+        CommGroup::new(ranks, gpus, Topology::Ring)
+    }
+
+    /// Run one training iteration; returns the observation.
+    pub fn step(&mut self) -> IterObs {
+        self.update_health();
+        let start = self.now;
+        let (total_s, makespans, dp_time) = self.iter_time_s(true);
+        let duration = from_secs(total_s);
+
+        // SM utilization proxy: healthy iteration time / actual (all GPUs
+        // idle-wait on the straggler, so utilization dips cluster-wide —
+        // the signature seen in every case-study figure).
+        let sm_util = (self.ideal_iter_s / total_s).min(1.0) * 0.95;
+
+        self.emit_op_log(start, duration, dp_time);
+
+        self.now += duration;
+        let obs = IterObs {
+            iter: self.iter,
+            start,
+            duration,
+            replica_makespan: makespans,
+            dp_time,
+            sm_util,
+        };
+        self.iter += 1;
+        self.timeline.push(start, 1.0 / total_s);
+        obs
+    }
+
+    /// Emit the per-rank communication-op timeline for this iteration
+    /// (the Monitor's view; Fig 8's recurring period).
+    fn emit_op_log(&mut self, start: Time, duration: Time, dp_time: f64) {
+        if !self.monitor_attached {
+            return;
+        }
+        let cfg = self.spec.cfg;
+        let compute_end = start + duration - from_secs(dp_time);
+        for rank in 0..cfg.world() {
+            let c = self.grid.coord_of(rank);
+            // TP all-reduce marks within the compute phase.
+            if cfg.tp > 1 {
+                let g = group_id(&self.grid.tp_group(c.dp, c.pp));
+                let at = start + (compute_end - start) / 4;
+                self.monitor.record(rank, CollOp::AllReduce, g, at, 0);
+            }
+            // PP boundary send/recv.
+            if cfg.pp > 1 {
+                let g = group_id(&self.grid.pp_group(c.tp, c.dp));
+                let at = start + (compute_end - start) / 2;
+                let op = if c.pp + 1 < cfg.pp { CollOp::Send } else { CollOp::Recv };
+                self.monitor.record(rank, op, g, at, 0);
+            }
+            // Gradient RS + AG at the iteration boundary.
+            if cfg.dp > 1 {
+                let g = group_id(&self.grid.dp_group(c.tp, c.pp));
+                self.monitor.record(rank, CollOp::ReduceScatter, g, compute_end, 0);
+                self.monitor
+                    .record(rank, CollOp::AllGather, g, start + duration, 0);
+            } else {
+                // Still an optimizer-boundary op so every config has an
+                // iteration marker.
+                self.monitor
+                    .record(rank, CollOp::AllReduce, group_id(&[rank]), start + duration, 0);
+            }
+        }
+    }
+
+    /// Run `iters` iterations, returning the outcome.
+    pub fn run(&mut self, iters: usize) -> JobOutcome {
+        let t0 = self.now;
+        for _ in 0..iters {
+            self.step();
+        }
+        JobOutcome {
+            iters,
+            ideal: from_secs(self.ideal_iter_s * iters as f64),
+            actual: self.now - t0,
+            timeline: self.timeline.clone(),
+        }
+    }
+
+    // --- profiling & validation hooks (used by FALCON-DETECT) -------------
+
+    /// Per-group mean transfer time at current health: the profiling phase's
+    /// "CUDA event" aggregation.
+    pub fn profile_groups(&mut self) -> Vec<ProfiledGroup> {
+        let cfg = self.spec.cfg;
+        let mut out = Vec::new();
+        let mut rng = self.rng.fork(0xA11CE);
+        if cfg.dp > 1 {
+            let bytes = self.spec.wl.dp_bytes(cfg);
+            for pp in 0..cfg.pp {
+                for tp in 0..cfg.tp {
+                    let g = self.dp_comm_group(tp, pp);
+                    let t = g.allreduce_time_s(&self.cluster, bytes, &mut rng);
+                    out.push(ProfiledGroup {
+                        id: group_id(&g.ranks),
+                        ranks: g.ranks.clone(),
+                        mean_time: t,
+                        class: GroupClass::Dp,
+                    });
+                }
+            }
+        }
+        if cfg.pp > 1 {
+            let bytes = self.spec.wl.pp_bytes_per_microbatch();
+            for dp in 0..cfg.dp {
+                for tp in 0..cfg.tp {
+                    let g = self.pp_comm_group(tp, dp);
+                    let mut worst = 0.0f64;
+                    for (a, b) in g.edges() {
+                        if a < b {
+                            // PP is a chain, not a cycle: skip the wrap edge.
+                            let t = self
+                                .cluster
+                                .transfer_time_s(g.gpus[a], g.gpus[b], bytes, &mut rng);
+                            worst = worst.max(t);
+                        }
+                    }
+                    out.push(ProfiledGroup {
+                        id: group_id(&g.ranks),
+                        ranks: g.ranks.clone(),
+                        mean_time: worst,
+                        class: GroupClass::Pp,
+                    });
+                }
+            }
+        }
+        out
+    }
+
+    /// Dispatch a GEMM benchmark to one GPU (validation phase). Returns
+    /// seconds for a fixed-size GEMM at current health + noise.
+    pub fn bench_gpu(&mut self, flat_gpu: usize) -> f64 {
+        let id = self.cluster.gpu_by_flat(flat_gpu);
+        let flops = 2.0 * 4096f64.powi(3); // 4096^3 GEMM
+        let t = flops / (self.cluster.gpu_rate(id) * self.spec.mfu);
+        t * (1.0 + 0.01 * self.rng.normal()).max(0.5)
+    }
+
+    /// Time one P2P validation transfer between two ranks (fixed 256 MiB).
+    pub fn bench_edge(&mut self, rank_a: usize, rank_b: usize) -> f64 {
+        let a = self.grid.gpu_of(rank_a);
+        let b = self.grid.gpu_of(rank_b);
+        let bytes = 256.0 * 1024.0 * 1024.0;
+        let mut rng = self.rng.fork(0xBE9C);
+        self.cluster.transfer_time_s(a, b, bytes, &mut rng)
+    }
+
+    // --- mitigation hooks (used by FALCON-MITIGATE) ------------------------
+
+    /// S2: set the per-replica micro-batch allocation.
+    pub fn set_microbatch_alloc(&mut self, alloc: Vec<usize>) {
+        assert_eq!(alloc.len(), self.spec.cfg.dp);
+        assert_eq!(
+            alloc.iter().sum::<usize>(),
+            self.spec.wl.microbatches * self.spec.cfg.dp,
+            "allocation must preserve the global batch"
+        );
+        self.microbatch_alloc = alloc;
+    }
+
+    /// Mean per-microbatch processing time of each DP replica (the t_i of
+    /// Eq. 1), profiled at current health.
+    pub fn replica_microbatch_times(&self) -> Vec<f64> {
+        let cfg = self.spec.cfg;
+        (0..cfg.dp)
+            .map(|d| {
+                (0..cfg.pp)
+                    .map(|s| microbatch_time_s(&self.cluster, &self.grid, &self.spec.wl, d, s, self.spec.mfu))
+                    .fold(0.0, f64::max)
+            })
+            .collect()
+    }
+
+    /// S3: swap two logical nodes and charge the pause overhead.
+    pub fn swap_nodes(&mut self, a: usize, b: usize, pause: Time) {
+        self.grid.swap_nodes(a, b);
+        self.now += pause;
+    }
+
+    /// S4: checkpoint-and-restart onto healthy hardware: all active
+    /// episodes end (the job left the degraded components) and the restart
+    /// cost is charged.
+    pub fn restart(&mut self, cost: Time) {
+        for i in 0..self.events.len() {
+            if self.applied[i] {
+                self.events[i].revert(&mut self.cluster);
+                self.applied[i] = false;
+            }
+        }
+        self.events.clear();
+        self.applied.clear();
+        self.cluster.heal_all();
+        self.microbatch_alloc =
+            even_alloc(self.spec.wl.microbatches * self.spec.cfg.dp, self.spec.cfg.dp);
+        self.now += cost;
+    }
+}
+
+/// Evenly split `total` micro-batches across `d` replicas.
+pub fn even_alloc(total: usize, d: usize) -> Vec<usize> {
+    let base = total / d;
+    let extra = total % d;
+    (0..d).map(|i| base + usize::from(i < extra)).collect()
+}
+
+/// Convenience spec for tests and examples: GPT-2 7B-class job.
+pub fn demo_spec(cfg: ParallelConfig, seed: u64) -> JobSpec {
+    use crate::pipeline::ModelDims;
+    JobSpec {
+        cfg,
+        wl: Workload { model: ModelDims::gpt2("gpt2-7b"), micro_batch: 1, microbatches: 8 },
+        gpus_per_node: 8,
+        gpu_class: GpuClass::H800,
+        mfu: 0.42,
+        jitter: 0.015,
+        spike_p: 0.01,
+        seed,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::inject::{FailSlowKind, Severity, Target};
+    use crate::simkit::{MINUTE, SEC};
+
+    fn sim(cfg: ParallelConfig) -> TrainingSim {
+        TrainingSim::new(demo_spec(cfg, 42))
+    }
+
+    #[test]
+    fn healthy_iterations_stable() {
+        let mut s = sim(ParallelConfig::new(2, 4, 1));
+        let times: Vec<f64> = (0..50).map(|_| s.step().duration as f64 / SEC as f64).collect();
+        let cov = crate::util::stats::cov(&times);
+        assert!(cov < 0.05, "healthy cov {cov}");
+    }
+
+    #[test]
+    fn gpu_degradation_slows_iterations() {
+        let mut s = sim(ParallelConfig::new(2, 4, 1));
+        let healthy = s.step().duration;
+        s.inject(vec![FailSlowEvent {
+            kind: FailSlowKind::GpuDegradation,
+            target: Target::Gpu(0),
+            start: s.now,
+            duration: 60 * MINUTE,
+            scale: Severity::Medium.scale(),
+        }]);
+        let slow = s.step().duration;
+        assert!(slow as f64 > 1.2 * healthy as f64, "{slow} vs {healthy}");
+    }
+
+    #[test]
+    fn congestion_slows_inter_node_job_only() {
+        // 2-node job, DP rings cross nodes.
+        let mut s = sim(ParallelConfig::new(2, 8, 1));
+        assert!(s.grid.n_nodes() > 1);
+        let healthy = s.step().duration;
+        s.inject(vec![FailSlowEvent {
+            kind: FailSlowKind::NetworkCongestion,
+            target: Target::Uplink(1),
+            start: s.now,
+            duration: 60 * MINUTE,
+            scale: 0.2,
+        }]);
+        let slow = s.step().duration;
+        assert!(slow > healthy, "{slow} vs {healthy}");
+    }
+
+    #[test]
+    fn events_self_revert() {
+        let mut s = sim(ParallelConfig::new(2, 4, 1));
+        let healthy = s.step().duration as f64;
+        let dur = 30 * SEC;
+        s.inject(vec![FailSlowEvent {
+            kind: FailSlowKind::GpuDegradation,
+            target: Target::Gpu(0),
+            start: s.now,
+            duration: dur,
+            scale: 0.3,
+        }]);
+        // Step until past the episode.
+        let mut slow_seen = false;
+        for _ in 0..200 {
+            let obs = s.step();
+            if (obs.duration as f64) > 1.5 * healthy {
+                slow_seen = true;
+            }
+            if s.now > s.events[0].end() + 5 * SEC {
+                break;
+            }
+        }
+        assert!(slow_seen, "episode must slow some iterations");
+        let recovered = s.step().duration as f64;
+        assert!(recovered < 1.15 * healthy, "{recovered} vs {healthy}");
+    }
+
+    #[test]
+    fn sm_util_dips_during_fail_slow() {
+        let mut s = sim(ParallelConfig::new(2, 4, 1));
+        let obs_h = s.step();
+        s.inject(vec![FailSlowEvent {
+            kind: FailSlowKind::GpuDegradation,
+            target: Target::Gpu(1),
+            start: s.now,
+            duration: 60 * MINUTE,
+            scale: 0.4,
+        }]);
+        let obs_s = s.step();
+        assert!(obs_s.sm_util < 0.8 * obs_h.sm_util);
+    }
+
+    #[test]
+    fn op_log_has_periodic_pattern() {
+        let mut s = sim(ParallelConfig::new(2, 2, 2));
+        for _ in 0..32 {
+            s.step();
+        }
+        let sig = s.monitor.logs[0].op_kinds();
+        // Period = ops per iteration for rank 0.
+        let per_iter = sig.len() / 32;
+        assert!(per_iter >= 2);
+        assert!(crate::util::stats::acf(&sig, per_iter) > 0.9);
+    }
+
+    #[test]
+    fn microbatch_realloc_rebalances_straggler() {
+        let mut s = sim(ParallelConfig::new(1, 4, 1));
+        s.inject(vec![FailSlowEvent {
+            kind: FailSlowKind::GpuDegradation,
+            target: Target::Gpu(0),
+            start: 0,
+            duration: 600 * MINUTE,
+            scale: 0.5,
+        }]);
+        let slow = s.step().duration;
+        // Shift work off the degraded replica 0.
+        s.set_microbatch_alloc(vec![4, 9, 9, 10]);
+        let fixed = s.step().duration;
+        assert!(
+            (fixed as f64) < 0.85 * slow as f64,
+            "rebalance must help: {fixed} vs {slow}"
+        );
+    }
+
+    #[test]
+    fn profile_flags_congested_dp_group() {
+        let mut s = sim(ParallelConfig::new(1, 16, 1)); // 2 nodes, dp rings cross
+        s.inject(vec![FailSlowEvent {
+            kind: FailSlowKind::NetworkCongestion,
+            target: Target::Uplink(1),
+            start: 0,
+            duration: 600 * MINUTE,
+            scale: 0.2,
+        }]);
+        s.step();
+        let profile = s.profile_groups();
+        assert!(!profile.is_empty());
+        // All DP rings cross the congested uplink here; the mean transfer
+        // time must far exceed the healthy nominal.
+        let healthy = {
+            let mut s2 = sim(ParallelConfig::new(1, 16, 1));
+            s2.step();
+            s2.profile_groups()[0].mean_time
+        };
+        assert!(profile[0].mean_time > 2.0 * healthy);
+    }
+
+    #[test]
+    fn bench_gpu_identifies_slow_device() {
+        let mut s = sim(ParallelConfig::new(2, 4, 1));
+        s.inject(vec![FailSlowEvent {
+            kind: FailSlowKind::GpuDegradation,
+            target: Target::Gpu(3),
+            start: 0,
+            duration: 600 * MINUTE,
+            scale: 0.5,
+        }]);
+        s.step();
+        let times: Vec<f64> = (0..8).map(|g| s.bench_gpu(g)).collect();
+        let med = crate::util::stats::median(&times);
+        assert!(times[3] > 1.5 * med, "{times:?}");
+        for (i, t) in times.iter().enumerate() {
+            if i != 3 {
+                assert!(*t < 1.3 * med);
+            }
+        }
+    }
+
+    #[test]
+    fn restart_heals_everything() {
+        let mut s = sim(ParallelConfig::new(2, 4, 1));
+        let healthy = s.step().duration as f64;
+        s.inject(vec![FailSlowEvent {
+            kind: FailSlowKind::GpuDegradation,
+            target: Target::Gpu(0),
+            start: 0,
+            duration: 600 * MINUTE,
+            scale: 0.3,
+        }]);
+        s.step();
+        s.restart(2 * MINUTE);
+        let after = s.step().duration as f64;
+        assert!((after - healthy).abs() / healthy < 0.1, "{after} vs {healthy}");
+        assert!(s.events.is_empty());
+    }
+
+    #[test]
+    fn even_alloc_sums() {
+        assert_eq!(even_alloc(32, 4), vec![8, 8, 8, 8]);
+        assert_eq!(even_alloc(10, 3), vec![4, 3, 3]);
+        assert_eq!(even_alloc(10, 3).iter().sum::<usize>(), 10);
+    }
+
+    #[test]
+    fn outcome_slowdown_accounting() {
+        let mut s = sim(ParallelConfig::new(2, 4, 1));
+        s.inject(vec![FailSlowEvent {
+            kind: FailSlowKind::GpuDegradation,
+            target: Target::Gpu(0),
+            start: 0,
+            duration: 600 * MINUTE,
+            scale: 0.5,
+        }]);
+        let outcome = s.run(20);
+        assert!(outcome.slowdown() > 1.1, "slowdown {}", outcome.slowdown());
+    }
+}

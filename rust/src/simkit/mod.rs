@@ -1,0 +1,202 @@
+//! Discrete-event simulation engine.
+//!
+//! Drives every at-scale experiment: jobs, fail-slow event onsets/reliefs,
+//! detection phases and mitigation actions are all events on one
+//! deterministic timeline. Time is `u64` microseconds so event ordering is
+//! exact; ties break by insertion sequence for full determinism.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Simulation time in microseconds.
+pub type Time = u64;
+
+pub const USEC: Time = 1;
+pub const MSEC: Time = 1_000;
+pub const SEC: Time = 1_000_000;
+pub const MINUTE: Time = 60 * SEC;
+pub const HOUR: Time = 60 * MINUTE;
+
+pub fn secs(t: Time) -> f64 {
+    t as f64 / SEC as f64
+}
+
+pub fn mins(t: Time) -> f64 {
+    t as f64 / MINUTE as f64
+}
+
+pub fn from_secs(s: f64) -> Time {
+    (s * SEC as f64).round().max(0.0) as Time
+}
+
+struct Scheduled<E> {
+    at: Time,
+    seq: u64,
+    event: E,
+}
+
+impl<E> PartialEq for Scheduled<E> {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at && self.seq == other.seq
+    }
+}
+impl<E> Eq for Scheduled<E> {}
+impl<E> PartialOrd for Scheduled<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<E> Ord for Scheduled<E> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // BinaryHeap is a max-heap; invert for earliest-first.
+        other
+            .at
+            .cmp(&self.at)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// Deterministic event queue with a monotonically advancing clock.
+pub struct Sim<E> {
+    now: Time,
+    seq: u64,
+    heap: BinaryHeap<Scheduled<E>>,
+}
+
+impl<E> Default for Sim<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<E> Sim<E> {
+    pub fn new() -> Self {
+        Sim { now: 0, seq: 0, heap: BinaryHeap::new() }
+    }
+
+    pub fn now(&self) -> Time {
+        self.now
+    }
+
+    /// Schedule `event` at absolute time `at` (clamped to now).
+    pub fn schedule_at(&mut self, at: Time, event: E) {
+        let at = at.max(self.now);
+        self.heap.push(Scheduled { at, seq: self.seq, event });
+        self.seq += 1;
+    }
+
+    /// Schedule `event` after a delay.
+    pub fn schedule_in(&mut self, delay: Time, event: E) {
+        self.schedule_at(self.now.saturating_add(delay), event);
+    }
+
+    /// Pop the next event, advancing the clock.
+    pub fn next(&mut self) -> Option<(Time, E)> {
+        self.heap.pop().map(|s| {
+            debug_assert!(s.at >= self.now, "time went backwards");
+            self.now = s.at;
+            (s.at, s.event)
+        })
+    }
+
+    /// Peek at the next event time without consuming it.
+    pub fn peek_time(&self) -> Option<Time> {
+        self.heap.peek().map(|s| s.at)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    /// Run until the queue drains or `until` is reached, applying `handler`
+    /// to each event (the handler may schedule more events).
+    pub fn run_until(&mut self, until: Time, mut handler: impl FnMut(&mut Self, Time, E)) {
+        while let Some(&Scheduled { at, .. }) = self.heap.peek().map(|s| s as _) {
+            if at > until {
+                break;
+            }
+            let (t, e) = self.next().unwrap();
+            handler(self, t, e);
+        }
+        // Advance to the bound only if work remains beyond it; an exhausted
+        // queue leaves the clock at the last processed event.
+        self.now = self.now.max(until.min(self.peek_time().unwrap_or(self.now)));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn events_fire_in_time_order() {
+        let mut sim: Sim<u32> = Sim::new();
+        sim.schedule_at(30, 3);
+        sim.schedule_at(10, 1);
+        sim.schedule_at(20, 2);
+        let mut order = Vec::new();
+        while let Some((t, e)) = sim.next() {
+            order.push((t, e));
+        }
+        assert_eq!(order, vec![(10, 1), (20, 2), (30, 3)]);
+    }
+
+    #[test]
+    fn ties_break_by_insertion() {
+        let mut sim: Sim<u32> = Sim::new();
+        for i in 0..5 {
+            sim.schedule_at(100, i);
+        }
+        let got: Vec<u32> = std::iter::from_fn(|| sim.next().map(|(_, e)| e)).collect();
+        assert_eq!(got, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn clock_monotone() {
+        let mut sim: Sim<()> = Sim::new();
+        sim.schedule_at(50, ());
+        sim.next();
+        assert_eq!(sim.now(), 50);
+        // Scheduling "in the past" clamps to now.
+        sim.schedule_at(10, ());
+        let (t, _) = sim.next().unwrap();
+        assert_eq!(t, 50);
+    }
+
+    #[test]
+    fn handler_can_reschedule() {
+        let mut sim: Sim<u32> = Sim::new();
+        sim.schedule_at(0, 0);
+        let mut count = 0;
+        sim.run_until(10 * SEC, |sim, _t, e| {
+            count += 1;
+            if e < 5 {
+                sim.schedule_in(SEC, e + 1);
+            }
+        });
+        assert_eq!(count, 6);
+        assert_eq!(sim.now(), 5 * SEC);
+    }
+
+    #[test]
+    fn run_until_stops_at_bound() {
+        let mut sim: Sim<u32> = Sim::new();
+        sim.schedule_at(5, 1);
+        sim.schedule_at(15, 2);
+        let mut seen = Vec::new();
+        sim.run_until(10, |_, _, e| seen.push(e));
+        assert_eq!(seen, vec![1]);
+        assert_eq!(sim.peek_time(), Some(15));
+    }
+
+    #[test]
+    fn time_conversions() {
+        assert_eq!(from_secs(1.5), 1_500_000);
+        assert_eq!(secs(2 * SEC), 2.0);
+        assert_eq!(mins(90 * SEC), 1.5);
+    }
+}

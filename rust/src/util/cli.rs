@@ -1,0 +1,140 @@
+//! Tiny CLI argument substrate (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args, with
+//! typed accessors and a generated usage string.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    present: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(rest) = arg.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                    out.present.push(k.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.flags.insert(rest.to_string(), v);
+                    out.present.push(rest.to_string());
+                } else {
+                    out.flags.insert(rest.to_string(), "true".to_string());
+                    out.present.push(rest.to_string());
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        match self.get(key) {
+            Some("true") | Some("1") | Some("yes") => true,
+            Some("false") | Some("0") | Some("no") => false,
+            Some(_) => default,
+            None => default,
+        }
+    }
+
+    /// Comma-separated list.
+    pub fn list_or(&self, key: &str, default: &[&str]) -> Vec<String> {
+        match self.get(key) {
+            Some(v) => v.split(',').map(|s| s.trim().to_string()).collect(),
+            None => default.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(v: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn key_value_pairs() {
+        let a = parse(&["--steps", "100", "--preset=small", "train"]);
+        assert_eq!(a.usize_or("steps", 0), 100);
+        assert_eq!(a.str_or("preset", "x"), "small");
+        assert_eq!(a.positional, vec!["train"]);
+    }
+
+    #[test]
+    fn bare_flags() {
+        let a = parse(&["--verbose", "--dp", "4"]);
+        assert!(a.bool_or("verbose", false));
+        assert_eq!(a.usize_or("dp", 0), 4);
+    }
+
+    #[test]
+    fn trailing_bare_flag() {
+        let a = parse(&["run", "--fast"]);
+        assert!(a.bool_or("fast", false));
+        assert_eq!(a.positional, vec!["run"]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&[]);
+        assert_eq!(a.f64_or("sev", 0.5), 0.5);
+        assert_eq!(a.str_or("mode", "sim"), "sim");
+        assert!(!a.has("anything"));
+    }
+
+    #[test]
+    fn lists_split() {
+        let a = parse(&["--presets", "tiny, small,base"]);
+        assert_eq!(a.list_or("presets", &[]), vec!["tiny", "small", "base"]);
+        assert_eq!(a.list_or("other", &["x"]), vec!["x"]);
+    }
+
+    #[test]
+    fn negative_number_values() {
+        let a = parse(&["--offset=-3.5"]);
+        assert_eq!(a.f64_or("offset", 0.0), -3.5);
+    }
+}

@@ -1,0 +1,72 @@
+//! Minimal leveled logger writing to stderr; level set via FALCON_LOG
+//! (error|warn|info|debug, default info).
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+pub const ERROR: u8 = 0;
+pub const WARN: u8 = 1;
+pub const INFO: u8 = 2;
+pub const DEBUG: u8 = 3;
+
+static LEVEL: AtomicU8 = AtomicU8::new(u8::MAX);
+
+pub fn level() -> u8 {
+    let cur = LEVEL.load(Ordering::Relaxed);
+    if cur != u8::MAX {
+        return cur;
+    }
+    let lvl = match std::env::var("FALCON_LOG").as_deref() {
+        Ok("error") => ERROR,
+        Ok("warn") => WARN,
+        Ok("debug") => DEBUG,
+        _ => INFO,
+    };
+    LEVEL.store(lvl, Ordering::Relaxed);
+    lvl
+}
+
+pub fn set_level(lvl: u8) {
+    LEVEL.store(lvl, Ordering::Relaxed);
+}
+
+pub fn log(lvl: u8, tag: &str, msg: &str) {
+    if lvl <= level() {
+        let name = ["ERROR", "WARN", "INFO", "DEBUG"][lvl as usize];
+        eprintln!("[{name}] {tag}: {msg}");
+    }
+}
+
+#[macro_export]
+macro_rules! info {
+    ($tag:expr, $($fmt:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::INFO, $tag, &format!($($fmt)*))
+    };
+}
+
+#[macro_export]
+macro_rules! warn_log {
+    ($tag:expr, $($fmt:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::WARN, $tag, &format!($($fmt)*))
+    };
+}
+
+#[macro_export]
+macro_rules! debug_log {
+    ($tag:expr, $($fmt:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::DEBUG, $tag, &format!($($fmt)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_ordering() {
+        set_level(WARN);
+        assert!(ERROR <= level());
+        assert!(WARN <= level());
+        assert!(INFO > level());
+        set_level(INFO);
+    }
+}

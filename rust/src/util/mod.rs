@@ -1,0 +1,11 @@
+//! Utility substrate: deterministic RNG, JSON, CLI parsing, statistics,
+//! ASCII plotting, property-test harness, logging. Hand-rolled because the
+//! offline build has no serde/clap/rand/proptest.
+
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod plot;
+pub mod prop;
+pub mod rng;
+pub mod stats;

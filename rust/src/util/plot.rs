@@ -1,0 +1,160 @@
+//! ASCII rendering of the paper's figures: throughput timelines, CDFs and
+//! bar groups, so every `bench_figures` target prints a terminal-readable
+//! analogue of the corresponding plot plus a CSV block for re-plotting.
+
+/// Render a line series as an ASCII chart of the given height.
+pub fn line_chart(title: &str, xs: &[f64], ys: &[f64], width: usize, height: usize) -> String {
+    assert_eq!(xs.len(), ys.len());
+    if ys.is_empty() {
+        return format!("{title}\n  (empty)\n");
+    }
+    let (ymin, ymax) = bounds(ys);
+    let span = if (ymax - ymin).abs() < 1e-12 { 1.0 } else { ymax - ymin };
+    let mut grid = vec![vec![b' '; width]; height];
+
+    let n = ys.len();
+    for col in 0..width {
+        // Downsample: average the bucket of samples that map to this column.
+        let lo = col * n / width;
+        let hi = (((col + 1) * n) / width).max(lo + 1).min(n);
+        let v = ys[lo..hi].iter().sum::<f64>() / (hi - lo) as f64;
+        let row = ((v - ymin) / span * (height - 1) as f64).round() as usize;
+        let row = (height - 1).saturating_sub(row.min(height - 1));
+        grid[row][col] = b'*';
+    }
+
+    let mut out = String::new();
+    out.push_str(title);
+    out.push('\n');
+    for (i, row) in grid.iter().enumerate() {
+        let yval = ymax - span * i as f64 / (height - 1) as f64;
+        out.push_str(&format!("{yval:>10.3} |"));
+        out.push_str(std::str::from_utf8(row).unwrap());
+        out.push('\n');
+    }
+    out.push_str(&format!(
+        "{:>10} +{}\n{:>12}x: [{:.1} .. {:.1}]\n",
+        "",
+        "-".repeat(width),
+        "",
+        xs.first().unwrap(),
+        xs.last().unwrap()
+    ));
+    out
+}
+
+/// Horizontal bar chart for grouped comparisons (Fig 13/15-style).
+pub fn bar_chart(title: &str, labels: &[String], values: &[f64], width: usize) -> String {
+    assert_eq!(labels.len(), values.len());
+    let vmax = values.iter().cloned().fold(f64::MIN, f64::max).max(1e-12);
+    let lw = labels.iter().map(|l| l.len()).max().unwrap_or(0);
+    let mut out = format!("{title}\n");
+    for (l, &v) in labels.iter().zip(values) {
+        let n = ((v / vmax) * width as f64).round().max(0.0) as usize;
+        out.push_str(&format!("  {l:<lw$} | {} {v:.3}\n", "#".repeat(n)));
+    }
+    out
+}
+
+/// CSV block with a header row — machine-readable twin of every chart.
+pub fn csv(header: &[&str], rows: &[Vec<f64>]) -> String {
+    let mut out = header.join(",");
+    out.push('\n');
+    for row in rows {
+        let cells: Vec<String> = row.iter().map(|v| format!("{v}")).collect();
+        out.push_str(&cells.join(","));
+        out.push('\n');
+    }
+    out
+}
+
+/// Markdown-style table used by bench_tables to mirror the paper's tables.
+pub fn table(header: &[&str], rows: &[Vec<String>]) -> String {
+    let ncol = header.len();
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate().take(ncol) {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let line = |cells: &[String]| -> String {
+        let mut s = String::from("|");
+        for (i, c) in cells.iter().enumerate().take(ncol) {
+            s.push_str(&format!(" {:<w$} |", c, w = widths[i]));
+        }
+        s.push('\n');
+        s
+    };
+    let mut out = line(&header.iter().map(|s| s.to_string()).collect::<Vec<_>>());
+    let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+    out.push_str(&line(&sep));
+    for row in rows {
+        out.push_str(&line(row));
+    }
+    out
+}
+
+fn bounds(ys: &[f64]) -> (f64, f64) {
+    let mut lo = f64::MAX;
+    let mut hi = f64::MIN;
+    for &y in ys {
+        lo = lo.min(y);
+        hi = hi.max(y);
+    }
+    (lo, hi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn line_chart_renders() {
+        let xs: Vec<f64> = (0..100).map(|i| i as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| (x / 10.0).sin()).collect();
+        let s = line_chart("sine", &xs, &ys, 60, 10);
+        assert!(s.contains("sine"));
+        assert!(s.matches('*').count() >= 55);
+    }
+
+    #[test]
+    fn line_chart_constant_series() {
+        let s = line_chart("flat", &[0.0, 1.0], &[5.0, 5.0], 10, 4);
+        assert!(s.contains('*'));
+    }
+
+    #[test]
+    fn bar_chart_scales_to_max() {
+        let s = bar_chart(
+            "t",
+            &["a".into(), "b".into()],
+            &[1.0, 2.0],
+            20,
+        );
+        let lines: Vec<&str> = s.lines().collect();
+        let a = lines[1].matches('#').count();
+        let b = lines[2].matches('#').count();
+        assert_eq!(b, 20);
+        assert_eq!(a, 10);
+    }
+
+    #[test]
+    fn table_aligns() {
+        let t = table(
+            &["alg", "acc"],
+            &[
+                vec!["BOCD+V".into(), "99.1".into()],
+                vec!["SlideWindow".into(), "93.5".into()],
+            ],
+        );
+        let lines: Vec<&str> = t.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines.iter().all(|l| l.len() == lines[0].len()));
+    }
+
+    #[test]
+    fn csv_shape() {
+        let c = csv(&["x", "y"], &[vec![1.0, 2.0], vec![3.0, 4.5]]);
+        assert_eq!(c, "x,y\n1,2\n3,4.5\n");
+    }
+}

@@ -1,0 +1,197 @@
+//! Statistics substrate: the estimators the paper's analysis relies on
+//! (mean/median/percentiles, coefficient of variation, CDFs, autocovariance).
+
+/// Arithmetic mean. Returns 0.0 for empty input.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population variance.
+pub fn variance(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64
+}
+
+pub fn std_dev(xs: &[f64]) -> f64 {
+    variance(xs).sqrt()
+}
+
+/// Coefficient of variation (Table 2's stability metric).
+pub fn cov(xs: &[f64]) -> f64 {
+    let m = mean(xs);
+    if m == 0.0 {
+        return 0.0;
+    }
+    std_dev(xs) / m
+}
+
+/// Quantile with linear interpolation, q in [0, 1].
+pub fn quantile(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut s = xs.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = q.clamp(0.0, 1.0) * (s.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        s[lo]
+    } else {
+        s[lo] + (pos - lo as f64) * (s[hi] - s[lo])
+    }
+}
+
+pub fn median(xs: &[f64]) -> f64 {
+    quantile(xs, 0.5)
+}
+
+/// Empirical CDF sampled at `points` evenly spaced quantiles: (value, F(value)).
+pub fn ecdf(xs: &[f64], points: usize) -> Vec<(f64, f64)> {
+    if xs.is_empty() || points == 0 {
+        return vec![];
+    }
+    let mut s = xs.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    (0..points)
+        .map(|i| {
+            let q = (i + 1) as f64 / points as f64;
+            let idx = ((q * s.len() as f64).ceil() as usize).min(s.len()) - 1;
+            (s[idx], q)
+        })
+        .collect()
+}
+
+/// Lag-k autocovariance-based ACF as defined in §4.2 of the paper:
+/// ACF(X)_k = sum_{t..L-k} (x_t - mu)(x_{t+k} - mu) / sum_t (x_t - mu)^2.
+pub fn acf(xs: &[f64], k: usize) -> f64 {
+    let n = xs.len();
+    if k >= n {
+        return 0.0;
+    }
+    let mu = mean(xs);
+    let denom: f64 = xs.iter().map(|x| (x - mu) * (x - mu)).sum();
+    if denom == 0.0 {
+        // A perfectly constant series is trivially periodic at every lag.
+        return 1.0;
+    }
+    let num: f64 = (0..n - k).map(|t| (xs[t] - mu) * (xs[t + k] - mu)).sum();
+    num / denom
+}
+
+/// Online mean/variance accumulator (Welford).
+#[derive(Clone, Debug, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / self.n as f64
+        }
+    }
+
+    pub fn std_dev(&self) -> f64 {
+        self.variance().sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_median_basic() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 100.0];
+        assert!((mean(&xs) - 22.0).abs() < 1e-12);
+        assert_eq!(median(&xs), 3.0);
+    }
+
+    #[test]
+    fn quantiles_interpolate() {
+        let xs = [0.0, 10.0];
+        assert!((quantile(&xs, 0.5) - 5.0).abs() < 1e-12);
+        assert_eq!(quantile(&xs, 0.0), 0.0);
+        assert_eq!(quantile(&xs, 1.0), 10.0);
+    }
+
+    #[test]
+    fn cov_scale_invariant() {
+        let xs = [1.0, 2.0, 3.0];
+        let ys = [10.0, 20.0, 30.0];
+        assert!((cov(&xs) - cov(&ys)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn acf_periodic_signal_peaks_at_period() {
+        // A period-4 signal must have ACF ~1.0 at lag 4 and low at lag 1.
+        // (The finite-series ceiling is (L-k)/L, hence the long series.)
+        let xs: Vec<f64> = (0..256).map(|i| [0.0, 5.0, 1.0, 9.0][i % 4]).collect();
+        assert!(acf(&xs, 4) > 0.95, "lag4 {}", acf(&xs, 4));
+        assert!(acf(&xs, 1) < 0.5, "lag1 {}", acf(&xs, 1));
+    }
+
+    #[test]
+    fn acf_constant_series_is_one() {
+        let xs = [3.0; 32];
+        assert_eq!(acf(&xs, 5), 1.0);
+    }
+
+    #[test]
+    fn acf_lag_zero_is_one() {
+        let xs: Vec<f64> = (0..32).map(|i| (i as f64).sin()).collect();
+        assert!((acf(&xs, 0) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ecdf_monotone() {
+        let xs: Vec<f64> = (0..100).map(|i| (i * 7 % 31) as f64).collect();
+        let cdf = ecdf(&xs, 20);
+        for w in cdf.windows(2) {
+            assert!(w[1].0 >= w[0].0);
+            assert!(w[1].1 >= w[0].1);
+        }
+        assert!((cdf.last().unwrap().1 - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn welford_matches_batch() {
+        let xs: Vec<f64> = (0..500).map(|i| ((i * 37) % 97) as f64).collect();
+        let mut w = Welford::new();
+        for &x in &xs {
+            w.push(x);
+        }
+        assert!((w.mean() - mean(&xs)).abs() < 1e-9);
+        assert!((w.variance() - variance(&xs)).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,299 @@
+//! Cross-module integration tests: detection accuracy end-to-end over the
+//! simulator, coordinator invariants under property-based scenario
+//! generation, the runtime+trainer composition (when artifacts exist), and
+//! report-generator smoke checks.
+
+use falcon::coordinator::{run_with_falcon, ActionKind, FalconConfig};
+use falcon::inject::{FailSlowEvent, FailSlowKind, Severity, Target};
+use falcon::mitigate::Strategy;
+use falcon::pipeline::ParallelConfig;
+use falcon::sim::{demo_spec, TrainingSim};
+use falcon::simkit::from_secs;
+use falcon::util::prop;
+use falcon::util::rng::Rng;
+
+fn gpu_event(start_s: f64, dur_iters_s: f64, scale: f64, gpu: usize) -> FailSlowEvent {
+    FailSlowEvent {
+        kind: FailSlowKind::GpuDegradation,
+        target: Target::Gpu(gpu),
+        start: from_secs(start_s),
+        duration: from_secs(dur_iters_s),
+        scale,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Detection pipeline over the simulator
+// ---------------------------------------------------------------------------
+
+#[test]
+fn end_to_end_detection_localizes_the_right_gpu() {
+    for gpu in [0usize, 3, 5] {
+        let mut sim = TrainingSim::new(demo_spec(ParallelConfig::new(1, 8, 1), 77 + gpu as u64));
+        let onset = sim.ideal_iter_s * 50.0;
+        sim.inject(vec![gpu_event(onset, sim.ideal_iter_s * 400.0, 0.5, gpu)]);
+        let falcon = run_with_falcon(&mut sim, FalconConfig::default(), 150);
+        let diag = falcon
+            .actions
+            .iter()
+            .find_map(|a| match &a.what {
+                ActionKind::Diagnosed(d) => Some(d.clone()),
+                _ => None,
+            })
+            .unwrap_or_else(|| panic!("gpu {gpu}: no diagnosis"));
+        assert!(
+            diag.slow_gpus.iter().any(|g| g.rank == gpu),
+            "gpu {gpu} not localized: {:?}",
+            diag.slow_gpus
+        );
+    }
+}
+
+#[test]
+fn end_to_end_detection_localizes_congested_path() {
+    let mut spec = demo_spec(ParallelConfig::new(8, 2, 2), 91);
+    spec.jitter = 0.01;
+    let mut sim = TrainingSim::new(spec);
+    let onset = sim.ideal_iter_s * 40.0;
+    sim.inject(vec![FailSlowEvent {
+        kind: FailSlowKind::NetworkCongestion,
+        target: Target::Link(0, 1),
+        start: from_secs(onset),
+        duration: from_secs(sim.ideal_iter_s * 1000.0),
+        scale: 0.15,
+    }]);
+    let falcon = run_with_falcon(&mut sim, FalconConfig::default(), 150);
+    let diag = falcon
+        .actions
+        .iter()
+        .find_map(|a| match &a.what {
+            ActionKind::Diagnosed(d) => Some(d.clone()),
+            _ => None,
+        })
+        .expect("no diagnosis");
+    assert_eq!(diag.kind, FailSlowKind::NetworkCongestion);
+    // Flagged edges must touch nodes 0/1 (ranks 0..15).
+    assert!(
+        diag.slow_edges.iter().all(|e| e.from_rank < 16 && e.to_rank < 16),
+        "{:?}",
+        diag.slow_edges
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Coordinator invariants (property-based)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_microbatch_conservation_under_any_scenario() {
+    // Whatever FALCON does — S2 reallocations, S3 swaps, S4 restarts — the
+    // global batch (sum of micro-batches) is conserved every iteration.
+    prop::check(
+        "batch-conservation",
+        0xBA7C4,
+        12,
+        |rng: &mut Rng| {
+            let dp = [2usize, 4, 8][rng.below(3) as usize];
+            let n_events = 1 + rng.below(3) as usize;
+            let seed = rng.next_u64();
+            (dp, n_events, seed)
+        },
+        |&(dp, n_events, seed)| {
+            let mut sim = TrainingSim::new(demo_spec(ParallelConfig::new(1, dp, 1), seed));
+            let total = sim.spec.wl.microbatches * dp;
+            let mut rng = Rng::new(seed ^ 1);
+            let evs: Vec<FailSlowEvent> = (0..n_events)
+                .map(|_| {
+                    gpu_event(
+                        sim.ideal_iter_s * rng.range_f64(10.0, 60.0),
+                        sim.ideal_iter_s * rng.range_f64(30.0, 200.0),
+                        rng.range_f64(0.3, 0.8),
+                        rng.below(dp as u64) as usize,
+                    )
+                })
+                .collect();
+            sim.inject(evs);
+            let mut falcon = falcon::coordinator::Falcon::new(FalconConfig::default());
+            for _ in 0..120 {
+                let obs = sim.step();
+                falcon.on_iteration(&mut sim, obs.iter, obs.duration as f64 / 1e6);
+                let sum: usize = sim.microbatch_alloc.iter().sum();
+                if sum != total {
+                    return Err(format!("batch leaked: {sum} != {total}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_node_map_stays_a_permutation() {
+    // S3 swaps must always leave node_map a permutation of 0..n.
+    prop::check(
+        "node-map-permutation",
+        0x70B0,
+        8,
+        |rng: &mut Rng| rng.next_u64(),
+        |&seed| {
+            let mut spec = demo_spec(ParallelConfig::new(8, 2, 2), seed);
+            spec.jitter = 0.01;
+            let mut sim = TrainingSim::new(spec);
+            let mut rng = Rng::new(seed);
+            sim.inject(vec![FailSlowEvent {
+                kind: FailSlowKind::NetworkCongestion,
+                target: Target::Link(0, 1 + rng.below(3) as usize),
+                start: from_secs(sim.ideal_iter_s * 20.0),
+                duration: from_secs(sim.ideal_iter_s * 500.0),
+                scale: 0.2,
+            }]);
+            let mut fc = FalconConfig::default();
+            fc.overheads.adjust_topology_s = 5.0;
+            run_with_falcon(&mut sim, fc, 120);
+            let mut map = sim.grid.node_map.clone();
+            map.sort_unstable();
+            let expect: Vec<usize> = (0..sim.grid.n_nodes()).collect();
+            if map == expect {
+                Ok(())
+            } else {
+                Err(format!("node_map corrupted: {:?}", sim.grid.node_map))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_clock_monotone_under_falcon_actions() {
+    // Pauses, restarts and swaps must never move the clock backwards.
+    prop::check(
+        "clock-monotone",
+        0xC10C,
+        8,
+        |rng: &mut Rng| rng.next_u64(),
+        |&seed| {
+            let mut sim = TrainingSim::new(demo_spec(ParallelConfig::new(1, 4, 1), seed));
+            sim.inject(vec![gpu_event(
+                sim.ideal_iter_s * 15.0,
+                sim.ideal_iter_s * 300.0,
+                0.25,
+                (seed % 4) as usize,
+            )]);
+            let mut fc = FalconConfig::default();
+            fc.overheads.ckpt_restart_s = 30.0;
+            fc.restart_cost = from_secs(30.0);
+            let mut falcon = falcon::coordinator::Falcon::new(fc);
+            let mut last = sim.now;
+            for _ in 0..150 {
+                let obs = sim.step();
+                falcon.on_iteration(&mut sim, obs.iter, obs.duration as f64 / 1e6);
+                if sim.now < last {
+                    return Err(format!("clock went backwards: {} < {last}", sim.now));
+                }
+                last = sim.now;
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Mitigation effectiveness invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn mitigated_never_slower_than_unmitigated_for_long_compute_failslow() {
+    for seed in [1u64, 2, 3] {
+        let mk = |mitigate: bool| {
+            let mut sim = TrainingSim::new(demo_spec(ParallelConfig::new(1, 8, 1), 500 + seed));
+            let onset = sim.ideal_iter_s * 30.0;
+            sim.inject(vec![gpu_event(
+                onset,
+                sim.ideal_iter_s * 500.0,
+                Severity::Severe.scale(),
+                (seed % 8) as usize,
+            )]);
+            run_with_falcon(
+                &mut sim,
+                FalconConfig { mitigate, ..FalconConfig::default() },
+                250,
+            );
+            250.0 / falcon::simkit::secs(sim.now)
+        };
+        let with = mk(true);
+        let without = mk(false);
+        assert!(
+            with > without,
+            "seed {seed}: mitigated {with} <= unmitigated {without}"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Runtime + live trainer composition (skipped without artifacts)
+// ---------------------------------------------------------------------------
+
+fn artifacts_ready() -> bool {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts/.stamp")
+        .exists()
+}
+
+#[test]
+fn live_trainer_composes_with_detector_and_s2() {
+    if !artifacts_ready() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    use falcon::detect::{BocdConfig, Detector};
+    use falcon::runtime::Runtime;
+    use falcon::trainer::{LiveTrainer, TrainerConfig};
+
+    let rt = Runtime::new(
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts"),
+    )
+    .unwrap();
+    let mut t = LiveTrainer::new(
+        &rt,
+        &TrainerConfig { preset: "tiny".into(), dp: 2, microbatches: 2, seed: 3 },
+    )
+    .unwrap();
+    let mut det = Detector::new(BocdConfig::default());
+
+    let mut verified = false;
+    for step in 0..60 {
+        if step == 20 {
+            t.compute_scale[0] = 0.3;
+        }
+        let obs = t.step().unwrap();
+        if det.push(obs.iter_time_s) == Some(true) {
+            verified = true;
+            let times = t.microbatch_times(&obs);
+            let total: usize = t.alloc.iter().sum();
+            t.set_alloc(falcon::mitigate::microbatch::solve(&times, total).m);
+        }
+        if verified {
+            break;
+        }
+    }
+    assert!(verified, "live fail-slow not verified by BOCD+V");
+    assert!(
+        t.alloc[0] < t.alloc[1],
+        "S2 must shed load from the slow worker: {:?}",
+        t.alloc
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Report generators (fast smoke of the full registry)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn cheap_reports_render() {
+    let args = falcon::util::cli::Args::parse(
+        ["--iters".to_string(), "40".into(), "--samples".into(), "500".into()],
+    );
+    for id in ["fig3", "fig8", "tab2", "tab6", "fig14"] {
+        let out = falcon::reports::generate(id, &args);
+        assert!(out.len() > 100, "{id}: {out}");
+    }
+}
