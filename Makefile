@@ -1,0 +1,28 @@
+# FALCON reproduction — top-level developer entry points.
+#
+# `make verify` is the tier-1 gate (ROADMAP): release build + full test
+# suite. `make fmt-check` is advisory until the tree is rustfmt-clean.
+
+CARGO ?= cargo
+RUST_DIR := rust
+
+.PHONY: verify test build fmt-check bench-fleet fleet
+
+verify: build test
+
+build:
+	cd $(RUST_DIR) && $(CARGO) build --release
+
+test:
+	cd $(RUST_DIR) && $(CARGO) test -q
+
+fmt-check:
+	cd $(RUST_DIR) && $(CARGO) fmt --check
+
+# Fleet-engine perf trajectory: runs the sharded fleet bench and writes
+# BENCH_fleet.json (jobs/sec) at the repo root.
+bench-fleet:
+	cd $(RUST_DIR) && $(CARGO) bench --bench bench_fleet
+
+fleet:
+	cd $(RUST_DIR) && $(CARGO) run --release -- fleet

@@ -1,0 +1,18 @@
+//! Fleet campaign in miniature: hundreds of concurrent simulated jobs, each
+//! supervised by its own FALCON instance, sharded across worker threads,
+//! with a deterministic cross-job aggregate report.
+//!
+//! `cargo run --release --example fleet -- --jobs 512 --iters 120` runs the
+//! full-size default; the report is bit-identical for a fixed `--seed`
+//! regardless of `--workers`.
+
+use falcon::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let cfg = falcon::reports::fleet::config_from_args(&args);
+    let t0 = std::time::Instant::now();
+    let report = falcon::fleet::run_fleet(&cfg);
+    println!("{}", report.render());
+    println!("(fleet took {:.1}s)", t0.elapsed().as_secs_f64());
+}

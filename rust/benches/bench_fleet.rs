@@ -1,0 +1,72 @@
+//! Fleet-engine throughput benchmark: jobs/sec for sharded fleet campaigns
+//! at a few sizes, plus a determinism spot-check. Emits `BENCH_fleet.json`
+//! at the repo root so later PRs have a perf trajectory to compare against.
+
+#[path = "bench_common.rs"]
+mod bench_common;
+use bench_common::section;
+
+use falcon::fleet::{run_fleet, FleetConfig};
+use falcon::util::json::Json;
+
+fn main() {
+    let workers = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    let mut runs: Vec<Json> = Vec::new();
+
+    section("fleet engine throughput (jobs/sec)");
+    for (jobs, iters) in [(64usize, 60usize), (256, 60), (512, 120)] {
+        let cfg = FleetConfig {
+            jobs,
+            iters,
+            seed: 2024,
+            workers: 0,
+            failslow_boost: 8.0,
+            compare: true,
+        };
+        let report = run_fleet(&cfg);
+        println!(
+            "  {jobs:>4} jobs x {iters:>3} iters: {:>8.1} jobs/s  ({:.2} s wall, {} workers, {} GPUs, digest {:016x})",
+            report.jobs_per_sec,
+            report.wall_s,
+            report.workers,
+            report.gpus,
+            report.digest()
+        );
+        runs.push(Json::obj(vec![
+            ("jobs", Json::Num(jobs as f64)),
+            ("iters", Json::Num(iters as f64)),
+            ("gpus", Json::Num(report.gpus as f64)),
+            ("workers", Json::Num(report.workers as f64)),
+            ("jobs_per_sec", Json::Num(report.jobs_per_sec)),
+            ("wall_s", Json::Num(report.wall_s)),
+            ("digest", Json::str(&format!("{:016x}", report.digest()))),
+        ]));
+    }
+
+    section("determinism spot-check (same seed, different worker counts)");
+    let mk = |w: usize| {
+        run_fleet(&FleetConfig {
+            jobs: 48,
+            iters: 40,
+            seed: 7,
+            workers: w,
+            failslow_boost: 8.0,
+            compare: false,
+        })
+        .digest()
+    };
+    let (a, b) = (mk(1), mk(workers.max(2)));
+    println!("  digest x1 worker {a:016x} vs x{} workers {b:016x}: {}", workers.max(2), if a == b { "MATCH" } else { "MISMATCH" });
+    assert_eq!(a, b, "fleet results depend on thread count");
+
+    let out = Json::obj(vec![
+        ("bench", Json::str("fleet")),
+        ("host_workers", Json::Num(workers as f64)),
+        ("runs", Json::Arr(runs)),
+    ]);
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_fleet.json");
+    match std::fs::write(path, out.to_string() + "\n") {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\nfailed to write {path}: {e}"),
+    }
+}

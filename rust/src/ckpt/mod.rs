@@ -8,8 +8,7 @@
 //! and a calibrated cost model extrapolates to paper-scale jobs (a
 //! GPT2-100B dump is ~100 minutes, §5.1).
 
-use anyhow::{Context, Result};
-use std::io::{Read, Write};
+use std::io::{Error, ErrorKind, Read, Result, Write};
 use std::path::{Path, PathBuf};
 use std::time::Instant;
 
@@ -34,7 +33,10 @@ impl MemoryStore {
     /// Restore into a caller buffer; returns elapsed seconds.
     pub fn load(&self, key: &str, out: &mut Vec<u8>) -> Result<f64> {
         let t0 = Instant::now();
-        let src = self.slots.get(key).context("missing checkpoint slot")?;
+        let src = self
+            .slots
+            .get(key)
+            .ok_or_else(|| Error::new(ErrorKind::NotFound, format!("missing checkpoint slot {key}")))?;
         out.clear();
         out.extend_from_slice(src);
         Ok(t0.elapsed().as_secs_f64())
@@ -77,7 +79,7 @@ impl DiskStore {
     pub fn load(&self, key: &str, out: &mut Vec<u8>) -> Result<f64> {
         let t0 = Instant::now();
         let mut f = std::fs::File::open(self.path(key))
-            .with_context(|| format!("open checkpoint {key}"))?;
+            .map_err(|e| Error::new(e.kind(), format!("open checkpoint {key}: {e}")))?;
         out.clear();
         f.read_to_end(out)?;
         Ok(t0.elapsed().as_secs_f64())

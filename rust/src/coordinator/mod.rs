@@ -290,6 +290,16 @@ impl Falcon {
         self.restarts
     }
 
+    /// Times at which verified episodes opened (fleet-level detection-
+    /// latency accounting matches these against the injected trace).
+    pub fn episode_opens(&self) -> Vec<Time> {
+        self.actions
+            .iter()
+            .filter(|a| matches!(a.what, ActionKind::EpisodeOpened))
+            .map(|a| a.at)
+            .collect()
+    }
+
     /// Strategies applied so far (for assertions and figure annotations).
     pub fn applied_strategies(&self) -> Vec<Strategy> {
         self.actions
@@ -312,7 +322,7 @@ pub fn run_with_falcon(
     let mut falcon = Falcon::new(cfg);
     for _ in 0..iters {
         let obs = sim.step();
-        falcon.on_iteration(sim, obs.iter, obs.duration as f64 / 1e6);
+        falcon.on_iteration(sim, obs.iter, obs.duration_s());
     }
     falcon
 }

@@ -83,6 +83,13 @@ pub struct BocdConfig {
     pub reset_width: usize,
     /// Truncate run-length hypotheses below this posterior mass.
     pub trunc_eps: f64,
+    /// Hard cap on retained run-length hypotheses: after eps-truncation the
+    /// lowest-mass survivors are dropped until at most this many remain, so
+    /// per-step cost and memory are O(max_hypotheses) regardless of stream
+    /// length (the R2 always-on requirement). The default sits above the
+    /// eps-truncation tail (~2000 at the default hazard), so it only binds
+    /// on adversarial configurations.
+    pub max_hypotheses: usize,
     /// Prior scale: expected observation magnitude (set from first samples).
     pub prior_mu: f64,
     pub prior_kappa: f64,
@@ -97,6 +104,7 @@ impl Default for BocdConfig {
             threshold: 0.9,
             reset_width: 1,
             trunc_eps: 1e-6,
+            max_hypotheses: 4096,
             prior_mu: 0.0, // 0 => auto-set from the first observation
             prior_kappa: 1.0,
             prior_alpha: 1.0,
@@ -131,6 +139,12 @@ impl Bocd {
     /// Feed one observation; returns `Some(p_reset)` when a change-point is
     /// declared at this step.
     pub fn push(&mut self, x: f64) -> Option<f64> {
+        // A NaN/infinite iteration time (clock glitch, dropped measurement)
+        // must not enter the posterior: one such sample would turn every
+        // run-length probability into NaN permanently. Drop it.
+        if !x.is_finite() {
+            return None;
+        }
         if !self.initialized {
             let mu0 = if self.cfg.prior_mu != 0.0 { self.cfg.prior_mu } else { x };
             let beta0 = (self.cfg.prior_beta * mu0 * mu0).max(1e-12);
@@ -173,14 +187,36 @@ impl Bocd {
         }
 
         // Truncate negligible hypotheses (linear-time guarantee).
-        let keep: Vec<usize> = (0..new_probs.len())
+        let mut keep: Vec<usize> = (0..new_probs.len())
             .filter(|&i| new_probs[i] > self.cfg.trunc_eps || i == 0)
             .collect();
+        // Hard cap: drop the lowest-mass survivors (never index 0) until the
+        // hypothesis set fits, keeping memory O(max_hypotheses).
+        let cap = self.cfg.max_hypotheses.max(1);
+        if keep.len() > cap {
+            let mut rest: Vec<usize> = keep.iter().copied().filter(|&i| i != 0).collect();
+            rest.sort_by(|&a, &b| new_probs[b].total_cmp(&new_probs[a]));
+            rest.truncate(cap.saturating_sub(1));
+            rest.push(0);
+            rest.sort_unstable();
+            keep = rest;
+        }
         self.probs = keep.iter().map(|&i| new_probs[i]).collect();
         self.models = keep.iter().map(|&i| new_models[i]).collect();
+        // Renormalize, guarding the degenerate case (all retained mass
+        // underflowed to zero): without the guard a 0/0 poisons every
+        // subsequent step with NaN. Fall back to a uniform posterior over
+        // the retained hypotheses instead.
         let z: f64 = self.probs.iter().sum();
-        for p in &mut self.probs {
-            *p /= z;
+        if z > 0.0 && z.is_finite() {
+            for p in &mut self.probs {
+                *p /= z;
+            }
+        } else {
+            let n = self.probs.len() as f64;
+            for p in &mut self.probs {
+                *p = 1.0 / n;
+            }
         }
 
         self.t += 1;
@@ -207,6 +243,19 @@ impl Bocd {
     /// Posterior-mode run length (diagnostic).
     pub fn map_run_length(&self) -> usize {
         argmax(&self.probs)
+    }
+
+    /// Retained run-length hypotheses (diagnostic; bounded by
+    /// `max_hypotheses`).
+    pub fn n_hypotheses(&self) -> usize {
+        self.probs.len()
+    }
+
+    /// All run-length probabilities are finite and sum to ~1 (invariant
+    /// check used by the NaN-robustness tests).
+    pub fn posterior_healthy(&self) -> bool {
+        let z: f64 = self.probs.iter().sum();
+        self.probs.iter().all(|p| p.is_finite() && *p >= 0.0) && (z - 1.0).abs() < 1e-6
     }
 }
 
@@ -300,6 +349,52 @@ mod tests {
         let xs = series(&[(100, 1.0), (100, 1.08)], 0.01, 5);
         let cps = detect_changepoints(&xs, BocdConfig::default());
         assert!(cps.iter().any(|&c| (95..=115).contains(&c)), "{cps:?}");
+    }
+
+    #[test]
+    fn non_finite_observations_do_not_corrupt_state() {
+        // One NaN/infinite iteration time must neither panic nor poison the
+        // run-length posterior: detection still works on the samples around
+        // it.
+        let mut xs = series(&[(80, 1.0), (80, 1.5)], 0.02, 11);
+        xs[20] = f64::NAN;
+        xs[40] = f64::INFINITY;
+        xs[60] = f64::NEG_INFINITY;
+        let mut bocd = Bocd::new(BocdConfig::default());
+        let mut cps = Vec::new();
+        for (i, &x) in xs.iter().enumerate() {
+            if bocd.push(x).is_some() {
+                cps.push(i);
+            }
+            assert!(bocd.posterior_healthy(), "posterior corrupted at obs {i}");
+        }
+        assert!(
+            cps.iter().any(|&c| (78..=90).contains(&c)),
+            "step change missed after non-finite samples: {cps:?}"
+        );
+    }
+
+    #[test]
+    fn leading_nan_rejected_before_initialization() {
+        // A NaN as the *first* sample must not seed the prior.
+        let mut bocd = Bocd::new(BocdConfig::default());
+        assert!(bocd.push(f64::NAN).is_none());
+        for x in [1.0, 1.01, 0.99, 1.02] {
+            bocd.push(x);
+            assert!(bocd.posterior_healthy());
+        }
+    }
+
+    #[test]
+    fn hypothesis_cap_bounds_memory() {
+        let cfg = BocdConfig { max_hypotheses: 64, trunc_eps: 0.0, ..BocdConfig::default() };
+        let xs = series(&[(2000, 1.0)], 0.02, 12);
+        let mut bocd = Bocd::new(cfg);
+        for &x in &xs {
+            bocd.push(x);
+            assert!(bocd.n_hypotheses() <= 64);
+            assert!(bocd.posterior_healthy());
+        }
     }
 
     #[test]

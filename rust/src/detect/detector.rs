@@ -9,11 +9,65 @@
 //! healthy baseline) close it.
 
 use super::bocd::{Bocd, BocdConfig};
+use crate::util::stats::Welford;
 
 /// Verification window length (iterations on each side of the candidate).
 pub const VERIFY_WINDOW: usize = 8;
 /// Minimum relative mean shift to accept a change-point (paper: 10%).
 pub const VERIFY_DELTA: f64 = 0.10;
+
+/// Samples the detector must keep resident. A candidate change-point at
+/// index `cp` is verified once the stream reaches `cp + VERIFY_WINDOW - 1`,
+/// at which point the verification reads `[cp - VERIFY_WINDOW, cp +
+/// VERIFY_WINDOW)` — a span of `2 * VERIFY_WINDOW` ending at the newest
+/// sample. Pending candidates are never older than that (they are retained
+/// only while their post-window is incomplete), so this capacity is exact;
+/// +1 is slack for off-by-one safety.
+const RING_CAPACITY: usize = 2 * VERIFY_WINDOW + 1;
+
+/// Fixed-capacity window over the most recent observations, addressed by
+/// *absolute* sample index so the verification code reads like it did when
+/// history was a `Vec` — but memory is O(VERIFY_WINDOW), not O(iterations).
+#[derive(Clone, Debug)]
+struct Ring {
+    buf: Vec<f64>,
+    /// Total samples ever pushed; `buf` holds the last `buf.len()` of them.
+    pushed: usize,
+}
+
+impl Ring {
+    fn new(cap: usize) -> Self {
+        Ring { buf: vec![0.0; cap.max(1)], pushed: 0 }
+    }
+
+    fn push(&mut self, x: f64) {
+        let cap = self.buf.len();
+        self.buf[self.pushed % cap] = x;
+        self.pushed += 1;
+    }
+
+    /// Number of samples pushed so far (absolute stream length).
+    fn len(&self) -> usize {
+        self.pushed
+    }
+
+    fn capacity(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Copy of the absolute index range `[lo, hi)`; every index must still
+    /// be resident.
+    fn range(&self, lo: usize, hi: usize) -> Vec<f64> {
+        debug_assert!(hi <= self.pushed, "range beyond stream");
+        debug_assert!(
+            self.pushed - lo <= self.buf.len(),
+            "index {lo} evicted (pushed {}, cap {})",
+            self.pushed,
+            self.buf.len()
+        );
+        (lo..hi).map(|i| self.buf[i % self.buf.len()]).collect()
+    }
+}
 
 /// A detected fail-slow episode in iteration indices.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -26,14 +80,18 @@ pub struct Episode {
 }
 
 /// Online BOCD+V detector over an iteration-time stream.
+///
+/// Memory is bounded: observations live in a fixed ring sized to the
+/// verification window plus the pending-candidate horizon, and the healthy
+/// baseline is a streaming [`Welford`] accumulator — the detector can run
+/// always-on over unbounded streams (R2).
 pub struct Detector {
     bocd: Bocd,
-    history: Vec<f64>,
+    history: Ring,
     /// Candidate change-points awaiting enough post-window to verify.
     pending: Vec<usize>,
-    /// Healthy-mean estimate (pre-episode baseline).
-    baseline: f64,
-    baseline_n: usize,
+    /// Healthy-mean estimate (pre-episode baseline), streamed.
+    baseline: Welford,
     pub episodes: Vec<Episode>,
     in_episode: bool,
     escalated: bool,
@@ -43,10 +101,9 @@ impl Detector {
     pub fn new(cfg: BocdConfig) -> Self {
         Detector {
             bocd: Bocd::new(cfg),
-            history: Vec::new(),
+            history: Ring::new(RING_CAPACITY),
             pending: Vec::new(),
-            baseline: 0.0,
-            baseline_n: 0,
+            baseline: Welford::new(),
             episodes: Vec::new(),
             in_episode: false,
             escalated: false,
@@ -57,16 +114,27 @@ impl Detector {
         Detector::new(BocdConfig::default())
     }
 
+    /// Resident observation capacity — constant, independent of how many
+    /// samples have streamed through (exposed for the bounded-memory tests).
+    pub fn ring_capacity(&self) -> usize {
+        self.history.capacity()
+    }
+
     /// Feed one iteration time. Returns `Some(true)` when an episode opens
     /// at this step, `Some(false)` when one closes, `None` otherwise.
     pub fn push(&mut self, x: f64) -> Option<bool> {
+        // A non-finite measurement carries no information about cluster
+        // health; dropping it keeps the ring, baseline and BOCD posterior
+        // clean. (Bocd::push has the same guard for direct users.)
+        if !x.is_finite() {
+            return None;
+        }
         let idx = self.history.len();
         self.history.push(x);
 
         // Track the healthy baseline while not inside an episode.
         if !self.in_episode {
-            self.baseline_n += 1;
-            self.baseline += (x - self.baseline) / self.baseline_n as f64;
+            self.baseline.push(x);
         }
 
         if self.bocd.push(x).is_some() {
@@ -101,16 +169,16 @@ impl Detector {
         // verification's purpose; the median is immune to lone spikes while
         // preserving genuine level shifts.
         let lo = cp.saturating_sub(VERIFY_WINDOW);
-        let before = crate::util::stats::median(&self.history[lo..cp]);
+        let before = crate::util::stats::median(&self.history.range(lo, cp));
         let hi = (cp + VERIFY_WINDOW).min(self.history.len());
-        let after = crate::util::stats::median(&self.history[cp..hi]);
+        let after = crate::util::stats::median(&self.history.range(cp, hi));
         if before <= 0.0 {
             return None;
         }
         let delta = (after - before) / before;
 
         if !self.in_episode && delta > VERIFY_DELTA {
-            let severity = after / self.baseline.max(1e-12);
+            let severity = after / self.baseline.mean().max(1e-12);
             self.episodes.push(Episode { start_iter: cp, end_iter: None, severity });
             self.in_episode = true;
             return Some(true);
@@ -121,7 +189,8 @@ impl Detector {
             // *partial* relief (e.g. S3 fixed the congestion but a slow GPU
             // remains — Fig 17's compound case): the episode stays open so
             // the planner keeps escalating.
-            let near_baseline = (after - self.baseline).abs() / self.baseline < VERIFY_DELTA;
+            let near_baseline =
+                (after - self.baseline.mean()).abs() / self.baseline.mean().max(1e-12) < VERIFY_DELTA;
             if delta < -VERIFY_DELTA || near_baseline {
                 if let Some(ep) = self.episodes.last_mut() {
                     ep.end_iter = Some(cp);
@@ -136,7 +205,7 @@ impl Detector {
                 self.escalated = true;
             }
             if let Some(ep) = self.episodes.last_mut() {
-                ep.severity = ep.severity.max(after / self.baseline.max(1e-12));
+                ep.severity = ep.severity.max(after / self.baseline.mean().max(1e-12));
             }
         }
         None
@@ -154,7 +223,7 @@ impl Detector {
     }
 
     pub fn baseline(&self) -> f64 {
-        self.baseline
+        self.baseline.mean()
     }
 
     /// Job-level verdict: did this job experience any fail-slow?
@@ -245,6 +314,55 @@ mod tests {
         let eps = detect_episodes(&xs, BocdConfig::default());
         assert_eq!(eps.len(), 2, "{eps:?}");
         assert!(eps[0].end_iter.is_some() && eps[1].end_iter.is_some());
+    }
+
+    #[test]
+    fn bounded_memory_over_100k_iteration_stream() {
+        // The R2 requirement: memory is O(VERIFY_WINDOW), not O(iterations).
+        // Stream >=100k samples (with embedded fail-slow episodes so the
+        // whole verify path runs) through one detector; the resident ring
+        // stays at its fixed capacity throughout, and BOCD's hypothesis set
+        // stays under its cap. A small cap keeps the debug-mode test quick
+        // without changing the detection semantics exercised here.
+        let cfg = BocdConfig { max_hypotheses: 128, trunc_eps: 1e-4, ..BocdConfig::default() };
+        let mut d = Detector::new(cfg);
+        let cap = d.ring_capacity();
+        assert_eq!(cap, 2 * VERIFY_WINDOW + 1);
+
+        let mut rng = Rng::new(99);
+        let mut n = 0usize;
+        // 25 blocks of (3600 healthy, 400 slow) = 100_000 samples.
+        for _ in 0..25 {
+            for i in 0..4000 {
+                let level = if i >= 3600 { 1.5 } else { 1.0 };
+                d.push(level * (1.0 + 0.015 * rng.normal()));
+                n += 1;
+                if n % 10_000 == 0 {
+                    assert_eq!(d.ring_capacity(), cap, "ring grew at sample {n}");
+                }
+            }
+        }
+        assert!(n >= 100_000);
+        assert_eq!(d.ring_capacity(), cap);
+        // The detector still works at the far end of the stream.
+        assert!(d.episodes.len() >= 20, "episodes: {}", d.episodes.len());
+        assert!((d.baseline() - 1.0).abs() < 0.1, "baseline {}", d.baseline());
+    }
+
+    #[test]
+    fn non_finite_samples_are_dropped() {
+        // NaN/inf iteration times must not open bogus episodes, corrupt the
+        // baseline, or prevent later real detections.
+        let mut xs = series(&[(80, 1.0), (60, 1.5), (80, 1.0)], 0.015, 8);
+        xs[10] = f64::NAN;
+        xs[30] = f64::INFINITY;
+        let mut d = Detector::with_defaults();
+        for &x in &xs {
+            d.push(x);
+        }
+        assert!(d.baseline().is_finite());
+        assert_eq!(d.episodes.len(), 1, "{:?}", d.episodes);
+        assert!(d.episodes[0].severity.is_finite());
     }
 
     #[test]

@@ -1,0 +1,474 @@
+//! Fleet engine: thousands of concurrent FALCON-supervised jobs, sharded
+//! across worker threads.
+//!
+//! The paper frames fail-slow handling as a *fleet* problem — hundreds of
+//! concurrent jobs on a shared 10,000+-GPU cluster, each continuously
+//! watched by an always-on detector (R2). This module scales the
+//! single-job reproduction to that setting:
+//!
+//! - **Jobs.** Each fleet job is an independent `TrainingSim` +
+//!   [`crate::coordinator::Falcon`] pair with a heterogeneous spec
+//!   (parallel strategy, model size, GPU class, jitter profile) drawn
+//!   deterministically from the fleet seed, plus a per-job fail-slow mix
+//!   sampled from the §3-calibrated [`InjectionModel`].
+//!
+//! - **Sharding model.** A fixed pool of `std::thread` workers pulls job
+//!   ids from a shared atomic counter (work-stealing by index, no
+//!   per-worker queues, no load-balancing heuristics — jobs are coarse
+//!   enough that the counter is never contended). Results land in a
+//!   slot-per-job vector, so aggregation order is by job id regardless of
+//!   which worker ran what. Per-job state is fully owned by the worker
+//!   running it; nothing is shared between jobs but the immutable config.
+//!
+//! - **Determinism.** Job `i` derives every random stream from
+//!   `(fleet_seed, i)` — spec, injections, simulator noise — so the fleet
+//!   report is bit-identical for a fixed seed across runs *and across
+//!   worker counts*. [`FleetReport::digest`] fingerprints the per-job
+//!   results to make that property testable.
+//!
+//! - **Bounded memory.** The per-job detector holds O(VERIFY_WINDOW)
+//!   samples (a fixed ring, see `detect::detector`) and a capped BOCD
+//!   hypothesis set, so fleet memory is O(jobs), not O(jobs × iterations)
+//!   — the prerequisite for an always-on fleet campaign.
+//!
+//! The cross-job aggregator pools episode counts, detection-latency
+//! percentiles (verified onset time minus injected onset time) and the
+//! mitigated-vs-ignored throughput delta (each injected job optionally
+//! re-run with `mitigate: false` on the identical trace).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::coordinator::{run_with_falcon, FalconConfig};
+use crate::fabric::GpuClass;
+use crate::inject::InjectionModel;
+use crate::metrics::LatencySummary;
+use crate::pipeline::{ModelDims, ParallelConfig, Workload};
+use crate::sim::{JobSpec, TrainingSim};
+use crate::simkit::{from_secs, secs, MINUTE};
+use crate::util::plot;
+use crate::util::rng::Rng;
+
+/// Fleet campaign configuration.
+#[derive(Clone, Debug)]
+pub struct FleetConfig {
+    /// Number of concurrent jobs.
+    pub jobs: usize,
+    /// Iterations each job trains for.
+    pub iters: usize,
+    /// Master seed; everything derives from `(seed, job_id)`.
+    pub seed: u64,
+    /// Worker threads (0 = one per available core).
+    pub workers: usize,
+    /// Multiplier on the §3 per-job fail-slow probabilities. 1.0 reproduces
+    /// the paper's (sparse) campaign rates; the default oversamples so a
+    /// moderate fleet still exercises the whole detect→mitigate path.
+    pub failslow_boost: f64,
+    /// Re-run each injected job with mitigation disabled on the identical
+    /// trace, for the mitigated-vs-ignored throughput delta.
+    pub compare: bool,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig {
+            jobs: 512,
+            iters: 120,
+            seed: 2024,
+            workers: 0,
+            failslow_boost: 8.0,
+            compare: true,
+        }
+    }
+}
+
+/// Outcome of one fleet job.
+#[derive(Clone, Debug)]
+pub struct JobResult {
+    pub job_id: usize,
+    /// Parallel strategy label, e.g. "2T4D1P".
+    pub label: String,
+    pub world: usize,
+    /// Injected fail-slow events.
+    pub injected: usize,
+    /// Verified episodes the detector opened.
+    pub episodes_detected: usize,
+    /// Whether the job was flagged fail-slow (>= 1 verified episode).
+    pub flagged: bool,
+    /// Seconds from injected onset to verified onset, per matched episode.
+    pub detection_latency_s: Vec<f64>,
+    /// Healthy-cluster throughput (iters/s) with even allocation.
+    pub ideal_thpt: f64,
+    /// Mean throughput of the mitigated run.
+    pub mean_thpt: f64,
+    /// Mean throughput of the ignore-mode re-run (compare mode, injected
+    /// jobs only).
+    pub ignored_thpt: Option<f64>,
+}
+
+/// Aggregated fleet campaign report.
+#[derive(Clone, Debug)]
+pub struct FleetReport {
+    pub jobs: usize,
+    pub workers: usize,
+    pub iters: usize,
+    /// Total simulated GPUs across the fleet.
+    pub gpus: usize,
+    pub jobs_with_failslow: usize,
+    pub jobs_flagged: usize,
+    /// Flagged with nothing injected.
+    pub false_positives: usize,
+    /// Injected but never flagged.
+    pub missed: usize,
+    pub episodes_injected: usize,
+    pub episodes_detected: usize,
+    pub latency: LatencySummary,
+    /// Mean of (ideal / achieved) throughput across the fleet.
+    pub mean_slowdown: f64,
+    /// Mean mitigated/ignored throughput ratio over compared jobs (1.0 when
+    /// nothing was compared).
+    pub mitigated_over_ignored: f64,
+    pub compared_jobs: usize,
+    pub wall_s: f64,
+    pub jobs_per_sec: f64,
+    pub results: Vec<JobResult>,
+}
+
+/// Heterogeneous job palette: small 1–2-node strategies (the fleet's bread
+/// and butter — §3's probe classes) with varied models and noise profiles.
+pub fn job_spec(fleet_seed: u64, job_id: usize) -> JobSpec {
+    let mut rng = Rng::new(fleet_seed ^ 0xF1EE7).fork(job_id as u64);
+    const CFGS: [(usize, usize, usize); 5] =
+        [(1, 4, 1), (2, 2, 1), (1, 8, 1), (2, 4, 1), (2, 2, 2)];
+    let (tp, dp, pp) = CFGS[rng.below(CFGS.len() as u64) as usize];
+    let model = ["gpt2-7b", "gpt2-11b"][rng.below(2) as usize];
+    let gpu_class = if rng.bernoulli(0.25) { GpuClass::A100 } else { GpuClass::H800 };
+    JobSpec {
+        cfg: ParallelConfig::new(tp, dp, pp),
+        wl: Workload {
+            model: ModelDims::gpt2(model),
+            micro_batch: 1,
+            microbatches: 4 + 2 * rng.below(3) as usize,
+        },
+        gpus_per_node: 4,
+        gpu_class,
+        mfu: rng.range_f64(0.38, 0.45),
+        jitter: rng.range_f64(0.010, 0.020),
+        spike_p: rng.range_f64(0.005, 0.02),
+        seed: rng.next_u64(),
+    }
+}
+
+/// §3 injection model scaled for fleet campaigns: boosted occurrence
+/// probabilities and shorter mean durations so a ~100-iteration job sees
+/// onsets *and* reliefs.
+fn fleet_injection_model(boost: f64) -> InjectionModel {
+    let base = InjectionModel::default();
+    InjectionModel {
+        p_cpu_1node: (base.p_cpu_1node * boost).min(0.5),
+        p_gpu_1node: (base.p_gpu_1node * boost).min(0.5),
+        p_congestion_per_link: (base.p_congestion_per_link * boost).min(0.5),
+        mean_comp_duration: 2 * MINUTE,
+        mean_comm_duration: 4 * MINUTE,
+    }
+}
+
+/// Run one fleet job end to end (deterministic in `(cfg.seed, job_id)`).
+pub fn run_job(cfg: &FleetConfig, job_id: usize) -> JobResult {
+    let spec = job_spec(cfg.seed, job_id);
+    let world = spec.cfg.world();
+    let label = spec.cfg.label();
+
+    let mut sim = TrainingSim::new(spec.clone());
+    let horizon = from_secs((sim.ideal_iter_s * cfg.iters as f64).max(60.0));
+    let mut ev_rng = Rng::new(cfg.seed ^ 0xE7E47).fork(job_id as u64);
+    let events = fleet_injection_model(cfg.failslow_boost).sample_job(
+        spec.n_nodes(),
+        spec.gpus_per_node,
+        horizon,
+        &mut ev_rng,
+    );
+    sim.inject(events.clone());
+    let falcon = run_with_falcon(
+        &mut sim,
+        FalconConfig { mitigate: true, ..FalconConfig::default() },
+        cfg.iters,
+    );
+
+    // Match verified onsets to injected onsets chronologically: latency =
+    // first unclaimed verified open at/after the event's start.
+    // (sample_job already returns events sorted by start; sort locally so
+    // the greedy matching never depends on that nonlocal invariant.)
+    let mut events_by_start = events.clone();
+    events_by_start.sort_by_key(|e| e.start);
+    let opens = falcon.episode_opens();
+    let mut used = vec![false; opens.len()];
+    let mut latencies = Vec::new();
+    for ev in &events_by_start {
+        for (i, &at) in opens.iter().enumerate() {
+            if !used[i] && at >= ev.start {
+                used[i] = true;
+                latencies.push(secs(at - ev.start));
+                break;
+            }
+        }
+    }
+
+    let ignored_thpt = if cfg.compare && !events.is_empty() {
+        let mut ignored = TrainingSim::new(spec.clone());
+        ignored.inject(events.clone());
+        run_with_falcon(
+            &mut ignored,
+            FalconConfig { mitigate: false, ..FalconConfig::default() },
+            cfg.iters,
+        );
+        Some(ignored.timeline.mean_throughput())
+    } else {
+        None
+    };
+
+    JobResult {
+        job_id,
+        label,
+        world,
+        injected: events.len(),
+        episodes_detected: falcon.detector.episodes.len(),
+        flagged: falcon.detector.job_flagged(),
+        detection_latency_s: latencies,
+        ideal_thpt: 1.0 / sim.ideal_iter_s,
+        mean_thpt: sim.timeline.mean_throughput(),
+        ignored_thpt,
+    }
+}
+
+/// Run the whole fleet, sharded across worker threads.
+pub fn run_fleet(cfg: &FleetConfig) -> FleetReport {
+    let t0 = std::time::Instant::now();
+    let jobs = cfg.jobs;
+    let workers = if cfg.workers > 0 {
+        cfg.workers
+    } else {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+    }
+    .min(jobs.max(1));
+
+    let next = AtomicUsize::new(0);
+    let slots: Mutex<Vec<Option<JobResult>>> = Mutex::new(vec![None; jobs]);
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let id = next.fetch_add(1, Ordering::Relaxed);
+                if id >= jobs {
+                    break;
+                }
+                let r = run_job(cfg, id);
+                slots.lock().unwrap()[id] = Some(r);
+            });
+        }
+    });
+    let wall_s = t0.elapsed().as_secs_f64();
+    let results: Vec<JobResult> = slots
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|r| r.expect("every job completes"))
+        .collect();
+    aggregate(cfg, workers, results, wall_s)
+}
+
+fn aggregate(
+    cfg: &FleetConfig,
+    workers: usize,
+    results: Vec<JobResult>,
+    wall_s: f64,
+) -> FleetReport {
+    let jobs = results.len();
+    let gpus: usize = results.iter().map(|r| r.world).sum();
+    let jobs_with_failslow = results.iter().filter(|r| r.injected > 0).count();
+    let jobs_flagged = results.iter().filter(|r| r.flagged).count();
+    let false_positives = results.iter().filter(|r| r.flagged && r.injected == 0).count();
+    let missed = results.iter().filter(|r| !r.flagged && r.injected > 0).count();
+    let episodes_injected: usize = results.iter().map(|r| r.injected).sum();
+    let episodes_detected: usize = results.iter().map(|r| r.episodes_detected).sum();
+
+    let pooled: Vec<f64> = results
+        .iter()
+        .flat_map(|r| r.detection_latency_s.iter().copied())
+        .collect();
+    let latency = LatencySummary::from_samples(&pooled);
+
+    let slowdowns: Vec<f64> = results
+        .iter()
+        .filter(|r| r.mean_thpt > 0.0)
+        .map(|r| r.ideal_thpt / r.mean_thpt)
+        .collect();
+    let mean_slowdown = crate::util::stats::mean(&slowdowns);
+
+    let ratios: Vec<f64> = results
+        .iter()
+        .filter_map(|r| r.ignored_thpt.filter(|&t| t > 0.0).map(|t| r.mean_thpt / t))
+        .collect();
+    let compared_jobs = ratios.len();
+    let mitigated_over_ignored =
+        if ratios.is_empty() { 1.0 } else { crate::util::stats::mean(&ratios) };
+
+    FleetReport {
+        jobs,
+        workers,
+        iters: cfg.iters,
+        gpus,
+        jobs_with_failslow,
+        jobs_flagged,
+        false_positives,
+        missed,
+        episodes_injected,
+        episodes_detected,
+        latency,
+        mean_slowdown,
+        mitigated_over_ignored,
+        compared_jobs,
+        wall_s,
+        jobs_per_sec: jobs as f64 / wall_s.max(1e-9),
+        results,
+    }
+}
+
+impl FleetReport {
+    /// Fingerprint of the per-job results in job-id order (FNV-1a over
+    /// exact bit patterns). Results land in per-job slots, so the order —
+    /// and therefore the digest — does not depend on thread scheduling:
+    /// equal digests across runs and worker counts is the fleet's
+    /// determinism contract.
+    pub fn digest(&self) -> u64 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        let mut mix = |v: u64| {
+            for b in v.to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x1000_0000_01b3);
+            }
+        };
+        for r in &self.results {
+            mix(r.job_id as u64);
+            mix(r.injected as u64);
+            mix(r.episodes_detected as u64);
+            mix(r.mean_thpt.to_bits());
+            mix(r.ignored_thpt.map_or(0, f64::to_bits));
+            for &l in &r.detection_latency_s {
+                mix(l.to_bits());
+            }
+        }
+        h
+    }
+
+    /// Human-readable fleet report.
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "FLEET — {} jobs ({} simulated GPUs) x {} iters, {} workers\n",
+            self.jobs, self.gpus, self.iters, self.workers
+        );
+        out.push_str(&plot::table(
+            &["jobs", "w/ fail-slow", "flagged", "missed", "false+", "episodes inj", "episodes det"],
+            &[vec![
+                self.jobs.to_string(),
+                self.jobs_with_failslow.to_string(),
+                self.jobs_flagged.to_string(),
+                self.missed.to_string(),
+                self.false_positives.to_string(),
+                self.episodes_injected.to_string(),
+                self.episodes_detected.to_string(),
+            ]],
+        ));
+        out.push_str(&format!(
+            "detection latency (s): p50 {:.1}  p90 {:.1}  p99 {:.1}  (n={})\n",
+            self.latency.p50, self.latency.p90, self.latency.p99, self.latency.n
+        ));
+        out.push_str(&format!(
+            "fleet slowdown vs ideal: {:.3}x mean\n",
+            self.mean_slowdown
+        ));
+        if self.compared_jobs > 0 {
+            out.push_str(&format!(
+                "mitigated vs ignored throughput: {:+.1}% mean over {} injected jobs\n",
+                100.0 * (self.mitigated_over_ignored - 1.0),
+                self.compared_jobs
+            ));
+        }
+        out.push_str(&format!(
+            "engine: {:.1} jobs/s ({:.2} s wall), digest {:016x}\n",
+            self.jobs_per_sec,
+            self.wall_s,
+            self.digest()
+        ));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg() -> FleetConfig {
+        FleetConfig { jobs: 10, iters: 40, seed: 7, workers: 3, failslow_boost: 12.0, compare: true }
+    }
+
+    #[test]
+    fn job_specs_deterministic_and_heterogeneous() {
+        let a = job_spec(1, 5);
+        let b = job_spec(1, 5);
+        assert_eq!(a.cfg, b.cfg);
+        assert_eq!(a.seed, b.seed);
+        assert_eq!(a.mfu, b.mfu);
+        // Across ids the palette actually varies.
+        let labels: std::collections::HashSet<String> =
+            (0..32).map(|i| job_spec(1, i).cfg.label()).collect();
+        assert!(labels.len() >= 3, "palette collapsed: {labels:?}");
+    }
+
+    #[test]
+    fn single_job_is_deterministic() {
+        let cfg = small_cfg();
+        let a = run_job(&cfg, 3);
+        let b = run_job(&cfg, 3);
+        assert_eq!(a.mean_thpt.to_bits(), b.mean_thpt.to_bits());
+        assert_eq!(a.injected, b.injected);
+        assert_eq!(a.episodes_detected, b.episodes_detected);
+    }
+
+    #[test]
+    fn fleet_digest_stable_across_worker_counts() {
+        let mut cfg = small_cfg();
+        let a = run_fleet(&cfg);
+        cfg.workers = 1;
+        let b = run_fleet(&cfg);
+        assert_eq!(a.results.len(), cfg.jobs);
+        assert_eq!(a.digest(), b.digest(), "sharding changed the results");
+        assert!(a.jobs_per_sec > 0.0);
+    }
+
+    #[test]
+    fn boosted_fleet_sees_and_detects_failslows() {
+        let cfg = FleetConfig { jobs: 24, iters: 60, ..small_cfg() };
+        let r = run_fleet(&cfg);
+        assert!(r.jobs_with_failslow > 0, "boosted fleet saw no fail-slows");
+        assert!(r.jobs_flagged > 0, "no job flagged");
+        assert!(r.episodes_detected > 0);
+        assert!(r.latency.n > 0, "no detection latencies matched");
+        assert!(r.gpus >= 24 * 4);
+        let rendered = r.render();
+        assert!(rendered.contains("detection latency"));
+        assert!(rendered.contains("digest"));
+    }
+
+    #[test]
+    fn compare_mode_measures_mitigation_delta() {
+        let cfg = FleetConfig { jobs: 16, iters: 80, ..small_cfg() };
+        let r = run_fleet(&cfg);
+        assert!(r.compared_jobs > 0, "no injected job was compared");
+        // Mitigation must not make the fleet slower on average.
+        assert!(
+            r.mitigated_over_ignored > 0.9,
+            "mitigated/ignored ratio {}",
+            r.mitigated_over_ignored
+        );
+    }
+}

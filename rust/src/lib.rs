@@ -11,6 +11,7 @@ pub mod collectives;
 pub mod coordinator;
 pub mod detect;
 pub mod fabric;
+pub mod fleet;
 pub mod inject;
 pub mod ckpt;
 pub mod metrics;
@@ -18,8 +19,10 @@ pub mod mitigate;
 pub mod monitor;
 pub mod pipeline;
 pub mod reports;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod sim;
 pub mod simkit;
+#[cfg(feature = "pjrt")]
 pub mod trainer;
 pub mod util;

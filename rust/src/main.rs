@@ -8,6 +8,10 @@
 //!       FALCON detection + mitigation in the loop.
 //!   sim [--tp T] [--dp D] [--pp P] [--iters N] [--inject gpu|cpu|net]
 //!       One simulated hybrid-parallel job with FALCON attached.
+//!   fleet [--jobs N] [--iters I] [--seed S] [--workers W] [--boost B]
+//!         [--compare true|false]
+//!       Fleet campaign: N concurrent simulated jobs sharded across worker
+//!       threads, with a deterministic cross-job aggregate report.
 //!   campaign [--fast true|false]
 //!       The §3 characterization campaign (Fig 1 + Table 1).
 //!   list
@@ -40,14 +44,25 @@ fn main() {
             }
         }
         "sim" => run_sim(&args),
+        "fleet" => run_fleet_cmd(&args),
         "campaign" => {
             println!("{}", falcon::reports::generate("fig1", &args));
             println!("{}", falcon::reports::generate("tab1", &args));
         }
+        #[cfg(feature = "pjrt")]
         "train" => run_train(&args),
+        #[cfg(not(feature = "pjrt"))]
+        "train" => {
+            println!(
+                "the live PJRT trainer is compiled out: it needs the external \
+                 `xla`/`anyhow` crates, which are not yet vendored (see \
+                 ROADMAP open items). Once they are declared in rust/Cargo.toml, \
+                 build with `--features pjrt`."
+            );
+        }
         _ => {
             println!(
-                "usage: falcon <report|train|sim|campaign|list> [flags]\n\
+                "usage: falcon <report|train|sim|fleet|campaign|list> [flags]\n\
                  see `falcon list` for report ids; DESIGN.md for the experiment index"
             );
         }
@@ -113,6 +128,17 @@ fn run_sim(args: &Args) {
     );
 }
 
+fn run_fleet_cmd(args: &Args) {
+    let cfg = falcon::reports::fleet::config_from_args(args);
+    eprintln!(
+        "[fleet] {} jobs x {} iters, seed {}, workers {} (0 = auto), compare {}",
+        cfg.jobs, cfg.iters, cfg.seed, cfg.workers, cfg.compare
+    );
+    let report = falcon::fleet::run_fleet(&cfg);
+    println!("{}", report.render());
+}
+
+#[cfg(feature = "pjrt")]
 fn run_train(args: &Args) {
     use falcon::detect::{BocdConfig, Detector};
     use falcon::mitigate::microbatch;

@@ -48,6 +48,35 @@ impl JobOutcome {
     }
 }
 
+/// Percentile summary of latency-like samples (detection latencies across a
+/// fleet, episode durations, ...). Built once from the pooled samples so
+/// fleet-wide aggregation is a single pass.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct LatencySummary {
+    pub n: usize,
+    pub mean: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+}
+
+impl LatencySummary {
+    pub fn from_samples(xs: &[f64]) -> Self {
+        if xs.is_empty() {
+            return Self::default();
+        }
+        let mut sorted = xs.to_vec();
+        sorted.sort_by(f64::total_cmp);
+        LatencySummary {
+            n: xs.len(),
+            mean: crate::util::stats::mean(xs),
+            p50: crate::util::stats::quantile_sorted(&sorted, 0.5),
+            p90: crate::util::stats::quantile_sorted(&sorted, 0.9),
+            p99: crate::util::stats::quantile_sorted(&sorted, 0.99),
+        }
+    }
+}
+
 /// Fraction of a slowdown removed by mitigation (the paper's headline
 /// "reduces the slowdown by 60.1%" in Table 7), computed in *throughput*
 /// space as the paper does: reduction = (mitigated - slow) / (healthy - slow).
@@ -80,6 +109,18 @@ mod tests {
         // Table 7: healthy 17.1, fail-slow 14.8, mitigated 16.2 iters/min.
         let red = slowdown_reduction(17.1, 14.8, 16.2);
         assert!((red - 0.601).abs() < 0.02, "reduction {red}");
+    }
+
+    #[test]
+    fn latency_summary_percentiles() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let s = LatencySummary::from_samples(&xs);
+        assert_eq!(s.n, 100);
+        assert!((s.mean - 50.5).abs() < 1e-9);
+        assert!((s.p50 - 50.5).abs() < 1e-9);
+        assert!((s.p90 - 90.1).abs() < 1e-9);
+        assert!(s.p99 > s.p90 && s.p99 <= 100.0);
+        assert_eq!(LatencySummary::from_samples(&[]), LatencySummary::default());
     }
 
     #[test]

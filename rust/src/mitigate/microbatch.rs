@@ -24,11 +24,51 @@ pub struct Allocation {
 }
 
 /// Exact greedy solver. `times[i]` = per-micro-batch time of replica i,
-/// `total` = M. Requires total >= replicas (each replica keeps >= 1).
+/// `total` = M.
+///
+/// Degenerate profiles are handled gracefully rather than crashing a live
+/// mitigation step: a non-finite replica time (NaN, a hung probe reported
+/// as +inf) clamps to a large sentinel — the replica is *suspect*, so the
+/// solver sheds load away from it rather than piling the batch onto a
+/// replica that may not make progress — while a non-positive finite time
+/// (measurement underflow) clamps to a small epsilon. When
+/// `total < replicas` the constraint m_i >= 1 is unsatisfiable, so the
+/// solver gives one micro-batch each to the fastest replicas.
 pub fn solve(times: &[f64], total: usize) -> Allocation {
     let d = times.len();
-    assert!(d > 0 && total >= d, "need at least one micro-batch per replica");
-    assert!(times.iter().all(|&t| t > 0.0), "times must be positive");
+    if d == 0 {
+        return Allocation { m: Vec::new(), makespan: 0.0 };
+    }
+    const T_EPS: f64 = 1e-9;
+    const T_SUSPECT: f64 = 1e6;
+    let times: Vec<f64> = times
+        .iter()
+        .map(|&t| {
+            if !t.is_finite() {
+                T_SUSPECT
+            } else if t <= 0.0 {
+                T_EPS
+            } else {
+                t
+            }
+        })
+        .collect();
+    let times = &times[..];
+    if total < d {
+        // One micro-batch each to the `total` *fastest* replicas.
+        let mut order: Vec<usize> = (0..d).collect();
+        order.sort_by(|&a, &b| times[a].total_cmp(&times[b]).then(a.cmp(&b)));
+        let mut m = vec![0usize; d];
+        for &i in order.iter().take(total) {
+            m[i] = 1;
+        }
+        let makespan = m
+            .iter()
+            .zip(times)
+            .map(|(&mi, &t)| mi as f64 * t)
+            .fold(0.0, f64::max);
+        return Allocation { m, makespan };
+    }
 
     // Min-heap on (completion time if given one more, index).
     #[derive(PartialEq)]
@@ -41,10 +81,7 @@ pub fn solve(times: &[f64], total: usize) -> Allocation {
     }
     impl Ord for Slot {
         fn cmp(&self, o: &Self) -> std::cmp::Ordering {
-            self.0
-                .partial_cmp(&o.0)
-                .unwrap()
-                .then(self.1.cmp(&o.1))
+            self.0.total_cmp(&o.0).then(self.1.cmp(&o.1))
         }
     }
 
@@ -139,6 +176,39 @@ mod tests {
         let a = solve(&[100.0, 1.0, 1.0, 1.0], 16);
         assert_eq!(a.m[0], 1);
         assert_eq!(a.m.iter().sum::<usize>(), 16);
+    }
+
+    #[test]
+    fn degenerate_times_clamped_not_crashed() {
+        // A live mitigation step must survive a broken profile: zero,
+        // negative, NaN and infinite per-replica times are all sanitized
+        // and the allocation still conserves the global batch.
+        let a = solve(&[0.0, -1.0, f64::NAN, f64::INFINITY, 1.0], 20);
+        assert_eq!(a.m.iter().sum::<usize>(), 20);
+        assert!(a.m.iter().all(|&m| m >= 1), "{:?}", a.m);
+        assert!(a.makespan.is_finite());
+        // Suspect replicas (NaN / hung-probe inf) get only the mandatory
+        // minimum — load sheds AWAY from a replica that may not progress.
+        assert_eq!(a.m[2], 1, "{:?}", a.m);
+        assert_eq!(a.m[3], 1, "{:?}", a.m);
+        // Underflowed-measurement replicas absorb the remainder.
+        assert!(a.m[0] > a.m[4] || a.m[1] > a.m[4], "{:?}", a.m);
+    }
+
+    #[test]
+    fn fewer_microbatches_than_replicas_falls_back_to_even() {
+        let a = solve(&[1.0, 2.0, 3.0, 4.0], 2);
+        assert_eq!(a.m.iter().sum::<usize>(), 2);
+        assert_eq!(a.m.len(), 4);
+        assert!(a.makespan.is_finite() && a.makespan > 0.0);
+        // The scarce micro-batches go to the fastest replicas.
+        assert_eq!(a.m, vec![1, 1, 0, 0]);
+        let b = solve(&[9.0, 1.0, 1.0], 2);
+        assert_eq!(b.m, vec![0, 1, 1]);
+        assert!((b.makespan - 1.0).abs() < 1e-12, "{}", b.makespan);
+        let empty = solve(&[], 5);
+        assert!(empty.m.is_empty());
+        assert_eq!(empty.makespan, 0.0);
     }
 
     #[test]

@@ -1,0 +1,41 @@
+//! Fleet-scale campaign report (beyond the paper's single-job evaluation:
+//! the ROADMAP's production-scale direction). Thin report-registry wrapper
+//! over [`crate::fleet::run_fleet`]; the `falcon fleet` CLI subcommand is
+//! the primary entry point with the same knobs.
+
+use crate::fleet::{run_fleet, FleetConfig};
+use crate::util::cli::Args;
+
+pub fn config_from_args(args: &Args) -> FleetConfig {
+    let d = FleetConfig::default();
+    FleetConfig {
+        jobs: args.usize_or("jobs", d.jobs),
+        iters: args.usize_or("iters", d.iters),
+        seed: args.u64_or("seed", d.seed),
+        workers: args.usize_or("workers", d.workers),
+        failslow_boost: args.f64_or("boost", d.failslow_boost),
+        compare: args.bool_or("compare", d.compare),
+    }
+}
+
+pub fn fleet(args: &Args) -> String {
+    let cfg = config_from_args(args);
+    run_fleet(&cfg).render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fleet_report_renders() {
+        let args = Args::parse(
+            ["--jobs", "6", "--iters", "30", "--workers", "2", "--seed", "3"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        let out = fleet(&args);
+        assert!(out.contains("FLEET — 6 jobs"), "{out}");
+        assert!(out.contains("digest"));
+    }
+}

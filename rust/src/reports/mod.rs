@@ -9,6 +9,7 @@
 pub mod campaign;
 pub mod cases;
 pub mod detection;
+pub mod fleet;
 pub mod mitigation;
 pub mod overhead;
 pub mod scale;
@@ -48,6 +49,9 @@ pub fn generate(id: &str, args: &Args) -> String {
         "fig19" => overhead::fig19(args),
         "fig20" => scale::fig20(args),
         "tab7" => scale::tab7(args),
+        // Beyond-paper reports (not in ALL so `report all` stays the paper
+        // set; the `falcon fleet` subcommand is the primary entry).
+        "fleet" => fleet::fleet(args),
         other => format!("unknown report '{other}'; available: {ALL:?}\n"),
     }
 }

@@ -77,6 +77,13 @@ pub struct IterObs {
     pub sm_util: f64,
 }
 
+impl IterObs {
+    /// Iteration duration in seconds — the sample FALCON-DETECT consumes.
+    pub fn duration_s(&self) -> f64 {
+        crate::simkit::secs(self.duration)
+    }
+}
+
 pub struct TrainingSim {
     pub spec: JobSpec,
     pub cluster: Cluster,

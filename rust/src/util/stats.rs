@@ -31,13 +31,36 @@ pub fn cov(xs: &[f64]) -> f64 {
     std_dev(xs) / m
 }
 
-/// Quantile with linear interpolation, q in [0, 1].
+/// NaN-last total order: any NaN (either sign bit — `f64::total_cmp` alone
+/// would put negative NaNs *below* -inf) sorts above every real number, so
+/// NaNs surface only in the extreme top quantiles rather than panicking or
+/// silently poisoning the low/mid quantiles.
+fn nan_last(a: &f64, b: &f64) -> std::cmp::Ordering {
+    match (a.is_nan(), b.is_nan()) {
+        (true, true) => std::cmp::Ordering::Equal,
+        (true, false) => std::cmp::Ordering::Greater,
+        (false, true) => std::cmp::Ordering::Less,
+        (false, false) => a.partial_cmp(b).expect("both finite-or-inf"),
+    }
+}
+
+/// Quantile with linear interpolation, q in [0, 1]. NaN-bearing input
+/// cannot panic: NaNs sort last and surface only in the top quantiles.
 pub fn quantile(xs: &[f64], q: f64) -> f64 {
     if xs.is_empty() {
         return 0.0;
     }
     let mut s = xs.to_vec();
-    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    s.sort_by(nan_last);
+    quantile_sorted(&s, q)
+}
+
+/// Quantile on an already-sorted (ascending) slice — lets callers that need
+/// several quantiles sort once instead of once per call.
+pub fn quantile_sorted(s: &[f64], q: f64) -> f64 {
+    if s.is_empty() {
+        return 0.0;
+    }
     let pos = q.clamp(0.0, 1.0) * (s.len() - 1) as f64;
     let lo = pos.floor() as usize;
     let hi = pos.ceil() as usize;
@@ -58,7 +81,7 @@ pub fn ecdf(xs: &[f64], points: usize) -> Vec<(f64, f64)> {
         return vec![];
     }
     let mut s = xs.to_vec();
-    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    s.sort_by(nan_last);
     (0..points)
         .map(|i| {
             let q = (i + 1) as f64 / points as f64;
@@ -182,6 +205,36 @@ mod tests {
             assert!(w[1].1 >= w[0].1);
         }
         assert!((cdf.last().unwrap().1 - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quantile_tolerates_nan_input() {
+        // NaNs of EITHER sign sort last: low/mid quantiles stay meaningful
+        // and nothing panics. (0.0/0.0 on x86_64 yields a negative-sign
+        // QNaN, which f64::total_cmp would sort below -inf.)
+        let neg_nan = f64::from_bits(0xFFF8_0000_0000_0000);
+        assert!(neg_nan.is_nan() && neg_nan.is_sign_negative());
+        for nan in [f64::NAN, neg_nan] {
+            let xs = [3.0, nan, 1.0, 2.0];
+            assert_eq!(quantile(&xs, 0.0), 1.0);
+            assert!((median(&xs) - 2.5).abs() < 1e-12);
+            assert!(quantile(&xs, 1.0).is_nan());
+        }
+        assert!(quantile(&[f64::NAN], 0.5).is_nan());
+        // -inf still beats every finite value at the bottom.
+        assert_eq!(quantile(&[1.0, f64::NEG_INFINITY, neg_nan], 0.0), f64::NEG_INFINITY);
+    }
+
+    #[test]
+    fn ecdf_tolerates_nan_input() {
+        let xs = [1.0, f64::NAN, 0.0, 2.0];
+        let cdf = ecdf(&xs, 4);
+        assert_eq!(cdf.len(), 4);
+        // Finite prefix is still ordered; only the top bucket sees the NaN.
+        assert_eq!(cdf[0].0, 0.0);
+        assert_eq!(cdf[1].0, 1.0);
+        assert_eq!(cdf[2].0, 2.0);
+        assert!(cdf[3].0.is_nan());
     }
 
     #[test]

@@ -232,12 +232,14 @@ fn mitigated_never_slower_than_unmitigated_for_long_compute_failslow() {
 // Runtime + live trainer composition (skipped without artifacts)
 // ---------------------------------------------------------------------------
 
+#[cfg(feature = "pjrt")]
 fn artifacts_ready() -> bool {
     std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
         .join("artifacts/.stamp")
         .exists()
 }
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn live_trainer_composes_with_detector_and_s2() {
     if !artifacts_ready() {
@@ -281,6 +283,39 @@ fn live_trainer_composes_with_detector_and_s2() {
         "S2 must shed load from the slow worker: {:?}",
         t.alloc
     );
+}
+
+// ---------------------------------------------------------------------------
+// Fleet engine: sharded many-job campaigns stay deterministic end to end
+// ---------------------------------------------------------------------------
+
+#[test]
+fn fleet_campaign_deterministic_across_shardings() {
+    use falcon::fleet::{run_fleet, FleetConfig};
+    let cfg = FleetConfig {
+        jobs: 20,
+        iters: 50,
+        seed: 42,
+        workers: 4,
+        failslow_boost: 10.0,
+        compare: true,
+    };
+    let a = run_fleet(&cfg);
+    let b = run_fleet(&FleetConfig { workers: 1, ..cfg.clone() });
+    assert_eq!(a.results.len(), 20);
+    assert_eq!(a.digest(), b.digest(), "fleet result depends on sharding");
+    // The aggregate actually aggregates: per-job fields roll up exactly.
+    let episodes: usize = a.results.iter().map(|r| r.episodes_detected).sum();
+    assert_eq!(episodes, a.episodes_detected);
+    assert_eq!(
+        a.results.iter().filter(|r| r.injected > 0).count(),
+        a.jobs_with_failslow
+    );
+    // Rendered report is stable modulo wall-clock lines.
+    let strip = |s: String| -> String {
+        s.lines().filter(|l| !l.starts_with("engine:")).collect::<Vec<_>>().join("\n")
+    };
+    assert_eq!(strip(a.render()), strip(b.render()));
 }
 
 // ---------------------------------------------------------------------------
