@@ -1,12 +1,12 @@
 # FALCON reproduction — top-level developer entry points.
 #
 # `make verify` is the tier-1 gate (ROADMAP): release build + full test
-# suite. `make fmt-check` is advisory until the tree is rustfmt-clean.
+# suite. `make fmt-check` and `make doc` mirror the blocking CI steps.
 
 CARGO ?= cargo
 RUST_DIR := rust
 
-.PHONY: verify test build fmt-check bench-fleet fleet
+.PHONY: verify test build fmt-check doc bench-fleet fleet
 
 verify: build test
 
@@ -19,8 +19,13 @@ test:
 fmt-check:
 	cd $(RUST_DIR) && $(CARGO) fmt --check
 
+# Rustdoc with warnings denied: broken intra-doc links fail, same as CI.
+doc:
+	cd $(RUST_DIR) && RUSTDOCFLAGS="-D warnings" $(CARGO) doc --no-deps --lib
+
 # Fleet-engine perf trajectory: runs the sharded fleet bench and writes
-# BENCH_fleet.json (jobs/sec) at the repo root.
+# BENCH_fleet.json (jobs/sec + shared-cluster policy sweep) at the repo
+# root. Conventions: docs/BENCHMARKS.md.
 bench-fleet:
 	cd $(RUST_DIR) && $(CARGO) bench --bench bench_fleet
 

@@ -21,7 +21,8 @@ fn main() {
         let bocd = detect_changepoints(&t.series, BocdConfig::default());
         let eps = detect_episodes(&t.series, BocdConfig::default());
         println!(
-            "trace {i}: ground-truth fail-slow = {:<5}  SlideWindow flags {:>3} pts | BOCD {:>2} cps | BOCD+V {} episodes {}",
+            "trace {i}: ground-truth fail-slow = {:<5}  SlideWindow flags {:>3} pts | \
+             BOCD {:>2} cps | BOCD+V {} episodes {}",
             t.has_failslow,
             sw.len(),
             bocd.len(),

@@ -4,7 +4,9 @@
 //!
 //! `cargo run --release --example fleet -- --jobs 512 --iters 120` runs the
 //! full-size default; the report is bit-identical for a fixed `--seed`
-//! regardless of `--workers`.
+//! regardless of `--workers`. Add `--policy spread` (or `first-fit`,
+//! `packed`, `straggler-aware`) to run the same fleet on ONE shared
+//! cluster with contended uplinks and arbitrated S3/S4 mitigation.
 
 use falcon::util::cli::Args;
 

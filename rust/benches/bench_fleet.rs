@@ -1,17 +1,46 @@
 //! Fleet-engine throughput benchmark: jobs/sec for sharded fleet campaigns
-//! at a few sizes, plus a determinism spot-check. Emits `BENCH_fleet.json`
-//! at the repo root so later PRs have a perf trajectory to compare against.
+//! at a few sizes, a shared-cluster policy sweep, and a determinism
+//! spot-check. Emits `BENCH_fleet.json` at the repo root so later PRs have
+//! a perf trajectory to compare against (conventions: docs/BENCHMARKS.md);
+//! when a previous `BENCH_fleet.json` exists, prints a one-line jobs/sec
+//! delta against it.
 
 #[path = "bench_common.rs"]
 mod bench_common;
 use bench_common::section;
 
+use falcon::cluster::Policy;
 use falcon::fleet::{run_fleet, FleetConfig};
 use falcon::util::json::Json;
 
+const BENCH_PATH: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_fleet.json");
+
+/// jobs/sec of the headline (largest private) config in a BENCH_fleet.json
+/// document, for the cross-PR delta line.
+fn headline_jobs_per_sec(doc: &Json) -> Option<(f64, f64)> {
+    let runs = doc.get("runs")?.as_arr()?;
+    let mut best: Option<(f64, f64)> = None; // (jobs, jobs_per_sec)
+    for r in runs {
+        if r.get("policy").is_some() {
+            continue; // compare private engine runs only
+        }
+        let jobs = r.get("jobs")?.as_f64()?;
+        let jps = r.get("jobs_per_sec")?.as_f64()?;
+        if best.map(|(j, _)| jobs > j).unwrap_or(true) {
+            best = Some((jobs, jps));
+        }
+    }
+    best
+}
+
 fn main() {
     let workers = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    let previous = std::fs::read_to_string(BENCH_PATH)
+        .ok()
+        .and_then(|s| Json::parse(&s).ok())
+        .and_then(|doc| headline_jobs_per_sec(&doc));
     let mut runs: Vec<Json> = Vec::new();
+    let mut headline = 0.0f64;
 
     section("fleet engine throughput (jobs/sec)");
     for (jobs, iters) in [(64usize, 60usize), (256, 60), (512, 120)] {
@@ -22,16 +51,21 @@ fn main() {
             workers: 0,
             failslow_boost: 8.0,
             compare: true,
+            ..FleetConfig::default()
         };
         let report = run_fleet(&cfg);
         println!(
-            "  {jobs:>4} jobs x {iters:>3} iters: {:>8.1} jobs/s  ({:.2} s wall, {} workers, {} GPUs, digest {:016x})",
+            "  {jobs:>4} jobs x {iters:>3} iters: {:>8.1} jobs/s  ({:.2} s wall, \
+             {} workers, {} GPUs, digest {:016x})",
             report.jobs_per_sec,
             report.wall_s,
             report.workers,
             report.gpus,
             report.digest()
         );
+        if jobs == 512 {
+            headline = report.jobs_per_sec;
+        }
         runs.push(Json::obj(vec![
             ("jobs", Json::Num(jobs as f64)),
             ("iters", Json::Num(iters as f64)),
@@ -43,8 +77,46 @@ fn main() {
         ]));
     }
 
+    section("shared-cluster policy sweep (128 jobs x 60 iters, arbitrated mitigation)");
+    for policy in Policy::ALL {
+        let cfg = FleetConfig {
+            jobs: 128,
+            iters: 60,
+            seed: 2024,
+            workers: 0,
+            failslow_boost: 8.0,
+            compare: false,
+            policy: Some(policy),
+            spare_frac: 0.10,
+            epoch_len: 15,
+            ..FleetConfig::default()
+        };
+        let report = run_fleet(&cfg);
+        let c = report.cluster.as_ref().expect("shared mode emits a summary");
+        println!(
+            "  {:>15}: {:>8.1} jobs/s  (slowdown {:.3}x, contention {:.3}, \
+             denial {:>4.1}%, digest {:016x})",
+            policy.name(),
+            report.jobs_per_sec,
+            report.mean_slowdown,
+            c.mean_contention_scale,
+            100.0 * c.denial_rate(),
+            report.digest()
+        );
+        runs.push(Json::obj(vec![
+            ("jobs", Json::Num(128.0)),
+            ("iters", Json::Num(60.0)),
+            ("policy", Json::str(policy.name())),
+            ("jobs_per_sec", Json::Num(report.jobs_per_sec)),
+            ("mean_slowdown", Json::Num(report.mean_slowdown)),
+            ("contention_scale", Json::Num(c.mean_contention_scale)),
+            ("denial_rate", Json::Num(c.denial_rate())),
+            ("digest", Json::str(&format!("{:016x}", report.digest()))),
+        ]));
+    }
+
     section("determinism spot-check (same seed, different worker counts)");
-    let mk = |w: usize| {
+    let mk = |w: usize, policy: Option<Policy>| {
         run_fleet(&FleetConfig {
             jobs: 48,
             iters: 40,
@@ -52,21 +124,39 @@ fn main() {
             workers: w,
             failslow_boost: 8.0,
             compare: false,
+            policy,
+            ..FleetConfig::default()
         })
         .digest()
     };
-    let (a, b) = (mk(1), mk(workers.max(2)));
-    println!("  digest x1 worker {a:016x} vs x{} workers {b:016x}: {}", workers.max(2), if a == b { "MATCH" } else { "MISMATCH" });
-    assert_eq!(a, b, "fleet results depend on thread count");
+    for (label, policy) in [("private", None), ("shared", Some(Policy::Spread))] {
+        let (a, b) = (mk(1, policy), mk(workers.max(2), policy));
+        println!(
+            "  {label}: digest x1 worker {a:016x} vs x{} workers {b:016x}: {}",
+            workers.max(2),
+            if a == b { "MATCH" } else { "MISMATCH" }
+        );
+        assert_eq!(a, b, "{label} fleet results depend on thread count");
+    }
+
+    match previous {
+        Some((jobs, prev)) if prev > 0.0 => {
+            println!(
+                "\ndelta vs previous recorded run ({jobs:.0}-job config): \
+                 {prev:.1} -> {headline:.1} jobs/s ({:+.1}%)",
+                100.0 * (headline / prev - 1.0)
+            );
+        }
+        _ => println!("\nno previous BENCH_fleet.json — first recorded run"),
+    }
 
     let out = Json::obj(vec![
         ("bench", Json::str("fleet")),
         ("host_workers", Json::Num(workers as f64)),
         ("runs", Json::Arr(runs)),
     ]);
-    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_fleet.json");
-    match std::fs::write(path, out.to_string() + "\n") {
-        Ok(()) => println!("\nwrote {path}"),
-        Err(e) => eprintln!("\nfailed to write {path}: {e}"),
+    match std::fs::write(BENCH_PATH, out.to_string() + "\n") {
+        Ok(()) => println!("wrote {BENCH_PATH}"),
+        Err(e) => eprintln!("failed to write {BENCH_PATH}: {e}"),
     }
 }

@@ -36,7 +36,9 @@ impl MemoryStore {
         let src = self
             .slots
             .get(key)
-            .ok_or_else(|| Error::new(ErrorKind::NotFound, format!("missing checkpoint slot {key}")))?;
+            .ok_or_else(|| {
+                Error::new(ErrorKind::NotFound, format!("missing checkpoint slot {key}"))
+            })?;
         out.clear();
         out.extend_from_slice(src);
         Ok(t0.elapsed().as_secs_f64())

@@ -1,0 +1,624 @@
+//! Shared-cluster substrate: one node pool, contended uplinks, and an
+//! arbiter every mitigation action must go through.
+//!
+//! The paper's characterization (§3) is of a *shared* production cluster:
+//! fail-slows propagate because jobs compete for the same nodes and
+//! spine-leaf uplinks, and mitigation actions (node swaps, restarts) draw
+//! from one finite healthy-node pool. This module supplies the three pieces
+//! the fleet engine (see [`crate::fleet`]) composes into that setting:
+//!
+//! - [`ClusterState`] — the global node inventory. Every node has a
+//!   [`GpuClass`](crate::fabric::GpuClass), an owner (the fleet job it is
+//!   allocated to), a fail-slow flag synced from the owning job's injected
+//!   events, and a quarantine epoch (released degraded hardware is repaired
+//!   off-pool before it may be granted again). Nodes are grouped into
+//!   *leaves* of [`ClusterState::leaf_size`] nodes; each leaf shares one
+//!   spine uplink, and the effective per-job bandwidth on that uplink
+//!   degrades with the number of co-resident jobs
+//!   ([`ClusterState::contention_scale`]) — one job's traffic is another
+//!   job's congestion.
+//!
+//! - [`Policy`] — pluggable admission/placement policies (`first-fit`,
+//!   `packed`, `spread`, `straggler-aware`) deciding which leaves a job's
+//!   nodes land on and which spares a mitigation grant hands out.
+//!
+//! - [`Arbiter`] — the gate all S3/S4 mitigation requests pass through.
+//!   Requests compete for the same spare pool and can be **granted**,
+//!   **denied** (S3: the planner must escalate on accumulated impact
+//!   alone), **queued** (S4: retried every epoch, granted in place after
+//!   [`S4_MAX_WAIT_EPOCHS`]), or **preempted** by a higher-priority
+//!   request taking the last spares.
+//!
+//! Determinism contract: none of these types contain randomness or clocks.
+//! Arbitration outcomes depend only on the request set and the order the
+//! fleet driver files them in (job-id order at each epoch boundary), so a
+//! fixed fleet seed yields bit-identical outcomes across worker counts.
+
+use crate::fabric::GpuClass;
+use crate::mitigate::Strategy;
+
+/// Nodes per leaf switch (spine-leaf: one shared uplink per leaf).
+pub const DEFAULT_LEAF_SIZE: usize = 8;
+
+/// Epochs a released degraded node spends in repair before rejoining the
+/// healthy pool.
+pub const QUARANTINE_EPOCHS: usize = 4;
+
+/// Epochs an S4 (checkpoint-restart) request may queue before the arbiter
+/// grants it *in place* (restart onto the same nodes once their contending
+/// episodes clear) rather than starving the job forever.
+pub const S4_MAX_WAIT_EPOCHS: usize = 3;
+
+/// Bandwidth-sharing aggressiveness: with `k` co-resident jobs on a leaf
+/// uplink each job sees `1 / (1 + alpha * (k - 1))` of the bandwidth.
+pub const CONTENTION_ALPHA: f64 = 0.3;
+
+/// Admission/placement policy for the shared cluster.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Policy {
+    /// Lowest-index free nodes, ignoring leaf structure.
+    FirstFit,
+    /// Fill the fullest leaves first (locality, high co-residency).
+    Packed,
+    /// Fill the least-loaded leaves first (balance, low co-residency).
+    Spread,
+    /// Avoid leaves with degraded/quarantined hardware, then balance.
+    StragglerAware,
+}
+
+impl Policy {
+    pub const ALL: [Policy; 4] =
+        [Policy::FirstFit, Policy::Packed, Policy::Spread, Policy::StragglerAware];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Policy::FirstFit => "first-fit",
+            Policy::Packed => "packed",
+            Policy::Spread => "spread",
+            Policy::StragglerAware => "straggler-aware",
+        }
+    }
+
+    /// Parse a CLI spelling (`--policy first-fit`). `None` for unknown.
+    pub fn parse(s: &str) -> Option<Policy> {
+        match s {
+            "first-fit" | "firstfit" | "ff" => Some(Policy::FirstFit),
+            "packed" | "pack" => Some(Policy::Packed),
+            "spread" => Some(Policy::Spread),
+            "straggler-aware" | "straggler" | "sa" => Some(Policy::StragglerAware),
+            _ => None,
+        }
+    }
+}
+
+/// One node of the shared inventory.
+#[derive(Clone, Debug)]
+pub struct SharedNode {
+    pub gpu_class: GpuClass,
+    /// Fleet job currently occupying the node (`None` = free).
+    pub owner: Option<usize>,
+    /// An injected fail-slow episode is currently active on this node.
+    pub flagged: bool,
+    /// Node is in repair until this epoch (exclusive); 0 = healthy.
+    pub quarantined_until: usize,
+}
+
+impl SharedNode {
+    fn new(gpu_class: GpuClass) -> Self {
+        SharedNode { gpu_class, owner: None, flagged: false, quarantined_until: 0 }
+    }
+
+    /// Usable as a healthy spare at `epoch`?
+    pub fn spare_at(&self, epoch: usize) -> bool {
+        self.owner.is_none() && !self.flagged && epoch >= self.quarantined_until
+    }
+}
+
+/// The global node inventory plus the spine-leaf sharing model.
+#[derive(Clone, Debug)]
+pub struct ClusterState {
+    pub nodes: Vec<SharedNode>,
+    pub leaf_size: usize,
+    pub contention_alpha: f64,
+}
+
+impl ClusterState {
+    pub fn new(n_nodes: usize) -> Self {
+        Self::with_leaf_size(n_nodes, DEFAULT_LEAF_SIZE)
+    }
+
+    pub fn with_leaf_size(n_nodes: usize, leaf_size: usize) -> Self {
+        ClusterState {
+            nodes: (0..n_nodes).map(|_| SharedNode::new(GpuClass::H800)).collect(),
+            leaf_size: leaf_size.max(1),
+            contention_alpha: CONTENTION_ALPHA,
+        }
+    }
+
+    pub fn n_leaves(&self) -> usize {
+        self.nodes.len().div_ceil(self.leaf_size)
+    }
+
+    pub fn leaf_of(&self, node: usize) -> usize {
+        node / self.leaf_size
+    }
+
+    /// Node indices of one leaf.
+    pub fn leaf_nodes(&self, leaf: usize) -> std::ops::Range<usize> {
+        let lo = leaf * self.leaf_size;
+        lo..((leaf + 1) * self.leaf_size).min(self.nodes.len())
+    }
+
+    /// Distinct jobs with at least one node in the leaf.
+    pub fn co_resident_jobs(&self, leaf: usize) -> usize {
+        let mut owners: Vec<usize> =
+            self.leaf_nodes(leaf).filter_map(|n| self.nodes[n].owner).collect();
+        owners.sort_unstable();
+        owners.dedup();
+        owners.len()
+    }
+
+    /// Degraded or in-repair nodes in the leaf (straggler-aware avoids
+    /// these leaves; `epoch` resolves quarantine expiry).
+    pub fn degraded_in_leaf(&self, leaf: usize, epoch: usize) -> usize {
+        self.leaf_nodes(leaf)
+            .filter(|&n| self.nodes[n].flagged || epoch < self.nodes[n].quarantined_until)
+            .count()
+    }
+
+    /// Per-job effective bandwidth share on the leaf's uplink: `k`
+    /// co-resident jobs each see `1 / (1 + alpha * (k - 1))`.
+    pub fn contention_scale(&self, leaf: usize) -> f64 {
+        let k = self.co_resident_jobs(leaf);
+        if k <= 1 {
+            1.0
+        } else {
+            1.0 / (1.0 + self.contention_alpha * (k - 1) as f64)
+        }
+    }
+
+    /// Healthy free nodes at `epoch`, in index order.
+    pub fn spares(&self, epoch: usize) -> Vec<usize> {
+        (0..self.nodes.len()).filter(|&n| self.nodes[n].spare_at(epoch)).collect()
+    }
+
+    /// Allocate specific nodes to a job (panics if any is taken).
+    pub fn claim(&mut self, job: usize, nodes: &[usize]) {
+        for &n in nodes {
+            assert!(self.nodes[n].owner.is_none(), "node {n} already owned");
+            self.nodes[n].owner = Some(job);
+        }
+    }
+
+    /// Release a node; degraded hardware goes to repair until
+    /// `epoch + QUARANTINE_EPOCHS`.
+    pub fn release(&mut self, node: usize, epoch: usize) {
+        let n = &mut self.nodes[node];
+        n.owner = None;
+        if n.flagged {
+            n.flagged = false;
+            n.quarantined_until = epoch + QUARANTINE_EPOCHS;
+        }
+    }
+
+    /// Leaves ordered by the policy's placement preference for `job`
+    /// (deterministic: ties break by leaf index).
+    fn leaf_order(&self, policy: Policy, job: usize, epoch: usize) -> Vec<usize> {
+        let mut leaves: Vec<usize> = (0..self.n_leaves()).collect();
+        let allocated =
+            |l: usize| self.leaf_nodes(l).filter(|&n| self.nodes[n].owner.is_some()).count();
+        let mine = |l: usize| {
+            self.leaf_nodes(l).filter(|&n| self.nodes[n].owner == Some(job)).count()
+        };
+        match policy {
+            Policy::FirstFit => {}
+            Policy::Packed => {
+                // Fullest first; leaves the job already occupies win ties.
+                leaves.sort_by_key(|&l| {
+                    (std::cmp::Reverse(mine(l)), std::cmp::Reverse(allocated(l)), l)
+                });
+            }
+            Policy::Spread => {
+                leaves.sort_by_key(|&l| (self.co_resident_jobs(l), allocated(l), l));
+            }
+            Policy::StragglerAware => {
+                leaves.sort_by_key(|&l| {
+                    (self.degraded_in_leaf(l, epoch), self.co_resident_jobs(l), allocated(l), l)
+                });
+            }
+        }
+        leaves
+    }
+
+    /// Pick `n` healthy spare nodes for `job` per the policy; `None` when
+    /// the pool cannot supply them.
+    pub fn pick_spares(
+        &self,
+        policy: Policy,
+        job: usize,
+        n: usize,
+        epoch: usize,
+    ) -> Option<Vec<usize>> {
+        let mut picked = Vec::with_capacity(n);
+        for leaf in self.leaf_order(policy, job, epoch) {
+            for node in self.leaf_nodes(leaf) {
+                if picked.len() == n {
+                    break;
+                }
+                if self.nodes[node].spare_at(epoch) {
+                    picked.push(node);
+                }
+            }
+            if picked.len() == n {
+                break;
+            }
+        }
+        (picked.len() == n).then_some(picked)
+    }
+}
+
+/// Why a request could not be granted this epoch.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Decision {
+    /// Fresh healthy nodes were allocated.
+    Granted,
+    /// Pool exhausted; the requester must escalate without this strategy.
+    Denied,
+    /// Pool exhausted but the request stays queued for a later epoch.
+    Queued,
+    /// Queued past [`S4_MAX_WAIT_EPOCHS`]: restart granted onto the same
+    /// nodes (no fresh hardware — the pool never freed up).
+    GrantedInPlace,
+}
+
+/// A pending S3/S4 resource request.
+#[derive(Clone, Debug)]
+pub struct GrantRequest {
+    pub job: usize,
+    pub strategy: Strategy,
+    pub nodes_wanted: usize,
+    pub filed_epoch: usize,
+}
+
+impl GrantRequest {
+    /// Arbitration priority: restarts outrank swaps (the job asking for S4
+    /// has accumulated strictly more impact under the ski-rental planner).
+    fn priority(&self) -> u32 {
+        match self.strategy {
+            Strategy::CkptRestart => 2,
+            _ => 1,
+        }
+    }
+}
+
+/// One arbitration outcome, for the fleet log and report.
+#[derive(Clone, Debug)]
+pub struct ArbOutcome {
+    pub epoch: usize,
+    pub job: usize,
+    pub strategy: Strategy,
+    pub decision: Decision,
+    /// Epochs between filing and this decision.
+    pub waited_epochs: usize,
+    /// Fresh nodes handed out (empty for deny/queue/in-place).
+    pub granted_nodes: Vec<usize>,
+}
+
+/// Cluster-wide mitigation arbitration: one queue, one spare pool, one
+/// policy. All S3/S4 requests pass through [`Arbiter::arbitrate`], which
+/// the fleet driver calls once per epoch with the requests filed in job-id
+/// order — the determinism hinge.
+#[derive(Clone, Debug)]
+pub struct Arbiter {
+    pub policy: Policy,
+    queue: Vec<GrantRequest>,
+    /// Arbitration rounds in which at least one request went unserved
+    /// after a higher-priority grant had consumed spares (priority-induced
+    /// starvation; counted per round so a queue of losers is not
+    /// multi-counted).
+    pub preempted: usize,
+}
+
+impl Arbiter {
+    pub fn new(policy: Policy) -> Self {
+        Arbiter { policy, queue: Vec::new(), preempted: 0 }
+    }
+
+    /// Admit a new job: allocate `n` nodes per the policy (for
+    /// [`Policy::FirstFit`] the unsorted leaf order makes this the lowest
+    /// free indices). `None` when the cluster cannot host the job.
+    pub fn admit(
+        &mut self,
+        cluster: &mut ClusterState,
+        job: usize,
+        n: usize,
+    ) -> Option<Vec<usize>> {
+        let picked = cluster.pick_spares(self.policy, job, n, 0)?;
+        cluster.claim(job, &picked);
+        Some(picked)
+    }
+
+    /// File a mitigation request. One outstanding request per job: a
+    /// higher-strategy request replaces a queued lower one (S4 supersedes a
+    /// starving S3), anything else is dropped.
+    pub fn file(&mut self, req: GrantRequest) {
+        if let Some(existing) = self.queue.iter_mut().find(|r| r.job == req.job) {
+            if req.strategy > existing.strategy {
+                *existing = req;
+            }
+            return;
+        }
+        self.queue.push(req);
+    }
+
+    /// Drop a job's queued request (episode healed before a grant arrived).
+    /// Returns whether anything was queued.
+    pub fn cancel(&mut self, job: usize) -> bool {
+        let before = self.queue.len();
+        self.queue.retain(|r| r.job != job);
+        before != self.queue.len()
+    }
+
+    pub fn has_queued(&self, job: usize) -> bool {
+        self.queue.iter().any(|r| r.job == job)
+    }
+
+    /// Decide every pending request against the current spare pool.
+    ///
+    /// Requests are served in (priority desc, filed epoch asc, job asc)
+    /// order. Granted nodes are claimed immediately, so a high-priority
+    /// request can take the spares a lower-priority one was waiting for —
+    /// that starvation is counted as a preemption. S3 requests that find
+    /// the pool empty are **denied** (cheap strategy, the planner escalates
+    /// on impact); S4 requests **queue** and are granted in place after
+    /// [`S4_MAX_WAIT_EPOCHS`].
+    pub fn arbitrate(&mut self, cluster: &mut ClusterState, epoch: usize) -> Vec<ArbOutcome> {
+        let mut pending = std::mem::take(&mut self.queue);
+        pending.sort_by_key(|r| (std::cmp::Reverse(r.priority()), r.filed_epoch, r.job));
+
+        let mut out = Vec::with_capacity(pending.len());
+        let mut pool_exhausted_by_higher = false;
+        let mut round_preempted = false;
+        for req in pending {
+            let waited = epoch.saturating_sub(req.filed_epoch);
+            let grant = cluster.pick_spares(self.policy, req.job, req.nodes_wanted, epoch);
+            match grant {
+                Some(nodes) => {
+                    cluster.claim(req.job, &nodes);
+                    out.push(ArbOutcome {
+                        epoch,
+                        job: req.job,
+                        strategy: req.strategy,
+                        decision: Decision::Granted,
+                        waited_epochs: waited,
+                        granted_nodes: nodes,
+                    });
+                }
+                None => {
+                    if pool_exhausted_by_higher {
+                        round_preempted = true;
+                    }
+                    let decision = match req.strategy {
+                        Strategy::CkptRestart if waited < S4_MAX_WAIT_EPOCHS => {
+                            self.queue.push(req.clone());
+                            Decision::Queued
+                        }
+                        Strategy::CkptRestart => Decision::GrantedInPlace,
+                        _ => Decision::Denied,
+                    };
+                    out.push(ArbOutcome {
+                        epoch,
+                        job: req.job,
+                        strategy: req.strategy,
+                        decision,
+                        waited_epochs: waited,
+                        granted_nodes: Vec::new(),
+                    });
+                }
+            }
+            // Once anything was granted this epoch, later shortfalls may be
+            // due to that grab rather than a genuinely empty pool.
+            if out.last().map(|o| o.decision == Decision::Granted).unwrap_or(false) {
+                pool_exhausted_by_higher = true;
+            }
+        }
+        if round_preempted {
+            self.preempted += 1;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn two_leaf_cluster() -> ClusterState {
+        ClusterState::with_leaf_size(8, 4)
+    }
+
+    #[test]
+    fn leaf_math() {
+        let c = two_leaf_cluster();
+        assert_eq!(c.n_leaves(), 2);
+        assert_eq!(c.leaf_of(3), 0);
+        assert_eq!(c.leaf_of(4), 1);
+        assert_eq!(c.leaf_nodes(1), 4..8);
+    }
+
+    #[test]
+    fn contention_scale_degrades_with_co_residency() {
+        let mut c = two_leaf_cluster();
+        assert_eq!(c.contention_scale(0), 1.0);
+        c.nodes[0].owner = Some(0);
+        assert_eq!(c.contention_scale(0), 1.0, "a lone job sees full bandwidth");
+        c.nodes[1].owner = Some(1);
+        let two = c.contention_scale(0);
+        c.nodes[2].owner = Some(2);
+        let three = c.contention_scale(0);
+        assert!(two < 1.0 && three < two, "{two} then {three}");
+        assert_eq!(c.contention_scale(1), 1.0, "other leaf unaffected");
+    }
+
+    #[test]
+    fn packed_fills_one_leaf_spread_fans_out() {
+        let mut c = two_leaf_cluster();
+        let mut packed = Arbiter::new(Policy::Packed);
+        let a = packed.admit(&mut c, 0, 2).unwrap();
+        let b = packed.admit(&mut c, 1, 2).unwrap();
+        let leaves: Vec<usize> =
+            a.iter().chain(&b).map(|&n| c.leaf_of(n)).collect();
+        assert!(leaves.iter().all(|&l| l == leaves[0]), "packed spans leaves: {leaves:?}");
+
+        let mut c = two_leaf_cluster();
+        let mut spread = Arbiter::new(Policy::Spread);
+        let a = spread.admit(&mut c, 0, 2).unwrap();
+        let b = spread.admit(&mut c, 1, 2).unwrap();
+        assert_ne!(
+            c.leaf_of(a[0]),
+            c.leaf_of(b[0]),
+            "spread must use both leaves: {a:?} {b:?}"
+        );
+    }
+
+    #[test]
+    fn straggler_aware_avoids_degraded_leaves() {
+        let mut c = two_leaf_cluster();
+        c.nodes[1].flagged = true;
+        let mut arb = Arbiter::new(Policy::StragglerAware);
+        let placement = arb.admit(&mut c, 0, 2).unwrap();
+        for &n in &placement {
+            assert_eq!(c.leaf_of(n), 1, "placed next to a straggler: {placement:?}");
+        }
+    }
+
+    #[test]
+    fn first_fit_takes_lowest_indices() {
+        let mut c = two_leaf_cluster();
+        c.nodes[0].owner = Some(9);
+        let mut arb = Arbiter::new(Policy::FirstFit);
+        assert_eq!(arb.admit(&mut c, 0, 2).unwrap(), vec![1, 2]);
+    }
+
+    #[test]
+    fn admit_fails_when_pool_too_small() {
+        let mut c = ClusterState::with_leaf_size(2, 4);
+        let mut arb = Arbiter::new(Policy::FirstFit);
+        assert!(arb.admit(&mut c, 0, 3).is_none());
+        assert!(c.nodes.iter().all(|n| n.owner.is_none()), "failed admit must not leak");
+    }
+
+    #[test]
+    fn s3_denied_on_empty_pool_s4_queues_then_in_place() {
+        let mut c = ClusterState::with_leaf_size(2, 4);
+        let mut arb = Arbiter::new(Policy::FirstFit);
+        arb.admit(&mut c, 0, 1).unwrap();
+        arb.admit(&mut c, 1, 1).unwrap(); // pool now empty
+
+        arb.file(GrantRequest {
+            job: 0,
+            strategy: Strategy::AdjustTopology,
+            nodes_wanted: 1,
+            filed_epoch: 0,
+        });
+        arb.file(GrantRequest {
+            job: 1,
+            strategy: Strategy::CkptRestart,
+            nodes_wanted: 1,
+            filed_epoch: 0,
+        });
+        let out = arb.arbitrate(&mut c, 0);
+        let d0 = out.iter().find(|o| o.job == 0).unwrap();
+        let d1 = out.iter().find(|o| o.job == 1).unwrap();
+        assert_eq!(d0.decision, Decision::Denied);
+        assert_eq!(d1.decision, Decision::Queued);
+        assert!(arb.has_queued(1) && !arb.has_queued(0));
+
+        // Still starved S4_MAX_WAIT_EPOCHS later: granted in place.
+        let mut last = Vec::new();
+        for e in 1..=S4_MAX_WAIT_EPOCHS {
+            last = arb.arbitrate(&mut c, e);
+        }
+        assert_eq!(last.len(), 1);
+        assert_eq!(last[0].decision, Decision::GrantedInPlace);
+        assert!(last[0].granted_nodes.is_empty());
+        assert!(!arb.has_queued(1));
+    }
+
+    #[test]
+    fn s4_outranks_earlier_s3_and_counts_preemption() {
+        let mut c = ClusterState::with_leaf_size(4, 4);
+        let mut arb = Arbiter::new(Policy::FirstFit);
+        arb.admit(&mut c, 0, 1).unwrap();
+        arb.admit(&mut c, 1, 2).unwrap(); // one spare left
+
+        arb.file(GrantRequest {
+            job: 0,
+            strategy: Strategy::AdjustTopology,
+            nodes_wanted: 1,
+            filed_epoch: 0,
+        });
+        arb.file(GrantRequest {
+            job: 1,
+            strategy: Strategy::CkptRestart,
+            nodes_wanted: 1,
+            filed_epoch: 1,
+        });
+        let out = arb.arbitrate(&mut c, 1);
+        let s4 = out.iter().find(|o| o.strategy == Strategy::CkptRestart).unwrap();
+        let s3 = out.iter().find(|o| o.strategy == Strategy::AdjustTopology).unwrap();
+        assert_eq!(s4.decision, Decision::Granted, "restart outranks the older swap");
+        assert_eq!(s3.decision, Decision::Denied);
+        assert_eq!(arb.preempted, 1);
+    }
+
+    #[test]
+    fn release_quarantines_degraded_hardware() {
+        let mut c = two_leaf_cluster();
+        c.nodes[3].owner = Some(0);
+        c.nodes[3].flagged = true;
+        c.release(3, 5);
+        assert!(!c.nodes[3].spare_at(5));
+        assert!(!c.nodes[3].spare_at(5 + QUARANTINE_EPOCHS - 1));
+        assert!(c.nodes[3].spare_at(5 + QUARANTINE_EPOCHS));
+        // Healthy release returns straight to the pool.
+        c.nodes[2].owner = Some(0);
+        c.release(2, 5);
+        assert!(c.nodes[2].spare_at(5));
+    }
+
+    #[test]
+    fn file_dedupes_per_job_keeping_higher_strategy() {
+        let mut arb = Arbiter::new(Policy::FirstFit);
+        arb.file(GrantRequest {
+            job: 0,
+            strategy: Strategy::AdjustTopology,
+            nodes_wanted: 1,
+            filed_epoch: 0,
+        });
+        arb.file(GrantRequest {
+            job: 0,
+            strategy: Strategy::CkptRestart,
+            nodes_wanted: 2,
+            filed_epoch: 1,
+        });
+        arb.file(GrantRequest {
+            job: 0,
+            strategy: Strategy::AdjustTopology,
+            nodes_wanted: 1,
+            filed_epoch: 2,
+        });
+        assert_eq!(arb.queue.len(), 1);
+        assert_eq!(arb.queue[0].strategy, Strategy::CkptRestart);
+        assert!(arb.cancel(0));
+        assert!(!arb.cancel(0));
+    }
+
+    #[test]
+    fn policy_names_round_trip() {
+        for p in Policy::ALL {
+            assert_eq!(Policy::parse(p.name()), Some(p));
+        }
+        assert_eq!(Policy::parse("nonsense"), None);
+    }
+}

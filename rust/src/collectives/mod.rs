@@ -104,7 +104,8 @@ impl CommGroup {
                 // slowest edge paces every step.
                 for (a, b) in self.edges() {
                     let t = cluster.transfer_time_nominal_s(self.gpus[a], self.gpus[b], chunk);
-                    let t = t * (1.0 + cluster.link_class(self.gpus[a], self.gpus[b]).base_cov() * rng.normal()).max(0.05);
+                    let cov = cluster.link_class(self.gpus[a], self.gpus[b]).base_cov();
+                    let t = t * (1.0 + cov * rng.normal()).max(0.05);
                     worst_edge = worst_edge.max(t);
                 }
                 2.0 * (n - 1) as f64 * worst_edge
@@ -115,7 +116,8 @@ impl CommGroup {
                 let mut worst = 0.0f64;
                 for (a, b) in self.edges() {
                     let t = cluster.transfer_time_nominal_s(self.gpus[a], self.gpus[b], bytes);
-                    let t = t * (1.0 + cluster.link_class(self.gpus[a], self.gpus[b]).base_cov() * rng.normal()).max(0.05);
+                    let cov = cluster.link_class(self.gpus[a], self.gpus[b]).base_cov();
+                    let t = t * (1.0 + cov * rng.normal()).max(0.05);
                     worst = worst.max(t);
                 }
                 2.0 * depth * worst
@@ -124,7 +126,14 @@ impl CommGroup {
     }
 
     /// Point-to-point transfer time between two member indices.
-    pub fn p2p_time_s(&self, cluster: &mut Cluster, from: usize, to: usize, bytes: f64, rng: &mut Rng) -> f64 {
+    pub fn p2p_time_s(
+        &self,
+        cluster: &mut Cluster,
+        from: usize,
+        to: usize,
+        bytes: f64,
+        rng: &mut Rng,
+    ) -> f64 {
         cluster.transfer_time_s(self.gpus[from], self.gpus[to], bytes, rng)
     }
 }
@@ -207,6 +216,22 @@ mod tests {
         c.uplinks[2].bandwidth_scale = 0.2;
         let congested = g.allreduce_time_s(&c, 1e9, &mut rng);
         assert!(congested > 3.0 * healthy, "{congested} vs {healthy}");
+    }
+
+    #[test]
+    fn cross_job_contention_slows_inter_node_allreduce() {
+        // A co-resident job's contention share (LinkState::external_scale,
+        // set by the shared-cluster fleet driver) slows exactly the
+        // collectives whose rings cross the contended uplink.
+        let mut c = Cluster::new(ClusterSpec::new(4, 2, GpuClass::H800));
+        let mut rng = Rng::new(11);
+        let g = group(&c, &[0, 2, 4, 6], Topology::Ring);
+        let alone = g.allreduce_time_s(&c, 1e9, &mut rng);
+        for n in 0..4 {
+            c.set_external_scale(n, 0.5);
+        }
+        let contended = g.allreduce_time_s(&c, 1e9, &mut rng);
+        assert!(contended > 1.6 * alone, "{contended} vs {alone}");
     }
 
     #[test]

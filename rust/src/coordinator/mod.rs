@@ -33,6 +33,12 @@ pub struct FalconConfig {
     pub overheads: Overheads,
     /// Run FALCON-MITIGATE (off = detection-only, the §3 probe mode).
     pub mitigate: bool,
+    /// Shared-cluster mode: S3/S4 need hardware from a finite healthy-node
+    /// pool, so instead of executing immediately they file a request (see
+    /// [`Falcon::take_request`]) that the fleet's `cluster::Arbiter` may
+    /// grant, queue, or deny. Off (the default) = the job owns its cluster
+    /// and every escalation executes immediately.
+    pub defer_heavy: bool,
     /// Cost of the brief validation suspension (trap NCCL calls, run
     /// benches, §4.3's "lightweight training suspension").
     pub validation_pause: Time,
@@ -48,6 +54,7 @@ impl Default for FalconConfig {
             bocd: BocdConfig::default(),
             overheads: Overheads::default(),
             mitigate: true,
+            defer_heavy: false,
             validation_pause: from_secs(5.0),
             topology_pause: from_secs(45.0),
             restart_cost: from_secs(20.0 * 60.0),
@@ -77,6 +84,14 @@ pub enum ActionKind {
     EpisodeOpened,
     Diagnosed(Diagnosis),
     Applied(Strategy),
+    /// Shared-cluster mode: the strategy escalated but needs a resource
+    /// grant from the cluster arbiter before it can execute.
+    Requested(Strategy),
+    /// The arbiter granted the request (fresh nodes or in-place).
+    Granted(Strategy),
+    /// The arbiter denied the request — the healthy-node pool was
+    /// exhausted; escalation continues on accumulated impact.
+    Denied(Strategy),
     EpisodeClosed,
 }
 
@@ -88,6 +103,8 @@ pub struct Falcon {
     pub diagnosis: Option<Diagnosis>,
     pub actions: Vec<Action>,
     restarts: usize,
+    /// Strategy awaiting a cluster grant (shared-cluster mode only).
+    pending_grant: Option<Strategy>,
 }
 
 impl Falcon {
@@ -99,6 +116,7 @@ impl Falcon {
             diagnosis: None,
             actions: Vec::new(),
             restarts: 0,
+            pending_grant: None,
         }
     }
 
@@ -258,8 +276,68 @@ impl Falcon {
         Diagnosis { kind, slow_gpus, slow_edges, suspicious_groups: n_suspicious }
     }
 
-    /// Execute an escalated strategy on the job.
+    /// Route an escalated strategy: execute directly, or (shared-cluster
+    /// mode) file a resource request for S3/S4 and wait for the arbiter.
     fn apply(&mut self, sim: &mut TrainingSim, iter: usize, strategy: Strategy) {
+        if self.cfg.defer_heavy
+            && matches!(strategy, Strategy::AdjustTopology | Strategy::CkptRestart)
+        {
+            self.pending_grant = Some(strategy);
+            self.actions.push(Action { at: sim.now, iter, what: ActionKind::Requested(strategy) });
+            return;
+        }
+        self.execute(sim, iter, strategy);
+    }
+
+    /// Take the strategy waiting on a cluster grant, if any (the fleet
+    /// driver files it with the arbiter at the next epoch boundary).
+    pub fn take_request(&mut self) -> Option<Strategy> {
+        self.pending_grant.take()
+    }
+
+    /// The arbiter granted fresh hardware: execute the strategy now.
+    pub fn execute_granted(&mut self, sim: &mut TrainingSim, strategy: Strategy) {
+        let iter = sim.iter;
+        self.actions.push(Action { at: sim.now, iter, what: ActionKind::Granted(strategy) });
+        self.execute(sim, iter, strategy);
+    }
+
+    /// S4 granted *in place* after queue starvation: the pool never freed
+    /// up, so the restart reschedules onto the SAME nodes. The pause is
+    /// paid and transient episodes may lapse during it, but persistent
+    /// degradation on this hardware survives — the honest cost of a
+    /// saturated healthy-node pool.
+    pub fn execute_granted_in_place(&mut self, sim: &mut TrainingSim) {
+        let (iter, s) = (sim.iter, Strategy::CkptRestart);
+        self.actions.push(Action { at: sim.now, iter, what: ActionKind::Granted(s) });
+        sim.restart_in_place(self.cfg.restart_cost);
+        self.restarts += 1;
+        self.planner = None;
+        self.diagnosis = None;
+        self.actions.push(Action { at: sim.now, iter, what: ActionKind::Applied(s) });
+    }
+
+    /// Record a grant outcome the fleet driver executed (or refused)
+    /// itself: `granted = true` logs grant + application (the driver
+    /// already mutated the sim, e.g. swapped the degraded node's hardware
+    /// for a spare); `false` logs a denial and tells the planner so
+    /// escalation proceeds on accumulated impact without assuming S3 ever
+    /// succeeds.
+    pub fn note_grant(&mut self, sim: &TrainingSim, strategy: Strategy, granted: bool) {
+        let (at, iter) = (sim.now, sim.iter);
+        if granted {
+            self.actions.push(Action { at, iter, what: ActionKind::Granted(strategy) });
+            self.actions.push(Action { at, iter, what: ActionKind::Applied(strategy) });
+        } else {
+            self.actions.push(Action { at, iter, what: ActionKind::Denied(strategy) });
+            if let Some(p) = self.planner.as_mut() {
+                p.on_denied(strategy);
+            }
+        }
+    }
+
+    /// Execute a strategy on the job.
+    fn execute(&mut self, sim: &mut TrainingSim, iter: usize, strategy: Strategy) {
         match strategy {
             Strategy::Ignore => {}
             Strategy::AdjustMicrobatch => {
@@ -427,6 +505,36 @@ mod tests {
         let mut sim = TrainingSim::new(demo_spec(ParallelConfig::new(2, 4, 1), 39));
         let falcon = run_with_falcon(&mut sim, FalconConfig::default(), 150);
         assert!(falcon.actions.is_empty(), "{:?}", falcon.actions);
+    }
+
+    #[test]
+    fn defer_heavy_waits_for_grant_then_executes() {
+        // Shared-cluster mode: a brutal fleet-wide slowdown escalates to
+        // S4, but the restart must wait for the arbiter's grant.
+        let mut sim = TrainingSim::new(demo_spec(ParallelConfig::new(1, 4, 1), 43));
+        let onset = sim.ideal_iter_s * 20.0;
+        sim.inject((0..4).map(|g| gpu_event(onset, 100_000, 0.2, g)).collect());
+        let mut cfg = FalconConfig::default();
+        cfg.defer_heavy = true;
+        cfg.overheads.ckpt_restart_s = 120.0;
+        cfg.restart_cost = from_secs(120.0);
+        let mut falcon = Falcon::new(cfg);
+        for _ in 0..400 {
+            let obs = sim.step();
+            falcon.on_iteration(&mut sim, obs.iter, obs.duration_s());
+        }
+        assert_eq!(falcon.restarts(), 0, "S4 must wait for a grant");
+        let kinds = falcon.applied_strategies();
+        assert!(
+            !kinds.contains(&Strategy::AdjustTopology) && !kinds.contains(&Strategy::CkptRestart),
+            "heavy strategies executed without a grant: {kinds:?}"
+        );
+        let req = falcon.take_request().expect("an S3/S4 request must be pending");
+        assert_eq!(req, Strategy::CkptRestart, "escalation reached S4");
+        assert!(falcon.take_request().is_none(), "requests are taken once");
+        falcon.execute_granted(&mut sim, req);
+        assert_eq!(falcon.restarts(), 1);
+        assert!(falcon.applied_strategies().contains(&Strategy::CkptRestart));
     }
 
     #[test]

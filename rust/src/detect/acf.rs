@@ -110,7 +110,8 @@ mod tests {
             let base = (it as f64 * iter_time * SEC as f64) as Time;
             for op in 0..ops_per_iter {
                 kinds.push((op % 5 + 1) as f64);
-                ts.push(base + (op as f64 / ops_per_iter as f64 * 0.8 * iter_time * SEC as f64) as Time);
+                let frac = op as f64 / ops_per_iter as f64;
+                ts.push(base + (frac * 0.8 * iter_time * SEC as f64) as Time);
             }
         }
         (kinds, ts)

@@ -148,7 +148,8 @@ impl Bocd {
         if !self.initialized {
             let mu0 = if self.cfg.prior_mu != 0.0 { self.cfg.prior_mu } else { x };
             let beta0 = (self.cfg.prior_beta * mu0 * mu0).max(1e-12);
-            self.models = vec![NormalGamma::prior(mu0, self.cfg.prior_kappa, self.cfg.prior_alpha, beta0)];
+            self.models =
+                vec![NormalGamma::prior(mu0, self.cfg.prior_kappa, self.cfg.prior_alpha, beta0)];
             self.initialized = true;
         }
 
@@ -230,8 +231,9 @@ impl Bocd {
         // to ~0 after a long run) — the latter catches changes whose reset
         // mass is spread over r in {0, 1, 2}.
         let map_rl = self.map_run_length();
-        let collapsed =
-            self.prev_map_rl >= 8 && map_rl + 4 < self.prev_map_rl && map_rl <= self.cfg.reset_width + 2;
+        let collapsed = self.prev_map_rl >= 8
+            && map_rl + 4 < self.prev_map_rl
+            && map_rl <= self.cfg.reset_width + 2;
         self.prev_map_rl = map_rl;
         if self.t > 2 && (p_reset > self.cfg.threshold || collapsed) {
             Some(p_reset.max(self.cfg.threshold))

@@ -189,8 +189,9 @@ impl Detector {
             // *partial* relief (e.g. S3 fixed the congestion but a slow GPU
             // remains — Fig 17's compound case): the episode stays open so
             // the planner keeps escalating.
-            let near_baseline =
-                (after - self.baseline.mean()).abs() / self.baseline.mean().max(1e-12) < VERIFY_DELTA;
+            let near_baseline = (after - self.baseline.mean()).abs()
+                / self.baseline.mean().max(1e-12)
+                < VERIFY_DELTA;
             if delta < -VERIFY_DELTA || near_baseline {
                 if let Some(ep) = self.episodes.last_mut() {
                     ep.end_iter = Some(cp);

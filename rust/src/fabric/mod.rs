@@ -135,13 +135,28 @@ impl Default for NodeState {
 pub struct LinkState {
     /// Effective bandwidth multiplier; congestion drives this below 1.0.
     pub bandwidth_scale: f64,
+    /// Cross-job contention multiplier imposed from *outside* the job: in a
+    /// shared cluster (see `crate::cluster`) co-resident jobs on the same
+    /// spine-leaf uplink each get a fraction of its bandwidth. Unlike
+    /// `bandwidth_scale`, this is not health the job can mitigate away —
+    /// restarts and swaps do not clear it, the fleet driver re-derives it
+    /// from leaf co-residency each epoch.
+    pub external_scale: f64,
     /// Congestion notification packets (CNP) counter — Fig 4's signal.
     pub cnp_count: u64,
 }
 
+impl LinkState {
+    /// Combined multiplier: injected congestion and cross-job contention
+    /// compound (both throttle the same physical port).
+    pub fn effective_scale(&self) -> f64 {
+        self.bandwidth_scale * self.external_scale
+    }
+}
+
 impl Default for LinkState {
     fn default() -> Self {
-        LinkState { bandwidth_scale: 1.0, cnp_count: 0 }
+        LinkState { bandwidth_scale: 1.0, external_scale: 1.0, cnp_count: 0 }
     }
 }
 
@@ -231,8 +246,8 @@ impl Cluster {
                 .copied()
                 .unwrap_or(1.0);
             self.uplinks[a.node]
-                .bandwidth_scale
-                .min(self.uplinks[b.node].bandwidth_scale)
+                .effective_scale()
+                .min(self.uplinks[b.node].effective_scale())
                 .min(pair)
         }
     }
@@ -263,7 +278,10 @@ impl Cluster {
     }
 
     /// Reset all health to nominal (what a checkpoint-restart onto healthy
-    /// nodes achieves, modulo the restart cost).
+    /// nodes achieves, modulo the restart cost). Cross-job contention
+    /// (`LinkState::external_scale`) survives: it is imposed by co-resident
+    /// jobs, not by this job's degraded hardware, so moving to healthy
+    /// nodes does not shake it off until the fleet re-derives placement.
     pub fn heal_all(&mut self) {
         for g in &mut self.gpus {
             *g = GpuState::default();
@@ -272,9 +290,17 @@ impl Cluster {
             *n = NodeState::default();
         }
         for l in &mut self.uplinks {
+            let external = l.external_scale;
             *l = LinkState::default();
+            l.external_scale = external;
         }
         self.pair_scale.clear();
+    }
+
+    /// Set the cross-job contention multiplier on one uplink (fleet epoch
+    /// sync; see `crate::cluster::ClusterState::contention_scale`).
+    pub fn set_external_scale(&mut self, node: usize, scale: f64) {
+        self.uplinks[node].external_scale = scale;
     }
 }
 
@@ -363,6 +389,25 @@ mod tests {
         let xs: Vec<f64> = (0..4000).map(|_| c.transfer_time_s(a, b, 1e8, &mut rng)).collect();
         let cov = crate::util::stats::cov(&xs);
         assert!((cov - LinkClass::Rdma.base_cov()).abs() < 0.02, "cov {cov}");
+    }
+
+    #[test]
+    fn external_contention_compounds_and_survives_heal() {
+        let mut c = cluster();
+        let a = GpuId { node: 0, index: 0 };
+        let b = GpuId { node: 1, index: 0 };
+        c.set_external_scale(1, 0.5);
+        assert!((c.path_bandwidth_scale(a, b) - 0.5).abs() < 1e-12);
+        // Injected congestion on the same port compounds multiplicatively.
+        c.uplinks[1].bandwidth_scale = 0.5;
+        assert!((c.path_bandwidth_scale(a, b) - 0.25).abs() < 1e-12);
+        // Intra-node paths never see uplink contention.
+        let intra = GpuId { node: 0, index: 1 };
+        assert!((c.path_bandwidth_scale(a, intra) - 1.0).abs() < 1e-12);
+        // A restart heals the injected congestion but not the neighbors.
+        c.heal_all();
+        assert_eq!(c.uplinks[1].bandwidth_scale, 1.0);
+        assert!((c.path_bandwidth_scale(a, b) - 0.5).abs() < 1e-12);
     }
 
     #[test]

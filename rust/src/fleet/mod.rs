@@ -1,5 +1,5 @@
 //! Fleet engine: thousands of concurrent FALCON-supervised jobs, sharded
-//! across worker threads.
+//! across worker threads — on private clusters or one *shared* cluster.
 //!
 //! The paper frames fail-slow handling as a *fleet* problem — hundreds of
 //! concurrent jobs on a shared 10,000+-GPU cluster, each continuously
@@ -13,18 +13,33 @@
 //!   sampled from the §3-calibrated [`InjectionModel`].
 //!
 //! - **Sharding model.** A fixed pool of `std::thread` workers pulls job
-//!   ids from a shared atomic counter (work-stealing by index, no
-//!   per-worker queues, no load-balancing heuristics — jobs are coarse
-//!   enough that the counter is never contended). Results land in a
+//!   ids from a shared atomic counter (work-stealing by index — jobs are
+//!   coarse enough that the counter is never contended). Results land in a
 //!   slot-per-job vector, so aggregation order is by job id regardless of
-//!   which worker ran what. Per-job state is fully owned by the worker
-//!   running it; nothing is shared between jobs but the immutable config.
+//!   which worker ran what.
+//!
+//! - **Shared-cluster mode** ([`FleetConfig::policy`]` = Some(_)`): all
+//!   jobs draw nodes from one [`crate::cluster::ClusterState`] and share
+//!   its spine-leaf uplinks — a leaf's bandwidth splits between its
+//!   co-resident jobs, so one job's traffic is another's congestion
+//!   (`LinkState::external_scale`). S3/S4 mitigation no longer executes
+//!   unconditionally: requests go through the [`crate::cluster::Arbiter`],
+//!   compete for the finite healthy-node pool, and can be granted, denied,
+//!   queued, or preempted. Execution proceeds in *epochs* of
+//!   [`FleetConfig::epoch_len`] iterations: within an epoch every job
+//!   steps independently behind its own lock (one lock acquisition per job
+//!   per epoch — the "epoch-sharded" locking discipline), and at each
+//!   epoch boundary a single serial pass syncs fail-slow flags into the
+//!   shared inventory, re-derives contention, and arbitrates requests in
+//!   job-id order.
 //!
 //! - **Determinism.** Job `i` derives every random stream from
-//!   `(fleet_seed, i)` — spec, injections, simulator noise — so the fleet
-//!   report is bit-identical for a fixed seed across runs *and across
-//!   worker counts*. [`FleetReport::digest`] fingerprints the per-job
-//!   results to make that property testable.
+//!   `(fleet_seed, i)`. In shared mode, cross-job coupling (contention and
+//!   grants) is only ever computed in the serial boundary pass from state
+//!   that is itself deterministic, so the fleet report remains
+//!   bit-identical for a fixed seed across runs *and across worker
+//!   counts*. [`FleetReport::digest`] fingerprints the per-job results —
+//!   including arbitration outcomes — to make that property testable.
 //!
 //! - **Bounded memory.** The per-job detector holds O(VERIFY_WINDOW)
 //!   samples (a fixed ring, see `detect::detector`) and a capped BOCD
@@ -34,18 +49,22 @@
 //! The cross-job aggregator pools episode counts, detection-latency
 //! percentiles (verified onset time minus injected onset time) and the
 //! mitigated-vs-ignored throughput delta (each injected job optionally
-//! re-run with `mitigate: false` on the identical trace).
+//! re-run with `mitigate: false` on the identical trace; private mode
+//! only — in shared mode the counterfactual is the private-cluster
+//! baseline itself, see the `fleet_cluster` report).
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
-use crate::coordinator::{run_with_falcon, FalconConfig};
+use crate::cluster::{Arbiter, ClusterState, Decision, GrantRequest, Policy};
+use crate::coordinator::{run_with_falcon, Falcon, FalconConfig};
 use crate::fabric::GpuClass;
-use crate::inject::InjectionModel;
+use crate::inject::{FailSlowEvent, InjectionModel};
 use crate::metrics::LatencySummary;
+use crate::mitigate::{topology, Strategy};
 use crate::pipeline::{ModelDims, ParallelConfig, Workload};
 use crate::sim::{JobSpec, TrainingSim};
-use crate::simkit::{from_secs, secs, MINUTE};
+use crate::simkit::{from_secs, secs, Time, MINUTE};
 use crate::util::plot;
 use crate::util::rng::Rng;
 
@@ -65,8 +84,22 @@ pub struct FleetConfig {
     /// moderate fleet still exercises the whole detect→mitigate path.
     pub failslow_boost: f64,
     /// Re-run each injected job with mitigation disabled on the identical
-    /// trace, for the mitigated-vs-ignored throughput delta.
+    /// trace, for the mitigated-vs-ignored throughput delta (private mode
+    /// only).
     pub compare: bool,
+    /// `Some(policy)` = shared-cluster mode: one node pool, contended
+    /// uplinks, arbitrated mitigation. `None` = every job owns a private
+    /// simulated cluster.
+    pub policy: Option<Policy>,
+    /// Healthy-node headroom above the fleet's aggregate demand (shared
+    /// mode): 0.15 provisions 15% spares; 0.0 saturates the pool so every
+    /// S3 swap is denied.
+    pub spare_frac: f64,
+    /// Iterations per arbitration epoch (shared mode).
+    pub epoch_len: usize,
+    /// Per-job coordinator configuration (overheads, pauses, BOCD knobs).
+    /// `mitigate`/`defer_heavy` are forced per engine mode.
+    pub falcon: FalconConfig,
 }
 
 impl Default for FleetConfig {
@@ -78,8 +111,31 @@ impl Default for FleetConfig {
             workers: 0,
             failslow_boost: 8.0,
             compare: true,
+            policy: None,
+            spare_frac: 0.15,
+            epoch_len: 20,
+            falcon: FalconConfig::default(),
         }
     }
+}
+
+/// Per-job arbitration tallies (all zero in private mode). Folded into
+/// [`FleetReport::digest`] so the determinism contract covers arbitration
+/// outcomes, not just training results.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ArbCounts {
+    /// Requests this job filed with the arbiter.
+    pub requested: u32,
+    /// Grants that handed out fresh healthy nodes.
+    pub granted: u32,
+    /// Requests denied outright (empty pool).
+    pub denied: u32,
+    /// Epoch-boundaries spent queued waiting for nodes.
+    pub queued: u32,
+    /// S4 grants executed in place after queueing past the wait cap.
+    pub in_place: u32,
+    /// Requests dropped because the episode healed before a grant.
+    pub cancelled: u32,
 }
 
 /// Outcome of one fleet job.
@@ -104,6 +160,51 @@ pub struct JobResult {
     /// Mean throughput of the ignore-mode re-run (compare mode, injected
     /// jobs only).
     pub ignored_thpt: Option<f64>,
+    /// Arbitration tallies (shared-cluster mode).
+    pub arb: ArbCounts,
+    /// Per-grant wait times in approximate wall seconds (shared mode).
+    pub grant_wait_s: Vec<f64>,
+}
+
+/// Fleet-level shared-cluster accounting (None in private mode).
+#[derive(Clone, Debug)]
+pub struct ClusterSummary {
+    pub policy: Policy,
+    pub nodes: usize,
+    pub leaves: usize,
+    /// Healthy spares at campaign start.
+    pub spares_initial: usize,
+    pub s3_requests: usize,
+    pub s3_granted: usize,
+    pub s3_denied: usize,
+    pub s4_requests: usize,
+    /// S4 grants with fresh nodes.
+    pub s4_granted: usize,
+    /// S4 grants executed in place after queue starvation.
+    pub s4_in_place: usize,
+    /// Queued decisions across all epochs (one per waiting request-epoch).
+    pub queued_decisions: usize,
+    /// Arbitration rounds where a higher-priority grant starved someone.
+    pub preempted: usize,
+    /// Requests dropped because the episode healed first.
+    pub cancelled: usize,
+    /// Wait from filing to grant, in approximate wall seconds
+    /// (epochs waited × epoch length × the job's healthy iteration time).
+    pub grant_wait: LatencySummary,
+    /// Mean cross-job bandwidth share over all jobs' uplinks and epochs
+    /// (1.0 = never contended).
+    pub mean_contention_scale: f64,
+}
+
+impl ClusterSummary {
+    /// Fraction of filed requests that were denied outright.
+    pub fn denial_rate(&self) -> f64 {
+        let total = self.s3_requests + self.s4_requests;
+        if total == 0 {
+            return 0.0;
+        }
+        self.s3_denied as f64 / total as f64
+    }
 }
 
 /// Aggregated fleet campaign report.
@@ -131,6 +232,8 @@ pub struct FleetReport {
     pub compared_jobs: usize,
     pub wall_s: f64,
     pub jobs_per_sec: f64,
+    /// Shared-cluster accounting (None in private mode).
+    pub cluster: Option<ClusterSummary>,
     pub results: Vec<JobResult>,
 }
 
@@ -173,35 +276,27 @@ fn fleet_injection_model(boost: f64) -> InjectionModel {
     }
 }
 
-/// Run one fleet job end to end (deterministic in `(cfg.seed, job_id)`).
-pub fn run_job(cfg: &FleetConfig, job_id: usize) -> JobResult {
-    let spec = job_spec(cfg.seed, job_id);
-    let world = spec.cfg.world();
-    let label = spec.cfg.label();
-
-    let mut sim = TrainingSim::new(spec.clone());
-    let horizon = from_secs((sim.ideal_iter_s * cfg.iters as f64).max(60.0));
+/// Sample job `job_id`'s fail-slow trace (deterministic in `(seed, id)`).
+fn sample_events(
+    cfg: &FleetConfig,
+    job_id: usize,
+    spec: &JobSpec,
+    horizon: Time,
+) -> Vec<FailSlowEvent> {
     let mut ev_rng = Rng::new(cfg.seed ^ 0xE7E47).fork(job_id as u64);
-    let events = fleet_injection_model(cfg.failslow_boost).sample_job(
+    fleet_injection_model(cfg.failslow_boost).sample_job(
         spec.n_nodes(),
         spec.gpus_per_node,
         horizon,
         &mut ev_rng,
-    );
-    sim.inject(events.clone());
-    let falcon = run_with_falcon(
-        &mut sim,
-        FalconConfig { mitigate: true, ..FalconConfig::default() },
-        cfg.iters,
-    );
+    )
+}
 
-    // Match verified onsets to injected onsets chronologically: latency =
-    // first unclaimed verified open at/after the event's start.
-    // (sample_job already returns events sorted by start; sort locally so
-    // the greedy matching never depends on that nonlocal invariant.)
-    let mut events_by_start = events.clone();
+/// Match verified onsets to injected onsets chronologically: latency =
+/// first unclaimed verified open at/after the event's start.
+fn match_detection_latencies(events: &[FailSlowEvent], opens: &[Time]) -> Vec<f64> {
+    let mut events_by_start = events.to_vec();
     events_by_start.sort_by_key(|e| e.start);
-    let opens = falcon.episode_opens();
     let mut used = vec![false; opens.len()];
     let mut latencies = Vec::new();
     for ev in &events_by_start {
@@ -213,13 +308,34 @@ pub fn run_job(cfg: &FleetConfig, job_id: usize) -> JobResult {
             }
         }
     }
+    latencies
+}
+
+/// Run one private-cluster fleet job end to end (deterministic in
+/// `(cfg.seed, job_id)`).
+pub fn run_job(cfg: &FleetConfig, job_id: usize) -> JobResult {
+    let spec = job_spec(cfg.seed, job_id);
+    let world = spec.cfg.world();
+    let label = spec.cfg.label();
+
+    let mut sim = TrainingSim::new(spec.clone());
+    let horizon = from_secs((sim.ideal_iter_s * cfg.iters as f64).max(60.0));
+    let events = sample_events(cfg, job_id, &spec, horizon);
+    sim.inject(events.clone());
+    let falcon = run_with_falcon(
+        &mut sim,
+        FalconConfig { mitigate: true, defer_heavy: false, ..cfg.falcon.clone() },
+        cfg.iters,
+    );
+
+    let latencies = match_detection_latencies(&events, &falcon.episode_opens());
 
     let ignored_thpt = if cfg.compare && !events.is_empty() {
         let mut ignored = TrainingSim::new(spec.clone());
         ignored.inject(events.clone());
         run_with_falcon(
             &mut ignored,
-            FalconConfig { mitigate: false, ..FalconConfig::default() },
+            FalconConfig { mitigate: false, defer_heavy: false, ..cfg.falcon.clone() },
             cfg.iters,
         );
         Some(ignored.timeline.mean_throughput())
@@ -238,19 +354,33 @@ pub fn run_job(cfg: &FleetConfig, job_id: usize) -> JobResult {
         ideal_thpt: 1.0 / sim.ideal_iter_s,
         mean_thpt: sim.timeline.mean_throughput(),
         ignored_thpt,
+        arb: ArbCounts::default(),
+        grant_wait_s: Vec::new(),
     }
 }
 
-/// Run the whole fleet, sharded across worker threads.
+/// Run the whole fleet: private clusters, or the shared cluster when
+/// [`FleetConfig::policy`] is set.
 pub fn run_fleet(cfg: &FleetConfig) -> FleetReport {
-    let t0 = std::time::Instant::now();
-    let jobs = cfg.jobs;
-    let workers = if cfg.workers > 0 {
+    match cfg.policy {
+        Some(policy) => run_fleet_shared(cfg, policy),
+        None => run_fleet_private(cfg),
+    }
+}
+
+fn worker_count(cfg: &FleetConfig) -> usize {
+    if cfg.workers > 0 {
         cfg.workers
     } else {
         std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
     }
-    .min(jobs.max(1));
+    .min(cfg.jobs.max(1))
+}
+
+fn run_fleet_private(cfg: &FleetConfig) -> FleetReport {
+    let t0 = std::time::Instant::now();
+    let jobs = cfg.jobs;
+    let workers = worker_count(cfg);
 
     let next = AtomicUsize::new(0);
     let slots: Mutex<Vec<Option<JobResult>>> = Mutex::new(vec![None; jobs]);
@@ -273,7 +403,265 @@ pub fn run_fleet(cfg: &FleetConfig) -> FleetReport {
         .into_iter()
         .map(|r| r.expect("every job completes"))
         .collect();
-    aggregate(cfg, workers, results, wall_s)
+    aggregate(cfg, workers, results, wall_s, None)
+}
+
+// ---------------------------------------------------------------------------
+// Shared-cluster mode
+// ---------------------------------------------------------------------------
+
+/// Per-job runtime state in shared mode. Each instance sits behind its own
+/// `Mutex`; a worker takes the lock exactly once per epoch (the
+/// epoch-sharded locking discipline), and the serial boundary pass uses
+/// `get_mut`, so lock contention is structurally impossible.
+struct SharedJob {
+    sim: TrainingSim,
+    falcon: Falcon,
+    events: Vec<FailSlowEvent>,
+    /// Shared-cluster node backing each logical job node.
+    placement: Vec<usize>,
+    arb: ArbCounts,
+    grant_wait_s: Vec<f64>,
+    done_iters: usize,
+}
+
+/// Is the job's logical node `k` currently degraded (an injected episode
+/// is active on its GPUs, CPU, or uplink)? Read from the sim's own health
+/// state so flag sync needs no event bookkeeping of its own.
+fn node_degraded(sim: &TrainingSim, k: usize) -> bool {
+    let c = &sim.cluster;
+    if c.nodes[k].cpu_satisfaction < 1.0 || c.uplinks[k].bandwidth_scale < 1.0 {
+        return true;
+    }
+    let gpn = c.spec.gpus_per_node;
+    (0..gpn).any(|g| c.gpus[k * gpn + g].compute_scale < 1.0)
+}
+
+fn run_fleet_shared(cfg: &FleetConfig, policy: Policy) -> FleetReport {
+    let t0 = std::time::Instant::now();
+    let workers = worker_count(cfg);
+    let epoch_len = cfg.epoch_len.max(1);
+    let epochs = cfg.iters.div_ceil(epoch_len);
+
+    // --- build the shared inventory and admit every job (id order) --------
+    let specs: Vec<JobSpec> = (0..cfg.jobs).map(|i| job_spec(cfg.seed, i)).collect();
+    let demand: usize = specs.iter().map(|s| s.n_nodes()).sum();
+    let n_nodes = demand + (demand as f64 * cfg.spare_frac.max(0.0)).ceil() as usize;
+    let mut cluster = ClusterState::new(n_nodes);
+    let mut arbiter = Arbiter::new(policy);
+    let spares_initial = n_nodes - demand;
+
+    let mut jobs: Vec<Mutex<SharedJob>> = Vec::with_capacity(cfg.jobs);
+    for (id, spec) in specs.iter().enumerate() {
+        let mut sim = TrainingSim::new(spec.clone());
+        let horizon = from_secs((sim.ideal_iter_s * cfg.iters as f64).max(60.0));
+        let events = sample_events(cfg, id, spec, horizon);
+        sim.inject(events.clone());
+        let falcon = Falcon::new(FalconConfig {
+            mitigate: true,
+            defer_heavy: true,
+            ..cfg.falcon.clone()
+        });
+        let placement = arbiter
+            .admit(&mut cluster, id, spec.n_nodes())
+            .expect("auto-sized cluster fits the whole fleet");
+        jobs.push(Mutex::new(SharedJob {
+            sim,
+            falcon,
+            events,
+            placement,
+            arb: ArbCounts::default(),
+            grant_wait_s: Vec::new(),
+            done_iters: 0,
+        }));
+    }
+
+    let mut summary = ClusterSummary {
+        policy,
+        nodes: n_nodes,
+        leaves: cluster.n_leaves(),
+        spares_initial,
+        s3_requests: 0,
+        s3_granted: 0,
+        s3_denied: 0,
+        s4_requests: 0,
+        s4_granted: 0,
+        s4_in_place: 0,
+        queued_decisions: 0,
+        preempted: 0,
+        cancelled: 0,
+        grant_wait: LatencySummary::default(),
+        mean_contention_scale: 1.0,
+    };
+    let mut grant_waits: Vec<f64> = Vec::new();
+    let mut contention_sum = 0.0f64;
+    let mut contention_n = 0usize;
+
+    for epoch in 0..epochs {
+        // --- serial boundary pass 1: sync health flags + contention -------
+        for node in &mut cluster.nodes {
+            node.flagged = false;
+        }
+        for j in jobs.iter_mut() {
+            let job = j.get_mut().unwrap();
+            for (k, &shared) in job.placement.iter().enumerate() {
+                if node_degraded(&job.sim, k) {
+                    cluster.nodes[shared].flagged = true;
+                }
+            }
+        }
+        let leaf_scales: Vec<f64> =
+            (0..cluster.n_leaves()).map(|l| cluster.contention_scale(l)).collect();
+        for j in jobs.iter_mut() {
+            let job = j.get_mut().unwrap();
+            for (k, &shared) in job.placement.iter().enumerate() {
+                let scale = leaf_scales[cluster.leaf_of(shared)];
+                job.sim.cluster.set_external_scale(k, scale);
+                contention_sum += scale;
+                contention_n += 1;
+            }
+        }
+
+        // --- parallel epoch: every job steps behind its own lock ----------
+        let next = AtomicUsize::new(0);
+        let end_iter = ((epoch + 1) * epoch_len).min(cfg.iters);
+        std::thread::scope(|s| {
+            for _ in 0..workers {
+                s.spawn(|| loop {
+                    let id = next.fetch_add(1, Ordering::Relaxed);
+                    if id >= jobs.len() {
+                        break;
+                    }
+                    let mut guard = jobs[id].lock().unwrap();
+                    let SharedJob { sim, falcon, done_iters, .. } = &mut *guard;
+                    while *done_iters < end_iter {
+                        let obs = sim.step();
+                        falcon.on_iteration(sim, obs.iter, obs.duration_s());
+                        *done_iters += 1;
+                    }
+                });
+            }
+        });
+
+        // --- serial boundary pass 2: file + arbitrate (id order) ----------
+        for (id, j) in jobs.iter_mut().enumerate() {
+            let job = j.get_mut().unwrap();
+            if let Some(strategy) = job.falcon.take_request() {
+                let fresh = !arbiter.has_queued(id);
+                let nodes_wanted = if strategy == Strategy::CkptRestart {
+                    job.placement.len()
+                } else {
+                    1
+                };
+                arbiter.file(GrantRequest {
+                    job: id,
+                    strategy,
+                    nodes_wanted,
+                    filed_epoch: epoch,
+                });
+                if fresh {
+                    job.arb.requested += 1;
+                    match strategy {
+                        Strategy::CkptRestart => summary.s4_requests += 1,
+                        _ => summary.s3_requests += 1,
+                    }
+                }
+            } else if arbiter.has_queued(id) && !job.falcon.detector.slow_now() {
+                arbiter.cancel(id);
+                job.arb.cancelled += 1;
+                summary.cancelled += 1;
+            }
+        }
+        for outcome in arbiter.arbitrate(&mut cluster, epoch) {
+            let job = jobs[outcome.job].get_mut().unwrap();
+            let SharedJob { sim, falcon, placement, arb, grant_wait_s, .. } = job;
+            let wait_s =
+                outcome.waited_epochs as f64 * epoch_len as f64 * sim.ideal_iter_s;
+            match outcome.decision {
+                Decision::Granted if outcome.strategy == Strategy::CkptRestart => {
+                    for &old in placement.iter() {
+                        cluster.release(old, epoch);
+                    }
+                    *placement = outcome.granted_nodes.clone();
+                    falcon.execute_granted(sim, Strategy::CkptRestart);
+                    arb.granted += 1;
+                    summary.s4_granted += 1;
+                    grant_waits.push(wait_s);
+                    grant_wait_s.push(wait_s);
+                }
+                Decision::Granted => match topology::worst_node(sim) {
+                    Some(k) => {
+                        sim.replace_node_hardware(k);
+                        sim.now += cfg.falcon.topology_pause;
+                        cluster.release(placement[k], epoch);
+                        placement[k] = outcome.granted_nodes[0];
+                        falcon.note_grant(sim, outcome.strategy, true);
+                        arb.granted += 1;
+                        summary.s3_granted += 1;
+                        grant_waits.push(wait_s);
+                        grant_wait_s.push(wait_s);
+                    }
+                    None => {
+                        // Healed before the grant landed: hand the nodes back.
+                        for &n in &outcome.granted_nodes {
+                            cluster.release(n, epoch);
+                        }
+                        arb.cancelled += 1;
+                        summary.cancelled += 1;
+                    }
+                },
+                Decision::GrantedInPlace => {
+                    falcon.execute_granted_in_place(sim);
+                    arb.granted += 1;
+                    arb.in_place += 1;
+                    summary.s4_in_place += 1;
+                    grant_waits.push(wait_s);
+                    grant_wait_s.push(wait_s);
+                }
+                Decision::Denied => {
+                    falcon.note_grant(sim, outcome.strategy, false);
+                    arb.denied += 1;
+                    summary.s3_denied += 1;
+                }
+                Decision::Queued => {
+                    arb.queued += 1;
+                    summary.queued_decisions += 1;
+                }
+            }
+        }
+    }
+
+    // --- finalize ----------------------------------------------------------
+    summary.preempted = arbiter.preempted;
+    summary.grant_wait = LatencySummary::from_samples(&grant_waits);
+    summary.mean_contention_scale =
+        if contention_n == 0 { 1.0 } else { contention_sum / contention_n as f64 };
+
+    let results: Vec<JobResult> = jobs
+        .into_iter()
+        .enumerate()
+        .map(|(id, j)| {
+            let job = j.into_inner().unwrap();
+            let latencies =
+                match_detection_latencies(&job.events, &job.falcon.episode_opens());
+            JobResult {
+                job_id: id,
+                label: job.sim.spec.cfg.label(),
+                world: job.sim.spec.cfg.world(),
+                injected: job.events.len(),
+                episodes_detected: job.falcon.detector.episodes.len(),
+                flagged: job.falcon.detector.job_flagged(),
+                detection_latency_s: latencies,
+                ideal_thpt: 1.0 / job.sim.ideal_iter_s,
+                mean_thpt: job.sim.timeline.mean_throughput(),
+                ignored_thpt: None,
+                arb: job.arb,
+                grant_wait_s: job.grant_wait_s,
+            }
+        })
+        .collect();
+    let wall_s = t0.elapsed().as_secs_f64();
+    aggregate(cfg, workers, results, wall_s, Some(summary))
 }
 
 fn aggregate(
@@ -281,6 +669,7 @@ fn aggregate(
     workers: usize,
     results: Vec<JobResult>,
     wall_s: f64,
+    cluster: Option<ClusterSummary>,
 ) -> FleetReport {
     let jobs = results.len();
     let gpus: usize = results.iter().map(|r| r.world).sum();
@@ -329,16 +718,18 @@ fn aggregate(
         compared_jobs,
         wall_s,
         jobs_per_sec: jobs as f64 / wall_s.max(1e-9),
+        cluster,
         results,
     }
 }
 
 impl FleetReport {
     /// Fingerprint of the per-job results in job-id order (FNV-1a over
-    /// exact bit patterns). Results land in per-job slots, so the order —
-    /// and therefore the digest — does not depend on thread scheduling:
-    /// equal digests across runs and worker counts is the fleet's
-    /// determinism contract.
+    /// exact bit patterns), covering training outcomes *and* arbitration
+    /// tallies. Results land in per-job slots, so the order — and
+    /// therefore the digest — does not depend on thread scheduling: equal
+    /// digests across runs and worker counts is the fleet's determinism
+    /// contract, in shared-cluster mode included.
     pub fn digest(&self) -> u64 {
         let mut h: u64 = 0xcbf2_9ce4_8422_2325;
         let mut mix = |v: u64| {
@@ -356,6 +747,15 @@ impl FleetReport {
             for &l in &r.detection_latency_s {
                 mix(l.to_bits());
             }
+            mix(r.arb.requested as u64);
+            mix(r.arb.granted as u64);
+            mix(r.arb.denied as u64);
+            mix(r.arb.queued as u64);
+            mix(r.arb.in_place as u64);
+            mix(r.arb.cancelled as u64);
+            for &w in &r.grant_wait_s {
+                mix(w.to_bits());
+            }
         }
         h
     }
@@ -367,7 +767,15 @@ impl FleetReport {
             self.jobs, self.gpus, self.iters, self.workers
         );
         out.push_str(&plot::table(
-            &["jobs", "w/ fail-slow", "flagged", "missed", "false+", "episodes inj", "episodes det"],
+            &[
+                "jobs",
+                "w/ fail-slow",
+                "flagged",
+                "missed",
+                "false+",
+                "episodes inj",
+                "episodes det",
+            ],
             &[vec![
                 self.jobs.to_string(),
                 self.jobs_with_failslow.to_string(),
@@ -393,6 +801,39 @@ impl FleetReport {
                 self.compared_jobs
             ));
         }
+        if let Some(c) = &self.cluster {
+            out.push_str(&format!(
+                "shared cluster: policy {}, {} nodes / {} leaves ({} spares), \
+                 mean contention scale {:.3}\n",
+                c.policy.name(),
+                c.nodes,
+                c.leaves,
+                c.spares_initial,
+                c.mean_contention_scale
+            ));
+            out.push_str(&format!(
+                "arbitration: S3 {} req / {} granted / {} denied; \
+                 S4 {} req / {} granted / {} in-place; \
+                 queued {}, preempted {}, cancelled {}\n",
+                c.s3_requests,
+                c.s3_granted,
+                c.s3_denied,
+                c.s4_requests,
+                c.s4_granted,
+                c.s4_in_place,
+                c.queued_decisions,
+                c.preempted,
+                c.cancelled
+            ));
+            out.push_str(&format!(
+                "grant wait (s): p50 {:.1}  p90 {:.1}  p99 {:.1}  (n={}); denial rate {:.1}%\n",
+                c.grant_wait.p50,
+                c.grant_wait.p90,
+                c.grant_wait.p99,
+                c.grant_wait.n,
+                100.0 * c.denial_rate()
+            ));
+        }
         out.push_str(&format!(
             "engine: {:.1} jobs/s ({:.2} s wall), digest {:016x}\n",
             self.jobs_per_sec,
@@ -406,9 +847,43 @@ impl FleetReport {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::mitigate::planner::Overheads;
 
     fn small_cfg() -> FleetConfig {
-        FleetConfig { jobs: 10, iters: 40, seed: 7, workers: 3, failslow_boost: 12.0, compare: true }
+        FleetConfig {
+            jobs: 10,
+            iters: 40,
+            seed: 7,
+            workers: 3,
+            failslow_boost: 12.0,
+            compare: true,
+            ..FleetConfig::default()
+        }
+    }
+
+    /// Shared-cluster config tuned so escalation reliably reaches S3/S4
+    /// within a short horizon (tiny ski-rental overheads, heavy injection).
+    fn shared_cfg() -> FleetConfig {
+        let mut cfg = FleetConfig {
+            jobs: 12,
+            iters: 80,
+            seed: 11,
+            workers: 3,
+            failslow_boost: 20.0,
+            compare: false,
+            policy: Some(Policy::StragglerAware),
+            spare_frac: 0.25,
+            epoch_len: 10,
+            ..FleetConfig::default()
+        };
+        cfg.falcon.overheads = Overheads {
+            adjust_microbatch_s: 0.5,
+            adjust_topology_s: 2.0,
+            ckpt_restart_s: 10.0,
+        };
+        cfg.falcon.topology_pause = from_secs(5.0);
+        cfg.falcon.restart_cost = from_secs(30.0);
+        cfg
     }
 
     #[test]
@@ -443,6 +918,7 @@ mod tests {
         assert_eq!(a.results.len(), cfg.jobs);
         assert_eq!(a.digest(), b.digest(), "sharding changed the results");
         assert!(a.jobs_per_sec > 0.0);
+        assert!(a.cluster.is_none(), "private mode has no cluster summary");
     }
 
     #[test]
@@ -470,5 +946,94 @@ mod tests {
             "mitigated/ignored ratio {}",
             r.mitigated_over_ignored
         );
+    }
+
+    #[test]
+    fn shared_digest_identical_across_1_4_8_workers() {
+        // The satellite determinism contract: contention + arbitration
+        // enabled, digest bit-identical across worker counts.
+        let cfg = shared_cfg();
+        let mut digests = Vec::new();
+        let mut requests = 0;
+        for w in [1usize, 4, 8] {
+            let mut c = cfg.clone();
+            c.workers = w;
+            let r = run_fleet(&c);
+            let summary = r.cluster.as_ref().expect("shared mode emits a cluster summary");
+            requests = summary.s3_requests + summary.s4_requests;
+            digests.push(r.digest());
+        }
+        assert_eq!(digests[0], digests[1], "1 vs 4 workers");
+        assert_eq!(digests[1], digests[2], "4 vs 8 workers");
+        assert!(requests > 0, "scenario never exercised the arbiter");
+    }
+
+    #[test]
+    fn shared_mode_contends_uplinks() {
+        // Co-residency on leaf uplinks must actually slow multi-node jobs:
+        // the shared fleet can be no faster than the same fleet on private
+        // clusters, and its contention scale must show sharing.
+        let mut cfg = shared_cfg();
+        cfg.failslow_boost = 0.0; // isolate contention from fail-slows
+        cfg.iters = 30;
+        let shared = run_fleet(&cfg);
+        let summary = shared.cluster.unwrap();
+        assert!(
+            summary.mean_contention_scale < 1.0,
+            "no uplink sharing at scale {}",
+            summary.mean_contention_scale
+        );
+        let mut base = cfg.clone();
+        base.policy = None;
+        let private = run_fleet(&base);
+        assert!(
+            shared.mean_slowdown > private.mean_slowdown,
+            "contention must cost throughput: shared {} vs private {}",
+            shared.mean_slowdown,
+            private.mean_slowdown
+        );
+    }
+
+    #[test]
+    fn saturated_pool_denies_s3_and_escalates_to_s4() {
+        // Satellite: a spare-free pool must deny every S3 swap; the
+        // ski-rental planner then reaches S4 on accumulated impact alone,
+        // and nothing panics even though no fresh nodes ever exist.
+        let mut cfg = shared_cfg();
+        cfg.jobs = 16;
+        cfg.iters = 100;
+        cfg.spare_frac = 0.0;
+        cfg.failslow_boost = 25.0;
+        let r = run_fleet(&cfg);
+        let c = r.cluster.unwrap();
+        assert!(c.s3_requests > 0, "scenario produced no S3 requests");
+        assert_eq!(c.s3_granted, 0, "spare-free pool granted a swap");
+        assert!(c.s3_denied > 0, "S3 must be denied when the pool is empty");
+        assert!(c.denial_rate() > 0.0);
+        assert!(
+            c.s4_requests > 0,
+            "denied S3 must escalate to S4 (requests: S3 {} S4 {})",
+            c.s3_requests,
+            c.s4_requests
+        );
+        assert_eq!(c.s4_granted, 0, "no fresh nodes exist to grant");
+        // Every S4 either queued or eventually ran in place.
+        assert!(c.queued_decisions + c.s4_in_place + c.cancelled > 0);
+        let denied_jobs = r.results.iter().filter(|j| j.arb.denied > 0).count();
+        assert!(denied_jobs > 0);
+    }
+
+    #[test]
+    fn all_policies_run_and_differ_only_by_placement() {
+        for policy in Policy::ALL {
+            let mut cfg = shared_cfg();
+            cfg.jobs = 8;
+            cfg.iters = 30;
+            cfg.policy = Some(policy);
+            let r = run_fleet(&cfg);
+            assert_eq!(r.results.len(), 8, "{} dropped jobs", policy.name());
+            let rendered = r.render();
+            assert!(rendered.contains(policy.name()), "{rendered}");
+        }
     }
 }

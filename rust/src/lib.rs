@@ -5,8 +5,13 @@
 //! FALCON-MITIGATE — plus every substrate they run on: a deterministic
 //! cluster/fabric/collective/pipeline simulator for at-scale experiments and
 //! a live PJRT trainer that executes the AOT-compiled JAX/Pallas train step
-//! for end-to-end validation. See DESIGN.md for the system inventory.
+//! for end-to-end validation. Beyond the paper, [`fleet`] runs many
+//! concurrent FALCON-supervised jobs — optionally on one *shared* cluster
+//! ([`cluster`]) with contended spine-leaf uplinks and cluster-wide
+//! arbitration of S3/S4 mitigation resources. See the top-level README.md
+//! for the architecture map and quickstart.
 
+pub mod cluster;
 pub mod collectives;
 pub mod coordinator;
 pub mod detect;

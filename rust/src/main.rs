@@ -1,21 +1,30 @@
 //! `falcon` — CLI for the FALCON reproduction.
 //!
 //! Subcommands:
-//!   report <id|all> [--iters N] [--seed S] [--fast true|false]
-//!       Regenerate a paper table/figure (fig1..fig20, tab1..tab7).
-//!   train [--preset tiny|small|base] [--dp D] [--steps N] [--inject true]
-//!       Live data-parallel training through the AOT PJRT artifacts with
-//!       FALCON detection + mitigation in the loop.
-//!   sim [--tp T] [--dp D] [--pp P] [--iters N] [--inject gpu|cpu|net]
-//!       One simulated hybrid-parallel job with FALCON attached.
-//!   fleet [--jobs N] [--iters I] [--seed S] [--workers W] [--boost B]
-//!         [--compare true|false]
-//!       Fleet campaign: N concurrent simulated jobs sharded across worker
-//!       threads, with a deterministic cross-job aggregate report.
-//!   campaign [--fast true|false]
-//!       The §3 characterization campaign (Fig 1 + Table 1).
-//!   list
-//!       List available report ids.
+//!
+//! ```text
+//! report <id|all> [--iters N] [--seed S] [--fast true|false]
+//!     Regenerate a paper table/figure (fig1..fig20, tab1..tab7), or a
+//!     beyond-paper report (fleet, fleet_cluster).
+//! train [--preset tiny|small|base] [--dp D] [--steps N] [--inject true]
+//!     Live data-parallel training through the AOT PJRT artifacts with
+//!     FALCON detection + mitigation in the loop.
+//! sim [--tp T] [--dp D] [--pp P] [--iters N] [--inject gpu|cpu|net]
+//!     One simulated hybrid-parallel job with FALCON attached.
+//! fleet [--jobs N] [--iters I] [--seed S] [--workers W] [--boost B]
+//!       [--compare true|false] [--spare F] [--epoch-len L]
+//!       [--policy first-fit|packed|spread|straggler-aware|private]
+//!     Fleet campaign: N concurrent simulated jobs sharded across worker
+//!     threads, with a deterministic cross-job aggregate report.
+//!     --policy moves the fleet onto ONE shared cluster: jobs contend
+//!     for spine-leaf uplink bandwidth and every S3/S4 mitigation must
+//!     win a grant from the cluster arbiter (--spare sizes the healthy
+//!     spare pool; 0.0 saturates it).
+//! campaign [--fast true|false]
+//!     The §3 characterization campaign (Fig 1 + Table 1).
+//! list
+//!     List available report ids.
+//! ```
 
 use falcon::coordinator::{run_with_falcon, FalconConfig};
 use falcon::inject::{FailSlowEvent, FailSlowKind, Target};
@@ -131,8 +140,13 @@ fn run_sim(args: &Args) {
 fn run_fleet_cmd(args: &Args) {
     let cfg = falcon::reports::fleet::config_from_args(args);
     eprintln!(
-        "[fleet] {} jobs x {} iters, seed {}, workers {} (0 = auto), compare {}",
-        cfg.jobs, cfg.iters, cfg.seed, cfg.workers, cfg.compare
+        "[fleet] {} jobs x {} iters, seed {}, workers {} (0 = auto), compare {}, cluster {}",
+        cfg.jobs,
+        cfg.iters,
+        cfg.seed,
+        cfg.workers,
+        cfg.compare,
+        cfg.policy.map(|p| p.name()).unwrap_or("private"),
     );
     let report = falcon::fleet::run_fleet(&cfg);
     println!("{}", report.render());

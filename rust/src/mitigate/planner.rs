@@ -99,6 +99,11 @@ pub struct MitigationPlanner {
     impact_s: f64,
     /// Log of applied strategies with the impact level that triggered them.
     pub applied: Vec<(Strategy, f64)>,
+    /// Strategies whose resource grant a shared cluster denied (the
+    /// healthy-node pool was exhausted). Escalation never assumes a denied
+    /// strategy helped: the accumulated impact keeps growing untouched, so
+    /// the next level still fires once its own overhead is matched.
+    pub denied: Vec<Strategy>,
 }
 
 impl MitigationPlanner {
@@ -109,7 +114,17 @@ impl MitigationPlanner {
             id: 0,
             impact_s: 0.0,
             applied: Vec::new(),
+            denied: Vec::new(),
         }
+    }
+
+    /// Record that a shared cluster denied `strategy`'s resource grant.
+    /// The planner's escalation cursor already moved past it when the
+    /// request fired, so the only effect is bookkeeping — but making the
+    /// denial explicit lets callers assert that a saturated pool forces
+    /// S3 to be skipped and S4 reached on impact alone.
+    pub fn on_denied(&mut self, strategy: Strategy) {
+        self.denied.push(strategy);
     }
 
     /// Account one slow iteration (Algorithm 1, lines 9–11) and decide
@@ -141,6 +156,7 @@ impl MitigationPlanner {
         self.id = 0;
         self.impact_s = 0.0;
         self.applied.clear();
+        self.denied.clear();
     }
 }
 
@@ -187,7 +203,8 @@ mod tests {
 
     #[test]
     fn escalates_as_impact_accumulates() {
-        let ov = Overheads { adjust_microbatch_s: 2.0, adjust_topology_s: 40.0, ckpt_restart_s: 300.0 };
+        let ov =
+            Overheads { adjust_microbatch_s: 2.0, adjust_topology_s: 40.0, ckpt_restart_s: 300.0 };
         let mut p = MitigationPlanner::new(FailSlowKind::GpuDegradation, ov);
         let mut seen = Vec::new();
         // 1 s of excess per slow iteration.
@@ -220,7 +237,11 @@ mod tests {
         // so at every instant the total overhead paid is bounded by
         // (levels x impact) and, with geometrically-spaced overheads as
         // here, by 2x the impact suffered.
-        let ov = Overheads { adjust_microbatch_s: 10.0, adjust_topology_s: 100.0, ckpt_restart_s: 1000.0 };
+        let ov = Overheads {
+            adjust_microbatch_s: 10.0,
+            adjust_topology_s: 100.0,
+            ckpt_restart_s: 1000.0,
+        };
         for dur in [5usize, 50, 500, 5000] {
             let mut p = MitigationPlanner::new(FailSlowKind::GpuDegradation, ov);
             let mut paid = 0.0;
@@ -235,6 +256,36 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn denied_s3_still_escalates_to_s4_on_impact() {
+        // Shared cluster with an exhausted pool: S3's grant is denied, yet
+        // the ski-rental escalation reaches S4 exactly when the accumulated
+        // impact matches S4's overhead — no assumption that S3 ran.
+        let ov = Overheads {
+            adjust_microbatch_s: 2.0,
+            adjust_topology_s: 40.0,
+            ckpt_restart_s: 300.0,
+        };
+        let mut p = MitigationPlanner::new(FailSlowKind::GpuDegradation, ov);
+        let mut seen = Vec::new();
+        for _ in 0..400 {
+            if let Some(s) = p.on_slow_iter(2.0, 1.0) {
+                if s == Strategy::AdjustTopology {
+                    p.on_denied(s); // pool exhausted
+                }
+                seen.push((s, p.impact_s()));
+            }
+        }
+        assert_eq!(p.denied, vec![Strategy::AdjustTopology]);
+        let s4 = seen
+            .iter()
+            .find(|&&(s, _)| s == Strategy::CkptRestart)
+            .expect("S4 must still fire");
+        assert!(s4.1 >= ov.ckpt_restart_s, "S4 fired early at {}", s4.1);
+        p.reset();
+        assert!(p.denied.is_empty());
     }
 
     #[test]

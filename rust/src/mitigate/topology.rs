@@ -93,6 +93,27 @@ pub fn apply(sim: &mut TrainingSim, plan: &TopologyPlan, pause: crate::simkit::T
     sim.now += pause;
 }
 
+/// Most-degraded physical node under the current health picture, or `None`
+/// when every node is nominal. Shared-cluster S3 (see `crate::cluster`)
+/// trades exactly this node for a healthy spare when the arbiter grants
+/// one; a denied or queued grant leaves it in place and the ski-rental
+/// planner escalates on accumulated impact instead.
+pub fn worst_node(sim: &TrainingSim) -> Option<usize> {
+    let c = &sim.cluster;
+    let mut worst: Option<(usize, f64)> = None;
+    for n in 0..c.spec.nodes {
+        let mut badness = (1.0 - c.nodes[n].cpu_satisfaction).max(0.0)
+            + (1.0 - c.uplinks[n].bandwidth_scale).max(0.0);
+        for g in 0..c.spec.gpus_per_node {
+            badness += (1.0 - c.gpus[n * c.spec.gpus_per_node + g].compute_scale).max(0.0);
+        }
+        if badness > 1e-9 && worst.map(|(_, b)| badness > b).unwrap_or(true) {
+            worst = Some((n, badness));
+        }
+    }
+    worst.map(|(n, _)| n)
+}
+
 /// Minimal number of PP stages that can contain `n_stragglers` stragglers
 /// (paper formula: ceil(#stragglers / GPUs-per-stage)).
 pub fn min_straggler_stages(n_stragglers: usize, gpus_per_stage: usize) -> usize {
@@ -191,6 +212,33 @@ mod tests {
         let before = sim.grid.node_map.clone();
         let _ = plan(&mut sim, 2);
         assert_eq!(sim.grid.node_map, before);
+    }
+
+    #[test]
+    fn worst_node_pinpoints_degradation() {
+        let mut spec = demo_spec(ParallelConfig::new(8, 2, 2), 15);
+        spec.jitter = 0.0;
+        let mut sim = TrainingSim::new(spec);
+        assert_eq!(worst_node(&sim), None, "healthy cluster has no worst node");
+        sim.inject(vec![
+            FailSlowEvent {
+                kind: FailSlowKind::GpuDegradation,
+                target: Target::Gpu(2 * 8 + 3), // node 2
+                start: 0,
+                duration: 600 * MINUTE,
+                scale: 0.7,
+            },
+            FailSlowEvent {
+                kind: FailSlowKind::NetworkCongestion,
+                target: Target::Uplink(1),
+                start: 0,
+                duration: 600 * MINUTE,
+                scale: 0.2,
+            },
+        ]);
+        sim.step();
+        // Uplink 1 lost 0.8 of its bandwidth vs node 2's GPU losing 0.3.
+        assert_eq!(worst_node(&sim), Some(1));
     }
 
     #[test]

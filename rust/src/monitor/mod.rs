@@ -2,10 +2,26 @@
 //!
 //! The real FALCON interposes on NCCL calls and logs `(op type, timestamp)`
 //! per rank into shared memory. Here, both the simulator and the live
-//! trainer call `Monitor::record` at exactly the points a hooked NCCL call
-//! would fire, producing the same per-rank op timelines — including the
-//! recurring per-iteration pattern of Fig 8 — and the per-group transfer
-//! timings ("CUDA events") the profiling phase aggregates.
+//! trainer call [`Monitor::record`] at exactly the points a hooked NCCL
+//! call would fire, producing the same per-rank op timelines — including
+//! the recurring per-iteration pattern of Fig 8 — and the per-group
+//! transfer timings ("CUDA events") the profiling phase aggregates.
+//!
+//! Pieces:
+//!
+//! - [`OpRecord`] / [`RankLog`] — one intercepted call and the bounded
+//!   per-rank sliding log of them (capped so an always-on fleet monitor is
+//!   O(window), not O(run length)).
+//! - [`MonitorMode`] — [`Tracking`](MonitorMode::Tracking) logs op kinds +
+//!   timestamps only (the paper's R4 low-overhead requirement, ≤1.1% —
+//!   `overhead_frac` models it); [`Profiling`](MonitorMode::Profiling)
+//!   additionally times each call, enabled only during the short
+//!   diagnosis window.
+//! - [`Monitor`] — per-job facade: per-rank logs plus per-group transfer
+//!   aggregation ([`Monitor::group_mean_times`]) that the profiling phase turns
+//!   into suspicious-group candidates via `detect::profiler`.
+//! - [`group_id`] — stable 64-bit id for a rank set, shared with
+//!   `detect`'s suspicious-group bookkeeping and the simulator's op log.
 
 use crate::collectives::CollOp;
 use crate::simkit::Time;

@@ -122,7 +122,8 @@ impl ModelDims {
     pub fn n_params(&self) -> f64 {
         let (l, h) = (self.layers as f64, self.hidden as f64);
         let d = (self.hidden / self.heads) as f64;
-        h * (self.vocab as f64 + self.ctx as f64 + l * (4.0 * d * self.heads as f64 + 8.0 * h + 5.0))
+        let per_layer = 4.0 * d * self.heads as f64 + 8.0 * h + 5.0;
+        h * (self.vocab as f64 + self.ctx as f64 + l * per_layer)
     }
 
     /// Training FLOPs per token ≈ 6 N (fwd+bwd).
@@ -134,8 +135,12 @@ impl ModelDims {
     pub fn gpt2(name: &str) -> ModelDims {
         match name {
             "gpt2-7b" => ModelDims { layers: 32, hidden: 4096, heads: 32, vocab: 50257, ctx: 2048 },
-            "gpt2-11b" => ModelDims { layers: 40, hidden: 4736, heads: 37, vocab: 50257, ctx: 2048 },
-            "gpt2-13b" => ModelDims { layers: 40, hidden: 5120, heads: 40, vocab: 50257, ctx: 2048 },
+            "gpt2-11b" => {
+                ModelDims { layers: 40, hidden: 4736, heads: 37, vocab: 50257, ctx: 2048 }
+            }
+            "gpt2-13b" => {
+                ModelDims { layers: 40, hidden: 5120, heads: 40, vocab: 50257, ctx: 2048 }
+            }
             _ => panic!("unknown model {name}"),
         }
     }
@@ -209,7 +214,8 @@ pub fn microbatch_time_s(
         // TP collective per microbatch (intra-node, stable).
         let tp_comm = if grid.cfg.tp > 1 {
             let nbytes = wl.tp_bytes_per_microbatch(grid.cfg) / wl.microbatches.max(1) as f64;
-            let peer = grid.gpu_of(grid.tp_group(dp, pp)[(grid.coord_of(rank).tp + 1) % grid.cfg.tp]);
+            let next_tp = (grid.coord_of(rank).tp + 1) % grid.cfg.tp;
+            let peer = grid.gpu_of(grid.tp_group(dp, pp)[next_tp]);
             cluster.transfer_time_nominal_s(gpu, peer, nbytes)
         } else {
             0.0

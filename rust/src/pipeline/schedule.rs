@@ -97,7 +97,8 @@ pub fn one_f1b_makespan(st: &StageTimes, m: usize) -> f64 {
         for s in 0..p {
             for j in 0..m {
                 ready_f[s][j] = if s == 0 { 0.0 } else { f_done[s - 1][j] + st.p2p[s - 1] };
-                ready_b[s][j] = if s == p - 1 { f_done[s][j] } else { b_done[s + 1][j] + st.p2p[s] };
+                ready_b[s][j] =
+                    if s == p - 1 { f_done[s][j] } else { b_done[s + 1][j] + st.p2p[s] };
             }
         }
     }

@@ -94,7 +94,8 @@ pub fn run_probe(class: &CampaignClass, seed: u64) -> ProbeResult {
     };
     let mut rng = Rng::new(seed ^ 0xCA);
     let horizon = (sim.ideal_iter_s * class.iters as f64 * 1e6) as u64;
-    let events = model.sample_job(class.nodes, sim.spec.gpus_per_node, horizon.max(HOUR / 4), &mut rng);
+    let events =
+        model.sample_job(class.nodes, sim.spec.gpus_per_node, horizon.max(HOUR / 4), &mut rng);
     let root_causes: Vec<FailSlowKind> = {
         let mut k: Vec<FailSlowKind> = events.iter().map(|e| e.kind).collect();
         k.sort_by_key(|k| k.name());
@@ -214,7 +215,10 @@ pub fn tab1(args: &Args) -> String {
         &["Category", "1-Node", "4-Node", "At Scale (>=512 GPUs)"],
         &rows,
     ));
-    out.push_str("\npaper: 386/4/2/0/0 of 392 | 64/1/0/42/0 of 107 | 11/0/0/13/3 of 27; slowdowns 11.79% / 15.45% / 34.59%\n");
+    out.push_str(
+        "\npaper: 386/4/2/0/0 of 392 | 64/1/0/42/0 of 107 | 11/0/0/13/3 of 27; \
+         slowdowns 11.79% / 15.45% / 34.59%\n",
+    );
     out
 }
 
@@ -258,7 +262,8 @@ pub fn fig1(args: &Args) -> String {
         &cdf.iter().map(|&(v, f)| vec![v, f]).collect::<Vec<_>>(),
     ));
     out.push_str(&format!(
-        "median {:.1} min, p90 {:.1} min (paper: tens of seconds to ~10 h, small-job mean 10–24 min, at-scale 72 min)\n",
+        "median {:.1} min, p90 {:.1} min (paper: tens of seconds to ~10 h, \
+         small-job mean 10–24 min, at-scale 72 min)\n",
         stats::median(&durs),
         stats::quantile(&durs, 0.9)
     ));

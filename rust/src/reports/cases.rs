@@ -68,9 +68,11 @@ pub fn fig2(args: &Args) -> String {
         },
     ]);
     let (t, thpt, sm, cpu) = run_case(&mut sim, iters, |s| s.cluster.nodes[0].cpu_satisfaction);
-    let jobs: Vec<f64> = cpu.iter().map(|&c| if c < 0.99 { (1.0 - c) * 20.0 } else { 1.0 }).collect();
+    let jobs: Vec<f64> =
+        cpu.iter().map(|&c| if c < 0.99 { (1.0 - c) * 20.0 } else { 1.0 }).collect();
 
-    let mut out = String::from("Figure 2 — fail-slow from CPU contention (1-node GPT2-11B, 2T1D2P)\n");
+    let mut out =
+        String::from("Figure 2 — fail-slow from CPU contention (1-node GPT2-11B, 2T1D2P)\n");
     out.push_str(&plot::line_chart("throughput (iters/s)", &t, &thpt, 60, 8));
     out.push_str(&plot::line_chart("GPU SM utilization (%)", &t, &sm, 60, 6));
     out.push_str(&plot::line_chart("# high-CPU colocated jobs", &t, &jobs, 60, 5));
@@ -98,7 +100,8 @@ pub fn fig3(args: &Args) -> String {
         .map(|g| if g == 0 { 0.8 } else { 1.0 })
         .collect();
 
-    let mut out = String::from("Figure 3 — fail-slow from GPU degradation (thermal throttling)\n");
+    let mut out =
+        String::from("Figure 3 — fail-slow from GPU degradation (thermal throttling)\n");
     out.push_str(&plot::line_chart("throughput (iters/s)", &t, &thpt, 60, 8));
     out.push_str(&plot::line_chart("GPU SM utilization (%)", &t, &sm, 60, 6));
     out.push_str(&plot::bar_chart(
@@ -143,14 +146,16 @@ pub fn fig4(args: &Args) -> String {
         rate
     });
 
-    let mut out = String::from("Figure 4 — fail-slow from network congestion (4-node GPT2-7B, 2T4D1P)\n");
+    let mut out =
+        String::from("Figure 4 — fail-slow from network congestion (4-node GPT2-7B, 2T4D1P)\n");
     out.push_str(&plot::line_chart("throughput (iters/s)", &t, &thpt, 60, 8));
     out.push_str(&plot::line_chart("CNPs sent by NICs (x1000/iter)", &t, &cnp_rate, 60, 6));
     out.push_str(&plot::line_chart("avg GPU SM utilization (%)", &t, &sm, 60, 6));
     let lo = thpt.iter().cloned().fold(f64::MAX, f64::min);
     let hi = stats::quantile(&thpt, 0.9);
     out.push_str(&format!(
-        "throughput {hi:.2} -> {lo:.2} iters/s across the two events (paper: 0.57 -> 0.41 -> 0.31)\n"
+        "throughput {hi:.2} -> {lo:.2} iters/s across the two events \
+         (paper: 0.57 -> 0.41 -> 0.31)\n"
     ));
     out
 }
@@ -203,7 +208,8 @@ pub fn tab2(args: &Args) -> String {
     cluster.uplinks[1].bandwidth_scale = 1.0;
     record("RDMA (incl. congestion episodes)", stats::cov(&xs), 0.29);
 
-    let mut out = String::from("Table 2 — performance variation (CoV) of communication components\n");
+    let mut out =
+        String::from("Table 2 — performance variation (CoV) of communication components\n");
     out.push_str(&plot::table(&["Comm. Type", "CoV (measured)", "CoV (paper)"], &rows));
     out
 }
@@ -296,7 +302,8 @@ pub fn fig6(args: &Args) -> String {
     ]);
     let (t, thpt, sm, _) = run_case(&mut sim, iters, |_| 0.0);
 
-    let mut out = String::from("Figure 6 — compound fail-slow (congestion + GPU thermal) at 1024 GPUs\n");
+    let mut out =
+        String::from("Figure 6 — compound fail-slow (congestion + GPU thermal) at 1024 GPUs\n");
     out.push_str(&plot::line_chart("throughput (iters/s)", &t, &thpt, 60, 8));
     out.push_str(&plot::line_chart("GPU SM utilization (%)", &t, &sm, 60, 6));
     let hi = stats::quantile(&thpt, 0.95);

@@ -57,7 +57,8 @@ pub fn fig12(args: &Args) -> String {
     }
 
     let mut out = String::from(
-        "Figure 12 — iteration-time estimation accuracy (relative error %, S=single-node M=multi-node)\n",
+        "Figure 12 — iteration-time estimation accuracy \
+         (relative error %, S=single-node M=multi-node)\n",
     );
     out.push_str(&plot::bar_chart("relative error (%)", &labels, &errors, 40));
     out.push_str(&plot::csv(
@@ -65,7 +66,9 @@ pub fn fig12(args: &Args) -> String {
         &errors.iter().enumerate().map(|(i, &e)| vec![i as f64, e]).collect::<Vec<_>>(),
     ));
     let max = errors.iter().cloned().fold(0.0, f64::max);
-    out.push_str(&format!("max error {max:.2}% (paper: <=1.2% single-node, 0.1–0.7% multi-node)\n"));
+    out.push_str(&format!(
+        "max error {max:.2}% (paper: <=1.2% single-node, 0.1–0.7% multi-node)\n"
+    ));
     out
 }
 
@@ -122,7 +125,8 @@ pub fn labelled_traces(comm: bool, n_jobs: usize, iters: usize, seed: u64) -> Ve
                 let comp_kind = if rng.bernoulli(4.0 / 6.0) {
                     (FailSlowKind::CpuContention, Target::Node(0), rng.range_f64(0.3, 0.6))
                 } else {
-                    (FailSlowKind::GpuDegradation, Target::Gpu(rng.below(4) as usize), rng.range_f64(0.5, 0.8))
+                    let gpu = rng.below(4) as usize;
+                    (FailSlowKind::GpuDegradation, Target::Gpu(gpu), rng.range_f64(0.5, 0.8))
                 };
                 FailSlowEvent {
                     kind: comp_kind.0,

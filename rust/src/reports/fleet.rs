@@ -1,13 +1,38 @@
-//! Fleet-scale campaign report (beyond the paper's single-job evaluation:
-//! the ROADMAP's production-scale direction). Thin report-registry wrapper
-//! over [`crate::fleet::run_fleet`]; the `falcon fleet` CLI subcommand is
-//! the primary entry point with the same knobs.
+//! Fleet-scale campaign reports (beyond the paper's single-job evaluation:
+//! the ROADMAP's production-scale direction).
+//!
+//! Two report ids dispatch here:
+//!
+//! - `fleet` — thin wrapper over [`crate::fleet::run_fleet`] (private
+//!   clusters unless `--policy` selects shared mode); the `falcon fleet`
+//!   CLI subcommand is the primary entry point with the same knobs.
+//! - `fleet_cluster` — the shared-cluster evaluation: runs the fleet on
+//!   one shared cluster under the chosen `--policy`, then re-runs the
+//!   identical fleet on private clusters, and reports grant-latency
+//!   percentiles, the arbitration denial rate, and the contention slowdown
+//!   (shared mean slowdown over private mean slowdown — what co-residency
+//!   alone costs the fleet).
 
+use crate::cluster::Policy;
 use crate::fleet::{run_fleet, FleetConfig};
 use crate::util::cli::Args;
 
 pub fn config_from_args(args: &Args) -> FleetConfig {
     let d = FleetConfig::default();
+    let policy = match args.get("policy") {
+        None => None,
+        Some("private") | Some("none") => None,
+        Some(p) => match Policy::parse(p) {
+            Some(p) => Some(p),
+            None => {
+                eprintln!(
+                    "[fleet] unknown --policy '{p}' (want first-fit|packed|spread|\
+                     straggler-aware|private); falling back to private clusters"
+                );
+                None
+            }
+        },
+    };
     FleetConfig {
         jobs: args.usize_or("jobs", d.jobs),
         iters: args.usize_or("iters", d.iters),
@@ -15,6 +40,10 @@ pub fn config_from_args(args: &Args) -> FleetConfig {
         workers: args.usize_or("workers", d.workers),
         failslow_boost: args.f64_or("boost", d.failslow_boost),
         compare: args.bool_or("compare", d.compare),
+        policy,
+        spare_frac: args.f64_or("spare", d.spare_frac),
+        epoch_len: args.usize_or("epoch-len", d.epoch_len),
+        falcon: d.falcon,
     }
 }
 
@@ -23,19 +52,96 @@ pub fn fleet(args: &Args) -> String {
     run_fleet(&cfg).render()
 }
 
+/// Shared-vs-private fleet comparison (`fleet_cluster` report id).
+pub fn fleet_cluster(args: &Args) -> String {
+    let mut cfg = config_from_args(args);
+    cfg.jobs = args.usize_or("jobs", 96);
+    cfg.iters = args.usize_or("iters", 80);
+    cfg.compare = false; // the counterfactual here is the private baseline
+    let policy = cfg.policy.unwrap_or(Policy::StragglerAware);
+    cfg.policy = Some(policy);
+
+    let shared = run_fleet(&cfg);
+    let mut base = cfg.clone();
+    base.policy = None;
+    let private = run_fleet(&base);
+
+    let c = shared.cluster.as_ref().expect("shared mode emits a cluster summary");
+    let contention_slowdown = if private.mean_slowdown > 0.0 {
+        shared.mean_slowdown / private.mean_slowdown
+    } else {
+        1.0
+    };
+    let mut out = format!(
+        "FLEET_CLUSTER — {} jobs x {} iters on one shared cluster (policy {})\n\n",
+        cfg.jobs,
+        cfg.iters,
+        policy.name()
+    );
+    out.push_str(&shared.render());
+    out.push_str(&format!(
+        "\nprivate-cluster baseline: slowdown {:.3}x mean, {:.1} jobs/s\n",
+        private.mean_slowdown, private.jobs_per_sec
+    ));
+    out.push_str(&format!(
+        "contention slowdown (shared/private): {:.3}x\n",
+        contention_slowdown
+    ));
+    out.push_str(&format!(
+        "arbitration: denial rate {:.1}%, grant wait p50 {:.1}s p99 {:.1}s over {} grants\n",
+        100.0 * c.denial_rate(),
+        c.grant_wait.p50,
+        c.grant_wait.p99,
+        c.grant_wait.n
+    ));
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
+    fn parse(v: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string()))
+    }
+
     #[test]
     fn fleet_report_renders() {
-        let args = Args::parse(
-            ["--jobs", "6", "--iters", "30", "--workers", "2", "--seed", "3"]
-                .iter()
-                .map(|s| s.to_string()),
-        );
+        let args = parse(&["--jobs", "6", "--iters", "30", "--workers", "2", "--seed", "3"]);
         let out = fleet(&args);
         assert!(out.contains("FLEET — 6 jobs"), "{out}");
         assert!(out.contains("digest"));
+    }
+
+    #[test]
+    fn policy_flag_selects_shared_mode() {
+        let args = parse(&[
+            "--jobs", "6", "--iters", "20", "--workers", "2", "--policy", "packed",
+        ]);
+        let cfg = config_from_args(&args);
+        assert_eq!(cfg.policy, Some(Policy::Packed));
+        let out = fleet(&args);
+        assert!(out.contains("shared cluster: policy packed"), "{out}");
+        // And every other spelling parses.
+        for p in ["first-fit", "spread", "straggler-aware"] {
+            let cfg = config_from_args(&parse(&["--policy", p]));
+            assert_eq!(cfg.policy.map(|p| p.name()), Some(p));
+        }
+        assert_eq!(config_from_args(&parse(&["--policy", "private"])).policy, None);
+        assert_eq!(config_from_args(&parse(&["--policy", "bogus"])).policy, None);
+    }
+
+    #[test]
+    fn fleet_cluster_report_compares_to_private_baseline() {
+        // Saturated pool so the report demonstrably shows denials.
+        let args = parse(&[
+            "--jobs", "10", "--iters", "60", "--workers", "2", "--seed", "11", "--boost",
+            "20", "--spare", "0.0", "--epoch-len", "10",
+        ]);
+        let out = fleet_cluster(&args);
+        assert!(out.contains("FLEET_CLUSTER"), "{out}");
+        assert!(out.contains("contention slowdown"), "{out}");
+        assert!(out.contains("denial rate"), "{out}");
+        assert!(out.contains("private-cluster baseline"), "{out}");
     }
 }

@@ -60,7 +60,8 @@ pub fn fig13(args: &Args) -> String {
     for (dp, tp) in [(2usize, 4usize), (4, 2), (8, 1)] {
         for sev in Severity::ALL {
             let build = || {
-                let mut sim = TrainingSim::new(spec(ParallelConfig::new(tp, dp, 1), 1, "gpt2-7b", 13));
+                let mut sim =
+                    TrainingSim::new(spec(ParallelConfig::new(tp, dp, 1), 1, "gpt2-7b", 13));
                 sim.inject(vec![FailSlowEvent {
                     kind: FailSlowKind::GpuDegradation,
                     target: Target::Gpu(0),
@@ -131,7 +132,9 @@ pub fn fig14(args: &Args) -> String {
         &rows.iter().map(|r| r[3].max(0.0)).collect::<Vec<_>>(),
         40,
     ));
-    out.push_str("paper: best 79.7% with 1 slow group (1.9x -> 1.2x); no room when all 4 degraded\n");
+    out.push_str(
+        "paper: best 79.7% with 1 slow group (1.9x -> 1.2x); no room when all 4 degraded\n",
+    );
     out
 }
 
@@ -176,12 +179,17 @@ pub fn fig15(args: &Args) -> String {
             rows.push(vec![pp as f64, sev.scale(), slow, mitig, red]);
         }
     }
-    let mut out = String::from("Figure 15 — topology adjustment (S3) vs congestion severity and PP depth\n");
-    out.push_str(&plot::csv(&["pp", "sev_scale", "slow_x", "mitigated_x", "reduction_pct"], &rows));
+    let mut out =
+        String::from("Figure 15 — topology adjustment (S3) vs congestion severity and PP depth\n");
+    out.push_str(&plot::csv(
+        &["pp", "sev_scale", "slow_x", "mitigated_x", "reduction_pct"],
+        &rows,
+    ));
     let mean4: f64 = rows.iter().filter(|r| r[0] == 4.0).map(|r| r[4]).sum::<f64>() / 3.0;
     let mean8: f64 = rows.iter().filter(|r| r[0] == 8.0).map(|r| r[4]).sum::<f64>() / 3.0;
     out.push_str(&format!(
-        "mean reduction: PP=4 {mean4:.1}%, PP=8 {mean8:.1}% (paper: 53.7% and 24.8%, max 61.5%; PP=4 benefits more)\n"
+        "mean reduction: PP=4 {mean4:.1}%, PP=8 {mean8:.1}% \
+         (paper: 53.7% and 24.8%, max 61.5%; PP=4 benefits more)\n"
     ));
     out
 }
@@ -240,7 +248,9 @@ pub fn fig16(args: &Args) -> String {
             r[0] as usize, r[1], r[2]
         ));
     }
-    out.push_str("paper: 1.6x->1.3x (1 link), 1.7x->1.3x (2 links), 1.9x->1.7x (3), no room at 4\n");
+    out.push_str(
+        "paper: 1.6x->1.3x (1 link), 1.7x->1.3x (2 links), 1.9x->1.7x (3), no room at 4\n",
+    );
     out
 }
 
@@ -286,7 +296,8 @@ pub fn fig17(args: &Args) -> String {
 
     let t: Vec<f64> = sim_m.timeline.xs_mins();
     let y: Vec<f64> = sim_m.timeline.ys();
-    let mut out = String::from("Figure 17 — compound comp+comm fail-slow under multi-level mitigation\n");
+    let mut out =
+        String::from("Figure 17 — compound comp+comm fail-slow under multi-level mitigation\n");
     out.push_str(&plot::line_chart("throughput WITH FALCON (iters/s)", &t, &y, 64, 9));
     let tu: Vec<f64> = sim_u.timeline.xs_mins();
     let yu: Vec<f64> = sim_u.timeline.ys();
@@ -324,7 +335,8 @@ mod tests {
     fn fig13_s2_reduces_slowdown() {
         let out = fig13(&quick());
         let mean_line = out.lines().find(|l| l.starts_with("mean reduction")).unwrap();
-        let mean: f64 = mean_line.split_whitespace().nth(2).unwrap().trim_end_matches("%,").parse().unwrap();
+        let mean: f64 =
+            mean_line.split_whitespace().nth(2).unwrap().trim_end_matches("%,").parse().unwrap();
         assert!(mean > 30.0, "S2 mean reduction too low: {mean}% \n{out}");
     }
 

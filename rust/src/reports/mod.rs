@@ -5,6 +5,24 @@
 //! host), then renders an ASCII figure + CSV block mirroring the paper's
 //! plot. `bench_tables`/`bench_figures` and the `falcon report` CLI all
 //! dispatch through [`generate`].
+//!
+//! Layout: [`ALL`] lists the paper reports in paper order; ids map to
+//! generators in [`generate`]'s match. Submodules group generators by
+//! paper section:
+//!
+//! - [`campaign`] — the §3 characterization campaign (Fig 1, Table 1).
+//! - [`cases`] — §3.2 case studies and monitor signatures (Fig 2–8, Tab 2).
+//! - [`detection`] — FALCON-DETECT accuracy (Fig 12, Tables 4–5).
+//! - [`mitigation`] — S2/S3 effectiveness and compound cases (Fig 13–17).
+//! - [`overhead`] — monitor/validation overhead (Fig 18–19, Table 6).
+//! - [`scale`] — scale sensitivity (Fig 20, Table 7).
+//! - [`fleet`] — beyond-paper fleet campaigns (`fleet`, `fleet_cluster`
+//!   ids): many concurrent jobs, optionally on one shared cluster with
+//!   contended uplinks and arbitrated mitigation (see [`crate::cluster`]).
+//!
+//! Conventions: every generator takes [`Args`] (knobs like `--iters`,
+//! `--seed`, `--fast`) and returns a self-contained string — no generator
+//! writes files or mutates global state, so reports compose in any order.
 
 pub mod campaign;
 pub mod cases;
@@ -52,6 +70,7 @@ pub fn generate(id: &str, args: &Args) -> String {
         // Beyond-paper reports (not in ALL so `report all` stays the paper
         // set; the `falcon fleet` subcommand is the primary entry).
         "fleet" => fleet::fleet(args),
+        "fleet_cluster" => fleet::fleet_cluster(args),
         other => format!("unknown report '{other}'; available: {ALL:?}\n"),
     }
 }

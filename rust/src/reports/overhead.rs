@@ -50,7 +50,8 @@ pub fn fig18(args: &Args) -> String {
     let mean: f64 = overheads.iter().sum::<f64>() / overheads.len() as f64;
     let max = overheads.iter().cloned().fold(0.0, f64::max);
     out.push_str(&format!(
-        "mean {mean:.2}%, max {max:.2}% (paper: mean 0.39%, max 1.1%; some cells 0.0% from run variability)\n"
+        "mean {mean:.2}%, max {max:.2}% \
+         (paper: mean 0.39%, max 1.1%; some cells 0.0% from run variability)\n"
     ));
     out
 }
@@ -86,7 +87,10 @@ pub fn tab6(args: &Args) -> String {
     }
     let mut out = String::from("Table 6 — micro-batch distribution solve time vs #DP groups\n");
     out.push_str(&plot::table(&["# DPs", "ours (s, exact greedy)", "paper cvxpy QP (s)"], &rows));
-    out.push_str("the greedy is provably optimal for Eq. 1 (see mitigate::microbatch tests), replacing the QP\n");
+    out.push_str(
+        "the greedy is provably optimal for Eq. 1 (see mitigate::microbatch tests), \
+         replacing the QP\n",
+    );
     out
 }
 

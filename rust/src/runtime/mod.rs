@@ -6,6 +6,15 @@
 //! reassigns instruction ids — why text, not serialized protos, is the
 //! interchange format), compiles once per process, and executes on the
 //! PJRT CPU client. Nothing on this path imports or spawns Python.
+//!
+//! Build gating: the module sits behind the `pjrt` cargo feature because
+//! it needs the external `xla`/`anyhow` crates, which are not vendored yet
+//! (ROADMAP open item) — the default offline build compiles it out
+//! entirely. With the feature on, `ModelMeta::load` reads the preset's
+//! `model_<preset>.meta.json`, `Runtime::new` owns the PJRT client, and
+//! `crate::trainer::LiveTrainer` drives the compiled step function with
+//! FALCON attached (the `falcon train` subcommand and `bench_runtime`).
+//! Run `make artifacts` first to produce the HLO/meta files.
 
 use anyhow::{bail, Context, Result};
 use std::path::{Path, PathBuf};

@@ -14,7 +14,7 @@
 
 use crate::collectives::{CollOp, CommGroup, Topology};
 use crate::fabric::{Cluster, ClusterSpec, GpuClass};
-use crate::inject::FailSlowEvent;
+use crate::inject::{FailSlowEvent, Target};
 use crate::metrics::{JobOutcome, Timeline};
 use crate::monitor::{group_id, Monitor};
 use crate::pipeline::{
@@ -171,8 +171,9 @@ impl TrainingSim {
                 let total = microbatch_time_s(&self.cluster, &self.grid, &self.spec.wl, d, s, mfu);
                 fwd.push(total / 3.0);
                 if s + 1 < cfg.pp {
-                    let a = self.grid.gpu_of_coord(crate::pipeline::RankCoord { tp: 0, dp: d, pp: s });
-                    let b = self.grid.gpu_of_coord(crate::pipeline::RankCoord { tp: 0, dp: d, pp: s + 1 });
+                    use crate::pipeline::RankCoord;
+                    let a = self.grid.gpu_of_coord(RankCoord { tp: 0, dp: d, pp: s });
+                    let b = self.grid.gpu_of_coord(RankCoord { tp: 0, dp: d, pp: s + 1 });
                     p2p.push(self.cluster.transfer_time_nominal_s(
                         a,
                         b,
@@ -405,10 +406,11 @@ impl TrainingSim {
     /// Eq. 1), profiled at current health.
     pub fn replica_microbatch_times(&self) -> Vec<f64> {
         let cfg = self.spec.cfg;
+        let (wl, mfu) = (&self.spec.wl, self.spec.mfu);
         (0..cfg.dp)
             .map(|d| {
                 (0..cfg.pp)
-                    .map(|s| microbatch_time_s(&self.cluster, &self.grid, &self.spec.wl, d, s, self.spec.mfu))
+                    .map(|s| microbatch_time_s(&self.cluster, &self.grid, wl, d, s, mfu))
                     .fold(0.0, f64::max)
             })
             .collect()
@@ -418,6 +420,45 @@ impl TrainingSim {
     pub fn swap_nodes(&mut self, a: usize, b: usize, pause: Time) {
         self.grid.swap_nodes(a, b);
         self.now += pause;
+    }
+
+    /// Shared-cluster S3: the job traded logical node `node`'s hardware for
+    /// a healthy spare (see `crate::cluster::Arbiter`). Episodes bound to
+    /// that hardware stay with the *old* physical node: active ones revert,
+    /// scheduled ones are dropped. The caller charges the pause cost.
+    pub fn replace_node_hardware(&mut self, node: usize) {
+        let gpn = self.spec.gpus_per_node;
+        let mut keep_ev = Vec::with_capacity(self.events.len());
+        let mut keep_ap = Vec::with_capacity(self.applied.len());
+        for i in 0..self.events.len() {
+            let ev = self.events[i];
+            let touches = match ev.target {
+                Target::Node(n) | Target::Uplink(n) => n == node,
+                Target::Gpu(g) => g / gpn == node,
+                Target::Link(a, b) => a == node || b == node,
+            };
+            if touches {
+                if self.applied[i] {
+                    ev.revert(&mut self.cluster);
+                }
+            } else {
+                keep_ev.push(ev);
+                keep_ap.push(self.applied[i]);
+            }
+        }
+        self.events = keep_ev;
+        self.applied = keep_ap;
+    }
+
+    /// S4 granted *in place* (shared cluster, exhausted pool): pay the
+    /// restart cost on the SAME hardware. The pause lets time-bounded
+    /// episodes lapse on their own (`update_health` reverts them at the
+    /// next step), but unlike [`TrainingSim::restart`] nothing is healed by
+    /// fiat — persistent degradation on these nodes survives the restart.
+    pub fn restart_in_place(&mut self, cost: Time) {
+        self.microbatch_alloc =
+            even_alloc(self.spec.wl.microbatches * self.spec.cfg.dp, self.spec.cfg.dp);
+        self.now += cost;
     }
 
     /// S4: checkpoint-and-restart onto healthy hardware: all active
@@ -632,6 +673,27 @@ mod tests {
     }
 
     #[test]
+    fn restart_in_place_keeps_persistent_degradation() {
+        let mut s = sim(ParallelConfig::new(1, 4, 1));
+        let healthy = s.step().duration as f64;
+        s.inject(vec![FailSlowEvent {
+            kind: FailSlowKind::GpuDegradation,
+            target: Target::Gpu(0),
+            start: 0,
+            duration: 600 * MINUTE,
+            scale: 0.4,
+        }]);
+        s.set_microbatch_alloc(vec![2, 10, 10, 10]);
+        s.restart_in_place(2 * MINUTE);
+        // Allocation resets, clock advances, but the hardware is the same:
+        // the still-active episode keeps slowing iterations.
+        assert_eq!(s.microbatch_alloc, vec![8, 8, 8, 8]);
+        assert_eq!(s.events.len(), 1);
+        let after = s.step().duration as f64;
+        assert!(after > 1.3 * healthy, "{after} vs {healthy}");
+    }
+
+    #[test]
     fn restart_heals_everything() {
         let mut s = sim(ParallelConfig::new(2, 4, 1));
         let healthy = s.step().duration as f64;
@@ -647,6 +709,35 @@ mod tests {
         let after = s.step().duration as f64;
         assert!((after - healthy).abs() / healthy < 0.1, "{after} vs {healthy}");
         assert!(s.events.is_empty());
+    }
+
+    #[test]
+    fn replace_node_hardware_sheds_its_events_only() {
+        let mut s = sim(ParallelConfig::new(2, 8, 1)); // 2 nodes
+        assert_eq!(s.grid.n_nodes(), 2);
+        s.inject(vec![
+            FailSlowEvent {
+                kind: FailSlowKind::GpuDegradation,
+                target: Target::Gpu(1), // node 0
+                start: 0,
+                duration: 600 * MINUTE,
+                scale: 0.5,
+            },
+            FailSlowEvent {
+                kind: FailSlowKind::CpuContention,
+                target: Target::Node(1),
+                start: 0,
+                duration: 600 * MINUTE,
+                scale: 0.5,
+            },
+        ]);
+        s.step(); // both active
+        assert!(s.cluster.gpus[1].compute_scale < 1.0);
+        s.replace_node_hardware(0);
+        assert_eq!(s.cluster.gpus[1].compute_scale, 1.0, "node 0's episode reverted");
+        assert_eq!(s.events.len(), 1, "node 1's episode stays");
+        assert!(matches!(s.events[0].target, Target::Node(1)));
+        assert!(s.cluster.nodes[1].cpu_satisfaction < 1.0);
     }
 
     #[test]

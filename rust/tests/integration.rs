@@ -299,6 +299,7 @@ fn fleet_campaign_deterministic_across_shardings() {
         workers: 4,
         failslow_boost: 10.0,
         compare: true,
+        ..FleetConfig::default()
     };
     let a = run_fleet(&cfg);
     let b = run_fleet(&FleetConfig { workers: 1, ..cfg.clone() });
@@ -316,6 +317,42 @@ fn fleet_campaign_deterministic_across_shardings() {
         s.lines().filter(|l| !l.starts_with("engine:")).collect::<Vec<_>>().join("\n")
     };
     assert_eq!(strip(a.render()), strip(b.render()));
+}
+
+#[test]
+fn shared_cluster_fleet_deterministic_and_arbitrated_end_to_end() {
+    use falcon::cluster::Policy;
+    use falcon::fleet::{run_fleet, FleetConfig};
+    let mut cfg = FleetConfig {
+        jobs: 14,
+        iters: 70,
+        seed: 5,
+        workers: 4,
+        failslow_boost: 18.0,
+        compare: false,
+        policy: Some(Policy::Packed),
+        spare_frac: 0.2,
+        epoch_len: 10,
+        ..FleetConfig::default()
+    };
+    cfg.falcon.overheads.adjust_microbatch_s = 0.5;
+    cfg.falcon.overheads.adjust_topology_s = 2.0;
+    cfg.falcon.overheads.ckpt_restart_s = 10.0;
+    let a = run_fleet(&cfg);
+    let b = run_fleet(&FleetConfig { workers: 1, ..cfg.clone() });
+    assert_eq!(a.digest(), b.digest(), "shared-cluster fleet depends on sharding");
+    let c = a.cluster.as_ref().expect("cluster summary");
+    assert!(c.mean_contention_scale <= 1.0);
+    // Arbitration tallies roll up exactly from the per-job counters.
+    let granted: u32 = a.results.iter().map(|r| r.arb.granted).sum();
+    assert_eq!(
+        granted as usize,
+        c.s3_granted + c.s4_granted + c.s4_in_place,
+        "grant accounting mismatch"
+    );
+    let rendered = a.render();
+    assert!(rendered.contains("shared cluster: policy packed"), "{rendered}");
+    assert!(rendered.contains("arbitration:"), "{rendered}");
 }
 
 // ---------------------------------------------------------------------------
