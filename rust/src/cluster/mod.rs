@@ -34,6 +34,8 @@
 //! fleet driver files them in (job-id order at each epoch boundary), so a
 //! fixed fleet seed yields bit-identical outcomes across worker counts.
 
+use std::collections::BTreeMap;
+
 use crate::fabric::GpuClass;
 use crate::mitigate::Strategy;
 
@@ -120,6 +122,13 @@ pub struct ClusterState {
     pub nodes: Vec<SharedNode>,
     pub leaf_size: usize,
     pub contention_alpha: f64,
+    /// Per-job inter-node communication volume (any consistent rate unit,
+    /// e.g. bytes/s), used to weight uplink contention: a chatty job takes
+    /// a proportionally larger bandwidth share, a silent one none. Jobs
+    /// without an entry weigh 1.0, which reduces
+    /// [`ClusterState::contention_scale_for`] to the flat co-residency
+    /// formula.
+    job_volume: BTreeMap<usize, f64>,
 }
 
 impl ClusterState {
@@ -132,7 +141,23 @@ impl ClusterState {
             nodes: (0..n_nodes).map(|_| SharedNode::new(GpuClass::H800)).collect(),
             leaf_size: leaf_size.max(1),
             contention_alpha: CONTENTION_ALPHA,
+            job_volume: BTreeMap::new(),
         }
+    }
+
+    /// Register a job's inter-node communication volume for contention
+    /// weighting (0.0 = the job never touches the uplinks).
+    pub fn set_job_volume(&mut self, job: usize, rate: f64) {
+        self.job_volume.insert(job, rate.max(0.0));
+    }
+
+    /// Forget a finished job's volume.
+    pub fn clear_job_volume(&mut self, job: usize) {
+        self.job_volume.remove(&job);
+    }
+
+    fn volume_of(&self, job: usize) -> f64 {
+        self.job_volume.get(&job).copied().unwrap_or(1.0)
     }
 
     pub fn n_leaves(&self) -> usize {
@@ -166,8 +191,11 @@ impl ClusterState {
             .count()
     }
 
-    /// Per-job effective bandwidth share on the leaf's uplink: `k`
-    /// co-resident jobs each see `1 / (1 + alpha * (k - 1))`.
+    /// Unweighted per-job bandwidth share on the leaf's uplink: `k`
+    /// co-resident jobs each see `1 / (1 + alpha * (k - 1))`. This is the
+    /// equal-volume special case of
+    /// [`ClusterState::contention_scale_for`]; the fleet driver uses the
+    /// volume-weighted form.
     pub fn contention_scale(&self, leaf: usize) -> f64 {
         let k = self.co_resident_jobs(leaf);
         if k <= 1 {
@@ -175,6 +203,49 @@ impl ClusterState {
         } else {
             1.0 / (1.0 + self.contention_alpha * (k - 1) as f64)
         }
+    }
+
+    /// Total registered communication volume of the distinct jobs resident
+    /// on `leaf` (each co-resident job counted once). Precompute this once
+    /// per leaf per epoch and feed it to
+    /// [`ClusterState::contention_share`] for the O(1) per-job path.
+    pub fn leaf_volume(&self, leaf: usize) -> f64 {
+        let mut owners: Vec<usize> =
+            self.leaf_nodes(leaf).filter_map(|n| self.nodes[n].owner).collect();
+        owners.sort_unstable();
+        owners.dedup();
+        owners.iter().map(|&o| self.volume_of(o)).sum()
+    }
+
+    /// Volume-weighted bandwidth share a job RESIDENT on a leaf with total
+    /// volume `leaf_volume` sees: `1 / (1 + alpha * V_others / v_job)`
+    /// with `V_others = leaf_volume - v_job`.
+    pub fn contention_share(&self, leaf_volume: f64, job: usize) -> f64 {
+        let v = self.volume_of(job);
+        if v <= 0.0 {
+            return 1.0;
+        }
+        let others = (leaf_volume - v).max(0.0);
+        if others <= 0.0 {
+            1.0
+        } else {
+            1.0 / (1.0 + self.contention_alpha * others / v)
+        }
+    }
+
+    /// Volume-weighted bandwidth share `job` (resident on `leaf`) sees on
+    /// the leaf's uplink: `1 / (1 + alpha * V_others / v_job)`, where
+    /// `V_others` sums the registered communication volumes of the other
+    /// co-resident jobs.
+    ///
+    /// With equal volumes this reduces exactly to the flat
+    /// `1 / (1 + alpha * (k - 1))` of
+    /// [`ClusterState::contention_scale`]; a chattier neighbor squeezes
+    /// the job harder, a silent neighbor not at all. A job with zero
+    /// volume of its own sends nothing over the uplink, so it sees (and
+    /// causes) no contention.
+    pub fn contention_scale_for(&self, leaf: usize, job: usize) -> f64 {
+        self.contention_share(self.leaf_volume(leaf), job)
     }
 
     /// Healthy free nodes at `epoch`, in index order.
@@ -324,16 +395,18 @@ impl Arbiter {
         Arbiter { policy, queue: Vec::new(), preempted: 0 }
     }
 
-    /// Admit a new job: allocate `n` nodes per the policy (for
+    /// Admit a new job at `epoch`: allocate `n` nodes per the policy (for
     /// [`Policy::FirstFit`] the unsorted leaf order makes this the lowest
-    /// free indices). `None` when the cluster cannot host the job.
+    /// free indices). `None` when the cluster cannot host the job right
+    /// now — with staggered fleet starts the driver retries next epoch.
     pub fn admit(
         &mut self,
         cluster: &mut ClusterState,
         job: usize,
         n: usize,
+        epoch: usize,
     ) -> Option<Vec<usize>> {
-        let picked = cluster.pick_spares(self.policy, job, n, 0)?;
+        let picked = cluster.pick_spares(self.policy, job, n, epoch)?;
         cluster.claim(job, &picked);
         Some(picked)
     }
@@ -464,16 +537,16 @@ mod tests {
     fn packed_fills_one_leaf_spread_fans_out() {
         let mut c = two_leaf_cluster();
         let mut packed = Arbiter::new(Policy::Packed);
-        let a = packed.admit(&mut c, 0, 2).unwrap();
-        let b = packed.admit(&mut c, 1, 2).unwrap();
+        let a = packed.admit(&mut c, 0, 2, 0).unwrap();
+        let b = packed.admit(&mut c, 1, 2, 0).unwrap();
         let leaves: Vec<usize> =
             a.iter().chain(&b).map(|&n| c.leaf_of(n)).collect();
         assert!(leaves.iter().all(|&l| l == leaves[0]), "packed spans leaves: {leaves:?}");
 
         let mut c = two_leaf_cluster();
         let mut spread = Arbiter::new(Policy::Spread);
-        let a = spread.admit(&mut c, 0, 2).unwrap();
-        let b = spread.admit(&mut c, 1, 2).unwrap();
+        let a = spread.admit(&mut c, 0, 2, 0).unwrap();
+        let b = spread.admit(&mut c, 1, 2, 0).unwrap();
         assert_ne!(
             c.leaf_of(a[0]),
             c.leaf_of(b[0]),
@@ -486,7 +559,7 @@ mod tests {
         let mut c = two_leaf_cluster();
         c.nodes[1].flagged = true;
         let mut arb = Arbiter::new(Policy::StragglerAware);
-        let placement = arb.admit(&mut c, 0, 2).unwrap();
+        let placement = arb.admit(&mut c, 0, 2, 0).unwrap();
         for &n in &placement {
             assert_eq!(c.leaf_of(n), 1, "placed next to a straggler: {placement:?}");
         }
@@ -497,14 +570,14 @@ mod tests {
         let mut c = two_leaf_cluster();
         c.nodes[0].owner = Some(9);
         let mut arb = Arbiter::new(Policy::FirstFit);
-        assert_eq!(arb.admit(&mut c, 0, 2).unwrap(), vec![1, 2]);
+        assert_eq!(arb.admit(&mut c, 0, 2, 0).unwrap(), vec![1, 2]);
     }
 
     #[test]
     fn admit_fails_when_pool_too_small() {
         let mut c = ClusterState::with_leaf_size(2, 4);
         let mut arb = Arbiter::new(Policy::FirstFit);
-        assert!(arb.admit(&mut c, 0, 3).is_none());
+        assert!(arb.admit(&mut c, 0, 3, 0).is_none());
         assert!(c.nodes.iter().all(|n| n.owner.is_none()), "failed admit must not leak");
     }
 
@@ -512,8 +585,8 @@ mod tests {
     fn s3_denied_on_empty_pool_s4_queues_then_in_place() {
         let mut c = ClusterState::with_leaf_size(2, 4);
         let mut arb = Arbiter::new(Policy::FirstFit);
-        arb.admit(&mut c, 0, 1).unwrap();
-        arb.admit(&mut c, 1, 1).unwrap(); // pool now empty
+        arb.admit(&mut c, 0, 1, 0).unwrap();
+        arb.admit(&mut c, 1, 1, 0).unwrap(); // pool now empty
 
         arb.file(GrantRequest {
             job: 0,
@@ -549,8 +622,8 @@ mod tests {
     fn s4_outranks_earlier_s3_and_counts_preemption() {
         let mut c = ClusterState::with_leaf_size(4, 4);
         let mut arb = Arbiter::new(Policy::FirstFit);
-        arb.admit(&mut c, 0, 1).unwrap();
-        arb.admit(&mut c, 1, 2).unwrap(); // one spare left
+        arb.admit(&mut c, 0, 1, 0).unwrap();
+        arb.admit(&mut c, 1, 2, 0).unwrap(); // one spare left
 
         arb.file(GrantRequest {
             job: 0,
@@ -620,5 +693,97 @@ mod tests {
             assert_eq!(Policy::parse(p.name()), Some(p));
         }
         assert_eq!(Policy::parse("nonsense"), None);
+    }
+
+    #[test]
+    fn volume_weighted_contention_reduces_to_flat_when_equal() {
+        let mut c = two_leaf_cluster();
+        c.nodes[0].owner = Some(0);
+        c.nodes[1].owner = Some(1);
+        c.nodes[2].owner = Some(2);
+        // No volumes registered: every job defaults to weight 1.0.
+        for j in 0..3 {
+            assert!((c.contention_scale_for(0, j) - c.contention_scale(0)).abs() < 1e-12);
+        }
+        // Registering equal volumes changes nothing.
+        for j in 0..3 {
+            c.set_job_volume(j, 5e9);
+        }
+        for j in 0..3 {
+            assert!((c.contention_scale_for(0, j) - c.contention_scale(0)).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn chatty_jobs_take_a_larger_share_and_silent_jobs_none() {
+        let mut c = two_leaf_cluster();
+        c.nodes[0].owner = Some(0);
+        c.nodes[1].owner = Some(1);
+        c.nodes[2].owner = Some(2);
+        c.set_job_volume(0, 9.0);
+        c.set_job_volume(1, 1.0);
+        c.set_job_volume(2, 0.0);
+        let big = c.contention_scale_for(0, 0);
+        let small = c.contention_scale_for(0, 1);
+        assert!(big > small, "chatty job must keep more bandwidth: {big} vs {small}");
+        // The silent job neither suffers nor causes contention.
+        assert_eq!(c.contention_scale_for(0, 2), 1.0);
+        let with_silent = c.contention_scale_for(0, 0);
+        c.clear_job_volume(2); // back to the default weight of 1.0
+        assert!(c.contention_scale_for(0, 0) < with_silent);
+    }
+
+    #[test]
+    fn contention_share_properties() {
+        // Property: for random co-resident volume mixes, every share is in
+        // (0, 1), chattier jobs never get a smaller share than quieter
+        // ones, and adding a neighbor never increases anyone's share.
+        crate::util::prop::check(
+            "volume-weighted-contention",
+            2024,
+            200,
+            |rng| {
+                let k = 2 + rng.below(6) as usize; // 2..=7 jobs on one leaf
+                (0..k).map(|_| rng.range_f64(0.1, 50.0)).collect::<Vec<f64>>()
+            },
+            |vols| {
+                let k = vols.len();
+                let mut c = ClusterState::with_leaf_size(8, 8);
+                for j in 0..k {
+                    c.nodes[j].owner = Some(j);
+                    c.set_job_volume(j, vols[j]);
+                }
+                let shares: Vec<f64> = (0..k).map(|j| c.contention_scale_for(0, j)).collect();
+                let leaf_vol = c.leaf_volume(0);
+                for (j, &s) in shares.iter().enumerate() {
+                    if !(s > 0.0 && s < 1.0) {
+                        return Err(format!("share {s} out of (0, 1) for job {j}"));
+                    }
+                    // The O(1) precomputed path agrees with the direct one.
+                    if (c.contention_share(leaf_vol, j) - s).abs() > 1e-12 {
+                        return Err(format!("fast path disagrees for job {j}"));
+                    }
+                }
+                for a in 0..k {
+                    for b in 0..k {
+                        if vols[a] > vols[b] && shares[a] < shares[b] - 1e-12 {
+                            return Err(format!(
+                                "chattier job {a} got a smaller share: {} vs {}",
+                                shares[a], shares[b]
+                            ));
+                        }
+                    }
+                }
+                let mut c2 = c.clone();
+                c2.nodes[7].owner = Some(99);
+                c2.set_job_volume(99, 10.0);
+                for j in 0..k {
+                    if c2.contention_scale_for(0, j) > shares[j] + 1e-12 {
+                        return Err(format!("a new neighbor increased job {j}'s share"));
+                    }
+                }
+                Ok(())
+            },
+        );
     }
 }

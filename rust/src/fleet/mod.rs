@@ -21,8 +21,15 @@
 //! - **Shared-cluster mode** ([`FleetConfig::policy`]` = Some(_)`): all
 //!   jobs draw nodes from one [`crate::cluster::ClusterState`] and share
 //!   its spine-leaf uplinks — a leaf's bandwidth splits between its
-//!   co-resident jobs, so one job's traffic is another's congestion
-//!   (`LinkState::external_scale`). S3/S4 mitigation no longer executes
+//!   co-resident jobs **weighted by their actual inter-node communication
+//!   volume** (a chatty 2-node job squeezes its neighbors, a single-node
+//!   job not at all; see `ClusterState::contention_scale_for`), so one
+//!   job's traffic is another's congestion
+//!   (`LinkState::external_scale`). With [`FleetConfig::stagger`]` > 0`
+//!   jobs start and finish at staggered epochs: the pool is sized by peak
+//!   (not aggregate) demand, finished jobs release their nodes, and late
+//!   arrivals admit into the freed capacity — the pool breathes. S3/S4
+//!   mitigation no longer executes
 //!   unconditionally: requests go through the [`crate::cluster::Arbiter`],
 //!   compete for the finite healthy-node pool, and can be granted, denied,
 //!   queued, or preempted. Execution proceeds in *epochs* of
@@ -91,12 +98,20 @@ pub struct FleetConfig {
     /// uplinks, arbitrated mitigation. `None` = every job owns a private
     /// simulated cluster.
     pub policy: Option<Policy>,
-    /// Healthy-node headroom above the fleet's aggregate demand (shared
-    /// mode): 0.15 provisions 15% spares; 0.0 saturates the pool so every
-    /// S3 swap is denied.
+    /// Healthy-node headroom above the fleet's PEAK concurrent demand
+    /// (shared mode): 0.15 provisions 15% spares; 0.0 saturates the pool
+    /// so every S3 swap is denied.
     pub spare_frac: f64,
     /// Iterations per arbitration epoch (shared mode).
     pub epoch_len: usize,
+    /// Staggered job starts (shared mode): job start epochs spread
+    /// deterministically over `stagger * ceil(iters / epoch_len)` epochs,
+    /// so jobs start and finish at different times and the node pool
+    /// breathes — finished jobs release nodes that late arrivals and
+    /// mitigation grants can claim. 0.0 (the default) starts every job at
+    /// epoch 0, the previous behavior. Ignored in private mode, where jobs
+    /// share nothing.
+    pub stagger: f64,
     /// Per-job coordinator configuration (overheads, pauses, BOCD knobs).
     /// `mitigate`/`defer_heavy` are forced per engine mode.
     pub falcon: FalconConfig,
@@ -114,6 +129,7 @@ impl Default for FleetConfig {
             policy: None,
             spare_frac: 0.15,
             epoch_len: 20,
+            stagger: 0.0,
             falcon: FalconConfig::default(),
         }
     }
@@ -145,6 +161,9 @@ pub struct JobResult {
     /// Parallel strategy label, e.g. "2T4D1P".
     pub label: String,
     pub world: usize,
+    /// Fleet iteration at which the job was admitted (staggered shared
+    /// mode; 0 when every job starts together).
+    pub start_iter: usize,
     /// Injected fail-slow events.
     pub injected: usize,
     /// Verified episodes the detector opened.
@@ -293,8 +312,9 @@ fn sample_events(
 }
 
 /// Match verified onsets to injected onsets chronologically: latency =
-/// first unclaimed verified open at/after the event's start.
-fn match_detection_latencies(events: &[FailSlowEvent], opens: &[Time]) -> Vec<f64> {
+/// first unclaimed verified open at/after the event's start. Shared with
+/// `crate::scenario` for single-job outcome accounting.
+pub fn match_detection_latencies(events: &[FailSlowEvent], opens: &[Time]) -> Vec<f64> {
     let mut events_by_start = events.to_vec();
     events_by_start.sort_by_key(|e| e.start);
     let mut used = vec![false; opens.len()];
@@ -347,6 +367,7 @@ pub fn run_job(cfg: &FleetConfig, job_id: usize) -> JobResult {
         job_id,
         label,
         world,
+        start_iter: 0,
         injected: events.len(),
         episodes_detected: falcon.detector.episodes.len(),
         flagged: falcon.detector.job_flagged(),
@@ -418,11 +439,40 @@ struct SharedJob {
     sim: TrainingSim,
     falcon: Falcon,
     events: Vec<FailSlowEvent>,
-    /// Shared-cluster node backing each logical job node.
+    /// Shared-cluster node backing each logical job node (empty until the
+    /// job is admitted).
     placement: Vec<usize>,
+    /// Inter-node communication volume rate, for contention weighting.
+    volume: f64,
+    /// Epoch the job WANTS to start at (staggered starts).
+    start_epoch: usize,
+    /// Epoch the job was actually admitted at (None = still waiting).
+    admitted_epoch: Option<usize>,
+    /// Nodes handed back after the job finished.
+    released: bool,
     arb: ArbCounts,
     grant_wait_s: Vec<f64>,
     done_iters: usize,
+}
+
+/// Inter-node communication volume rate of one job (bytes per second of
+/// healthy training): DP gradient plus PP activation traffic per
+/// iteration, over the healthy iteration time. Single-node jobs send
+/// nothing over the leaf uplinks, so they neither suffer nor cause
+/// contention (see `ClusterState::contention_scale_for`).
+fn comm_volume_rate(spec: &JobSpec, ideal_iter_s: f64) -> f64 {
+    if spec.n_nodes() <= 1 {
+        return 0.0;
+    }
+    let cfg = spec.cfg;
+    let mut bytes = 0.0;
+    if cfg.dp > 1 {
+        bytes += spec.wl.dp_bytes(cfg);
+    }
+    if cfg.pp > 1 {
+        bytes += spec.wl.pp_bytes_per_microbatch() * spec.wl.microbatches as f64;
+    }
+    bytes / ideal_iter_s.max(1e-9)
 }
 
 /// Is the job's logical node `k` currently degraded (an injected episode
@@ -441,15 +491,37 @@ fn run_fleet_shared(cfg: &FleetConfig, policy: Policy) -> FleetReport {
     let t0 = std::time::Instant::now();
     let workers = worker_count(cfg);
     let epoch_len = cfg.epoch_len.max(1);
-    let epochs = cfg.iters.div_ceil(epoch_len);
+    let base_epochs = cfg.iters.div_ceil(epoch_len);
 
-    // --- build the shared inventory and admit every job (id order) --------
+    // --- staggered start epochs (deterministic in (seed, job)) ------------
+    let span_epochs = (cfg.stagger.max(0.0) * base_epochs as f64).round() as usize;
+    let start_epochs: Vec<usize> = (0..cfg.jobs)
+        .map(|i| {
+            if span_epochs == 0 {
+                0
+            } else {
+                let mut rng = Rng::new(cfg.seed ^ 0x57A6_6E7).fork(i as u64);
+                rng.below(span_epochs as u64 + 1) as usize
+            }
+        })
+        .collect();
+
+    // --- size the pool by PEAK concurrent demand (so the pool breathes:
+    // staggered fleets need fewer nodes than their aggregate footprint) ----
     let specs: Vec<JobSpec> = (0..cfg.jobs).map(|i| job_spec(cfg.seed, i)).collect();
-    let demand: usize = specs.iter().map(|s| s.n_nodes()).sum();
-    let n_nodes = demand + (demand as f64 * cfg.spare_frac.max(0.0)).ceil() as usize;
+    let horizon_epochs =
+        start_epochs.iter().map(|s| s + base_epochs).max().unwrap_or(0);
+    let mut demand_at = vec![0usize; horizon_epochs.max(1)];
+    for (i, spec) in specs.iter().enumerate() {
+        for e in start_epochs[i]..start_epochs[i] + base_epochs {
+            demand_at[e] += spec.n_nodes();
+        }
+    }
+    let peak = demand_at.iter().copied().max().unwrap_or(0);
+    let n_nodes = peak + (peak as f64 * cfg.spare_frac.max(0.0)).ceil() as usize;
     let mut cluster = ClusterState::new(n_nodes);
     let mut arbiter = Arbiter::new(policy);
-    let spares_initial = n_nodes - demand;
+    let spares_initial = n_nodes - peak;
 
     let mut jobs: Vec<Mutex<SharedJob>> = Vec::with_capacity(cfg.jobs);
     for (id, spec) in specs.iter().enumerate() {
@@ -462,14 +534,16 @@ fn run_fleet_shared(cfg: &FleetConfig, policy: Policy) -> FleetReport {
             defer_heavy: true,
             ..cfg.falcon.clone()
         });
-        let placement = arbiter
-            .admit(&mut cluster, id, spec.n_nodes())
-            .expect("auto-sized cluster fits the whole fleet");
+        let volume = comm_volume_rate(spec, sim.ideal_iter_s);
         jobs.push(Mutex::new(SharedJob {
             sim,
             falcon,
             events,
-            placement,
+            placement: Vec::new(),
+            volume,
+            start_epoch: start_epochs[id],
+            admitted_epoch: None,
+            released: false,
             arb: ArbCounts::default(),
             grant_wait_s: Vec::new(),
             done_iters: 0,
@@ -497,34 +571,79 @@ fn run_fleet_shared(cfg: &FleetConfig, policy: Policy) -> FleetReport {
     let mut contention_sum = 0.0f64;
     let mut contention_n = 0usize;
 
-    for epoch in 0..epochs {
-        // --- serial boundary pass 1: sync health flags + contention -------
+    // Generous runaway bound: deferred admissions always clear once
+    // quarantines expire and finished jobs release nodes, so this cap is
+    // defensive only.
+    let epoch_cap = horizon_epochs + 8 * (cfg.jobs + 8);
+    let mut epoch = 0usize;
+    loop {
+        let all_done = jobs.iter_mut().all(|j| {
+            let job = j.get_mut().unwrap();
+            job.admitted_epoch.is_some() && job.done_iters >= cfg.iters
+        });
+        if all_done || epoch >= epoch_cap {
+            break;
+        }
+
+        // --- serial boundary pass 1: release, admit, flags, contention ----
+        // Finished jobs hand their nodes back (degraded ones quarantine),
+        // making room for late arrivals and mitigation grants: the pool
+        // breathes.
+        for (id, j) in jobs.iter_mut().enumerate() {
+            let job = j.get_mut().unwrap();
+            if job.admitted_epoch.is_some() && job.done_iters >= cfg.iters && !job.released {
+                for &n in &job.placement {
+                    cluster.release(n, epoch);
+                }
+                cluster.clear_job_volume(id);
+                arbiter.cancel(id);
+                job.released = true;
+            }
+        }
+        for (id, j) in jobs.iter_mut().enumerate() {
+            let job = j.get_mut().unwrap();
+            if job.admitted_epoch.is_none() && epoch >= job.start_epoch {
+                let wanted = job.sim.spec.n_nodes();
+                if let Some(placement) = arbiter.admit(&mut cluster, id, wanted, epoch) {
+                    job.placement = placement;
+                    job.admitted_epoch = Some(epoch);
+                    cluster.set_job_volume(id, job.volume);
+                }
+                // else: the pool is momentarily short (quarantined
+                // releases); retry next epoch — the job starts late.
+            }
+        }
         for node in &mut cluster.nodes {
             node.flagged = false;
         }
         for j in jobs.iter_mut() {
             let job = j.get_mut().unwrap();
+            if job.admitted_epoch.is_none() || job.done_iters >= cfg.iters {
+                continue;
+            }
             for (k, &shared) in job.placement.iter().enumerate() {
                 if node_degraded(&job.sim, k) {
                     cluster.nodes[shared].flagged = true;
                 }
             }
         }
-        let leaf_scales: Vec<f64> =
-            (0..cluster.n_leaves()).map(|l| cluster.contention_scale(l)).collect();
-        for j in jobs.iter_mut() {
+        let leaf_volumes: Vec<f64> =
+            (0..cluster.n_leaves()).map(|l| cluster.leaf_volume(l)).collect();
+        for (id, j) in jobs.iter_mut().enumerate() {
             let job = j.get_mut().unwrap();
+            if job.admitted_epoch.is_none() || job.done_iters >= cfg.iters {
+                continue;
+            }
             for (k, &shared) in job.placement.iter().enumerate() {
-                let scale = leaf_scales[cluster.leaf_of(shared)];
+                let scale = cluster.contention_share(leaf_volumes[cluster.leaf_of(shared)], id);
                 job.sim.cluster.set_external_scale(k, scale);
                 contention_sum += scale;
                 contention_n += 1;
             }
         }
 
-        // --- parallel epoch: every job steps behind its own lock ----------
+        // --- parallel epoch: every active job steps behind its own lock ---
         let next = AtomicUsize::new(0);
-        let end_iter = ((epoch + 1) * epoch_len).min(cfg.iters);
         std::thread::scope(|s| {
             for _ in 0..workers {
                 s.spawn(|| loop {
@@ -533,8 +652,12 @@ fn run_fleet_shared(cfg: &FleetConfig, policy: Policy) -> FleetReport {
                         break;
                     }
                     let mut guard = jobs[id].lock().unwrap();
-                    let SharedJob { sim, falcon, done_iters, .. } = &mut *guard;
-                    while *done_iters < end_iter {
+                    let SharedJob { sim, falcon, done_iters, admitted_epoch, .. } = &mut *guard;
+                    if admitted_epoch.is_none() {
+                        continue;
+                    }
+                    let target = (*done_iters + epoch_len).min(cfg.iters);
+                    while *done_iters < target {
                         let obs = sim.step();
                         falcon.on_iteration(sim, obs.iter, obs.duration_s());
                         *done_iters += 1;
@@ -546,6 +669,19 @@ fn run_fleet_shared(cfg: &FleetConfig, policy: Policy) -> FleetReport {
         // --- serial boundary pass 2: file + arbitrate (id order) ----------
         for (id, j) in jobs.iter_mut().enumerate() {
             let job = j.get_mut().unwrap();
+            if job.admitted_epoch.is_none() {
+                continue;
+            }
+            if job.done_iters >= cfg.iters {
+                // Finished this epoch: drop any in-flight request; the
+                // nodes release at the next boundary pass.
+                job.falcon.take_request();
+                if arbiter.cancel(id) {
+                    job.arb.cancelled += 1;
+                    summary.cancelled += 1;
+                }
+                continue;
+            }
             if let Some(strategy) = job.falcon.take_request() {
                 let fresh = !arbiter.has_queued(id);
                 let nodes_wanted = if strategy == Strategy::CkptRestart {
@@ -574,6 +710,14 @@ fn run_fleet_shared(cfg: &FleetConfig, policy: Policy) -> FleetReport {
         }
         for outcome in arbiter.arbitrate(&mut cluster, epoch) {
             let job = jobs[outcome.job].get_mut().unwrap();
+            if job.done_iters >= cfg.iters {
+                // Defensive: the requester finished between filing and the
+                // grant; hand any fresh nodes straight back.
+                for &n in &outcome.granted_nodes {
+                    cluster.release(n, epoch);
+                }
+                continue;
+            }
             let SharedJob { sim, falcon, placement, arb, grant_wait_s, .. } = job;
             let wait_s =
                 outcome.waited_epochs as f64 * epoch_len as f64 * sim.ideal_iter_s;
@@ -629,6 +773,7 @@ fn run_fleet_shared(cfg: &FleetConfig, policy: Policy) -> FleetReport {
                 }
             }
         }
+        epoch += 1;
     }
 
     // --- finalize ----------------------------------------------------------
@@ -648,6 +793,7 @@ fn run_fleet_shared(cfg: &FleetConfig, policy: Policy) -> FleetReport {
                 job_id: id,
                 label: job.sim.spec.cfg.label(),
                 world: job.sim.spec.cfg.world(),
+                start_iter: job.admitted_epoch.unwrap_or(0) * epoch_len,
                 injected: job.events.len(),
                 episodes_detected: job.falcon.detector.episodes.len(),
                 flagged: job.falcon.detector.job_flagged(),
@@ -740,6 +886,7 @@ impl FleetReport {
         };
         for r in &self.results {
             mix(r.job_id as u64);
+            mix(r.start_iter as u64);
             mix(r.injected as u64);
             mix(r.episodes_detected as u64);
             mix(r.mean_thpt.to_bits());
@@ -1021,6 +1168,38 @@ mod tests {
         assert!(c.queued_decisions + c.s4_in_place + c.cancelled > 0);
         let denied_jobs = r.results.iter().filter(|j| j.arb.denied > 0).count();
         assert!(denied_jobs > 0);
+    }
+
+    #[test]
+    fn staggered_fleet_breathes_and_stays_deterministic() {
+        // ROADMAP "pool breathes": staggered starts must (a) keep the
+        // digest bit-identical across worker counts, (b) actually spread
+        // job admissions over time, and (c) need fewer nodes than the
+        // everyone-at-once fleet, because the pool is sized by peak rather
+        // than aggregate demand.
+        let mut cfg = shared_cfg();
+        cfg.jobs = 10;
+        cfg.stagger = 3.0;
+        let a = run_fleet(&cfg);
+        let mut one = cfg.clone();
+        one.workers = 1;
+        let b = run_fleet(&one);
+        assert_eq!(a.digest(), b.digest(), "staggering broke determinism");
+        let starts: std::collections::HashSet<usize> =
+            a.results.iter().map(|r| r.start_iter).collect();
+        assert!(starts.len() >= 2, "admissions never staggered: {starts:?}");
+        for r in &a.results {
+            assert!(r.mean_thpt > 0.0, "job {} never ran its iterations", r.job_id);
+        }
+        let mut flat = cfg.clone();
+        flat.stagger = 0.0;
+        let c = run_fleet(&flat);
+        let a_nodes = a.cluster.as_ref().unwrap().nodes;
+        let c_nodes = c.cluster.as_ref().unwrap().nodes;
+        assert!(
+            a_nodes < c_nodes,
+            "staggered pool must be smaller than the burst pool: {a_nodes} vs {c_nodes}"
+        );
     }
 
     #[test]

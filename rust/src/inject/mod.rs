@@ -78,7 +78,7 @@ pub enum Target {
 }
 
 /// One injected fail-slow episode.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct FailSlowEvent {
     pub kind: FailSlowKind,
     pub target: Target,

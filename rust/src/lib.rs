@@ -8,8 +8,11 @@
 //! for end-to-end validation. Beyond the paper, [`fleet`] runs many
 //! concurrent FALCON-supervised jobs — optionally on one *shared* cluster
 //! ([`cluster`]) with contended spine-leaf uplinks and cluster-wide
-//! arbitration of S3/S4 mitigation resources. See the top-level README.md
-//! for the architecture map and quickstart.
+//! arbitration of S3/S4 mitigation resources — and [`scenario`] makes
+//! every experiment a declarative spec: `falcon run <file|name>` executes
+//! a fault script (or a whole fleet campaign) from one TOML document or
+//! the built-in library. See the top-level README.md for the architecture
+//! map and quickstart.
 
 pub mod cluster;
 pub mod collectives;
@@ -26,6 +29,7 @@ pub mod pipeline;
 pub mod reports;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
+pub mod scenario;
 pub mod sim;
 pub mod simkit;
 #[cfg(feature = "pjrt")]

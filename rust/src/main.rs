@@ -9,28 +9,34 @@
 //! train [--preset tiny|small|base] [--dp D] [--steps N] [--inject true]
 //!     Live data-parallel training through the AOT PJRT artifacts with
 //!     FALCON detection + mitigation in the loop.
+//! run <file|name> [--iters N] [--seed S] [--json true]
+//!     Execute a declarative scenario: either a built-in library name
+//!     (`falcon scenarios` lists them) or a TOML spec file (format:
+//!     docs/SCENARIOS.md). Prints the structured Outcome as ASCII, or as
+//!     JSON with --json.
+//! scenarios
+//!     List the built-in scenario library with descriptions.
 //! sim [--tp T] [--dp D] [--pp P] [--iters N] [--inject gpu|cpu|net]
-//!     One simulated hybrid-parallel job with FALCON attached.
+//!     One simulated hybrid-parallel job with FALCON attached (a thin
+//!     builder-API shortcut over `falcon run`).
 //! fleet [--jobs N] [--iters I] [--seed S] [--workers W] [--boost B]
-//!       [--compare true|false] [--spare F] [--epoch-len L]
+//!       [--compare true|false] [--spare F] [--epoch-len L] [--stagger G]
 //!       [--policy first-fit|packed|spread|straggler-aware|private]
 //!     Fleet campaign: N concurrent simulated jobs sharded across worker
 //!     threads, with a deterministic cross-job aggregate report.
 //!     --policy moves the fleet onto ONE shared cluster: jobs contend
 //!     for spine-leaf uplink bandwidth and every S3/S4 mitigation must
 //!     win a grant from the cluster arbiter (--spare sizes the healthy
-//!     spare pool; 0.0 saturates it).
+//!     spare pool; 0.0 saturates it; --stagger spreads job start epochs so
+//!     the pool breathes).
 //! campaign [--fast true|false]
 //!     The §3 characterization campaign (Fig 1 + Table 1).
 //! list
-//!     List available report ids.
+//!     List available report ids (paper set plus beyond-paper reports).
 //! ```
 
-use falcon::coordinator::{run_with_falcon, FalconConfig};
-use falcon::inject::{FailSlowEvent, FailSlowKind, Target};
-use falcon::pipeline::ParallelConfig;
-use falcon::sim::{demo_spec, TrainingSim};
-use falcon::simkit::from_secs;
+use falcon::inject::{FailSlowKind, Target};
+use falcon::scenario::{FaultSpec, ScenarioSpec};
 use falcon::util::cli::Args;
 
 fn main() {
@@ -50,6 +56,18 @@ fn main() {
         "list" => {
             for id in falcon::reports::ALL {
                 println!("{id}");
+            }
+            println!("beyond paper:");
+            for id in falcon::reports::BEYOND_PAPER {
+                println!("{id}");
+            }
+        }
+        "run" => run_scenario(&args),
+        "scenarios" => {
+            for &name in falcon::scenario::LIBRARY {
+                let spec = falcon::scenario::find(name).expect("library names build");
+                let tag = if spec.fleet.is_some() { " [fleet]" } else { "" };
+                println!("{name:<26} {}{tag}", spec.description);
             }
         }
         "sim" => run_sim(&args),
@@ -71,70 +89,109 @@ fn main() {
         }
         _ => {
             println!(
-                "usage: falcon <report|train|sim|fleet|campaign|list> [flags]\n\
-                 see `falcon list` for report ids; DESIGN.md for the experiment index"
+                "usage: falcon <report|run|scenarios|train|sim|fleet|campaign|list> [flags]\n\
+                 see `falcon list` for report ids, `falcon scenarios` for the scenario\n\
+                 library, README.md for the quickstart, and docs/SCENARIOS.md for the\n\
+                 scenario spec format"
             );
         }
     }
 }
 
+/// `falcon run <library-name|path/to/spec.toml>`: one declarative scenario,
+/// end to end, through `ScenarioSpec::run`.
+fn run_scenario(args: &Args) {
+    let Some(what) = args.positional.get(1) else {
+        eprintln!("usage: falcon run <library-name|path/to/spec.toml> [--json true]");
+        eprintln!("library scenarios (details: `falcon scenarios`):");
+        for &name in falcon::scenario::LIBRARY {
+            eprintln!("  {name}");
+        }
+        return;
+    };
+    let mut spec = if let Some(spec) = falcon::scenario::find(what) {
+        spec
+    } else {
+        match std::fs::read_to_string(what) {
+            Ok(text) => match ScenarioSpec::parse(&text) {
+                Ok(spec) => spec,
+                Err(e) => {
+                    eprintln!("{what}: {e}");
+                    return;
+                }
+            },
+            Err(io) => {
+                eprintln!("'{what}' is neither a library scenario nor a readable file ({io})");
+                eprintln!("library names: {:?}", falcon::scenario::LIBRARY);
+                return;
+            }
+        }
+    };
+    // CLI overrides for quick sweeps over the same scenario.
+    if args.has("iters") {
+        spec = spec.iters(args.usize_or("iters", spec.run.iters));
+    }
+    if args.has("seed") {
+        spec = spec.seed(args.u64_or("seed", spec.run.seed));
+    }
+    if args.has("mitigate") {
+        spec = spec.mitigate(args.bool_or("mitigate", spec.run.mitigate));
+    }
+    match spec.run() {
+        Ok(outcome) => {
+            if args.bool_or("json", false) {
+                println!("{}", outcome.to_json().to_string());
+            } else {
+                println!("{}", outcome.render());
+            }
+        }
+        Err(e) => eprintln!("scenario '{}' failed: {e}", spec.name),
+    }
+}
+
+/// `falcon sim`: a builder-API shortcut — assembles a [`ScenarioSpec`] from
+/// flags and runs it through the same unified entry as `falcon run`.
 fn run_sim(args: &Args) {
-    let cfg = ParallelConfig::new(
+    let mut spec = ScenarioSpec::new(
+        "sim",
         args.usize_or("tp", 2),
         args.usize_or("dp", 4),
         args.usize_or("pp", 1),
-    );
-    let iters = args.usize_or("iters", 300);
-    let mut sim = TrainingSim::new(demo_spec(cfg, args.u64_or("seed", 1)));
-    let onset = sim.ideal_iter_s * iters as f64 * 0.25;
-    let dur = sim.ideal_iter_s * iters as f64 * 0.4;
-    match args.get("inject") {
-        Some("gpu") => sim.inject(vec![FailSlowEvent {
-            kind: FailSlowKind::GpuDegradation,
-            target: Target::Gpu(0),
-            start: from_secs(onset),
-            duration: (dur * 1e6) as u64,
-            scale: args.f64_or("scale", 0.5),
-        }]),
-        Some("cpu") => sim.inject(vec![FailSlowEvent {
-            kind: FailSlowKind::CpuContention,
-            target: Target::Node(0),
-            start: from_secs(onset),
-            duration: (dur * 1e6) as u64,
-            scale: args.f64_or("scale", 0.4),
-        }]),
-        Some("net") => sim.inject(vec![FailSlowEvent {
-            kind: FailSlowKind::NetworkCongestion,
-            target: Target::Link(0, 1),
-            start: from_secs(onset),
-            duration: (dur * 1e6) as u64,
-            scale: args.f64_or("scale", 0.25),
-        }]),
-        _ => {}
+    )
+    .iters(args.usize_or("iters", 300))
+    .seed(args.u64_or("seed", 1))
+    .mitigate(args.bool_or("mitigate", true));
+    spec = match args.get("inject") {
+        Some("gpu") => spec.fault(FaultSpec::new(
+            FailSlowKind::GpuDegradation,
+            Target::Gpu(0),
+            0.25,
+            0.4,
+            args.f64_or("scale", 0.5),
+        )),
+        Some("cpu") => spec.fault(FaultSpec::new(
+            FailSlowKind::CpuContention,
+            Target::Node(0),
+            0.25,
+            0.4,
+            args.f64_or("scale", 0.4),
+        )),
+        Some("net") => spec.fault(FaultSpec::new(
+            FailSlowKind::NetworkCongestion,
+            Target::Link(0, 1),
+            0.25,
+            0.4,
+            args.f64_or("scale", 0.25),
+        )),
+        _ => spec,
+    };
+    match spec.run() {
+        Ok(outcome) => println!("{}", outcome.render()),
+        Err(e) => eprintln!(
+            "sim scenario invalid: {e}\n(hint: --inject net needs a job spanning \
+             at least 2 nodes, e.g. --dp 16)"
+        ),
     }
-    let falcon = run_with_falcon(
-        &mut sim,
-        FalconConfig { mitigate: args.bool_or("mitigate", true), ..FalconConfig::default() },
-        iters,
-    );
-    println!(
-        "{}",
-        falcon::util::plot::line_chart(
-            &format!("throughput ({} on {} nodes, iters/s)", cfg.label(), sim.grid.n_nodes()),
-            &sim.timeline.xs_mins(),
-            &sim.timeline.ys(),
-            70,
-            10,
-        )
-    );
-    for a in &falcon.actions {
-        println!("  t={:.1}min iter={} {:?}", falcon::simkit::mins(a.at), a.iter, a.what);
-    }
-    println!(
-        "mean throughput {:.3} iters/s (ideal {:.3})",
-        sim.timeline.mean_throughput(),
-        1.0 / sim.ideal_iter_s
-    );
 }
 
 fn run_fleet_cmd(args: &Args) {

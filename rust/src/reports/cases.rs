@@ -47,26 +47,13 @@ fn run_case(
 
 /// Fig 2 — CPU-contention case: two contention bursts, SM util dips,
 /// high-CPU job count and CPU satisfaction trace the root cause.
+///
+/// The experiment is constructed through the declarative scenario API: the
+/// library's `cpu-contention` entry IS this figure's fault script.
 pub fn fig2(args: &Args) -> String {
     let iters = args.usize_or("iters", 600);
-    let mut sim = case_sim(ParallelConfig::new(2, 1, 2), "gpt2-11b", 1, 2);
-    let it = sim.ideal_iter_s;
-    sim.inject(vec![
-        FailSlowEvent {
-            kind: FailSlowKind::CpuContention,
-            target: Target::Node(0),
-            start: from_secs(it * iters as f64 * 0.25),
-            duration: (it * iters as f64 * 0.12 * 1e6) as u64,
-            scale: 0.35,
-        },
-        FailSlowEvent {
-            kind: FailSlowKind::CpuContention,
-            target: Target::Node(0),
-            start: from_secs(it * iters as f64 * 0.62),
-            duration: (it * iters as f64 * 0.10 * 1e6) as u64,
-            scale: 0.45,
-        },
-    ]);
+    let spec = crate::scenario::find("cpu-contention").expect("library scenario").iters(iters);
+    let mut sim = spec.build_sim().expect("library scenario is valid");
     let (t, thpt, sm, cpu) = run_case(&mut sim, iters, |s| s.cluster.nodes[0].cpu_satisfaction);
     let jobs: Vec<f64> =
         cpu.iter().map(|&c| if c < 0.99 { (1.0 - c) * 20.0 } else { 1.0 }).collect();
@@ -116,28 +103,12 @@ pub fn fig3(args: &Args) -> String {
 }
 
 /// Fig 4 — network congestion on a 4-node GPT2-7B job: two events, CNP
-/// surges correlate with throughput dips.
+/// surges correlate with throughput dips. Built from the library's
+/// `net-congestion` scenario.
 pub fn fig4(args: &Args) -> String {
     let iters = args.usize_or("iters", 700);
-    let mut sim = case_sim(ParallelConfig::new(2, 4, 1), "gpt2-7b", 4, 4);
-    let it = sim.ideal_iter_s;
-    let span = it * iters as f64;
-    sim.inject(vec![
-        FailSlowEvent {
-            kind: FailSlowKind::NetworkCongestion,
-            target: Target::Uplink(2),
-            start: from_secs(span * 0.27),
-            duration: (span * 0.2 * 1e6) as u64,
-            scale: 0.45,
-        },
-        FailSlowEvent {
-            kind: FailSlowKind::NetworkCongestion,
-            target: Target::Uplink(2),
-            start: from_secs(span * 0.75),
-            duration: (span * 0.18 * 1e6) as u64,
-            scale: 0.25,
-        },
-    ]);
+    let spec = crate::scenario::find("net-congestion").expect("library scenario").iters(iters);
+    let mut sim = spec.build_sim().expect("library scenario is valid");
     let mut last_cnp = 0u64;
     let (t, thpt, sm, cnp_rate) = run_case(&mut sim, iters, |s| {
         let total: u64 = s.cluster.uplinks.iter().map(|u| u.cnp_count).sum();
@@ -269,37 +240,42 @@ pub fn fig5(args: &Args) -> String {
     out
 }
 
-/// Fig 6 — compound congestion + thermal throttling on a 1024-GPU job.
+/// Fig 6 — compound congestion + thermal throttling on a 1024-GPU job,
+/// scripted through the scenario builder (the 1024-GPU footprint is too
+/// heavy for the interactive library, so the spec is assembled inline).
 pub fn fig6(args: &Args) -> String {
+    use crate::scenario::{FaultSpec, ScenarioSpec};
     let iters = args.usize_or("iters", 500);
-    let mut sim = case_sim(ParallelConfig::new(8, 32, 4), "gpt2-13b", 128, 7);
-    let span = sim.ideal_iter_s * iters as f64;
-    sim.inject(vec![
+    let spec = ScenarioSpec::new("fig6-compound", 8, 32, 4)
+        .model("gpt2-13b")
+        .nodes(128)
+        .seed(7)
+        .iters(iters)
         // t=62 min analogue: severe congestion, -80% throughput.
-        FailSlowEvent {
-            kind: FailSlowKind::NetworkCongestion,
-            target: Target::Uplink(9),
-            start: from_secs(span * 0.2),
-            duration: (span * 0.25 * 1e6) as u64,
-            scale: 0.06,
-        },
+        .fault(FaultSpec::new(
+            FailSlowKind::NetworkCongestion,
+            Target::Uplink(9),
+            0.2,
+            0.25,
+            0.06,
+        ))
         // t=80: thermal throttling while congestion unabated.
-        FailSlowEvent {
-            kind: FailSlowKind::GpuDegradation,
-            target: Target::Gpu(9 * 8 + 3),
-            start: from_secs(span * 0.28),
-            duration: (span * 0.17 * 1e6) as u64,
-            scale: 0.5,
-        },
+        .fault(FaultSpec::new(
+            FailSlowKind::GpuDegradation,
+            Target::Gpu(9 * 8 + 3),
+            0.28,
+            0.17,
+            0.5,
+        ))
         // t=120 onward: another two-hour congestion, -85%.
-        FailSlowEvent {
-            kind: FailSlowKind::NetworkCongestion,
-            target: Target::Uplink(33),
-            start: from_secs(span * 0.55),
-            duration: (span * 0.35 * 1e6) as u64,
-            scale: 0.05,
-        },
-    ]);
+        .fault(FaultSpec::new(
+            FailSlowKind::NetworkCongestion,
+            Target::Uplink(33),
+            0.55,
+            0.35,
+            0.05,
+        ));
+    let mut sim = spec.build_sim().expect("fig6 scenario is valid");
     let (t, thpt, sm, _) = run_case(&mut sim, iters, |_| 0.0);
 
     let mut out =

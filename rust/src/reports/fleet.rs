@@ -15,8 +15,12 @@
 
 use crate::cluster::Policy;
 use crate::fleet::{run_fleet, FleetConfig};
+use crate::scenario::FleetSpec;
 use crate::util::cli::Args;
 
+/// Lower the CLI flags onto a declarative [`FleetSpec`] and from there to
+/// the engine configuration — the same path `falcon run` takes for fleet
+/// scenarios, so flags and spec files cannot drift apart.
 pub fn config_from_args(args: &Args) -> FleetConfig {
     let d = FleetConfig::default();
     let policy = match args.get("policy") {
@@ -33,18 +37,17 @@ pub fn config_from_args(args: &Args) -> FleetConfig {
             }
         },
     };
-    FleetConfig {
+    let spec = FleetSpec {
         jobs: args.usize_or("jobs", d.jobs),
-        iters: args.usize_or("iters", d.iters),
-        seed: args.u64_or("seed", d.seed),
         workers: args.usize_or("workers", d.workers),
-        failslow_boost: args.f64_or("boost", d.failslow_boost),
+        boost: args.f64_or("boost", d.failslow_boost),
         compare: args.bool_or("compare", d.compare),
         policy,
-        spare_frac: args.f64_or("spare", d.spare_frac),
+        spare: args.f64_or("spare", d.spare_frac),
         epoch_len: args.usize_or("epoch-len", d.epoch_len),
-        falcon: d.falcon,
-    }
+        stagger: args.f64_or("stagger", 0.0),
+    };
+    spec.to_config(args.usize_or("iters", d.iters), args.u64_or("seed", d.seed))
 }
 
 pub fn fleet(args: &Args) -> String {

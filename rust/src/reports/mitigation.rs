@@ -256,31 +256,35 @@ pub fn fig16(args: &Args) -> String {
 
 /// Fig 17 — compound computation + communication fail-slow handled by the
 /// multi-level planner (S3 at the congestion, S2 at the GPU degradation,
-/// restart once the impact passes the threshold).
+/// restart once the impact passes the threshold). The fault script is a
+/// declarative [`crate::scenario::ScenarioSpec`]; only the ski-rental
+/// overheads are figure-specific.
 pub fn fig17(args: &Args) -> String {
+    use crate::scenario::{FaultSpec, ScenarioSpec};
     let iters = args.usize_or("iters", 900);
-    let cfg = ParallelConfig::new(2, 4, 2);
+    let scenario = ScenarioSpec::new("fig17-compound", 2, 4, 2)
+        .nodes(8)
+        .seed(17)
+        .iters(iters)
+        .jitter(0.01)
+        .spike_p(0.0)
+        .fault(FaultSpec::new(
+            FailSlowKind::NetworkCongestion,
+            Target::Link(0, 1),
+            0.08,
+            1.2,
+            0.25,
+        ))
+        .fault(FaultSpec::new(
+            FailSlowKind::GpuDegradation,
+            Target::Gpu(2),
+            0.4,
+            1.2,
+            0.45,
+        ));
     let run = |mitigate: bool| {
-        let mut sim = TrainingSim::new(spec(cfg, 8, "gpt2-7b", 17));
-        sim.spec.jitter = 0.01;
-        let it = sim.ideal_iter_s;
-        let span = it * iters as f64;
-        sim.inject(vec![
-            FailSlowEvent {
-                kind: FailSlowKind::NetworkCongestion,
-                target: Target::Link(0, 1),
-                start: from_secs(span * 0.08),
-                duration: (span * 1.2 * 1e6) as u64,
-                scale: 0.25,
-            },
-            FailSlowEvent {
-                kind: FailSlowKind::GpuDegradation,
-                target: Target::Gpu(2),
-                start: from_secs(span * 0.4),
-                duration: (span * 1.2 * 1e6) as u64,
-                scale: 0.45,
-            },
-        ]);
+        let mut sim = scenario.build_sim().expect("fig17 scenario is valid");
+        let span = sim.ideal_iter_s * iters as f64;
         let mut fc = FalconConfig::default();
         fc.mitigate = mitigate;
         fc.overheads.adjust_topology_s = 25.0;

@@ -41,6 +41,10 @@ pub const ALL: &[&str] = &[
     "fig18", "tab6", "fig19", "fig20", "tab7",
 ];
 
+/// Beyond-paper report ids (kept out of [`ALL`] so `report all` stays the
+/// paper set; `falcon list` prints them under their own section).
+pub const BEYOND_PAPER: &[&str] = &["fleet", "fleet_cluster"];
+
 /// Generate one report by id. `args` supplies knobs like `--iters`,
 /// `--seed`, `--fast`.
 pub fn generate(id: &str, args: &Args) -> String {
@@ -71,7 +75,10 @@ pub fn generate(id: &str, args: &Args) -> String {
         // set; the `falcon fleet` subcommand is the primary entry).
         "fleet" => fleet::fleet(args),
         "fleet_cluster" => fleet::fleet_cluster(args),
-        other => format!("unknown report '{other}'; available: {ALL:?}\n"),
+        other => format!(
+            "unknown report '{other}'; available: {ALL:?} \
+             plus beyond-paper: {BEYOND_PAPER:?}\n"
+        ),
     }
 }
 
@@ -80,12 +87,22 @@ mod tests {
     use super::*;
 
     #[test]
-    fn registry_covers_all_ids() {
-        let args = Args::parse(["--fast".to_string()]);
-        // Smoke the cheapest reports end to end.
-        for id in ["fig8", "tab6"] {
+    fn registry_smokes_every_id_under_fast() {
+        // Every id in ALL plus the beyond-paper reports must render
+        // non-empty output without panicking. Knobs are dialed down so the
+        // whole sweep stays debug-test-friendly.
+        let args = Args::parse(
+            [
+                "--fast", "true", "--iters", "30", "--samples", "600", "--jobs", "6",
+                "--workers", "2",
+            ]
+            .iter()
+            .map(|s| s.to_string()),
+        );
+        for id in ALL.iter().chain(BEYOND_PAPER) {
             let out = generate(id, &args);
             assert!(out.len() > 50, "{id} produced: {out}");
+            assert!(!out.contains("unknown report"), "{id} fell through the registry");
         }
     }
 
@@ -93,5 +110,6 @@ mod tests {
     fn unknown_id_reports_availability() {
         let out = generate("fig99", &Args::parse([]));
         assert!(out.contains("unknown report"));
+        assert!(out.contains("fleet_cluster"), "beyond-paper ids must be mentioned: {out}");
     }
 }

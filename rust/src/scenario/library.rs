@@ -1,0 +1,161 @@
+//! Built-in named scenarios: the paper's §3 cases plus beyond-paper
+//! fail-slow shapes. `falcon run <name>` executes one; `falcon scenarios`
+//! lists them; every entry round-trips through the TOML renderer/parser.
+
+use crate::cluster::Policy;
+use crate::inject::{FailSlowKind, Target};
+
+use super::{FaultSpec, FleetSpec, ScenarioSpec};
+
+/// Names of the built-in scenarios, in presentation order.
+pub const LIBRARY: &[&str] = &[
+    "cpu-contention",
+    "gpu-thermal",
+    "net-congestion",
+    "compound-cascade",
+    "slow-leak-gpu",
+    "flapping-link",
+    "transient-spikes",
+    "cascading-leaf-congestion",
+    "multi-tenant-burst",
+    "fleet-breathing",
+];
+
+/// Build one library scenario by name (`None` for unknown names).
+pub fn find(name: &str) -> Option<ScenarioSpec> {
+    use FailSlowKind::{CpuContention as Cpu, GpuDegradation as Gpu, NetworkCongestion as Net};
+    Some(match name {
+        // --- the paper's §3 case studies ---------------------------------
+        "cpu-contention" => ScenarioSpec::new(name, 2, 1, 2)
+            .describe("paper case 1: two CPU-contention bursts on a 1-node GPT2-11B job")
+            .model("gpt2-11b")
+            .nodes(1)
+            .iters(600)
+            .seed(2)
+            .fault(FaultSpec::new(Cpu, Target::Node(0), 0.25, 0.12, 0.35))
+            .fault(FaultSpec::new(Cpu, Target::Node(0), 0.62, 0.10, 0.45)),
+        "gpu-thermal" => ScenarioSpec::new(name, 2, 1, 2)
+            .describe("paper case 2: one GPU thermally throttled to 80% for the early run")
+            .model("gpt2-11b")
+            .nodes(1)
+            .iters(500)
+            .seed(3)
+            .fault(FaultSpec::new(Gpu, Target::Gpu(0), 0.0, 0.3, 0.8)),
+        "net-congestion" => ScenarioSpec::new(name, 2, 4, 1)
+            .describe("paper case 3: two congestion episodes on a 4-node GPT2-7B job")
+            .nodes(4)
+            .iters(700)
+            .seed(4)
+            .fault(FaultSpec::new(Net, Target::Uplink(2), 0.27, 0.20, 0.45))
+            .fault(FaultSpec::new(Net, Target::Uplink(2), 0.75, 0.18, 0.25)),
+        "compound-cascade" => ScenarioSpec::new(name, 2, 4, 2)
+            .describe("compound comm+comp fail-slow: a congested link, then a degraded GPU")
+            .nodes(8)
+            .iters(400)
+            .seed(17)
+            .jitter(0.01)
+            .fault(FaultSpec::new(Net, Target::Link(0, 1), 0.08, 1.2, 0.25))
+            .fault(FaultSpec::new(Gpu, Target::Gpu(2), 0.4, 1.2, 0.45)),
+        // --- beyond-paper shapes -----------------------------------------
+        "slow-leak-gpu" => ScenarioSpec::new(name, 1, 8, 1)
+            .describe("slow leak: one GPU ramps from 90% down to 35% in ten steps")
+            .nodes(1)
+            .iters(400)
+            .seed(5)
+            .fault(FaultSpec::new(Gpu, Target::Gpu(3), 0.1, 0.8, 0.9).ramp(0.35, 10)),
+        "flapping-link" => ScenarioSpec::new(name, 2, 8, 1)
+            .describe("flapping uplink: eight short congestion bursts, evenly spaced")
+            .nodes(2)
+            .iters(500)
+            .seed(6)
+            .fault(FaultSpec::new(Net, Target::Uplink(1), 0.1, 0.05, 0.3).recurring(7, 0.11)),
+        "transient-spikes" => ScenarioSpec::new(name, 2, 4, 1)
+            .describe("six brief CPU bursts that BOCD+V should mostly dismiss as transient")
+            .nodes(1)
+            .iters(400)
+            .seed(7)
+            .fault(FaultSpec::new(Cpu, Target::Node(0), 0.2, 0.01, 0.5).recurring(5, 0.15)),
+        "cascading-leaf-congestion" => ScenarioSpec::new(name, 1, 16, 1)
+            .describe("leaf congestion cascade: four uplinks degrade in a worsening ladder")
+            .nodes(4)
+            .iters(500)
+            .seed(8)
+            .fault(FaultSpec::new(Net, Target::Uplink(0), 0.1, 0.25, 0.50))
+            .fault(FaultSpec::new(Net, Target::Uplink(1), 0.3, 0.25, 0.42))
+            .fault(FaultSpec::new(Net, Target::Uplink(2), 0.5, 0.25, 0.34))
+            .fault(FaultSpec::new(Net, Target::Uplink(3), 0.7, 0.25, 0.26)),
+        // --- fleet / shared-cluster scenarios ----------------------------
+        "multi-tenant-burst" => ScenarioSpec::new(name, 2, 4, 1)
+            .describe("24 tenants burst onto one packed shared cluster at heavy injection")
+            .iters(80)
+            .seed(11)
+            .with_fleet(FleetSpec {
+                jobs: 24,
+                workers: 0,
+                boost: 20.0,
+                compare: false,
+                policy: Some(Policy::Packed),
+                spare: 0.1,
+                epoch_len: 10,
+                stagger: 0.0,
+            }),
+        "fleet-breathing" => ScenarioSpec::new(name, 2, 4, 1)
+            .describe("staggered fleet on a shared cluster: jobs come and go, the pool breathes")
+            .iters(60)
+            .seed(12)
+            .with_fleet(FleetSpec {
+                jobs: 16,
+                workers: 0,
+                boost: 12.0,
+                compare: false,
+                policy: Some(Policy::StragglerAware),
+                spare: 0.25,
+                epoch_len: 10,
+                stagger: 2.0,
+            }),
+        _ => return None,
+    })
+}
+
+/// Build every library scenario.
+pub fn all() -> Vec<ScenarioSpec> {
+    LIBRARY.iter().map(|n| find(n).expect("library names build")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_library_scenario_is_valid() {
+        for spec in all() {
+            spec.validate().unwrap_or_else(|e| panic!("{}: {e}", spec.name));
+            assert!(!spec.description.is_empty(), "{} has no description", spec.name);
+            assert!(LIBRARY.contains(&spec.name.as_str()));
+        }
+        assert_eq!(LIBRARY.len(), 10);
+        assert!(find("no-such-scenario").is_none());
+    }
+
+    #[test]
+    fn slow_leak_gpu_runs_end_to_end() {
+        // The acceptance scenario: a named library entry executes through
+        // ScenarioSpec::run. Shortened horizon keeps the test quick.
+        let outcome = find("slow-leak-gpu").unwrap().iters(150).run().unwrap();
+        assert_eq!(outcome.scenario, "slow-leak-gpu");
+        assert_eq!(outcome.injected, 10, "ramp expands to ten staircase steps");
+        assert_eq!(outcome.timeline_thpt.len(), 150);
+        assert!(outcome.mean_thpt > 0.0);
+        assert!(outcome.mean_thpt < outcome.ideal_thpt, "the leak must cost throughput");
+    }
+
+    #[test]
+    fn fleet_breathing_runs_end_to_end() {
+        let outcome = find("fleet-breathing").unwrap().run().unwrap();
+        let fleet = outcome.fleet.expect("fleet scenario emits fleet results");
+        assert_eq!(fleet.jobs, 16);
+        assert_eq!(fleet.policy.as_deref(), Some("straggler-aware"));
+        assert!(!fleet.digest.is_empty());
+        assert_eq!(outcome.label, "fleet");
+    }
+}

@@ -1,0 +1,855 @@
+//! Declarative scenario API: one spec to drive the simulator, the fleet
+//! engine, and every report.
+//!
+//! A [`ScenarioSpec`] captures an entire experiment as *data*: the
+//! parallelism/topology of the job, the horizon, a fault **script**
+//! (multiple timed / recurring / flapping / ramping
+//! [`FailSlowEvent`]s rather than a single hardcoded preset), the
+//! detector + mitigation switch, and — for fleet scenarios — shared-cluster
+//! settings including per-job staggered start offsets so the node pool
+//! breathes.
+//!
+//! Three frontends produce specs:
+//!
+//! - the **builder API** ([`ScenarioSpec::new`] + chainable setters), used
+//!   by `main.rs` and the report generators;
+//! - a hand-rolled **TOML-subset parser** ([`ScenarioSpec::parse`], no
+//!   external crates — see `docs/SCENARIOS.md` for the grammar) with typed
+//!   [`ScenarioError`] line/field diagnostics, plus the inverse
+//!   [`ScenarioSpec::render`] (round-trip: `parse(render(s)) == s`);
+//! - the built-in **library** of named scenarios ([`LIBRARY`] /
+//!   [`find`]): the paper's §3 cases plus beyond-paper ones
+//!   (slow-leak GPU, flapping link, multi-tenant burst, ...).
+//!
+//! Execution is unified behind [`ScenarioSpec::run`], which returns a
+//! structured [`Outcome`] (episodes, detection latencies, mitigation
+//! actions, throughput timeline, fleet/arbitration tallies) with a
+//! hand-rolled [`Outcome::to_json`] and an ASCII [`Outcome::render`]
+//! layered on top. `falcon run <file|name>` is the CLI entry.
+
+pub mod library;
+mod outcome;
+mod parse;
+
+pub use library::{find, LIBRARY};
+pub use outcome::{FleetOutcome, Outcome, OutcomeAction};
+
+use crate::cluster::Policy;
+use crate::coordinator::{run_with_falcon, FalconConfig};
+use crate::fabric::GpuClass;
+use crate::fleet::FleetConfig;
+use crate::inject::{FailSlowEvent, FailSlowKind, Target};
+use crate::pipeline::{ModelDims, ParallelConfig, Workload};
+use crate::sim::{JobSpec, TrainingSim};
+use crate::simkit::from_secs;
+
+/// Model names [`ScenarioSpec`] accepts (the `ModelDims::gpt2` presets).
+pub const MODELS: &[&str] = &["gpt2-7b", "gpt2-11b", "gpt2-13b"];
+
+/// Typed scenario error with line/field diagnostics.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ScenarioError {
+    /// Syntax error while parsing a spec file (1-based line number).
+    Parse { line: usize, msg: String },
+    /// Semantic error on one field of the spec.
+    Field { field: String, msg: String },
+}
+
+impl ScenarioError {
+    pub(crate) fn field(field: &str, msg: impl Into<String>) -> ScenarioError {
+        ScenarioError::Field { field: field.to_string(), msg: msg.into() }
+    }
+}
+
+impl std::fmt::Display for ScenarioError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ScenarioError::Parse { line, msg } => {
+                write!(f, "scenario parse error, line {line}: {msg}")
+            }
+            ScenarioError::Field { field, msg } => write!(f, "scenario field '{field}': {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ScenarioError {}
+
+/// Job shape: parallel strategy, hardware, model, and noise profile.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TopologySpec {
+    pub tp: usize,
+    pub dp: usize,
+    pub pp: usize,
+    pub gpus_per_node: usize,
+    pub gpu_class: GpuClass,
+    /// One of [`MODELS`].
+    pub model: String,
+    /// Micro-batches per DP replica per iteration (before S2 rebalance).
+    pub microbatches: usize,
+    pub mfu: f64,
+    /// Iteration-time measurement jitter (CoV of healthy iterations).
+    pub jitter: f64,
+    /// Per-iteration transient stall-spike probability.
+    pub spike_p: f64,
+}
+
+impl Default for TopologySpec {
+    fn default() -> Self {
+        TopologySpec {
+            tp: 2,
+            dp: 4,
+            pp: 1,
+            gpus_per_node: 8,
+            gpu_class: GpuClass::H800,
+            model: "gpt2-7b".to_string(),
+            microbatches: 8,
+            mfu: 0.42,
+            jitter: 0.015,
+            spike_p: 0.01,
+        }
+    }
+}
+
+/// Horizon and control knobs.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RunSpec {
+    /// Training iterations (the horizon; fault times are fractions of it).
+    pub iters: usize,
+    pub seed: u64,
+    /// Run FALCON-MITIGATE (false = detection-only probe mode).
+    pub mitigate: bool,
+}
+
+impl Default for RunSpec {
+    fn default() -> Self {
+        RunSpec { iters: 300, seed: 1, mitigate: true }
+    }
+}
+
+/// One scripted fault: a timed fail-slow episode, optionally recurring
+/// (flapping) and/or ramping in severity (slow leak).
+///
+/// Times are **fractions of the horizon** (`ideal_iter_s * iters`), so a
+/// scenario keeps its shape when the horizon changes. `start + duration`
+/// may exceed 1.0 (the episode outlives the run).
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultSpec {
+    pub kind: FailSlowKind,
+    pub target: Target,
+    /// Onset, as a fraction of the horizon.
+    pub start: f64,
+    /// Duration of one occurrence, as a fraction of the horizon.
+    pub duration: f64,
+    /// Residual performance scale in (0, 1]; lower = more severe. With a
+    /// ramp, the scale of the FIRST step.
+    pub scale: f64,
+    /// Additional occurrences after the first (0 = one-shot). A short
+    /// duration with several repeats models a flapping component.
+    pub repeat: usize,
+    /// Start-to-start spacing of occurrences (fraction of horizon).
+    pub period: f64,
+    /// Slow leak: the scale ramps from `scale` to this value across
+    /// `ramp_steps` equal steps spanning `duration`.
+    pub ramp_to: Option<f64>,
+    pub ramp_steps: usize,
+}
+
+impl FaultSpec {
+    pub fn new(kind: FailSlowKind, target: Target, start: f64, duration: f64, scale: f64) -> Self {
+        FaultSpec {
+            kind,
+            target,
+            start,
+            duration,
+            scale,
+            repeat: 0,
+            period: 0.0,
+            ramp_to: None,
+            ramp_steps: 8,
+        }
+    }
+
+    /// Make the fault recur `repeat` more times, `period` apart.
+    pub fn recurring(mut self, repeat: usize, period: f64) -> Self {
+        self.repeat = repeat;
+        self.period = period;
+        self
+    }
+
+    /// Ramp the severity from `self.scale` to `to` in `steps` steps.
+    pub fn ramp(mut self, to: f64, steps: usize) -> Self {
+        self.ramp_to = Some(to);
+        self.ramp_steps = steps;
+        self
+    }
+
+    /// Expand into concrete events on a horizon of `horizon_s` seconds.
+    ///
+    /// Plain faults use the report generators' exact arithmetic
+    /// (`from_secs` start, truncated-microsecond duration) so rewired
+    /// reports reproduce their historical event streams bit for bit.
+    /// Ramps are emitted as a staircase of back-to-back events whose
+    /// boundaries share the same microsecond, so each step's revert is
+    /// immediately overwritten by the next step's apply.
+    pub fn expand(&self, horizon_s: f64) -> Vec<FailSlowEvent> {
+        let mut out = Vec::new();
+        for o in 0..=self.repeat {
+            let start_s = (self.start + o as f64 * self.period) * horizon_s;
+            let dur_s = self.duration * horizon_s;
+            match self.ramp_to {
+                None => out.push(FailSlowEvent {
+                    kind: self.kind,
+                    target: self.target,
+                    start: from_secs(start_s),
+                    duration: (dur_s * 1e6) as u64,
+                    scale: self.scale,
+                }),
+                Some(to) => {
+                    let steps = self.ramp_steps.max(2);
+                    let step_s = dur_s / steps as f64;
+                    for i in 0..steps {
+                        let b0 = from_secs(start_s + i as f64 * step_s);
+                        let b1 = from_secs(start_s + (i + 1) as f64 * step_s);
+                        if b1 <= b0 {
+                            continue;
+                        }
+                        // Last step lands exactly on `to` (float-drift-free).
+                        let scale = if i + 1 == steps {
+                            to
+                        } else {
+                            let f = i as f64 / (steps - 1) as f64;
+                            self.scale + (to - self.scale) * f
+                        };
+                        out.push(FailSlowEvent {
+                            kind: self.kind,
+                            target: self.target,
+                            start: b0,
+                            duration: b1 - b0,
+                            scale,
+                        });
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Fleet/shared-cluster settings. When present, the scenario runs the
+/// fleet engine (jobs drawn from the fleet palette, faults from the
+/// §3-calibrated injection model) instead of one scripted job.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FleetSpec {
+    pub jobs: usize,
+    /// Worker threads (0 = one per core).
+    pub workers: usize,
+    /// Multiplier on the §3 per-job fail-slow probabilities.
+    pub boost: f64,
+    /// Re-run injected jobs unmitigated for the delta (private mode only).
+    pub compare: bool,
+    /// `Some(_)` = one shared cluster under this policy; `None` = private
+    /// clusters.
+    pub policy: Option<Policy>,
+    /// Healthy-node headroom above peak demand (0.0 saturates the pool).
+    pub spare: f64,
+    /// Iterations per arbitration epoch (shared mode).
+    pub epoch_len: usize,
+    /// Per-job staggered start offsets, as a multiple of the per-job epoch
+    /// count: job starts spread over `stagger * ceil(iters / epoch_len)`
+    /// epochs, so jobs start/finish at different times and the node pool
+    /// breathes (shared mode; 0.0 = everyone starts together).
+    pub stagger: f64,
+}
+
+impl Default for FleetSpec {
+    fn default() -> Self {
+        let d = FleetConfig::default();
+        FleetSpec {
+            jobs: d.jobs,
+            workers: d.workers,
+            boost: d.failslow_boost,
+            compare: d.compare,
+            policy: d.policy,
+            spare: d.spare_frac,
+            epoch_len: d.epoch_len,
+            stagger: 0.0,
+        }
+    }
+}
+
+impl FleetSpec {
+    /// Lower this spec onto the fleet engine's configuration.
+    pub fn to_config(&self, iters: usize, seed: u64) -> FleetConfig {
+        FleetConfig {
+            jobs: self.jobs,
+            iters,
+            seed,
+            workers: self.workers,
+            failslow_boost: self.boost,
+            compare: self.compare,
+            policy: self.policy,
+            spare_frac: self.spare,
+            epoch_len: self.epoch_len,
+            stagger: self.stagger,
+            falcon: FalconConfig::default(),
+        }
+    }
+}
+
+/// One declaratively specified experiment. See the module docs.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScenarioSpec {
+    pub name: String,
+    pub description: String,
+    pub topology: TopologySpec,
+    pub run: RunSpec,
+    pub faults: Vec<FaultSpec>,
+    pub fleet: Option<FleetSpec>,
+}
+
+impl ScenarioSpec {
+    /// New spec with the given parallel strategy and library defaults
+    /// everywhere else (the `demo_spec` profile).
+    pub fn new(name: &str, tp: usize, dp: usize, pp: usize) -> Self {
+        ScenarioSpec {
+            name: name.to_string(),
+            description: String::new(),
+            topology: TopologySpec { tp, dp, pp, ..TopologySpec::default() },
+            run: RunSpec::default(),
+            faults: Vec::new(),
+            fleet: None,
+        }
+    }
+
+    // --- builder ----------------------------------------------------------
+
+    pub fn describe(mut self, d: &str) -> Self {
+        self.description = d.to_string();
+        self
+    }
+
+    /// Spread the job across `n` nodes (sets `gpus_per_node` to
+    /// `ceil(world / n)`, the report generators' convention).
+    pub fn nodes(mut self, n: usize) -> Self {
+        self.topology.gpus_per_node = self.world().div_ceil(n.max(1)).max(1);
+        self
+    }
+
+    pub fn gpus_per_node(mut self, g: usize) -> Self {
+        self.topology.gpus_per_node = g;
+        self
+    }
+
+    pub fn model(mut self, m: &str) -> Self {
+        self.topology.model = m.to_string();
+        self
+    }
+
+    pub fn gpu_class(mut self, c: GpuClass) -> Self {
+        self.topology.gpu_class = c;
+        self
+    }
+
+    pub fn microbatches(mut self, m: usize) -> Self {
+        self.topology.microbatches = m;
+        self
+    }
+
+    pub fn mfu(mut self, v: f64) -> Self {
+        self.topology.mfu = v;
+        self
+    }
+
+    pub fn jitter(mut self, v: f64) -> Self {
+        self.topology.jitter = v;
+        self
+    }
+
+    pub fn spike_p(mut self, v: f64) -> Self {
+        self.topology.spike_p = v;
+        self
+    }
+
+    pub fn iters(mut self, n: usize) -> Self {
+        self.run.iters = n;
+        self
+    }
+
+    pub fn seed(mut self, s: u64) -> Self {
+        self.run.seed = s;
+        self
+    }
+
+    pub fn mitigate(mut self, b: bool) -> Self {
+        self.run.mitigate = b;
+        self
+    }
+
+    pub fn fault(mut self, f: FaultSpec) -> Self {
+        self.faults.push(f);
+        self
+    }
+
+    pub fn with_fleet(mut self, f: FleetSpec) -> Self {
+        self.fleet = Some(f);
+        self
+    }
+
+    // --- derived ----------------------------------------------------------
+
+    pub fn cfg(&self) -> ParallelConfig {
+        ParallelConfig::new(self.topology.tp, self.topology.dp, self.topology.pp)
+    }
+
+    pub fn world(&self) -> usize {
+        self.topology.tp * self.topology.dp * self.topology.pp
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.world().div_ceil(self.topology.gpus_per_node.max(1))
+    }
+
+    // --- validation -------------------------------------------------------
+
+    /// Check every field; returns the first problem found.
+    pub fn validate(&self) -> Result<(), ScenarioError> {
+        let t = &self.topology;
+        if self.name.is_empty() {
+            return Err(ScenarioError::field("name", "must not be empty"));
+        }
+        for (field, s) in [("name", &self.name), ("description", &self.description)] {
+            if s.contains('"') || s.contains('\n') {
+                return Err(ScenarioError::field(
+                    field,
+                    "must not contain quotes or newlines (the TOML renderer \
+                     does not escape them)",
+                ));
+            }
+        }
+        if t.tp == 0 || t.dp == 0 || t.pp == 0 {
+            return Err(ScenarioError::field("topology", "tp/dp/pp must all be >= 1"));
+        }
+        if t.gpus_per_node == 0 {
+            return Err(ScenarioError::field("topology.gpus_per_node", "must be >= 1"));
+        }
+        if !MODELS.contains(&t.model.as_str()) {
+            return Err(ScenarioError::field(
+                "topology.model",
+                format!("unknown model '{}' (want one of {MODELS:?})", t.model),
+            ));
+        }
+        if t.microbatches == 0 {
+            return Err(ScenarioError::field("topology.microbatches", "must be >= 1"));
+        }
+        if !(t.mfu > 0.0 && t.mfu <= 1.0) {
+            return Err(ScenarioError::field("topology.mfu", "must be in (0, 1]"));
+        }
+        if self.run.iters == 0 {
+            return Err(ScenarioError::field("run.iters", "must be >= 1"));
+        }
+        if let Some(fs) = &self.fleet {
+            if !self.faults.is_empty() {
+                return Err(ScenarioError::field(
+                    "fault",
+                    "fleet scenarios draw faults from the calibrated injection \
+                     model; remove the [[fault]] entries",
+                ));
+            }
+            if fs.jobs == 0 {
+                return Err(ScenarioError::field("fleet.jobs", "must be >= 1"));
+            }
+            if fs.epoch_len == 0 {
+                return Err(ScenarioError::field("fleet.epoch_len", "must be >= 1"));
+            }
+            if fs.spare < 0.0 || fs.stagger < 0.0 || fs.boost < 0.0 {
+                return Err(ScenarioError::field(
+                    "fleet",
+                    "spare/stagger/boost must be >= 0",
+                ));
+            }
+            if !self.run.mitigate {
+                return Err(ScenarioError::field(
+                    "run.mitigate",
+                    "fleet scenarios always mitigate (the engine forces the \
+                     per-mode behavior); drop mitigate = false",
+                ));
+            }
+            return Ok(());
+        }
+        let nodes = self.n_nodes();
+        let gpus = nodes * t.gpus_per_node;
+        for (i, f) in self.faults.iter().enumerate() {
+            let field = format!("fault[{i}]");
+            if !(f.scale > 0.0 && f.scale <= 1.0) {
+                return Err(ScenarioError::field(&field, "scale must be in (0, 1]"));
+            }
+            if f.start < 0.0 || f.duration <= 0.0 {
+                return Err(ScenarioError::field(
+                    &field,
+                    "start must be >= 0 and duration > 0 (fractions of the horizon)",
+                ));
+            }
+            if f.repeat > 0 && f.period <= 0.0 {
+                return Err(ScenarioError::field(&field, "recurring faults need period > 0"));
+            }
+            if f.repeat > 0 && f.period < f.duration {
+                // The sim's apply/revert event semantics reset the target
+                // to healthy when ANY occurrence ends, so overlapping
+                // occurrences would silently truncate the script.
+                return Err(ScenarioError::field(
+                    &field,
+                    "recurring occurrences must not overlap: need period >= duration",
+                ));
+            }
+            if let Some(to) = f.ramp_to {
+                if !(to > 0.0 && to <= 1.0) {
+                    return Err(ScenarioError::field(&field, "ramp_to must be in (0, 1]"));
+                }
+                if f.ramp_steps < 2 {
+                    return Err(ScenarioError::field(&field, "ramp needs ramp_steps >= 2"));
+                }
+            }
+            let ok = match (f.kind, f.target) {
+                (FailSlowKind::GpuDegradation, Target::Gpu(g)) => g < gpus,
+                (FailSlowKind::CpuContention, Target::Node(n)) => n < nodes,
+                (FailSlowKind::NetworkCongestion, Target::Uplink(u)) => u < nodes,
+                (FailSlowKind::NetworkCongestion, Target::Link(a, b)) => {
+                    a < nodes && b < nodes && a != b
+                }
+                _ => {
+                    return Err(ScenarioError::field(
+                        &field,
+                        format!("kind {:?} cannot target {:?}", f.kind, f.target),
+                    ))
+                }
+            };
+            if !ok {
+                return Err(ScenarioError::field(
+                    &field,
+                    format!(
+                        "target {:?} out of range for {} nodes x {} GPUs/node",
+                        f.target, nodes, t.gpus_per_node
+                    ),
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    // --- execution --------------------------------------------------------
+
+    /// The simulator job spec this scenario describes.
+    pub fn job_spec(&self) -> JobSpec {
+        let t = &self.topology;
+        JobSpec {
+            cfg: self.cfg(),
+            wl: Workload {
+                model: ModelDims::gpt2(&t.model),
+                micro_batch: 1,
+                microbatches: t.microbatches,
+            },
+            gpus_per_node: t.gpus_per_node,
+            gpu_class: t.gpu_class,
+            mfu: t.mfu,
+            jitter: t.jitter,
+            spike_p: t.spike_p,
+            seed: self.run.seed,
+        }
+    }
+
+    /// Expand the fault script against a horizon of `horizon_s` seconds.
+    pub fn events(&self, horizon_s: f64) -> Vec<FailSlowEvent> {
+        self.faults.iter().flat_map(|f| f.expand(horizon_s)).collect()
+    }
+
+    /// Validate, build the simulated job, and inject the fault script.
+    pub fn build_sim(&self) -> Result<TrainingSim, ScenarioError> {
+        self.validate()?;
+        if self.fleet.is_some() {
+            return Err(ScenarioError::field(
+                "fleet",
+                "fleet scenarios run through ScenarioSpec::run, not build_sim",
+            ));
+        }
+        let mut sim = TrainingSim::new(self.job_spec());
+        let horizon_s = sim.ideal_iter_s * self.run.iters as f64;
+        sim.inject(self.events(horizon_s));
+        Ok(sim)
+    }
+
+    /// The fleet configuration, when this is a fleet scenario.
+    pub fn fleet_config(&self) -> Option<FleetConfig> {
+        self.fleet.as_ref().map(|fs| fs.to_config(self.run.iters, self.run.seed))
+    }
+
+    /// Execute the scenario end to end and return the structured outcome.
+    ///
+    /// Single-job scenarios run [`TrainingSim`] under a
+    /// [`crate::coordinator::Falcon`]; fleet scenarios run
+    /// [`crate::fleet::run_fleet`]. Both paths land in the same
+    /// [`Outcome`].
+    pub fn run(&self) -> Result<Outcome, ScenarioError> {
+        self.validate()?;
+        if let Some(cfg) = self.fleet_config() {
+            let report = crate::fleet::run_fleet(&cfg);
+            return Ok(Outcome::from_fleet(self, &report));
+        }
+        let mut sim = self.build_sim()?;
+        let injected = sim.events.clone();
+        let falcon = run_with_falcon(
+            &mut sim,
+            FalconConfig { mitigate: self.run.mitigate, ..FalconConfig::default() },
+            self.run.iters,
+        );
+        Ok(Outcome::from_single(self, &sim, &falcon, &injected))
+    }
+
+    // --- text frontends ---------------------------------------------------
+
+    /// Parse a spec from the TOML subset described in `docs/SCENARIOS.md`.
+    pub fn parse(src: &str) -> Result<ScenarioSpec, ScenarioError> {
+        parse::parse(src)
+    }
+
+    /// Render back to the TOML subset; `parse(render(spec)) == spec`.
+    pub fn render(&self) -> String {
+        parse::render(self)
+    }
+}
+
+// --- token helpers shared by the parser, renderer, and outcome -------------
+
+pub(crate) fn kind_token(k: FailSlowKind) -> &'static str {
+    match k {
+        FailSlowKind::CpuContention => "cpu",
+        FailSlowKind::GpuDegradation => "gpu",
+        FailSlowKind::NetworkCongestion => "net",
+    }
+}
+
+pub(crate) fn parse_kind(s: &str) -> Option<FailSlowKind> {
+    match s {
+        "cpu" => Some(FailSlowKind::CpuContention),
+        "gpu" => Some(FailSlowKind::GpuDegradation),
+        "net" => Some(FailSlowKind::NetworkCongestion),
+        _ => None,
+    }
+}
+
+pub(crate) fn target_token(t: Target) -> String {
+    match t {
+        Target::Gpu(g) => format!("gpu:{g}"),
+        Target::Node(n) => format!("node:{n}"),
+        Target::Uplink(u) => format!("uplink:{u}"),
+        Target::Link(a, b) => format!("link:{a}-{b}"),
+    }
+}
+
+pub(crate) fn parse_target(s: &str) -> Option<Target> {
+    let (what, rest) = s.split_once(':')?;
+    match what {
+        "gpu" => rest.parse().ok().map(Target::Gpu),
+        "node" => rest.parse().ok().map(Target::Node),
+        "uplink" => rest.parse().ok().map(Target::Uplink),
+        "link" => {
+            let (a, b) = rest.split_once('-')?;
+            Some(Target::Link(a.parse().ok()?, b.parse().ok()?))
+        }
+        _ => None,
+    }
+}
+
+pub(crate) fn gpu_class_token(c: GpuClass) -> &'static str {
+    match c {
+        GpuClass::H800 => "h800",
+        GpuClass::A100 => "a100",
+    }
+}
+
+pub(crate) fn parse_gpu_class(s: &str) -> Option<GpuClass> {
+    match s {
+        "h800" => Some(GpuClass::H800),
+        "a100" => Some(GpuClass::A100),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_produces_valid_specs() {
+        let spec = ScenarioSpec::new("t", 2, 4, 1)
+            .describe("test")
+            .nodes(1)
+            .iters(100)
+            .seed(9)
+            .fault(FaultSpec::new(
+                FailSlowKind::GpuDegradation,
+                Target::Gpu(0),
+                0.2,
+                0.3,
+                0.5,
+            ));
+        assert!(spec.validate().is_ok());
+        assert_eq!(spec.world(), 8);
+        assert_eq!(spec.n_nodes(), 1);
+        assert_eq!(spec.topology.gpus_per_node, 8);
+    }
+
+    #[test]
+    fn validation_rejects_bad_specs() {
+        let base = ScenarioSpec::new("t", 1, 4, 1).nodes(1);
+        // Mismatched kind/target.
+        let bad = base.clone().fault(FaultSpec::new(
+            FailSlowKind::GpuDegradation,
+            Target::Node(0),
+            0.1,
+            0.1,
+            0.5,
+        ));
+        assert!(matches!(bad.validate(), Err(ScenarioError::Field { .. })));
+        // Out-of-range target.
+        let bad = base.clone().fault(FaultSpec::new(
+            FailSlowKind::CpuContention,
+            Target::Node(5),
+            0.1,
+            0.1,
+            0.5,
+        ));
+        assert!(bad.validate().is_err());
+        // Bad scale.
+        let bad = base.clone().fault(FaultSpec::new(
+            FailSlowKind::GpuDegradation,
+            Target::Gpu(0),
+            0.1,
+            0.1,
+            1.5,
+        ));
+        assert!(bad.validate().is_err());
+        // Unknown model.
+        assert!(base.clone().model("gpt5").validate().is_err());
+        // Recurring without period.
+        let bad = base.fault(
+            FaultSpec::new(FailSlowKind::GpuDegradation, Target::Gpu(0), 0.1, 0.1, 0.5)
+                .recurring(3, 0.0),
+        );
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn expansion_matches_adhoc_report_construction() {
+        // The fig2 pattern: the scenario expansion must produce the exact
+        // events the report generator used to hand-assemble, so rewired
+        // reports keep bit-identical traces.
+        let iters = 600usize;
+        let spec = find("cpu-contention").unwrap().iters(iters);
+        let sim = spec.build_sim().unwrap();
+        let it = sim.ideal_iter_s;
+        let expect = vec![
+            FailSlowEvent {
+                kind: FailSlowKind::CpuContention,
+                target: Target::Node(0),
+                start: from_secs(it * iters as f64 * 0.25),
+                duration: (it * iters as f64 * 0.12 * 1e6) as u64,
+                scale: 0.35,
+            },
+            FailSlowEvent {
+                kind: FailSlowKind::CpuContention,
+                target: Target::Node(0),
+                start: from_secs(it * iters as f64 * 0.62),
+                duration: (it * iters as f64 * 0.10 * 1e6) as u64,
+                scale: 0.45,
+            },
+        ];
+        assert_eq!(sim.events, expect);
+    }
+
+    #[test]
+    fn recurring_fault_expands_to_spaced_events() {
+        let f = FaultSpec::new(
+            FailSlowKind::NetworkCongestion,
+            Target::Uplink(1),
+            0.1,
+            0.05,
+            0.3,
+        )
+        .recurring(3, 0.2);
+        let evs = f.expand(1000.0);
+        assert_eq!(evs.len(), 4);
+        for (i, ev) in evs.iter().enumerate() {
+            assert_eq!(ev.start, from_secs((0.1 + 0.2 * i as f64) * 1000.0));
+            assert_eq!(ev.scale, 0.3);
+        }
+        // Occurrences do not overlap: each ends before the next starts.
+        for w in evs.windows(2) {
+            assert!(w[0].end() < w[1].start);
+        }
+    }
+
+    #[test]
+    fn ramp_expands_to_contiguous_staircase() {
+        let f = FaultSpec::new(
+            FailSlowKind::GpuDegradation,
+            Target::Gpu(0),
+            0.1,
+            0.5,
+            0.9,
+        )
+        .ramp(0.3, 5);
+        let evs = f.expand(2000.0);
+        assert_eq!(evs.len(), 5);
+        // Severity strictly worsens, from `scale` to `ramp_to`.
+        assert_eq!(evs[0].scale, 0.9);
+        assert_eq!(evs[4].scale, 0.3);
+        for w in evs.windows(2) {
+            assert!(w[1].scale < w[0].scale);
+            // Back to back: step i ends exactly where step i+1 starts, so
+            // the revert of one is overwritten by the apply of the next.
+            assert_eq!(w[0].end(), w[1].start);
+        }
+    }
+
+    #[test]
+    fn single_job_scenario_runs_end_to_end() {
+        let spec = ScenarioSpec::new("e2e", 1, 4, 1)
+            .nodes(1)
+            .iters(120)
+            .seed(33)
+            .fault(FaultSpec::new(
+                FailSlowKind::GpuDegradation,
+                Target::Gpu(0),
+                0.2,
+                0.6,
+                0.4,
+            ));
+        let outcome = spec.run().unwrap();
+        assert_eq!(outcome.iters, 120);
+        assert_eq!(outcome.injected, 1);
+        assert_eq!(outcome.timeline_thpt.len(), 120);
+        assert!(outcome.mean_thpt > 0.0);
+        // Deterministic: the same spec yields the identical JSON.
+        let again = spec.run().unwrap();
+        assert_eq!(outcome.to_json().to_string(), again.to_json().to_string());
+    }
+
+    #[test]
+    fn token_round_trips() {
+        for t in [Target::Gpu(3), Target::Node(1), Target::Uplink(7), Target::Link(2, 5)] {
+            assert_eq!(parse_target(&target_token(t)), Some(t));
+        }
+        for k in [
+            FailSlowKind::CpuContention,
+            FailSlowKind::GpuDegradation,
+            FailSlowKind::NetworkCongestion,
+        ] {
+            assert_eq!(parse_kind(kind_token(k)), Some(k));
+        }
+        for c in [GpuClass::H800, GpuClass::A100] {
+            assert_eq!(parse_gpu_class(gpu_class_token(c)), Some(c));
+        }
+        assert_eq!(parse_target("disk:0"), None);
+        assert_eq!(parse_kind("rain"), None);
+    }
+}

@@ -1,0 +1,387 @@
+//! Structured scenario results: one [`Outcome`] shape for single-job and
+//! fleet scenarios, with hand-rolled JSON serialization and the existing
+//! ASCII rendering layered on top.
+
+use crate::coordinator::{ActionKind, Falcon};
+use crate::fleet::{match_detection_latencies, FleetReport};
+use crate::inject::FailSlowEvent;
+use crate::sim::TrainingSim;
+use crate::util::json::Json;
+use crate::util::{plot, stats};
+
+use super::ScenarioSpec;
+
+/// One coordinator action, flattened for logs and JSON.
+#[derive(Clone, Debug, PartialEq)]
+pub struct OutcomeAction {
+    pub t_min: f64,
+    pub iter: usize,
+    /// Compact token, e.g. `episode_opened`, `diagnosed:gpu`,
+    /// `applied:S2:AdjustMicrobatch`.
+    pub kind: String,
+}
+
+/// Fleet-level results (None for single-job scenarios). Wall-clock fields
+/// are deliberately excluded so the outcome is deterministic for a fixed
+/// spec.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FleetOutcome {
+    pub jobs: usize,
+    pub gpus: usize,
+    pub jobs_with_failslow: usize,
+    pub jobs_flagged: usize,
+    pub false_positives: usize,
+    pub missed: usize,
+    pub mean_slowdown: f64,
+    pub mitigated_over_ignored: f64,
+    pub compared_jobs: usize,
+    /// FNV fingerprint of the per-job results (hex).
+    pub digest: String,
+    /// Shared-cluster policy name (None = private clusters).
+    pub policy: Option<String>,
+    pub cluster_nodes: usize,
+    pub s3_requests: usize,
+    pub s3_granted: usize,
+    pub s3_denied: usize,
+    pub s4_requests: usize,
+    pub s4_granted: usize,
+    pub s4_in_place: usize,
+    pub queued_decisions: usize,
+    pub preempted: usize,
+    pub cancelled: usize,
+    pub denial_rate: f64,
+    pub mean_contention_scale: f64,
+    pub grant_wait_p50_s: f64,
+    pub grant_wait_p99_s: f64,
+}
+
+/// Structured result of [`ScenarioSpec::run`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct Outcome {
+    pub scenario: String,
+    /// Parallel strategy label (single-job) or `fleet`.
+    pub label: String,
+    pub nodes: usize,
+    pub world: usize,
+    pub iters: usize,
+    /// Healthy-cluster throughput, iters/s (fleet: mean across jobs).
+    pub ideal_thpt: f64,
+    /// Achieved mean throughput, iters/s (fleet: mean across jobs).
+    pub mean_thpt: f64,
+    /// Injected fail-slow events (fleet: across all jobs).
+    pub injected: usize,
+    /// Verified episodes the detector(s) opened.
+    pub episodes_detected: usize,
+    /// Seconds from injected onset to verified onset, per matched episode.
+    pub detection_latency_s: Vec<f64>,
+    /// Coordinator action log (empty for fleet scenarios).
+    pub actions: Vec<OutcomeAction>,
+    pub timeline_mins: Vec<f64>,
+    pub timeline_thpt: Vec<f64>,
+    pub fleet: Option<FleetOutcome>,
+}
+
+fn action_token(what: &ActionKind) -> String {
+    match what {
+        ActionKind::EpisodeOpened => "episode_opened".to_string(),
+        ActionKind::EpisodeClosed => "episode_closed".to_string(),
+        ActionKind::Diagnosed(d) => format!("diagnosed:{}", super::kind_token(d.kind)),
+        ActionKind::Applied(s) => format!("applied:{}", s.name()),
+        ActionKind::Requested(s) => format!("requested:{}", s.name()),
+        ActionKind::Granted(s) => format!("granted:{}", s.name()),
+        ActionKind::Denied(s) => format!("denied:{}", s.name()),
+    }
+}
+
+impl Outcome {
+    pub(crate) fn from_single(
+        spec: &ScenarioSpec,
+        sim: &TrainingSim,
+        falcon: &Falcon,
+        injected: &[FailSlowEvent],
+    ) -> Outcome {
+        let latencies = match_detection_latencies(injected, &falcon.episode_opens());
+        Outcome {
+            scenario: spec.name.clone(),
+            label: spec.cfg().label(),
+            nodes: spec.n_nodes(),
+            world: spec.world(),
+            iters: spec.run.iters,
+            ideal_thpt: 1.0 / sim.ideal_iter_s,
+            mean_thpt: sim.timeline.mean_throughput(),
+            injected: injected.len(),
+            episodes_detected: falcon.detector.episodes.len(),
+            detection_latency_s: latencies,
+            actions: falcon
+                .actions
+                .iter()
+                .map(|a| OutcomeAction {
+                    t_min: crate::simkit::mins(a.at),
+                    iter: a.iter,
+                    kind: action_token(&a.what),
+                })
+                .collect(),
+            timeline_mins: sim.timeline.xs_mins(),
+            timeline_thpt: sim.timeline.ys(),
+            fleet: None,
+        }
+    }
+
+    pub(crate) fn from_fleet(spec: &ScenarioSpec, report: &FleetReport) -> Outcome {
+        let ideals: Vec<f64> = report.results.iter().map(|r| r.ideal_thpt).collect();
+        let means: Vec<f64> = report.results.iter().map(|r| r.mean_thpt).collect();
+        let pooled: Vec<f64> = report
+            .results
+            .iter()
+            .flat_map(|r| r.detection_latency_s.iter().copied())
+            .collect();
+        let c = report.cluster.as_ref();
+        let fleet = FleetOutcome {
+            jobs: report.jobs,
+            gpus: report.gpus,
+            jobs_with_failslow: report.jobs_with_failslow,
+            jobs_flagged: report.jobs_flagged,
+            false_positives: report.false_positives,
+            missed: report.missed,
+            mean_slowdown: report.mean_slowdown,
+            mitigated_over_ignored: report.mitigated_over_ignored,
+            compared_jobs: report.compared_jobs,
+            digest: format!("{:016x}", report.digest()),
+            policy: c.map(|c| c.policy.name().to_string()),
+            cluster_nodes: c.map_or(0, |c| c.nodes),
+            s3_requests: c.map_or(0, |c| c.s3_requests),
+            s3_granted: c.map_or(0, |c| c.s3_granted),
+            s3_denied: c.map_or(0, |c| c.s3_denied),
+            s4_requests: c.map_or(0, |c| c.s4_requests),
+            s4_granted: c.map_or(0, |c| c.s4_granted),
+            s4_in_place: c.map_or(0, |c| c.s4_in_place),
+            queued_decisions: c.map_or(0, |c| c.queued_decisions),
+            preempted: c.map_or(0, |c| c.preempted),
+            cancelled: c.map_or(0, |c| c.cancelled),
+            denial_rate: c.map_or(0.0, |c| c.denial_rate()),
+            mean_contention_scale: c.map_or(1.0, |c| c.mean_contention_scale),
+            grant_wait_p50_s: c.map_or(0.0, |c| c.grant_wait.p50),
+            grant_wait_p99_s: c.map_or(0.0, |c| c.grant_wait.p99),
+        };
+        Outcome {
+            scenario: spec.name.clone(),
+            label: "fleet".to_string(),
+            nodes: c.map_or(0, |c| c.nodes),
+            world: report.gpus,
+            iters: report.iters,
+            ideal_thpt: stats::mean(&ideals),
+            mean_thpt: stats::mean(&means),
+            injected: report.episodes_injected,
+            episodes_detected: report.episodes_detected,
+            detection_latency_s: pooled,
+            actions: Vec::new(),
+            timeline_mins: Vec::new(),
+            timeline_thpt: Vec::new(),
+            fleet: Some(fleet),
+        }
+    }
+
+    /// Serialize with the hand-rolled JSON substrate. Deterministic for a
+    /// fixed spec (no wall-clock fields).
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("scenario", Json::str(&self.scenario)),
+            ("label", Json::str(&self.label)),
+            ("nodes", Json::Num(self.nodes as f64)),
+            ("world", Json::Num(self.world as f64)),
+            ("iters", Json::Num(self.iters as f64)),
+            ("ideal_thpt", Json::Num(self.ideal_thpt)),
+            ("mean_thpt", Json::Num(self.mean_thpt)),
+            ("injected", Json::Num(self.injected as f64)),
+            ("episodes_detected", Json::Num(self.episodes_detected as f64)),
+            ("detection_latency_s", Json::arr_f64(&self.detection_latency_s)),
+            (
+                "actions",
+                Json::Arr(
+                    self.actions
+                        .iter()
+                        .map(|a| {
+                            Json::obj(vec![
+                                ("t_min", Json::Num(a.t_min)),
+                                ("iter", Json::Num(a.iter as f64)),
+                                ("kind", Json::str(&a.kind)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("timeline_mins", Json::arr_f64(&self.timeline_mins)),
+            ("timeline_thpt", Json::arr_f64(&self.timeline_thpt)),
+        ];
+        let fleet = match &self.fleet {
+            None => Json::Null,
+            Some(f) => Json::obj(vec![
+                ("jobs", Json::Num(f.jobs as f64)),
+                ("gpus", Json::Num(f.gpus as f64)),
+                ("jobs_with_failslow", Json::Num(f.jobs_with_failslow as f64)),
+                ("jobs_flagged", Json::Num(f.jobs_flagged as f64)),
+                ("false_positives", Json::Num(f.false_positives as f64)),
+                ("missed", Json::Num(f.missed as f64)),
+                ("mean_slowdown", Json::Num(f.mean_slowdown)),
+                ("mitigated_over_ignored", Json::Num(f.mitigated_over_ignored)),
+                ("compared_jobs", Json::Num(f.compared_jobs as f64)),
+                ("digest", Json::str(&f.digest)),
+                (
+                    "policy",
+                    f.policy.as_ref().map_or(Json::Null, |p| Json::str(p)),
+                ),
+                ("cluster_nodes", Json::Num(f.cluster_nodes as f64)),
+                ("s3_requests", Json::Num(f.s3_requests as f64)),
+                ("s3_granted", Json::Num(f.s3_granted as f64)),
+                ("s3_denied", Json::Num(f.s3_denied as f64)),
+                ("s4_requests", Json::Num(f.s4_requests as f64)),
+                ("s4_granted", Json::Num(f.s4_granted as f64)),
+                ("s4_in_place", Json::Num(f.s4_in_place as f64)),
+                ("queued_decisions", Json::Num(f.queued_decisions as f64)),
+                ("preempted", Json::Num(f.preempted as f64)),
+                ("cancelled", Json::Num(f.cancelled as f64)),
+                ("denial_rate", Json::Num(f.denial_rate)),
+                ("mean_contention_scale", Json::Num(f.mean_contention_scale)),
+                ("grant_wait_p50_s", Json::Num(f.grant_wait_p50_s)),
+                ("grant_wait_p99_s", Json::Num(f.grant_wait_p99_s)),
+            ]),
+        };
+        fields.push(("fleet", fleet));
+        Json::obj(fields)
+    }
+
+    /// Human-readable rendering (the existing ASCII layer).
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "scenario '{}' — {} ({} GPUs on {} nodes), {} iters\n",
+            self.scenario, self.label, self.world, self.nodes, self.iters
+        );
+        if !self.timeline_thpt.is_empty() {
+            out.push_str(&plot::line_chart(
+                &format!("throughput ({} on {} nodes, iters/s)", self.label, self.nodes),
+                &self.timeline_mins,
+                &self.timeline_thpt,
+                70,
+                10,
+            ));
+        }
+        if !self.actions.is_empty() {
+            out.push_str("actions:\n");
+            for a in &self.actions {
+                out.push_str(&format!("  t={:.1}min iter={} {}\n", a.t_min, a.iter, a.kind));
+            }
+        }
+        out.push_str(&format!(
+            "episodes: injected {}, detected {}",
+            self.injected, self.episodes_detected
+        ));
+        if self.detection_latency_s.is_empty() {
+            out.push('\n');
+        } else {
+            out.push_str(&format!(
+                "; detection latency p50 {:.1}s (n={})\n",
+                stats::quantile(&self.detection_latency_s, 0.5),
+                self.detection_latency_s.len()
+            ));
+        }
+        out.push_str(&format!(
+            "mean throughput {:.3} iters/s (ideal {:.3})\n",
+            self.mean_thpt, self.ideal_thpt
+        ));
+        if let Some(f) = &self.fleet {
+            out.push_str(&format!(
+                "fleet: {} jobs ({} GPUs) — {} w/ fail-slow, {} flagged, {} missed, \
+                 {} false+\n",
+                f.jobs, f.gpus, f.jobs_with_failslow, f.jobs_flagged, f.missed, f.false_positives
+            ));
+            out.push_str(&format!(
+                "fleet slowdown {:.3}x mean; digest {}\n",
+                f.mean_slowdown, f.digest
+            ));
+            if let Some(p) = &f.policy {
+                out.push_str(&format!(
+                    "shared cluster: policy {}, {} nodes; contention scale {:.3}, \
+                     denial rate {:.1}%\n",
+                    p,
+                    f.cluster_nodes,
+                    f.mean_contention_scale,
+                    100.0 * f.denial_rate
+                ));
+                out.push_str(&format!(
+                    "arbitration: S3 {}/{}/{} req/granted/denied; S4 {}/{}/{} \
+                     req/granted/in-place; queued {}, preempted {}, cancelled {}\n",
+                    f.s3_requests,
+                    f.s3_granted,
+                    f.s3_denied,
+                    f.s4_requests,
+                    f.s4_granted,
+                    f.s4_in_place,
+                    f.queued_decisions,
+                    f.preempted,
+                    f.cancelled
+                ));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_outcome() -> Outcome {
+        Outcome {
+            scenario: "golden".to_string(),
+            label: "2T4D1P".to_string(),
+            nodes: 1,
+            world: 8,
+            iters: 4,
+            ideal_thpt: 0.5,
+            mean_thpt: 0.25,
+            injected: 1,
+            episodes_detected: 1,
+            detection_latency_s: vec![12.5],
+            actions: vec![OutcomeAction {
+                t_min: 1.5,
+                iter: 2,
+                kind: "episode_opened".to_string(),
+            }],
+            timeline_mins: vec![0.0, 2.0],
+            timeline_thpt: vec![0.5, 0.25],
+            fleet: None,
+        }
+    }
+
+    #[test]
+    fn golden_json_single_job() {
+        // Pins the Outcome::to_json schema: field names, nesting, and value
+        // encoding. Compared as parsed JSON so the pin is on content, not
+        // incidental key order or whitespace.
+        let expected = r#"{
+            "scenario": "golden", "label": "2T4D1P", "nodes": 1, "world": 8,
+            "iters": 4, "ideal_thpt": 0.5, "mean_thpt": 0.25,
+            "injected": 1, "episodes_detected": 1,
+            "detection_latency_s": [12.5],
+            "actions": [{"t_min": 1.5, "iter": 2, "kind": "episode_opened"}],
+            "timeline_mins": [0, 2], "timeline_thpt": [0.5, 0.25],
+            "fleet": null
+        }"#;
+        assert_eq!(Json::parse(expected).unwrap(), small_outcome().to_json());
+    }
+
+    #[test]
+    fn golden_json_round_trips_through_parser() {
+        let j = small_outcome().to_json();
+        let text = j.to_string();
+        assert_eq!(Json::parse(&text).unwrap(), j);
+    }
+
+    #[test]
+    fn render_mentions_key_fields() {
+        let out = small_outcome().render();
+        assert!(out.contains("scenario 'golden'"));
+        assert!(out.contains("episodes: injected 1, detected 1"));
+        assert!(out.contains("mean throughput 0.250"));
+    }
+}

@@ -1,0 +1,444 @@
+//! Hand-rolled TOML-subset parser and renderer for [`ScenarioSpec`]
+//! (toml/serde are unavailable offline; follows the `util::cli::Args`
+//! philosophy of a small, typed, dependency-free substrate).
+//!
+//! Supported grammar (see `docs/SCENARIOS.md` for the full reference):
+//!
+//! ```text
+//! # comment (also allowed after a value)
+//! name = "flapping-link"          # top-level strings are quoted
+//! description = "..."
+//!
+//! [topology]                      # tables: topology, run, fleet
+//! tp = 2
+//! mfu = 0.42                      # numbers: integers or floats
+//!
+//! [run]
+//! mitigate = true                 # booleans: true/false
+//!
+//! [[fault]]                       # array of tables: the fault script
+//! kind = "net"                    # cpu | gpu | net
+//! target = "uplink:1"             # gpu:N | node:N | uplink:N | link:A-B
+//! start = 0.1                     # fractions of the horizon
+//! duration = 0.05
+//! scale = 0.3
+//! ```
+//!
+//! Errors carry 1-based line numbers ([`ScenarioError::Parse`]); semantic
+//! problems surface as [`ScenarioError::Field`] from the final
+//! [`ScenarioSpec::validate`] pass.
+
+use crate::cluster::Policy;
+use crate::inject::{FailSlowKind, Target};
+
+use super::{
+    gpu_class_token, kind_token, parse_gpu_class, parse_kind, parse_target, target_token,
+    FaultSpec, FleetSpec, ScenarioError, ScenarioSpec,
+};
+
+fn perr(line: usize, msg: impl Into<String>) -> ScenarioError {
+    ScenarioError::Parse { line, msg: msg.into() }
+}
+
+/// Cut a trailing `#` comment, respecting quoted strings.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn p_str(v: &str, line: usize) -> Result<String, ScenarioError> {
+    let inner = v
+        .strip_prefix('"')
+        .and_then(|r| r.strip_suffix('"'))
+        .ok_or_else(|| perr(line, format!("expected a quoted string, got '{v}'")))?;
+    if inner.contains('"') {
+        return Err(perr(line, "nested quotes are not supported"));
+    }
+    Ok(inner.to_string())
+}
+
+fn p_f64(v: &str, line: usize) -> Result<f64, ScenarioError> {
+    v.parse().map_err(|_| perr(line, format!("expected a number, got '{v}'")))
+}
+
+fn p_usize(v: &str, line: usize) -> Result<usize, ScenarioError> {
+    v.parse().map_err(|_| perr(line, format!("expected a non-negative integer, got '{v}'")))
+}
+
+fn p_u64(v: &str, line: usize) -> Result<u64, ScenarioError> {
+    v.parse().map_err(|_| perr(line, format!("expected a non-negative integer, got '{v}'")))
+}
+
+fn p_bool(v: &str, line: usize) -> Result<bool, ScenarioError> {
+    match v {
+        "true" => Ok(true),
+        "false" => Ok(false),
+        _ => Err(perr(line, format!("expected true or false, got '{v}'"))),
+    }
+}
+
+/// A `[[fault]]` under construction: kind/target/scale are required, the
+/// rest defaults like [`FaultSpec::new`].
+struct FaultDraft {
+    header_line: usize,
+    kind: Option<FailSlowKind>,
+    target: Option<Target>,
+    start: f64,
+    duration: f64,
+    scale: Option<f64>,
+    repeat: usize,
+    period: f64,
+    ramp_to: Option<f64>,
+    ramp_steps: usize,
+}
+
+impl FaultDraft {
+    fn new(header_line: usize) -> Self {
+        FaultDraft {
+            header_line,
+            kind: None,
+            target: None,
+            start: 0.0,
+            duration: 1.0,
+            scale: None,
+            repeat: 0,
+            period: 0.0,
+            ramp_to: None,
+            ramp_steps: 8,
+        }
+    }
+
+    fn finish(self) -> Result<FaultSpec, ScenarioError> {
+        let need = |what: &str| perr(self.header_line, format!("[[fault]] is missing '{what}'"));
+        Ok(FaultSpec {
+            kind: self.kind.ok_or_else(|| need("kind"))?,
+            target: self.target.ok_or_else(|| need("target"))?,
+            start: self.start,
+            duration: self.duration,
+            scale: self.scale.ok_or_else(|| need("scale"))?,
+            repeat: self.repeat,
+            period: self.period,
+            ramp_to: self.ramp_to,
+            ramp_steps: self.ramp_steps,
+        })
+    }
+}
+
+enum Section {
+    Top,
+    Topology,
+    Run,
+    Fleet,
+    Fault,
+}
+
+pub(crate) fn parse(src: &str) -> Result<ScenarioSpec, ScenarioError> {
+    let mut spec = ScenarioSpec {
+        name: String::new(),
+        description: String::new(),
+        topology: Default::default(),
+        run: Default::default(),
+        faults: Vec::new(),
+        fleet: None,
+    };
+    let mut drafts: Vec<FaultDraft> = Vec::new();
+    let mut section = Section::Top;
+
+    for (i, raw) in src.lines().enumerate() {
+        let ln = i + 1;
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(h) = line.strip_prefix("[[").and_then(|r| r.strip_suffix("]]")) {
+            match h.trim() {
+                "fault" => {
+                    drafts.push(FaultDraft::new(ln));
+                    section = Section::Fault;
+                }
+                other => return Err(perr(ln, format!("unknown table '[[{other}]]'"))),
+            }
+            continue;
+        }
+        if let Some(h) = line.strip_prefix('[').and_then(|r| r.strip_suffix(']')) {
+            section = match h.trim() {
+                "topology" => Section::Topology,
+                "run" => Section::Run,
+                "fleet" => {
+                    if spec.fleet.is_none() {
+                        spec.fleet = Some(FleetSpec::default());
+                    }
+                    Section::Fleet
+                }
+                other => {
+                    return Err(perr(
+                        ln,
+                        format!("unknown section '[{other}]' (want topology, run, or fleet)"),
+                    ))
+                }
+            };
+            continue;
+        }
+        let (key, val) = line
+            .split_once('=')
+            .ok_or_else(|| perr(ln, format!("expected 'key = value', got '{line}'")))?;
+        let (key, val) = (key.trim(), val.trim());
+        match section {
+            Section::Top => match key {
+                "name" => spec.name = p_str(val, ln)?,
+                "description" => spec.description = p_str(val, ln)?,
+                _ => return Err(perr(ln, format!("unknown top-level key '{key}'"))),
+            },
+            Section::Topology => {
+                let t = &mut spec.topology;
+                match key {
+                    "tp" => t.tp = p_usize(val, ln)?,
+                    "dp" => t.dp = p_usize(val, ln)?,
+                    "pp" => t.pp = p_usize(val, ln)?,
+                    "gpus_per_node" => t.gpus_per_node = p_usize(val, ln)?,
+                    "gpu_class" => {
+                        let s = p_str(val, ln)?;
+                        t.gpu_class = parse_gpu_class(&s)
+                            .ok_or_else(|| perr(ln, format!("unknown gpu_class '{s}'")))?;
+                    }
+                    "model" => t.model = p_str(val, ln)?,
+                    "microbatches" => t.microbatches = p_usize(val, ln)?,
+                    "mfu" => t.mfu = p_f64(val, ln)?,
+                    "jitter" => t.jitter = p_f64(val, ln)?,
+                    "spike_p" => t.spike_p = p_f64(val, ln)?,
+                    _ => return Err(perr(ln, format!("unknown [topology] key '{key}'"))),
+                }
+            }
+            Section::Run => match key {
+                "iters" => spec.run.iters = p_usize(val, ln)?,
+                "seed" => spec.run.seed = p_u64(val, ln)?,
+                "mitigate" => spec.run.mitigate = p_bool(val, ln)?,
+                _ => return Err(perr(ln, format!("unknown [run] key '{key}'"))),
+            },
+            Section::Fleet => {
+                let f = spec.fleet.as_mut().expect("section implies fleet");
+                match key {
+                    "jobs" => f.jobs = p_usize(val, ln)?,
+                    "workers" => f.workers = p_usize(val, ln)?,
+                    "boost" => f.boost = p_f64(val, ln)?,
+                    "compare" => f.compare = p_bool(val, ln)?,
+                    "policy" => {
+                        let s = p_str(val, ln)?;
+                        f.policy = match s.as_str() {
+                            "private" | "none" => None,
+                            other => Some(Policy::parse(other).ok_or_else(|| {
+                                perr(ln, format!("unknown policy '{other}'"))
+                            })?),
+                        };
+                    }
+                    "spare" => f.spare = p_f64(val, ln)?,
+                    "epoch_len" => f.epoch_len = p_usize(val, ln)?,
+                    "stagger" => f.stagger = p_f64(val, ln)?,
+                    _ => return Err(perr(ln, format!("unknown [fleet] key '{key}'"))),
+                }
+            }
+            Section::Fault => {
+                let d = drafts.last_mut().expect("section implies a draft");
+                match key {
+                    "kind" => {
+                        let s = p_str(val, ln)?;
+                        d.kind = Some(parse_kind(&s).ok_or_else(|| {
+                            perr(ln, format!("unknown kind '{s}' (want cpu, gpu, or net)"))
+                        })?);
+                    }
+                    "target" => {
+                        let s = p_str(val, ln)?;
+                        d.target = Some(parse_target(&s).ok_or_else(|| {
+                            perr(
+                                ln,
+                                format!(
+                                    "bad target '{s}' (want gpu:N, node:N, uplink:N, or \
+                                     link:A-B)"
+                                ),
+                            )
+                        })?);
+                    }
+                    "start" => d.start = p_f64(val, ln)?,
+                    "duration" => d.duration = p_f64(val, ln)?,
+                    "scale" => d.scale = Some(p_f64(val, ln)?),
+                    "repeat" => d.repeat = p_usize(val, ln)?,
+                    "period" => d.period = p_f64(val, ln)?,
+                    "ramp_to" => d.ramp_to = Some(p_f64(val, ln)?),
+                    "ramp_steps" => d.ramp_steps = p_usize(val, ln)?,
+                    _ => return Err(perr(ln, format!("unknown [[fault]] key '{key}'"))),
+                }
+            }
+        }
+    }
+
+    for d in drafts {
+        spec.faults.push(d.finish()?);
+    }
+    spec.validate()?;
+    Ok(spec)
+}
+
+pub(crate) fn render(spec: &ScenarioSpec) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::new();
+    let _ = writeln!(out, "name = \"{}\"", spec.name);
+    let _ = writeln!(out, "description = \"{}\"", spec.description);
+
+    let t = &spec.topology;
+    out.push_str("\n[topology]\n");
+    let _ = writeln!(out, "tp = {}", t.tp);
+    let _ = writeln!(out, "dp = {}", t.dp);
+    let _ = writeln!(out, "pp = {}", t.pp);
+    let _ = writeln!(out, "gpus_per_node = {}", t.gpus_per_node);
+    let _ = writeln!(out, "gpu_class = \"{}\"", gpu_class_token(t.gpu_class));
+    let _ = writeln!(out, "model = \"{}\"", t.model);
+    let _ = writeln!(out, "microbatches = {}", t.microbatches);
+    let _ = writeln!(out, "mfu = {}", t.mfu);
+    let _ = writeln!(out, "jitter = {}", t.jitter);
+    let _ = writeln!(out, "spike_p = {}", t.spike_p);
+
+    out.push_str("\n[run]\n");
+    let _ = writeln!(out, "iters = {}", spec.run.iters);
+    let _ = writeln!(out, "seed = {}", spec.run.seed);
+    let _ = writeln!(out, "mitigate = {}", spec.run.mitigate);
+
+    for f in &spec.faults {
+        out.push_str("\n[[fault]]\n");
+        let _ = writeln!(out, "kind = \"{}\"", kind_token(f.kind));
+        let _ = writeln!(out, "target = \"{}\"", target_token(f.target));
+        let _ = writeln!(out, "start = {}", f.start);
+        let _ = writeln!(out, "duration = {}", f.duration);
+        let _ = writeln!(out, "scale = {}", f.scale);
+        if f.repeat > 0 {
+            let _ = writeln!(out, "repeat = {}", f.repeat);
+            let _ = writeln!(out, "period = {}", f.period);
+        }
+        if let Some(to) = f.ramp_to {
+            let _ = writeln!(out, "ramp_to = {to}");
+            let _ = writeln!(out, "ramp_steps = {}", f.ramp_steps);
+        }
+    }
+
+    if let Some(f) = &spec.fleet {
+        out.push_str("\n[fleet]\n");
+        let _ = writeln!(out, "jobs = {}", f.jobs);
+        let _ = writeln!(out, "workers = {}", f.workers);
+        let _ = writeln!(out, "boost = {}", f.boost);
+        let _ = writeln!(out, "compare = {}", f.compare);
+        let policy = f.policy.map_or("private", |p| p.name());
+        let _ = writeln!(out, "policy = \"{policy}\"");
+        let _ = writeln!(out, "spare = {}", f.spare);
+        let _ = writeln!(out, "epoch_len = {}", f.epoch_len);
+        let _ = writeln!(out, "stagger = {}", f.stagger);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{find, LIBRARY};
+    use super::*;
+
+    #[test]
+    fn round_trip_pins_every_library_scenario() {
+        // The acceptance contract: parse(render(spec)) == spec, for every
+        // built-in scenario (covers faults, ramps, repeats, and fleet).
+        for &name in LIBRARY {
+            let spec = find(name).unwrap();
+            let text = spec.render();
+            let back = ScenarioSpec::parse(&text)
+                .unwrap_or_else(|e| panic!("{name} failed to re-parse: {e}\n{text}"));
+            assert_eq!(back, spec, "{name} did not round-trip:\n{text}");
+        }
+    }
+
+    #[test]
+    fn parses_a_hand_written_spec_with_comments() {
+        let src = r#"
+            # a scenario written by hand
+            name = "hand"
+            description = "one flapping uplink"   # trailing comment
+
+            [topology]
+            tp = 1
+            dp = 8
+            pp = 1
+            gpus_per_node = 4
+
+            [run]
+            iters = 50
+            seed = 7
+            mitigate = false
+
+            [[fault]]
+            kind = "net"
+            target = "uplink:1"
+            start = 0.1
+            duration = 0.05
+            scale = 0.3
+            repeat = 3
+            period = 0.2
+        "#;
+        let spec = ScenarioSpec::parse(src).unwrap();
+        assert_eq!(spec.name, "hand");
+        assert_eq!(spec.topology.dp, 8);
+        assert_eq!(spec.n_nodes(), 2);
+        assert!(!spec.run.mitigate);
+        assert_eq!(spec.faults.len(), 1);
+        assert_eq!(spec.faults[0].target, Target::Uplink(1));
+        assert_eq!(spec.faults[0].repeat, 3);
+        // Defaults fill what the file leaves out.
+        assert_eq!(spec.topology.model, "gpt2-7b");
+        assert_eq!(spec.topology.microbatches, 8);
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let bad = "name = \"x\"\nbogus_key = 3\n";
+        match ScenarioSpec::parse(bad) {
+            Err(ScenarioError::Parse { line, msg }) => {
+                assert_eq!(line, 2);
+                assert!(msg.contains("bogus_key"), "{msg}");
+            }
+            other => panic!("expected a parse error, got {other:?}"),
+        }
+        let bad = "name = \"x\"\n[nope]\n";
+        assert!(matches!(
+            ScenarioSpec::parse(bad),
+            Err(ScenarioError::Parse { line: 2, .. })
+        ));
+        let bad = "name = \"x\"\n\n[[fault]]\nkind = \"gpu\"\nscale = 0.5\n";
+        match ScenarioSpec::parse(bad) {
+            Err(ScenarioError::Parse { line, msg }) => {
+                assert_eq!(line, 3, "points at the [[fault]] header");
+                assert!(msg.contains("target"), "{msg}");
+            }
+            other => panic!("expected a missing-field error, got {other:?}"),
+        }
+        // Semantic problems surface as typed field errors.
+        let bad = "name = \"x\"\n[topology]\nmodel = \"gpt9\"\n";
+        assert!(matches!(
+            ScenarioSpec::parse(bad),
+            Err(ScenarioError::Field { .. })
+        ));
+    }
+
+    #[test]
+    fn fleet_section_parses_policies() {
+        let src = "name = \"f\"\n[fleet]\njobs = 8\npolicy = \"spread\"\nstagger = 1.5\n";
+        let spec = ScenarioSpec::parse(src).unwrap();
+        let fs = spec.fleet.unwrap();
+        assert_eq!(fs.jobs, 8);
+        assert_eq!(fs.policy, Some(Policy::Spread));
+        assert_eq!(fs.stagger, 1.5);
+        let src = "name = \"f\"\n[fleet]\npolicy = \"private\"\n";
+        assert_eq!(ScenarioSpec::parse(src).unwrap().fleet.unwrap().policy, None);
+    }
+}

@@ -1,0 +1,111 @@
+#!/usr/bin/env python3
+"""Collect per-PR BENCH_fleet.json artifacts and print the jobs/sec
+trajectory (ROADMAP open item; conventions in docs/BENCHMARKS.md).
+
+Each CI run uploads a BENCH_fleet artifact (see .github/workflows/ci.yml).
+Download the artifacts of the runs you care about (e.g. with
+`gh run download -n BENCH_fleet-<sha>` into one directory per run), then:
+
+    python3 tools/bench_trajectory.py artifacts-dir/
+    python3 tools/bench_trajectory.py run1/BENCH_fleet.json run2/BENCH_fleet.json
+
+Files given explicitly are plotted in argument order; a directory is
+scanned recursively for BENCH_fleet*.json and ordered by mtime, so a
+directory of downloaded artifacts reads oldest-to-newest. Only the Python
+standard library is used.
+"""
+
+import json
+import os
+import sys
+
+
+def collect(paths):
+    """Yield (label, parsed-json) for every BENCH_fleet*.json under paths."""
+    files = []
+    for p in paths:
+        if os.path.isdir(p):
+            hits = []
+            for root, _dirs, names in os.walk(p):
+                for n in sorted(names):
+                    if n.startswith("BENCH_fleet") and n.endswith(".json"):
+                        hits.append(os.path.join(root, n))
+            hits.sort(key=lambda f: os.path.getmtime(f))
+            files.extend(hits)
+        else:
+            files.append(p)
+    for f in files:
+        try:
+            with open(f) as fh:
+                yield f, json.load(fh)
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"skipping {f}: {e}", file=sys.stderr)
+
+
+def headline(doc):
+    """(jobs, jobs_per_sec) of the largest private engine run, or None."""
+    best = None
+    for run in doc.get("runs", []):
+        if "policy" in run:
+            continue  # policy-sweep entries measure the shared cluster
+        jobs, jps = run.get("jobs"), run.get("jobs_per_sec")
+        if jobs is None or jps is None:
+            continue
+        if best is None or jobs > best[0]:
+            best = (jobs, jps)
+    return best
+
+
+def policy_sweep(doc):
+    """{policy: jobs_per_sec} for the shared-cluster sweep entries."""
+    return {
+        run["policy"]: run["jobs_per_sec"]
+        for run in doc.get("runs", [])
+        if "policy" in run and isinstance(run.get("jobs_per_sec"), (int, float))
+    }
+
+
+def sparkline(values):
+    ticks = "▁▂▃▄▅▆▇█"
+    lo, hi = min(values), max(values)
+    span = (hi - lo) or 1.0
+    return "".join(ticks[int((v - lo) / span * (len(ticks) - 1))] for v in values)
+
+
+def main(argv):
+    paths = argv[1:] or ["."]
+    points = []
+    for f, doc in collect(paths):
+        h = headline(doc)
+        if h is None:
+            print(f"skipping {f}: no private engine runs recorded", file=sys.stderr)
+            continue
+        points.append((f, h[0], h[1], policy_sweep(doc)))
+
+    if not points:
+        print("no BENCH_fleet.json artifacts found; see docs/BENCHMARKS.md")
+        return 1
+
+    width = max(len(os.path.relpath(f)) for f, *_ in points)
+    print(f"fleet engine trajectory ({len(points)} recorded run(s)):\n")
+    print(f"  {'artifact':<{width}}  {'jobs':>6}  {'jobs/sec':>9}  policy sweep")
+    prev = None
+    for f, jobs, jps, sweep in points:
+        delta = "" if prev is None else f" ({100.0 * (jps / prev - 1.0):+.1f}%)"
+        sweep_txt = (
+            "  ".join(f"{p}={v:.0f}" for p, v in sorted(sweep.items())) or "-"
+        )
+        print(
+            f"  {os.path.relpath(f):<{width}}  {jobs:>6.0f}  {jps:>9.1f}{delta}  "
+            f"{sweep_txt}"
+        )
+        prev = jps
+    rates = [p[2] for p in points]
+    print(f"\n  trajectory: {sparkline(rates)}  "
+          f"(first {rates[0]:.1f} -> last {rates[-1]:.1f} jobs/s, "
+          f"{100.0 * (rates[-1] / rates[0] - 1.0):+.1f}%)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
