@@ -11,7 +11,55 @@ use bench_common::section;
 
 use falcon::cluster::Policy;
 use falcon::fleet::{run_fleet, FleetConfig};
+use falcon::pipeline::ParallelConfig;
+use falcon::sim::{demo_spec, TrainingSim};
 use falcon::util::json::Json;
+
+/// Single-large-job microbench for the incremental iteration engine:
+/// steady-state iters/sec with the cache layer live, vs the same job with
+/// every memo invalidated before each step (what each step cost before the
+/// incremental engine). Both runs are bit-identical by contract — asserted
+/// via the simulated clocks — so the speedup is pure engine win.
+fn bench_single_job() -> Json {
+    let mut spec = demo_spec(ParallelConfig::new(4, 8, 8), 2024);
+    spec.wl.microbatches = 16;
+    let label = spec.cfg.label();
+    let iters = 400usize;
+
+    let mut cached_sim = TrainingSim::new(spec);
+    let t0 = std::time::Instant::now();
+    for _ in 0..iters {
+        cached_sim.step();
+    }
+    let cached = iters as f64 / t0.elapsed().as_secs_f64().max(1e-9);
+
+    let mut uncached_sim = TrainingSim::new(spec);
+    let t0 = std::time::Instant::now();
+    for _ in 0..iters {
+        uncached_sim.invalidate_caches();
+        uncached_sim.step();
+    }
+    let uncached = iters as f64 / t0.elapsed().as_secs_f64().max(1e-9);
+
+    assert_eq!(
+        cached_sim.now, uncached_sim.now,
+        "cached and invalidate-per-step runs must simulate identically"
+    );
+    let speedup = cached / uncached.max(1e-9);
+    println!(
+        "  {label} x {} ranks, {iters} iters: {cached:>9.1} iters/s cached, \
+         {uncached:>9.1} iters/s invalidate-per-step ({speedup:.1}x)",
+        spec.cfg.world()
+    );
+    Json::obj(vec![
+        ("cfg", Json::str(&label)),
+        ("gpus", Json::Num(spec.cfg.world() as f64)),
+        ("iters", Json::Num(iters as f64)),
+        ("iters_per_sec", Json::Num(cached)),
+        ("iters_per_sec_uncached", Json::Num(uncached)),
+        ("speedup", Json::Num(speedup)),
+    ])
+}
 
 const BENCH_PATH: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_fleet.json");
 
@@ -41,6 +89,9 @@ fn main() {
         .and_then(|doc| headline_jobs_per_sec(&doc));
     let mut runs: Vec<Json> = Vec::new();
     let mut headline = 0.0f64;
+
+    section("incremental iteration engine: single large job (iters/sec)");
+    let single_job = bench_single_job();
 
     section("fleet engine throughput (jobs/sec)");
     for (jobs, iters) in [(64usize, 60usize), (256, 60), (512, 120)] {
@@ -153,6 +204,7 @@ fn main() {
     let out = Json::obj(vec![
         ("bench", Json::str("fleet")),
         ("host_workers", Json::Num(workers as f64)),
+        ("single_job", single_job),
         ("runs", Json::Arr(runs)),
     ]);
     match std::fs::write(BENCH_PATH, out.to_string() + "\n") {

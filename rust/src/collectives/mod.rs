@@ -91,36 +91,44 @@ impl CommGroup {
 
     /// Ring all-reduce time (seconds): 2(n-1) steps moving `bytes`/n each,
     /// paced by the slowest edge at current health.
+    ///
+    /// Equivalent to `self.allreduce_plan(cluster, bytes).sample(rng)` —
+    /// the deterministic per-edge base is recomputed here on every call;
+    /// hot paths cache the [`AllReducePlan`] instead.
     pub fn allreduce_time_s(&self, cluster: &Cluster, bytes: f64, rng: &mut Rng) -> f64 {
+        self.allreduce_plan(cluster, bytes).sample(rng)
+    }
+
+    /// The cacheable deterministic half of [`CommGroup::allreduce_time_s`]:
+    /// per-edge nominal transfer times and jitter CoVs frozen at the
+    /// current cluster health. Valid until the health of a node the group
+    /// touches changes (see `fabric::Cluster::generation_sum`).
+    pub fn allreduce_plan(&self, cluster: &Cluster, bytes: f64) -> AllReducePlan {
         let n = self.len();
         if n <= 1 {
-            return 0.0;
+            return AllReducePlan::default();
         }
         match self.topology {
             Topology::Ring => {
                 let chunk = bytes / n as f64;
-                let mut worst_edge = 0.0f64;
-                // Edge times sampled with noise; steps are synchronous so the
-                // slowest edge paces every step.
+                let mut edges = Vec::with_capacity(n);
                 for (a, b) in self.edges() {
                     let t = cluster.transfer_time_nominal_s(self.gpus[a], self.gpus[b], chunk);
                     let cov = cluster.link_class(self.gpus[a], self.gpus[b]).base_cov();
-                    let t = t * (1.0 + cov * rng.normal()).max(0.05);
-                    worst_edge = worst_edge.max(t);
+                    edges.push((t, cov));
                 }
-                2.0 * (n - 1) as f64 * worst_edge
+                AllReducePlan { edges, rounds: 2.0 * (n - 1) as f64 }
             }
             Topology::Tree => {
                 // Reduce up + broadcast down: 2 * depth rounds of `bytes`.
-                let depth = (usize::BITS - (self.len()).leading_zeros()) as f64;
-                let mut worst = 0.0f64;
+                let depth = (usize::BITS - n.leading_zeros()) as f64;
+                let mut edges = Vec::with_capacity(n - 1);
                 for (a, b) in self.edges() {
                     let t = cluster.transfer_time_nominal_s(self.gpus[a], self.gpus[b], bytes);
                     let cov = cluster.link_class(self.gpus[a], self.gpus[b]).base_cov();
-                    let t = t * (1.0 + cov * rng.normal()).max(0.05);
-                    worst = worst.max(t);
+                    edges.push((t, cov));
                 }
-                2.0 * depth * worst
+                AllReducePlan { edges, rounds: 2.0 * depth }
             }
         }
     }
@@ -135,6 +143,43 @@ impl CommGroup {
         rng: &mut Rng,
     ) -> f64 {
         cluster.transfer_time_s(self.gpus[from], self.gpus[to], bytes, rng)
+    }
+}
+
+/// Deterministic base of one all-reduce, memoizable across iterations:
+/// `(nominal edge seconds, link CoV)` in [`CommGroup::edges`] order plus
+/// the synchronous round count (2(n-1) ring steps, 2·depth tree rounds).
+/// [`AllReducePlan::sample`] layers the per-call measurement noise on top
+/// with the exact RNG stream and arithmetic of the uncached path;
+/// [`AllReducePlan::nominal`] is the noise-free planner value and draws
+/// nothing.
+#[derive(Clone, Debug, Default)]
+pub struct AllReducePlan {
+    /// (nominal edge time seconds, link CoV), one entry per edge.
+    pub edges: Vec<(f64, f64)>,
+    /// Synchronous rounds each edge is traversed.
+    pub rounds: f64,
+}
+
+impl AllReducePlan {
+    /// Apply per-call measurement noise: one `rng.normal()` per edge, in
+    /// edge order, slowest noisy edge paces every round.
+    pub fn sample(&self, rng: &mut Rng) -> f64 {
+        let mut worst = 0.0f64;
+        for &(t, cov) in &self.edges {
+            let t = t * (1.0 + cov * rng.normal()).max(0.05);
+            worst = worst.max(t);
+        }
+        self.rounds * worst
+    }
+
+    /// Noise-free value at the frozen health; touches no RNG.
+    pub fn nominal(&self) -> f64 {
+        let mut worst = 0.0f64;
+        for &(t, _) in &self.edges {
+            worst = worst.max(t);
+        }
+        self.rounds * worst
     }
 }
 
@@ -253,6 +298,28 @@ mod tests {
         let t1 = g.allreduce_time_s(&c, 1e8, &mut rng);
         let t10 = g.allreduce_time_s(&c, 1e9, &mut rng);
         assert!(t10 > 5.0 * t1, "{t10} vs {t1}");
+    }
+
+    #[test]
+    fn plan_split_preserves_stream_and_value() {
+        // The cached plan must reproduce the one-shot path bit for bit and
+        // leave the RNG at the same position; nominal() must draw nothing.
+        let mut c = Cluster::new(ClusterSpec::new(4, 2, GpuClass::H800));
+        c.uplinks[2].bandwidth_scale = 0.4;
+        for topo in [Topology::Ring, Topology::Tree] {
+            let g = group(&c, &[0, 2, 4, 6], topo);
+            let plan = g.allreduce_plan(&c, 1e9);
+            let mut r1 = Rng::new(21);
+            let mut r2 = Rng::new(21);
+            let direct = g.allreduce_time_s(&c, 1e9, &mut r1);
+            let cached = plan.sample(&mut r2);
+            assert_eq!(direct.to_bits(), cached.to_bits());
+            assert_eq!(r1.next_u64(), r2.next_u64(), "stream diverged");
+            assert!(plan.nominal() > 0.0);
+        }
+        let solo = group(&c, &[0], Topology::Ring);
+        assert!(solo.allreduce_plan(&c, 1e9).edges.is_empty());
+        assert_eq!(solo.allreduce_plan(&c, 1e9).nominal(), 0.0);
     }
 
     #[test]

@@ -513,7 +513,7 @@ mod tests {
         // S4, but the restart must wait for the arbiter's grant.
         let mut sim = TrainingSim::new(demo_spec(ParallelConfig::new(1, 4, 1), 43));
         let onset = sim.ideal_iter_s * 20.0;
-        sim.inject((0..4).map(|g| gpu_event(onset, 100_000, 0.2, g)).collect());
+        sim.inject((0..4).map(|g| gpu_event(onset, 100_000, 0.2, g)));
         let mut cfg = FalconConfig::default();
         cfg.defer_heavy = true;
         cfg.overheads.ckpt_restart_s = 120.0;
@@ -542,11 +542,7 @@ mod tests {
         let mut sim = TrainingSim::new(demo_spec(ParallelConfig::new(1, 4, 1), 41));
         let onset = sim.ideal_iter_s * 20.0;
         // Brutal, unmitigable-by-rebalancing slowdown on ALL replicas.
-        sim.inject(
-            (0..4)
-                .map(|g| gpu_event(onset, 100_000, 0.2, g))
-                .collect(),
-        );
+        sim.inject((0..4).map(|g| gpu_event(onset, 100_000, 0.2, g)));
         let mut cfg = FalconConfig::default();
         cfg.overheads.ckpt_restart_s = 120.0; // cheap restart for the test
         cfg.restart_cost = from_secs(120.0);

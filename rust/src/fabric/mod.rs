@@ -168,6 +168,16 @@ pub struct GpuId {
 }
 
 /// The live cluster: spec + mutable health for every component.
+///
+/// Health changes are tracked by a monotone **health epoch** plus per-node
+/// generation counters: every degrade/heal/swap/external-scale change made
+/// through the `set_*` health setters (or [`Cluster::heal_all`]) bumps the
+/// generation of exactly the nodes it touches. Anything derived from a set
+/// of nodes' health (the simulator's memoized makespans and all-reduce
+/// plans, see `crate::sim`) stamps itself with [`Cluster::generation_sum`]
+/// over that set and revalidates in O(|set|) instead of recomputing the
+/// world. Code that writes the pub health fields directly (tests, ad-hoc
+/// probes) bypasses the counters and must not expect caches to notice.
 pub struct Cluster {
     pub spec: ClusterSpec,
     pub gpus: Vec<GpuState>,
@@ -179,6 +189,10 @@ pub struct Cluster {
     /// the granularity Fig 10's "congested link between nodes 3 and 4"
     /// lives at; S3 moves traffic classes across these pairs.
     pub pair_scale: std::collections::HashMap<(usize, usize), f64>,
+    /// Per-node health generation (see the struct docs).
+    node_gen: Vec<u64>,
+    /// Global health epoch: bumped on every tracked health change.
+    epoch: u64,
 }
 
 impl Cluster {
@@ -188,6 +202,8 @@ impl Cluster {
             nodes: vec![NodeState::default(); spec.nodes],
             uplinks: vec![LinkState::default(); spec.nodes],
             pair_scale: std::collections::HashMap::new(),
+            node_gen: vec![0; spec.nodes],
+            epoch: 0,
             spec,
         }
     }
@@ -196,12 +212,69 @@ impl Cluster {
         (a.min(b), a.max(b))
     }
 
+    fn bump_node(&mut self, node: usize) {
+        self.epoch = self.epoch.wrapping_add(1);
+        self.node_gen[node] = self.node_gen[node].wrapping_add(1);
+    }
+
+    /// Global monotone health epoch (bumped on every tracked change).
+    pub fn health_epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Health generation of one node (bumped when its GPUs, CPU, uplink, or
+    /// a pair path touching it changes).
+    pub fn node_generation(&self, node: usize) -> u64 {
+        self.node_gen[node]
+    }
+
+    /// Validity stamp for anything derived from `nodes`' health: the
+    /// (wrapping) sum of their generations. Generations only grow, so the
+    /// sum moves iff at least one member's health changed.
+    pub fn generation_sum(&self, nodes: &[usize]) -> u64 {
+        nodes.iter().fold(0u64, |h, &n| h.wrapping_add(self.node_gen[n]))
+    }
+
+    /// Set a GPU's health (compute scale + reported temperature), bumping
+    /// its node's generation iff the value actually changed.
+    pub fn set_gpu_health(&mut self, flat: usize, compute_scale: f64, temp_c: f64) {
+        let g = &mut self.gpus[flat];
+        if g.compute_scale != compute_scale || g.temp_c != temp_c {
+            g.compute_scale = compute_scale;
+            g.temp_c = temp_c;
+            self.bump_node(flat / self.spec.gpus_per_node);
+        }
+    }
+
+    /// Set a node's CPU-contention state, bumping its generation on change.
+    pub fn set_cpu_health(&mut self, node: usize, satisfaction: f64, high_cpu_jobs: u32) {
+        let n = &mut self.nodes[node];
+        if n.cpu_satisfaction != satisfaction || n.high_cpu_jobs != high_cpu_jobs {
+            n.cpu_satisfaction = satisfaction;
+            n.high_cpu_jobs = high_cpu_jobs;
+            self.bump_node(node);
+        }
+    }
+
+    /// Set an uplink's injected bandwidth scale, bumping on change.
+    pub fn set_uplink_scale(&mut self, node: usize, scale: f64) {
+        if self.uplinks[node].bandwidth_scale != scale {
+            self.uplinks[node].bandwidth_scale = scale;
+            self.bump_node(node);
+        }
+    }
+
     /// Set/clear congestion on the inter-node path between two nodes.
     pub fn set_pair_scale(&mut self, a: usize, b: usize, scale: f64) {
-        if (scale - 1.0).abs() < 1e-12 {
-            self.pair_scale.remove(&Self::pair_key(a, b));
+        let key = Self::pair_key(a, b);
+        let changed = if (scale - 1.0).abs() < 1e-12 {
+            self.pair_scale.remove(&key).is_some()
         } else {
-            self.pair_scale.insert(Self::pair_key(a, b), scale);
+            self.pair_scale.insert(key, scale) != Some(scale)
+        };
+        if changed {
+            self.bump_node(a);
+            self.bump_node(b);
         }
     }
 
@@ -295,12 +368,19 @@ impl Cluster {
             l.external_scale = external;
         }
         self.pair_scale.clear();
+        for n in 0..self.node_gen.len() {
+            self.bump_node(n);
+        }
     }
 
     /// Set the cross-job contention multiplier on one uplink (fleet epoch
-    /// sync; see `crate::cluster::ClusterState::contention_scale`).
+    /// sync; see `crate::cluster::ClusterState::contention_scale`), bumping
+    /// the node's health generation iff the share actually changed.
     pub fn set_external_scale(&mut self, node: usize, scale: f64) {
-        self.uplinks[node].external_scale = scale;
+        if self.uplinks[node].external_scale != scale {
+            self.uplinks[node].external_scale = scale;
+            self.bump_node(node);
+        }
     }
 }
 
@@ -408,6 +488,42 @@ mod tests {
         c.heal_all();
         assert_eq!(c.uplinks[1].bandwidth_scale, 1.0);
         assert!((c.path_bandwidth_scale(a, b) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn health_generations_track_changes_per_node() {
+        let mut c = cluster();
+        assert_eq!(c.health_epoch(), 0);
+        c.set_uplink_scale(1, 0.5);
+        assert_eq!(c.health_epoch(), 1);
+        assert_eq!(c.node_generation(1), 1);
+        assert_eq!(c.node_generation(0), 0, "other nodes untouched");
+        // Writing the same value again must NOT invalidate anything.
+        c.set_uplink_scale(1, 0.5);
+        assert_eq!(c.health_epoch(), 1);
+        // GPU and CPU changes bump their hosting node only.
+        c.set_gpu_health(9, 0.8, 70.0); // node 1 (8 GPUs per node)
+        c.set_cpu_health(2, 0.4, 12);
+        assert_eq!(c.node_generation(1), 2);
+        assert_eq!(c.node_generation(2), 1);
+        // Pair paths bump both endpoints; clearing an unset pair is a no-op.
+        c.set_pair_scale(0, 3, 0.3);
+        assert_eq!(c.node_generation(0), 1);
+        assert_eq!(c.node_generation(3), 1);
+        c.set_pair_scale(1, 2, 1.0);
+        assert_eq!(c.node_generation(1), 2);
+        // generation_sum moves iff a member changed.
+        let s = c.generation_sum(&[0, 1]);
+        c.set_external_scale(2, 0.5);
+        assert_eq!(c.generation_sum(&[0, 1]), s);
+        c.set_external_scale(0, 0.5);
+        assert_ne!(c.generation_sum(&[0, 1]), s);
+        // heal_all invalidates everything.
+        let before: Vec<u64> = (0..4).map(|n| c.node_generation(n)).collect();
+        c.heal_all();
+        for (n, b) in before.iter().enumerate() {
+            assert!(c.node_generation(n) > *b);
+        }
     }
 
     #[test]

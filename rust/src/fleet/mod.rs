@@ -338,10 +338,13 @@ pub fn run_job(cfg: &FleetConfig, job_id: usize) -> JobResult {
     let world = spec.cfg.world();
     let label = spec.cfg.label();
 
-    let mut sim = TrainingSim::new(spec.clone());
+    // `JobSpec` is `Copy` and the sampled fault script is injected by
+    // borrowed iteration, so neither is cloned per run (the ignore-mode
+    // re-run replays the identical trace from the same buffer).
+    let mut sim = TrainingSim::new(spec);
     let horizon = from_secs((sim.ideal_iter_s * cfg.iters as f64).max(60.0));
     let events = sample_events(cfg, job_id, &spec, horizon);
-    sim.inject(events.clone());
+    sim.inject(events.iter().copied());
     let falcon = run_with_falcon(
         &mut sim,
         FalconConfig { mitigate: true, defer_heavy: false, ..cfg.falcon.clone() },
@@ -351,8 +354,8 @@ pub fn run_job(cfg: &FleetConfig, job_id: usize) -> JobResult {
     let latencies = match_detection_latencies(&events, &falcon.episode_opens());
 
     let ignored_thpt = if cfg.compare && !events.is_empty() {
-        let mut ignored = TrainingSim::new(spec.clone());
-        ignored.inject(events.clone());
+        let mut ignored = TrainingSim::new(spec);
+        ignored.inject(events.iter().copied());
         run_with_falcon(
             &mut ignored,
             FalconConfig { mitigate: false, defer_heavy: false, ..cfg.falcon.clone() },
@@ -525,10 +528,10 @@ fn run_fleet_shared(cfg: &FleetConfig, policy: Policy) -> FleetReport {
 
     let mut jobs: Vec<Mutex<SharedJob>> = Vec::with_capacity(cfg.jobs);
     for (id, spec) in specs.iter().enumerate() {
-        let mut sim = TrainingSim::new(spec.clone());
+        let mut sim = TrainingSim::new(*spec);
         let horizon = from_secs((sim.ideal_iter_s * cfg.iters as f64).max(60.0));
         let events = sample_events(cfg, id, spec, horizon);
-        sim.inject(events.clone());
+        sim.inject(events.iter().copied());
         let falcon = Falcon::new(FalconConfig {
             mitigate: true,
             defer_heavy: true,

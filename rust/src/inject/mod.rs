@@ -97,20 +97,21 @@ impl FailSlowEvent {
         t >= self.start && t < self.end()
     }
 
-    /// Apply onset to the cluster.
+    /// Apply onset to the cluster. Routed through the health setters so the
+    /// cluster's per-node generations (and every cache stamped against
+    /// them) see the change.
     pub fn apply(&self, cluster: &mut Cluster) {
         match (self.kind, self.target) {
             (FailSlowKind::GpuDegradation, Target::Gpu(flat)) => {
-                cluster.gpus[flat].compute_scale = self.scale;
-                // Thermal-throttling signature (Fig 3's bottom-right).
-                cluster.gpus[flat].temp_c = 70.0;
+                // 70 C: the thermal-throttling signature (Fig 3's
+                // bottom-right).
+                cluster.set_gpu_health(flat, self.scale, 70.0);
             }
             (FailSlowKind::CpuContention, Target::Node(n)) => {
-                cluster.nodes[n].cpu_satisfaction = self.scale;
-                cluster.nodes[n].high_cpu_jobs = ((1.0 - self.scale) * 20.0) as u32;
+                cluster.set_cpu_health(n, self.scale, ((1.0 - self.scale) * 20.0) as u32);
             }
             (FailSlowKind::NetworkCongestion, Target::Uplink(u)) => {
-                cluster.uplinks[u].bandwidth_scale = self.scale;
+                cluster.set_uplink_scale(u, self.scale);
             }
             (FailSlowKind::NetworkCongestion, Target::Link(a, b)) => {
                 cluster.set_pair_scale(a, b, self.scale);
@@ -123,15 +124,13 @@ impl FailSlowEvent {
     pub fn revert(&self, cluster: &mut Cluster) {
         match (self.kind, self.target) {
             (FailSlowKind::GpuDegradation, Target::Gpu(flat)) => {
-                cluster.gpus[flat].compute_scale = 1.0;
-                cluster.gpus[flat].temp_c = 45.0;
+                cluster.set_gpu_health(flat, 1.0, 45.0);
             }
             (FailSlowKind::CpuContention, Target::Node(n)) => {
-                cluster.nodes[n].cpu_satisfaction = 1.0;
-                cluster.nodes[n].high_cpu_jobs = 0;
+                cluster.set_cpu_health(n, 1.0, 0);
             }
             (FailSlowKind::NetworkCongestion, Target::Uplink(u)) => {
-                cluster.uplinks[u].bandwidth_scale = 1.0;
+                cluster.set_uplink_scale(u, 1.0);
             }
             (FailSlowKind::NetworkCongestion, Target::Link(a, b)) => {
                 cluster.set_pair_scale(a, b, 1.0);

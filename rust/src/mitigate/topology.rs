@@ -36,10 +36,10 @@ impl TopologyPlan {
 
 /// Estimate current iteration time without mutating sim state.
 fn estimate_iter_s(sim: &mut TrainingSim) -> f64 {
-    // Use the replica makespans + a nominal DP time through the public
-    // estimator: temporarily run the internal model via profile of replica
-    // times and the ideal pipeline formula. Simplest faithful probe: save
-    // clock, run one noiseless estimate.
+    // The nominal estimator: no clock advance, no op log, and no RNG
+    // traffic at all (the incremental engine's ring plans expose a
+    // noise-free value), so an O(n^2)-candidate swap search perturbs
+    // nothing it does not intend to.
     sim.estimate_iter_time_s()
 }
 

@@ -11,7 +11,7 @@
 use crate::fabric::{Cluster, GpuId};
 
 pub mod schedule;
-pub use schedule::{one_f1b_makespan, StageTimes};
+pub use schedule::{one_f1b_makespan, one_f1b_makespan_scratch, MakespanScratch, StageTimes};
 
 /// Parallel strategy: (TP, DP, PP) sizes. Written xTyDzP in the paper.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -52,12 +52,20 @@ pub struct RankGrid {
     pub gpus_per_node: usize,
     /// node_map[i] = physical node hosting "logical node" i. S3 permutes it.
     pub node_map: Vec<usize>,
+    /// Placement generation: bumped by [`RankGrid::swap_nodes`] so
+    /// placement-derived caches (see `crate::sim`) know to rebuild.
+    generation: u64,
 }
 
 impl RankGrid {
     pub fn new(cfg: ParallelConfig, gpus_per_node: usize) -> Self {
         let nodes = cfg.world().div_ceil(gpus_per_node);
-        RankGrid { cfg, gpus_per_node, node_map: (0..nodes).collect() }
+        RankGrid { cfg, gpus_per_node, node_map: (0..nodes).collect(), generation: 0 }
+    }
+
+    /// Monotone counter of node-map permutations applied so far.
+    pub fn generation(&self) -> u64 {
+        self.generation
     }
 
     pub fn n_nodes(&self) -> usize {
@@ -104,6 +112,7 @@ impl RankGrid {
     /// Swap two logical nodes' physical hosts (S3 topology adjustment).
     pub fn swap_nodes(&mut self, a: usize, b: usize) {
         self.node_map.swap(a, b);
+        self.generation = self.generation.wrapping_add(1);
     }
 }
 
@@ -202,8 +211,11 @@ pub fn microbatch_time_s(
 ) -> f64 {
     let flops = wl.flops_per_microbatch_per_stage(grid.cfg);
     let mut worst = 0.0f64;
-    for rank in grid.tp_group(dp, pp) {
-        let gpu = grid.gpu_of(rank);
+    // Walk the TP group by coordinate (same order as `tp_group`) instead of
+    // materializing the rank vector: this sits inside the simulator's
+    // per-replica recompute path, where the allocations used to dominate.
+    for tp in 0..grid.cfg.tp {
+        let gpu = grid.gpu_of(grid.rank_of(RankCoord { tp, dp, pp }));
         let rate = cluster.gpu_rate(gpu) * mfu;
         let compute = flops / rate;
         // Host-side launch/dataloading overhead: ~6% of nominal compute,
@@ -214,8 +226,8 @@ pub fn microbatch_time_s(
         // TP collective per microbatch (intra-node, stable).
         let tp_comm = if grid.cfg.tp > 1 {
             let nbytes = wl.tp_bytes_per_microbatch(grid.cfg) / wl.microbatches.max(1) as f64;
-            let next_tp = (grid.coord_of(rank).tp + 1) % grid.cfg.tp;
-            let peer = grid.gpu_of(grid.tp_group(dp, pp)[next_tp]);
+            let next_tp = (tp + 1) % grid.cfg.tp;
+            let peer = grid.gpu_of(grid.rank_of(RankCoord { tp: next_tp, dp, pp }));
             cluster.transfer_time_nominal_s(gpu, peer, nbytes)
         } else {
             0.0

@@ -29,6 +29,27 @@ impl StageTimes {
     }
 }
 
+/// Reusable buffers for [`one_f1b_makespan_scratch`]: the four p×m
+/// completion/readiness matrices. The simulator's cache layer keeps one of
+/// these per job so steady-state recomputes allocate nothing.
+#[derive(Debug, Default)]
+pub struct MakespanScratch {
+    f_done: Vec<Vec<f64>>,
+    b_done: Vec<Vec<f64>>,
+    ready_f: Vec<Vec<f64>>,
+    ready_b: Vec<Vec<f64>>,
+}
+
+/// Size `buf` to exactly p rows of m zeros (the makespan recurrence's
+/// initial state), reusing row allocations across calls.
+fn reset(buf: &mut Vec<Vec<f64>>, p: usize, m: usize) {
+    buf.resize_with(p, Vec::new);
+    for row in buf.iter_mut() {
+        row.clear();
+        row.resize(m, 0.0);
+    }
+}
+
 /// Makespan (seconds) of a 1F1B iteration with `m` micro-batches.
 ///
 /// Exact discrete-event evaluation: simulates the 1F1B order per stage
@@ -36,6 +57,12 @@ impl StageTimes {
 /// heterogeneous (straggling) stages are handled correctly — the paper's
 /// Fig 11 iteration times (8s vs 8.5s) come out of exactly this recurrence.
 pub fn one_f1b_makespan(st: &StageTimes, m: usize) -> f64 {
+    one_f1b_makespan_scratch(st, m, &mut MakespanScratch::default())
+}
+
+/// [`one_f1b_makespan`] with caller-owned scratch buffers (bit-identical
+/// result; the hot path reuses them instead of reallocating per call).
+pub fn one_f1b_makespan_scratch(st: &StageTimes, m: usize, scratch: &mut MakespanScratch) -> f64 {
     let p = st.fwd.len();
     assert!(p >= 1 && m >= 1);
     assert_eq!(st.bwd.len(), p);
@@ -43,8 +70,10 @@ pub fn one_f1b_makespan(st: &StageTimes, m: usize) -> f64 {
 
     // f_done[s][j] = completion time of forward microbatch j on stage s.
     // b_done[s][j] = completion time of backward microbatch j on stage s.
-    let mut f_done = vec![vec![0.0f64; m]; p];
-    let mut b_done = vec![vec![0.0f64; m]; p];
+    reset(&mut scratch.f_done, p, m);
+    reset(&mut scratch.b_done, p, m);
+    let f_done = &mut scratch.f_done;
+    let b_done = &mut scratch.b_done;
 
     // Number of warm-up forwards per stage in 1F1B: min(p - s, m).
     let warmup = |s: usize| (p - s).min(m);
@@ -56,8 +85,10 @@ pub fn one_f1b_makespan(st: &StageTimes, m: usize) -> f64 {
     //
     // Each stage executes: warmup(s) forwards, then alternating (bwd, fwd)
     // in steady state, then the remaining backwards.
-    let mut ready_f = vec![vec![0.0f64; m]; p]; // activation arrival from s-1
-    let mut ready_b = vec![vec![0.0f64; m]; p]; // grad arrival from s+1
+    reset(&mut scratch.ready_f, p, m); // activation arrival from s-1
+    reset(&mut scratch.ready_b, p, m); // grad arrival from s+1
+    let ready_f = &mut scratch.ready_f;
+    let ready_b = &mut scratch.ready_b;
 
     // Iterate a few sweeps: dependencies are acyclic in (microbatch, phase)
     // but stage-local ordering couples forward and backward; a fixed small
@@ -103,7 +134,7 @@ pub fn one_f1b_makespan(st: &StageTimes, m: usize) -> f64 {
         }
     }
 
-    b_done[0].iter().cloned().fold(0.0, f64::max)
+    b_done[0].iter().copied().fold(0.0, f64::max)
 }
 
 /// Closed-form approximation for uniform stages (used in tests as an oracle
@@ -185,6 +216,23 @@ mod tests {
         let fast = one_f1b_makespan(&StageTimes::uniform(4, 1.0, 0.0), 8);
         let slow = one_f1b_makespan(&StageTimes::uniform(4, 1.0, 0.5), 8);
         assert!(slow > fast);
+    }
+
+    #[test]
+    fn scratch_reuse_is_bit_identical() {
+        let mut scratch = MakespanScratch::default();
+        // Reuse one scratch across growing AND shrinking shapes: stale rows
+        // must never leak into a later evaluation.
+        for (p, m) in [(4usize, 8usize), (2, 4), (8, 16), (1, 3), (4, 8)] {
+            let mut st = StageTimes::uniform(p, 1.0, 0.1);
+            if p > 2 {
+                st.fwd[1] *= 1.7;
+                st.bwd[1] *= 1.7;
+            }
+            let fresh = one_f1b_makespan(&st, m);
+            let reused = one_f1b_makespan_scratch(&st, m, &mut scratch);
+            assert_eq!(fresh.to_bits(), reused.to_bits(), "p={p} m={m}");
+        }
     }
 
     #[test]

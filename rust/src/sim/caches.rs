@@ -1,0 +1,293 @@
+//! Memoization layer for the simulator hot path.
+//!
+//! `TrainingSim::step` used to recompute the entire world every iteration:
+//! per-replica 1F1B makespans (each walking freshly allocated TP groups and
+//! stage-time vectors), per-stage p2p transfers, and brand-new `CommGroup`s
+//! for every DP gradient ring — even though cluster health only moves when
+//! an injected episode fires or heals, a mitigation lands, or the fleet
+//! re-derives contention. This module makes the step O(what-changed):
+//!
+//! - every memo entry records the **physical nodes** it depends on and a
+//!   stamp from [`Cluster::generation_sum`] over them; the per-node
+//!   generations are bumped by the fabric's health setters, so a sick link
+//!   invalidates only the replicas/rings whose node sets touch it
+//!   (per-node granularity: any health change on a node recomputes every
+//!   entry reading that node — always correct, occasionally wider than
+//!   strictly needed);
+//! - DP rings keep a prebuilt [`CommGroup`] plus a frozen
+//!   [`AllReducePlan`] (deterministic base × per-call jitter, so the RNG
+//!   stream is unchanged from the uncached engine);
+//! - node-map permutations ([`RankGrid::generation`]) rebind placement
+//!   without reallocating groups;
+//! - recomputes reuse one [`StageTimes`] + [`MakespanScratch`] so the
+//!   steady-state loop allocates nothing beyond the observation itself.
+//!
+//! Correctness bar: every value produced through this layer is
+//! bit-identical to a from-scratch recompute — pinned by the equivalence
+//! tests in `sim` (cached vs naive engine over the scenario library).
+
+use crate::collectives::{AllReducePlan, CommGroup, Topology};
+use crate::fabric::Cluster;
+use crate::monitor::group_id;
+use crate::pipeline::{
+    microbatch_time_s, one_f1b_makespan_scratch, MakespanScratch, RankCoord, RankGrid, StageTimes,
+    Workload,
+};
+use crate::util::rng::Rng;
+
+/// Memoized 1F1B makespan of one DP replica.
+struct ReplicaCache {
+    /// Physical nodes hosting this replica's ranks (deduped).
+    nodes: Vec<usize>,
+    /// [`Cluster::generation_sum`] over `nodes` when `makespan` was cached.
+    stamp: u64,
+    /// Micro-batch count `makespan` was computed with.
+    m: usize,
+    makespan: f64,
+    valid: bool,
+}
+
+/// Memoized all-reduce plan of one DP gradient ring (the tp = 0 ring of a
+/// pipeline stage — the representative ring `TrainingSim::step` samples).
+struct RingCache {
+    group: CommGroup,
+    nodes: Vec<usize>,
+    stamp: u64,
+    plan: AllReducePlan,
+    valid: bool,
+}
+
+/// Placement- and health-independent op-log constants for one rank: the
+/// monitor's communication-group ids depend only on rank sets, so they are
+/// computed once at construction instead of once per rank per step.
+pub(super) struct RankOpLog {
+    pub(super) coord: RankCoord,
+    pub(super) tp_gid: u64,
+    pub(super) pp_gid: u64,
+    pub(super) dp_gid: u64,
+    pub(super) self_gid: u64,
+}
+
+pub(super) struct SimCaches {
+    /// [`RankGrid::generation`] the node lists / ring GPUs derive from.
+    topo_gen: u64,
+    /// False until the first rebind (and after `invalidate_all`).
+    topo_bound: bool,
+    replicas: Vec<ReplicaCache>,
+    rings: Vec<RingCache>,
+    pub(super) oplog: Vec<RankOpLog>,
+    /// Scratch stage times reused across recomputes.
+    st: StageTimes,
+    scratch: MakespanScratch,
+}
+
+impl SimCaches {
+    pub(super) fn new(grid: &RankGrid) -> SimCaches {
+        let cfg = grid.cfg;
+        let world = cfg.world();
+        let mut oplog = Vec::with_capacity(world);
+        for rank in 0..world {
+            let c = grid.coord_of(rank);
+            oplog.push(RankOpLog {
+                coord: c,
+                tp_gid: group_id(&grid.tp_group(c.dp, c.pp)),
+                pp_gid: group_id(&grid.pp_group(c.tp, c.dp)),
+                dp_gid: group_id(&grid.dp_group(c.tp, c.pp)),
+                self_gid: group_id(&[rank]),
+            });
+        }
+        let replicas = (0..cfg.dp)
+            .map(|_| ReplicaCache {
+                nodes: Vec::new(),
+                stamp: 0,
+                m: 0,
+                makespan: 0.0,
+                valid: false,
+            })
+            .collect();
+        let rings = if cfg.dp > 1 {
+            (0..cfg.pp)
+                .map(|pp| {
+                    let ranks = grid.dp_group(0, pp);
+                    let gpus = ranks.iter().map(|&r| grid.gpu_of(r)).collect();
+                    RingCache {
+                        group: CommGroup::new(ranks, gpus, Topology::Ring),
+                        nodes: Vec::new(),
+                        stamp: 0,
+                        plan: AllReducePlan::default(),
+                        valid: false,
+                    }
+                })
+                .collect()
+        } else {
+            Vec::new()
+        };
+        SimCaches {
+            topo_gen: 0,
+            topo_bound: false,
+            replicas,
+            rings,
+            oplog,
+            st: StageTimes { fwd: Vec::new(), bwd: Vec::new(), p2p: Vec::new() },
+            scratch: MakespanScratch::default(),
+        }
+    }
+
+    /// Forget every memoized value; the next refresh recomputes from
+    /// scratch. The escape hatch after writing cluster health fields
+    /// directly, and the benches' "what every step cost before the cache
+    /// layer" probe.
+    pub(super) fn invalidate_all(&mut self) {
+        self.topo_bound = false;
+    }
+
+    /// Rebind placement-derived state (replica node lists, ring GPU
+    /// positions) after a node-map permutation, invalidating every memo.
+    fn rebind(&mut self, grid: &RankGrid) {
+        let cfg = grid.cfg;
+        for (d, rc) in self.replicas.iter_mut().enumerate() {
+            rc.nodes.clear();
+            for pp in 0..cfg.pp {
+                for tp in 0..cfg.tp {
+                    let n = grid.gpu_of(grid.rank_of(RankCoord { tp, dp: d, pp })).node;
+                    if !rc.nodes.contains(&n) {
+                        rc.nodes.push(n);
+                    }
+                }
+            }
+            rc.valid = false;
+        }
+        for ring in &mut self.rings {
+            for i in 0..ring.group.ranks.len() {
+                ring.group.gpus[i] = grid.gpu_of(ring.group.ranks[i]);
+            }
+            ring.nodes.clear();
+            for g in &ring.group.gpus {
+                if !ring.nodes.contains(&g.node) {
+                    ring.nodes.push(g.node);
+                }
+            }
+            ring.valid = false;
+        }
+        self.topo_gen = grid.generation();
+        self.topo_bound = true;
+    }
+
+    /// Bring every memo up to date with the current placement, health, and
+    /// micro-batch allocation. When nothing changed this is a stamp sweep
+    /// (a few u64 adds per replica/ring); only entries whose stamps moved
+    /// recompute, with the exact pre-cache arithmetic.
+    pub(super) fn refresh(
+        &mut self,
+        cluster: &Cluster,
+        grid: &RankGrid,
+        wl: &Workload,
+        mfu: f64,
+        alloc: &[usize],
+    ) {
+        if !self.topo_bound || self.topo_gen != grid.generation() {
+            self.rebind(grid);
+        }
+        for d in 0..self.replicas.len() {
+            let m = alloc[d].max(1);
+            let stamp = cluster.generation_sum(&self.replicas[d].nodes);
+            {
+                let rc = &self.replicas[d];
+                if rc.valid && rc.stamp == stamp && rc.m == m {
+                    continue;
+                }
+            }
+            let makespan = Self::replica_makespan(
+                cluster,
+                grid,
+                wl,
+                mfu,
+                d,
+                m,
+                &mut self.st,
+                &mut self.scratch,
+            );
+            let rc = &mut self.replicas[d];
+            rc.makespan = makespan;
+            rc.stamp = stamp;
+            rc.m = m;
+            rc.valid = true;
+        }
+        for ring in &mut self.rings {
+            let stamp = cluster.generation_sum(&ring.nodes);
+            if ring.valid && ring.stamp == stamp {
+                continue;
+            }
+            ring.plan = ring.group.allreduce_plan(cluster, wl.dp_bytes(grid.cfg));
+            ring.stamp = stamp;
+            ring.valid = true;
+        }
+    }
+
+    /// One replica's 1F1B makespan — the exact arithmetic of the uncached
+    /// engine, over scratch-backed buffers.
+    #[allow(clippy::too_many_arguments)]
+    fn replica_makespan(
+        cluster: &Cluster,
+        grid: &RankGrid,
+        wl: &Workload,
+        mfu: f64,
+        d: usize,
+        m: usize,
+        st: &mut StageTimes,
+        scratch: &mut MakespanScratch,
+    ) -> f64 {
+        let pp = grid.cfg.pp;
+        st.fwd.clear();
+        st.bwd.clear();
+        st.p2p.clear();
+        st.fwd.reserve(pp);
+        st.p2p.reserve(pp.saturating_sub(1));
+        for s in 0..pp {
+            let total = microbatch_time_s(cluster, grid, wl, d, s, mfu);
+            st.fwd.push(total / 3.0);
+            if s + 1 < pp {
+                let a = grid.gpu_of_coord(RankCoord { tp: 0, dp: d, pp: s });
+                let b = grid.gpu_of_coord(RankCoord { tp: 0, dp: d, pp: s + 1 });
+                st.p2p.push(cluster.transfer_time_nominal_s(a, b, wl.pp_bytes_per_microbatch()));
+            }
+        }
+        for i in 0..st.fwd.len() {
+            let f = st.fwd[i];
+            st.bwd.push(2.0 * f);
+        }
+        one_f1b_makespan_scratch(st, m, scratch)
+    }
+
+    /// Max over cached replica makespans (call after [`SimCaches::refresh`];
+    /// same fold order as the uncached engine).
+    pub(super) fn compute_max(&self) -> f64 {
+        self.replicas.iter().map(|r| r.makespan).fold(0.0, f64::max)
+    }
+
+    /// Per-replica makespans, copied out for the observation.
+    pub(super) fn makespans(&self) -> Vec<f64> {
+        self.replicas.iter().map(|r| r.makespan).collect()
+    }
+
+    /// Slowest DP ring all-reduce over the frozen plans: `Some(rng)` draws
+    /// one normal per edge in ring order (the identical stream the uncached
+    /// engine consumed); `None` is the nominal planner value and draws
+    /// nothing.
+    pub(super) fn dp_time(&self, rng: Option<&mut Rng>) -> f64 {
+        let mut dp_time = 0.0f64;
+        match rng {
+            Some(r) => {
+                for ring in &self.rings {
+                    dp_time = dp_time.max(ring.plan.sample(r));
+                }
+            }
+            None => {
+                for ring in &self.rings {
+                    dp_time = dp_time.max(ring.plan.nominal());
+                }
+            }
+        }
+        dp_time
+    }
+}

@@ -12,19 +12,29 @@
 //! detection accuracy (Fig 12, Tables 4–5) and mitigation effectiveness
 //! (Fig 13–17, 20, Table 7).
 
+mod caches;
+
+use caches::SimCaches;
+
 use crate::collectives::{CollOp, CommGroup, Topology};
 use crate::fabric::{Cluster, ClusterSpec, GpuClass};
 use crate::inject::{FailSlowEvent, Target};
 use crate::metrics::{JobOutcome, Timeline};
 use crate::monitor::{group_id, Monitor};
-use crate::pipeline::{
-    microbatch_time_s, one_f1b_makespan, ParallelConfig, RankGrid, StageTimes, Workload,
-};
+use crate::pipeline::{microbatch_time_s, ParallelConfig, RankGrid, Workload};
 use crate::simkit::{from_secs, Time};
 use crate::util::rng::Rng;
 
+/// Test-only switch: route `iter_time_s` through a from-scratch naive
+/// recompute instead of the [`SimCaches`] layer. The two paths are
+/// bit-identical by contract (the equivalence tests below pin it), so
+/// flipping this mid-run is semantically invisible — only slower.
+#[cfg(test)]
+pub(crate) static NAIVE_RECOMPUTE: std::sync::atomic::AtomicBool =
+    std::sync::atomic::AtomicBool::new(false);
+
 /// Everything needed to instantiate a simulated job.
-#[derive(Clone, Debug)]
+#[derive(Clone, Copy, Debug)]
 pub struct JobSpec {
     pub cfg: ParallelConfig,
     pub wl: Workload,
@@ -102,6 +112,8 @@ pub struct TrainingSim {
     /// Whether the monitor shim is attached (adds its overhead — Fig 18).
     pub monitor_attached: bool,
     pub timeline: Timeline,
+    /// Incremental-engine memos (makespans, ring plans, op-log ids).
+    caches: SimCaches,
 }
 
 impl TrainingSim {
@@ -116,6 +128,7 @@ impl TrainingSim {
         let rng = Rng::new(spec.seed);
         let monitor = Monitor::new(world, 4096);
         let alloc = even_alloc(spec.wl.microbatches * spec.cfg.dp, spec.cfg.dp);
+        let caches = SimCaches::new(&grid);
         let mut sim = TrainingSim {
             spec,
             cluster,
@@ -130,15 +143,30 @@ impl TrainingSim {
             ideal_iter_s: 0.0,
             monitor_attached: true,
             timeline: Timeline::default(),
+            caches,
         };
+        // Noiseless: touches no RNG, so the measurement stream starts
+        // untouched at the first step.
         sim.ideal_iter_s = sim.iter_time_s(false).0;
         sim
     }
 
-    /// Schedule fail-slow episodes (absolute times).
-    pub fn inject(&mut self, events: Vec<FailSlowEvent>) {
-        self.applied.extend(std::iter::repeat(false).take(events.len()));
+    /// Schedule fail-slow episodes (absolute times). Accepts any event
+    /// source — fleet jobs pass `events.iter().copied()` so a 256-job
+    /// campaign stops cloning its fault scripts.
+    pub fn inject<I: IntoIterator<Item = FailSlowEvent>>(&mut self, events: I) {
+        let before = self.events.len();
         self.events.extend(events);
+        self.applied.extend(std::iter::repeat(false).take(self.events.len() - before));
+    }
+
+    /// Drop every memoized value; the next step recomputes from scratch.
+    /// Results are bit-identical either way — this is the escape hatch
+    /// after mutating `cluster` health fields directly (bypassing the
+    /// generation-bumping setters), and the benches' probe for what every
+    /// step cost before the incremental engine.
+    pub fn invalidate_caches(&mut self) {
+        self.caches.invalidate_all();
     }
 
     /// Apply/revert episodes whose boundaries we crossed.
@@ -156,22 +184,68 @@ impl TrainingSim {
     }
 
     /// Compute the current iteration time (seconds) and per-replica detail.
-    /// `noisy` adds measurement jitter (off when computing the ideal).
+    /// `noisy` adds measurement jitter (off when computing the ideal; the
+    /// noiseless path touches no RNG at all).
+    ///
+    /// Incremental: per-replica makespans and per-ring all-reduce plans
+    /// come from [`SimCaches`], revalidated against the cluster's per-node
+    /// health generations — O(what-changed) instead of O(world).
     fn iter_time_s(&mut self, noisy: bool) -> (f64, Vec<f64>, f64) {
+        #[cfg(test)]
+        if NAIVE_RECOMPUTE.load(std::sync::atomic::Ordering::Relaxed) {
+            return self.iter_time_naive(noisy);
+        }
+        let cfg = self.spec.cfg;
+        self.caches.refresh(
+            &self.cluster,
+            &self.grid,
+            &self.spec.wl,
+            self.spec.mfu,
+            &self.microbatch_alloc,
+        );
+        let makespans = self.caches.makespans();
+
+        // Gradient all-reduce: slowest DP ring paces the sync. One ring per
+        // (tp, pp); the tp=0 ring is representative since TP peers sit on
+        // the same nodes.
+        let mut dp_time = 0.0f64;
+        if cfg.dp > 1 {
+            let rng = if noisy { Some(&mut self.rng) } else { None };
+            dp_time = self.caches.dp_time(rng);
+        }
+
+        let compute = self.caches.compute_max();
+        let mut total = compute + dp_time;
+        if self.monitor_attached {
+            total *= 1.0 + self.monitor.overhead_frac;
+        }
+        if noisy && self.spec.jitter > 0.0 {
+            total *= (1.0 + self.spec.jitter * self.rng.normal()).max(0.2);
+        }
+        if noisy && self.spec.spike_p > 0.0 && self.rng.bernoulli(self.spec.spike_p) {
+            total *= self.rng.range_f64(1.2, 1.8);
+        }
+        (total, makespans, dp_time)
+    }
+
+    /// The pre-cache engine: rebuild everything from scratch, per call.
+    /// Kept test-only as the oracle the equivalence tests pin [`SimCaches`]
+    /// against (identical values AND identical RNG stream).
+    #[cfg(test)]
+    fn iter_time_naive(&mut self, noisy: bool) -> (f64, Vec<f64>, f64) {
+        use crate::pipeline::{one_f1b_makespan, RankCoord, StageTimes};
         let cfg = self.spec.cfg;
         let mfu = self.spec.mfu;
 
-        // Per-replica 1F1B makespan with its current micro-batch allocation.
         let mut makespans = Vec::with_capacity(cfg.dp);
         for d in 0..cfg.dp {
             let m = self.microbatch_alloc[d].max(1);
             let mut fwd = Vec::with_capacity(cfg.pp);
-            let mut p2p = Vec::new();
+            let mut p2p = Vec::with_capacity(cfg.pp.saturating_sub(1));
             for s in 0..cfg.pp {
                 let total = microbatch_time_s(&self.cluster, &self.grid, &self.spec.wl, d, s, mfu);
                 fwd.push(total / 3.0);
                 if s + 1 < cfg.pp {
-                    use crate::pipeline::RankCoord;
                     let a = self.grid.gpu_of_coord(RankCoord { tp: 0, dp: d, pp: s });
                     let b = self.grid.gpu_of_coord(RankCoord { tp: 0, dp: d, pp: s + 1 });
                     p2p.push(self.cluster.transfer_time_nominal_s(
@@ -185,20 +259,17 @@ impl TrainingSim {
             makespans.push(one_f1b_makespan(&st, m));
         }
 
-        // Gradient all-reduce: slowest DP ring paces the sync.
         let mut dp_time = 0.0f64;
         if cfg.dp > 1 {
             let bytes = self.spec.wl.dp_bytes(cfg);
             for pp in 0..cfg.pp {
-                // One ring per (tp, pp); tp=0 ring is representative since
-                // TP peers sit on the same nodes.
-                let group = self.dp_comm_group(0, pp);
-                let t = group.allreduce_time_s(&self.cluster, bytes, &mut self.rng);
+                let plan = self.dp_comm_group(0, pp).allreduce_plan(&self.cluster, bytes);
+                let t = if noisy { plan.sample(&mut self.rng) } else { plan.nominal() };
                 dp_time = dp_time.max(t);
             }
         }
 
-        let compute = makespans.iter().cloned().fold(0.0, f64::max);
+        let compute = makespans.iter().copied().fold(0.0, f64::max);
         let mut total = compute + dp_time;
         if self.monitor_attached {
             total *= 1.0 + self.monitor.overhead_frac;
@@ -214,12 +285,11 @@ impl TrainingSim {
 
     /// Noiseless estimate of the current iteration time (seconds) at the
     /// present health and topology — does not advance the clock, log ops,
-    /// or perturb the RNG stream. Planners (S3 swap search) call this many
-    /// times per decision.
+    /// or touch the RNG (no clone, no draws: the nominal ring plans skip
+    /// the per-edge jitter entirely). Planners (S3 swap search) call this
+    /// many times per decision.
     pub fn estimate_iter_time_s(&mut self) -> f64 {
-        let saved_rng = self.rng.clone();
         let (t, _, _) = self.iter_time_s(false);
-        self.rng = saved_rng;
         t
     }
 
@@ -270,7 +340,9 @@ impl TrainingSim {
     }
 
     /// Emit the per-rank communication-op timeline for this iteration
-    /// (the Monitor's view; Fig 8's recurring period).
+    /// (the Monitor's view; Fig 8's recurring period). Group ids depend
+    /// only on rank sets, so they come from the per-rank cache built at
+    /// construction instead of being rehashed per rank per step.
     fn emit_op_log(&mut self, start: Time, duration: Time, dp_time: f64) {
         if !self.monitor_attached {
             return;
@@ -278,23 +350,24 @@ impl TrainingSim {
         let cfg = self.spec.cfg;
         let compute_end = start + duration - from_secs(dp_time);
         for rank in 0..cfg.world() {
-            let c = self.grid.coord_of(rank);
+            let ids = &self.caches.oplog[rank];
+            let c = ids.coord;
             // TP all-reduce marks within the compute phase.
             if cfg.tp > 1 {
-                let g = group_id(&self.grid.tp_group(c.dp, c.pp));
+                let g = ids.tp_gid;
                 let at = start + (compute_end - start) / 4;
                 self.monitor.record(rank, CollOp::AllReduce, g, at, 0);
             }
             // PP boundary send/recv.
             if cfg.pp > 1 {
-                let g = group_id(&self.grid.pp_group(c.tp, c.dp));
+                let g = ids.pp_gid;
                 let at = start + (compute_end - start) / 2;
                 let op = if c.pp + 1 < cfg.pp { CollOp::Send } else { CollOp::Recv };
                 self.monitor.record(rank, op, g, at, 0);
             }
             // Gradient RS + AG at the iteration boundary.
             if cfg.dp > 1 {
-                let g = group_id(&self.grid.dp_group(c.tp, c.pp));
+                let g = ids.dp_gid;
                 self.monitor.record(rank, CollOp::ReduceScatter, g, compute_end, 0);
                 self.monitor
                     .record(rank, CollOp::AllGather, g, start + duration, 0);
@@ -302,7 +375,7 @@ impl TrainingSim {
                 // Still an optimizer-boundary op so every config has an
                 // iteration marker.
                 self.monitor
-                    .record(rank, CollOp::AllReduce, group_id(&[rank]), start + duration, 0);
+                    .record(rank, CollOp::AllReduce, ids.self_gid, start + duration, 0);
             }
         }
     }
@@ -759,5 +832,114 @@ mod tests {
         }]);
         let outcome = s.run(20);
         assert!(outcome.slowdown() > 1.1, "slowdown {}", outcome.slowdown());
+    }
+
+    #[test]
+    fn estimate_is_deterministic_and_rng_free() {
+        let mut s = sim(ParallelConfig::new(2, 4, 2));
+        let e1 = s.estimate_iter_time_s();
+        let e2 = s.estimate_iter_time_s();
+        assert_eq!(e1.to_bits(), e2.to_bits(), "nominal estimate must be stable");
+        assert_eq!(e1.to_bits(), s.ideal_iter_s.to_bits(), "healthy estimate == ideal");
+        // The estimator must not perturb the measurement stream: a sim that
+        // estimated 100 times steps bit-identically to one that never did.
+        for _ in 0..100 {
+            s.estimate_iter_time_s();
+        }
+        let mut fresh = sim(ParallelConfig::new(2, 4, 2));
+        for _ in 0..5 {
+            assert_eq!(s.step().duration, fresh.step().duration);
+        }
+    }
+
+    #[test]
+    fn forced_invalidation_is_bit_identical() {
+        // Recomputing every memo from scratch each step must reproduce the
+        // cached engine exactly — health changes mid-run included.
+        let ev = FailSlowEvent {
+            kind: FailSlowKind::GpuDegradation,
+            target: Target::Gpu(2),
+            start: 5 * SEC,
+            duration: 2 * MINUTE,
+            scale: 0.5,
+        };
+        let mut cached = sim(ParallelConfig::new(2, 4, 2));
+        let mut uncached = sim(ParallelConfig::new(2, 4, 2));
+        cached.inject(vec![ev]);
+        uncached.inject(vec![ev]);
+        for i in 0..40 {
+            uncached.invalidate_caches();
+            let a = cached.step();
+            let b = uncached.step();
+            assert_eq!(a.duration, b.duration, "iter {i}");
+            assert_eq!(a.dp_time.to_bits(), b.dp_time.to_bits(), "iter {i}");
+            for (x, y) in a.replica_makespan.iter().zip(&b.replica_makespan) {
+                assert_eq!(x.to_bits(), y.to_bits(), "iter {i}");
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod equivalence {
+    //! The incremental engine's correctness bar: cached vs naive recompute
+    //! must be bit-identical — every scenario-library entry's
+    //! `Outcome::to_json` and a shared-cluster fleet's
+    //! `FleetReport::digest`.
+
+    use std::sync::atomic::Ordering;
+    use std::sync::Mutex;
+
+    use super::NAIVE_RECOMPUTE;
+
+    /// Serializes the tests that flip the global naive switch, so each
+    /// run is pure cached or pure naive (an interleaved run would still be
+    /// bit-identical, but would weaken what the test demonstrates).
+    static MODE: Mutex<()> = Mutex::new(());
+
+    fn run_scenario(spec: &crate::scenario::ScenarioSpec, naive: bool) -> String {
+        NAIVE_RECOMPUTE.store(naive, Ordering::SeqCst);
+        let out = spec.run().expect("library scenario runs");
+        NAIVE_RECOMPUTE.store(false, Ordering::SeqCst);
+        out.to_json().to_string()
+    }
+
+    #[test]
+    fn cached_engine_matches_naive_across_scenario_library() {
+        let _guard = MODE.lock().unwrap_or_else(|e| e.into_inner());
+        for mut spec in crate::scenario::library::all() {
+            // Shorter horizons keep the sweep fast; equivalence is checked
+            // iteration by iteration, so any prefix is just as binding.
+            let cap = if spec.fleet.is_some() { 30 } else { 120 };
+            spec.run.iters = spec.run.iters.min(cap);
+            let cached = run_scenario(&spec, false);
+            let naive = run_scenario(&spec, true);
+            assert_eq!(cached, naive, "scenario '{}' diverged", spec.name);
+        }
+    }
+
+    #[test]
+    fn cached_fleet_digest_matches_naive_recompute() {
+        use crate::cluster::Policy;
+        use crate::fleet::{run_fleet, FleetConfig};
+        let _guard = MODE.lock().unwrap_or_else(|e| e.into_inner());
+        let cfg = FleetConfig {
+            jobs: 4,
+            iters: 40,
+            seed: 9,
+            workers: 2,
+            failslow_boost: 20.0,
+            compare: false,
+            policy: Some(Policy::StragglerAware),
+            spare_frac: 0.25,
+            epoch_len: 10,
+            ..FleetConfig::default()
+        };
+        NAIVE_RECOMPUTE.store(false, Ordering::SeqCst);
+        let cached = run_fleet(&cfg).digest();
+        NAIVE_RECOMPUTE.store(true, Ordering::SeqCst);
+        let naive = run_fleet(&cfg).digest();
+        NAIVE_RECOMPUTE.store(false, Ordering::SeqCst);
+        assert_eq!(cached, naive, "cached vs naive shared-cluster digest");
     }
 }

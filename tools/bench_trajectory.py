@@ -13,6 +13,16 @@ Files given explicitly are plotted in argument order; a directory is
 scanned recursively for BENCH_fleet*.json and ordered by mtime, so a
 directory of downloaded artifacts reads oldest-to-newest. Only the Python
 standard library is used.
+
+CI gate mode (docs/BENCHMARKS.md):
+
+    python3 tools/bench_trajectory.py --check prev-artifact-dir/ BENCH_fleet.json
+
+prints the headline jobs/sec delta of the LAST point vs the one before it
+and exits non-zero on a regression worse than -30%. With fewer than two
+points (e.g. the first recorded run, or the previous artifact failed to
+download) it prints a note and exits zero, so the gate only fires when
+there is something to compare.
 """
 
 import json
@@ -72,8 +82,37 @@ def sparkline(values):
     return "".join(ticks[int((v - lo) / span * (len(ticks) - 1))] for v in values)
 
 
+# Fail --check when jobs/sec drops by more than this fraction.
+CHECK_MAX_REGRESSION = 0.30
+
+
+def check(points):
+    """Gate on the last-vs-previous headline delta; see the module docs."""
+    if len(points) < 2:
+        print("--check: fewer than two recorded runs; nothing to compare (ok)")
+        return 0
+    (pf, _, prev, _), (cf, _, cur, _) = points[-2], points[-1]
+    if prev <= 0.0:
+        print(f"--check: previous run {pf} recorded no throughput (ok)")
+        return 0
+    delta = cur / prev - 1.0
+    print(
+        f"--check: headline jobs/sec {prev:.1f} ({os.path.relpath(pf)}) -> "
+        f"{cur:.1f} ({os.path.relpath(cf)}): {100.0 * delta:+.1f}%"
+    )
+    if delta < -CHECK_MAX_REGRESSION:
+        print(
+            f"--check: FAIL — regression exceeds "
+            f"{100.0 * CHECK_MAX_REGRESSION:.0f}% budget"
+        )
+        return 1
+    return 0
+
+
 def main(argv):
-    paths = argv[1:] or ["."]
+    args = argv[1:]
+    check_mode = "--check" in args
+    paths = [a for a in args if a != "--check"] or ["."]
     points = []
     for f, doc in collect(paths):
         h = headline(doc)
@@ -81,6 +120,9 @@ def main(argv):
             print(f"skipping {f}: no private engine runs recorded", file=sys.stderr)
             continue
         points.append((f, h[0], h[1], policy_sweep(doc)))
+
+    if check_mode:
+        return check(points)
 
     if not points:
         print("no BENCH_fleet.json artifacts found; see docs/BENCHMARKS.md")
