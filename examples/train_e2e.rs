@@ -16,6 +16,7 @@
 //!
 //! Presets: tiny (~0.1M params), small (~1.8M), base (~10.8M).
 
+use falcon::anyhow;
 use falcon::ckpt::MemoryStore;
 use falcon::detect::{BocdConfig, Detector};
 use falcon::mitigate::microbatch;

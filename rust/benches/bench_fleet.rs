@@ -1,5 +1,6 @@
 //! Fleet-engine throughput benchmark: jobs/sec for sharded fleet campaigns
-//! at a few sizes, a shared-cluster policy sweep, and a determinism
+//! at a few sizes, a shared-cluster policy sweep, a what-if counterfactual
+//! sweep (replays/sec vs cold runs), and a determinism
 //! spot-check. Emits `BENCH_fleet.json` at the repo root so later PRs have
 //! a perf trajectory to compare against (conventions: docs/BENCHMARKS.md);
 //! when a previous `BENCH_fleet.json` exists, prints a one-line jobs/sec
@@ -11,9 +12,12 @@ use bench_common::section;
 
 use falcon::cluster::Policy;
 use falcon::fleet::{run_fleet, FleetConfig};
+use falcon::mitigate::Strategy;
 use falcon::pipeline::ParallelConfig;
+use falcon::scenario::find;
 use falcon::sim::{demo_spec, TrainingSim};
 use falcon::util::json::Json;
+use falcon::whatif::{self, Edit, TraceConfig};
 
 /// Single-large-job microbench for the incremental iteration engine:
 /// steady-state iters/sec with the cache layer live, vs the same job with
@@ -61,6 +65,70 @@ fn bench_single_job() -> Json {
     ])
 }
 
+/// What-if engine microbench: counterfactuals/sec for a sweep of N edits
+/// over one recorded trace (snapshot-restored replays, fanned across
+/// threads like `whatif::attribute`) vs the SAME N edits executed as
+/// serial cold runs — the workflow the engine replaces. Also reports the
+/// serial warm-replay rate so snapshot reuse and threading are separable.
+fn bench_whatif_sweep() -> Json {
+    let spec = find("slow-leak-gpu").expect("library scenario").iters(400);
+    let t0 = std::time::Instant::now();
+    let trace = whatif::record(&spec, &TraceConfig { snapshot_every: 50 }).expect("record");
+    let record_s = t0.elapsed().as_secs_f64();
+
+    let edit_sets: Vec<Vec<Edit>> = vec![
+        vec![Edit::DropFault(0)],
+        vec![Edit::NoMitigation],
+        vec![Edit::DelayMitigation(25)],
+        vec![Edit::DelayMitigation(50)],
+        vec![Edit::DelayMitigation(100)],
+        vec![Edit::ForceLevel { strategy: Strategy::AdjustMicrobatch, at_frac: 0.3 }],
+        vec![Edit::ForceLevel { strategy: Strategy::AdjustTopology, at_frac: 0.6 }],
+        vec![Edit::ForceLevel { strategy: Strategy::CkptRestart, at_frac: 0.8 }],
+        vec![Edit::DropFault(0), Edit::NoMitigation],
+    ];
+    let n = edit_sets.len();
+
+    let t0 = std::time::Instant::now();
+    let fanned = whatif::sweep(&trace, &edit_sets, 0);
+    let sweep_s = t0.elapsed().as_secs_f64().max(1e-9);
+    assert!(fanned.iter().all(|r| r.is_ok()), "sweep replays must succeed");
+
+    let t0 = std::time::Instant::now();
+    for edits in &edit_sets {
+        trace.replay(edits).expect("warm replay");
+    }
+    let warm_serial_s = t0.elapsed().as_secs_f64().max(1e-9);
+
+    let t0 = std::time::Instant::now();
+    for edits in &edit_sets {
+        whatif::replay_cold(&spec, edits).expect("cold replay");
+    }
+    let cold_s = t0.elapsed().as_secs_f64().max(1e-9);
+
+    let per_sec = n as f64 / sweep_s;
+    let cold_per_sec = n as f64 / cold_s;
+    println!(
+        "  {} x {} iters, {n} edits: {per_sec:>7.1} counterfactuals/s fanned \
+         ({:.1}/s warm serial, {cold_per_sec:.1}/s cold serial, {:.1}x vs cold; \
+         record {record_s:.2} s)",
+        spec.name,
+        spec.run.iters,
+        n as f64 / warm_serial_s,
+        per_sec / cold_per_sec,
+    );
+    Json::obj(vec![
+        ("scenario", Json::str(&spec.name)),
+        ("iters", Json::Num(spec.run.iters as f64)),
+        ("edits", Json::Num(n as f64)),
+        ("record_s", Json::Num(record_s)),
+        ("counterfactuals_per_sec", Json::Num(per_sec)),
+        ("warm_serial_per_sec", Json::Num(n as f64 / warm_serial_s)),
+        ("cold_serial_per_sec", Json::Num(cold_per_sec)),
+        ("speedup_vs_cold", Json::Num(per_sec / cold_per_sec)),
+    ])
+}
+
 const BENCH_PATH: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_fleet.json");
 
 /// jobs/sec of the headline (largest private) config in a BENCH_fleet.json
@@ -92,6 +160,9 @@ fn main() {
 
     section("incremental iteration engine: single large job (iters/sec)");
     let single_job = bench_single_job();
+
+    section("what-if engine: counterfactual sweep vs cold runs");
+    let whatif_sweep = bench_whatif_sweep();
 
     section("fleet engine throughput (jobs/sec)");
     for (jobs, iters) in [(64usize, 60usize), (256, 60), (512, 120)] {
@@ -205,6 +276,7 @@ fn main() {
         ("bench", Json::str("fleet")),
         ("host_workers", Json::Num(workers as f64)),
         ("single_job", single_job),
+        ("whatif_sweep", whatif_sweep),
         ("runs", Json::Arr(runs)),
     ]);
     match std::fs::write(BENCH_PATH, out.to_string() + "\n") {

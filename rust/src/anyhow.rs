@@ -1,0 +1,136 @@
+//! In-tree stand-in for the `anyhow` crate (pjrt builds only).
+//!
+//! The live PJRT path (`runtime/`, `trainer/`) was written against the
+//! external `anyhow` crate, which cannot be declared in the offline
+//! Cargo.toml. This shim supplies the exact surface those modules use —
+//! [`Error`], [`Result`], the [`Context`] extension trait on `Result` and
+//! `Option`, and the `anyhow!` / `bail!` / `ensure!` macros — so
+//! `cargo build --features pjrt` compiles without network access. It is a
+//! faithful-but-minimal substitute: errors are context-joined strings,
+//! not chained sources. Swap in the real crate by deleting this module
+//! and declaring the dependency once vendoring lands (ROADMAP).
+
+/// String-backed error with `anyhow`-style context joining.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn msg(m: impl Into<String>) -> Error {
+        Error { msg: m.into() }
+    }
+
+    fn wrap(self, ctx: impl std::fmt::Display) -> Error {
+        Error { msg: format!("{ctx}: {}", self.msg) }
+    }
+}
+
+impl std::fmt::Debug for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Error {
+        Error::msg(e.to_string())
+    }
+}
+
+impl From<String> for Error {
+    fn from(m: String) -> Error {
+        Error::msg(m)
+    }
+}
+
+impl From<&str> for Error {
+    fn from(m: &str) -> Error {
+        Error::msg(m)
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// `anyhow::Context`: attach context to the error arm of a `Result` or to
+/// a `None`.
+pub trait Context<T> {
+    fn context<C: std::fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: std::fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: std::fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: std::fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| Error::msg(e.to_string()).wrap(ctx))
+    }
+
+    fn with_context<C: std::fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(e.to_string()).wrap(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: std::fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx.to_string()))
+    }
+
+    fn with_context<C: std::fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f().to_string()))
+    }
+}
+
+macro_rules! anyhow {
+    ($($t:tt)*) => { $crate::anyhow::Error::msg(format!($($t)*)) };
+}
+
+macro_rules! bail {
+    ($($t:tt)*) => { return Err($crate::anyhow::anyhow!($($t)*)) };
+}
+
+macro_rules! ensure {
+    ($cond:expr, $($t:tt)*) => {
+        if !($cond) {
+            $crate::anyhow::bail!($($t)*)
+        }
+    };
+}
+
+pub use {anyhow, bail, ensure};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<u32> {
+        Err(anyhow!("base {}", 42))
+    }
+
+    #[test]
+    fn context_joins_messages() {
+        let e = fails().context("outer").unwrap_err();
+        assert_eq!(format!("{e}"), "outer: base 42");
+        let e = fails().with_context(|| format!("ring {}", 7)).unwrap_err();
+        assert_eq!(format!("{e:?}"), "ring 7: base 42");
+        let none: Option<u32> = None;
+        assert!(none.context("missing").is_err());
+    }
+
+    #[test]
+    fn bail_and_ensure_short_circuit() {
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x < 10, "too big: {x}");
+            if x == 0 {
+                bail!("zero");
+            }
+            Ok(x)
+        }
+        assert!(f(3).is_ok());
+        assert_eq!(f(11).unwrap_err().to_string(), "too big: 11");
+        assert_eq!(f(0).unwrap_err().to_string(), "zero");
+    }
+}

@@ -33,6 +33,12 @@ pub struct FalconConfig {
     pub overheads: Overheads,
     /// Run FALCON-MITIGATE (off = detection-only, the §3 probe mode).
     pub mitigate: bool,
+    /// Hold mitigation back for this many iterations after an episode
+    /// opens (detection and diagnosis still run on time). 0 = react
+    /// immediately, the normal behavior; the what-if engine's
+    /// `DelayMitigation` counterfactual raises it to ask "what if FALCON
+    /// had reacted N iterations later?".
+    pub mitigation_delay_iters: usize,
     /// Shared-cluster mode: S3/S4 need hardware from a finite healthy-node
     /// pool, so instead of executing immediately they file a request (see
     /// [`Falcon::take_request`]) that the fleet's `cluster::Arbiter` may
@@ -54,6 +60,7 @@ impl Default for FalconConfig {
             bocd: BocdConfig::default(),
             overheads: Overheads::default(),
             mitigate: true,
+            mitigation_delay_iters: 0,
             defer_heavy: false,
             validation_pause: from_secs(5.0),
             topology_pause: from_secs(45.0),
@@ -96,6 +103,11 @@ pub enum ActionKind {
 }
 
 /// The coordinator state machine.
+///
+/// `Clone` captures the complete coordinator state (detector posterior,
+/// planner escalation cursor, action log) so the what-if engine can
+/// snapshot a supervised run and replay counterfactual tails.
+#[derive(Clone)]
 pub struct Falcon {
     pub cfg: FalconConfig,
     pub detector: Detector,
@@ -105,6 +117,9 @@ pub struct Falcon {
     restarts: usize,
     /// Strategy awaiting a cluster grant (shared-cluster mode only).
     pending_grant: Option<Strategy>,
+    /// Iteration at which the currently open episode was verified (drives
+    /// the `mitigation_delay_iters` counterfactual gate).
+    episode_open_iter: Option<usize>,
 }
 
 impl Falcon {
@@ -117,6 +132,7 @@ impl Falcon {
             actions: Vec::new(),
             restarts: 0,
             pending_grant: None,
+            episode_open_iter: None,
         }
     }
 
@@ -127,6 +143,7 @@ impl Falcon {
         match verdict {
             Some(true) => {
                 self.actions.push(Action { at: sim.now, iter, what: ActionKind::EpisodeOpened });
+                self.episode_open_iter = Some(iter);
                 let diag = self.diagnose(sim);
                 self.planner = Some(MitigationPlanner::new(diag.kind, self.cfg.overheads));
                 self.actions.push(Action {
@@ -140,6 +157,7 @@ impl Falcon {
                 self.actions.push(Action { at: sim.now, iter, what: ActionKind::EpisodeClosed });
                 self.planner = None;
                 self.diagnosis = None;
+                self.episode_open_iter = None;
                 if self.cfg.mitigate {
                     // Re-solve the allocation for the *current* replica
                     // speeds: if the underlying degradation healed this is
@@ -153,7 +171,14 @@ impl Falcon {
             None => {}
         }
 
-        if self.detector.slow_now() && self.cfg.mitigate {
+        // Counterfactual delay gate: with `mitigation_delay_iters > 0` the
+        // planner sits out the first N iterations after the episode opens
+        // (impact accumulation included — FALCON "reacts later", it does
+        // not pre-accumulate). 0 leaves behavior bit-identical.
+        let delay_passed = self
+            .episode_open_iter
+            .map_or(true, |o| iter >= o + self.cfg.mitigation_delay_iters);
+        if self.detector.slow_now() && self.cfg.mitigate && delay_passed {
             // Compound escalation (Fig 17): a further verified upward shift
             // inside the episode means a NEW root cause arrived — re-run
             // profiling + validation and retarget the planner, carrying the
@@ -178,7 +203,7 @@ impl Falcon {
             if let Some(strategy) = escalate {
                 self.apply(sim, iter, strategy);
             }
-        } else if self.cfg.mitigate && iter % 20 == 19 {
+        } else if self.cfg.mitigate && !self.detector.slow_now() && iter % 20 == 19 {
             // Housekeeping while healthy: drop stale S2 skew once the
             // replicas are homogeneous again (episodes can close while a
             // later-expiring event still held the skew in place).
@@ -334,6 +359,15 @@ impl Falcon {
                 p.on_denied(strategy);
             }
         }
+    }
+
+    /// Force-execute a strategy right now, bypassing the ski-rental
+    /// planner and any cluster arbitration — the what-if engine's
+    /// `ForceLevel` counterfactual ("what if S3 had run at t?"). The
+    /// action is logged like a planner-driven application.
+    pub fn force(&mut self, sim: &mut TrainingSim, strategy: Strategy) {
+        let iter = sim.iter;
+        self.execute(sim, iter, strategy);
     }
 
     /// Execute a strategy on the job.

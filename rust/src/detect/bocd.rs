@@ -114,6 +114,7 @@ impl Default for BocdConfig {
 }
 
 /// Online BOCD state.
+#[derive(Clone, Debug)]
 pub struct Bocd {
     cfg: BocdConfig,
     /// Run-length posterior (index = run length), aligned with `models`.

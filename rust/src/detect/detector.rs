@@ -85,6 +85,7 @@ pub struct Episode {
 /// verification window plus the pending-candidate horizon, and the healthy
 /// baseline is a streaming [`Welford`] accumulator — the detector can run
 /// always-on over unbounded streams (R2).
+#[derive(Clone, Debug)]
 pub struct Detector {
     bocd: Bocd,
     history: Ring,

@@ -178,6 +178,7 @@ pub struct GpuId {
 /// over that set and revalidates in O(|set|) instead of recomputing the
 /// world. Code that writes the pub health fields directly (tests, ad-hoc
 /// probes) bypasses the counters and must not expect caches to notice.
+#[derive(Clone, Debug)]
 pub struct Cluster {
     pub spec: ClusterSpec,
     pub gpus: Vec<GpuState>,

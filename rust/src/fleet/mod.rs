@@ -112,6 +112,11 @@ pub struct FleetConfig {
     /// epoch 0, the previous behavior. Ignored in private mode, where jobs
     /// share nothing.
     pub stagger: f64,
+    /// Scripted per-job fault events (absolute sim time), injected ON TOP
+    /// of whatever the calibrated injection model samples for that job.
+    /// This is how scenario `[[fault]]` entries with `job = N` reach the
+    /// engine (see `crate::scenario::ScenarioSpec::fleet_config`).
+    pub scripted: Vec<(usize, Vec<FailSlowEvent>)>,
     /// Per-job coordinator configuration (overheads, pauses, BOCD knobs).
     /// `mitigate`/`defer_heavy` are forced per engine mode.
     pub falcon: FalconConfig,
@@ -130,6 +135,7 @@ impl Default for FleetConfig {
             spare_frac: 0.15,
             epoch_len: 20,
             stagger: 0.0,
+            scripted: Vec::new(),
             falcon: FalconConfig::default(),
         }
     }
@@ -256,6 +262,36 @@ pub struct FleetReport {
     pub results: Vec<JobResult>,
 }
 
+/// One per-(job, leaf) contention sample at an epoch boundary (shared
+/// mode): which job sat on which leaf, at what bandwidth share, carrying
+/// what communication volume. The what-if engine's fleet blame attribution
+/// ("which job slowed which") is computed purely from these records.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ContentionSample {
+    pub epoch: usize,
+    pub leaf: usize,
+    pub job: usize,
+    /// Bandwidth share the job got on this leaf's uplink (1.0 = alone).
+    pub scale: f64,
+    /// The job's inter-node communication volume rate (bytes/s of healthy
+    /// training) — the culprit weighting.
+    pub volume: f64,
+}
+
+/// Recording of one shared-cluster fleet run for counterfactual analysis.
+/// Private-mode fleets produce an empty trace: nothing is shared, so there
+/// is nobody to blame.
+#[derive(Clone, Debug, Default)]
+pub struct FleetTrace {
+    /// Iterations per arbitration epoch (0 = no shared run recorded).
+    pub epoch_len: usize,
+    /// Epoch-boundary passes executed.
+    pub epochs: usize,
+    pub contention: Vec<ContentionSample>,
+    /// Healthy iteration seconds per job (exposure weighting for blame).
+    pub job_ideal_iter_s: Vec<f64>,
+}
+
 /// Heterogeneous job palette: small 1–2-node strategies (the fleet's bread
 /// and butter — §3's probe classes) with varied models and noise profiles.
 pub fn job_spec(fleet_seed: u64, job_id: usize) -> JobSpec {
@@ -295,7 +331,8 @@ fn fleet_injection_model(boost: f64) -> InjectionModel {
     }
 }
 
-/// Sample job `job_id`'s fail-slow trace (deterministic in `(seed, id)`).
+/// Sample job `job_id`'s fail-slow trace (deterministic in `(seed, id)`),
+/// then append any scripted events targeted at this job.
 fn sample_events(
     cfg: &FleetConfig,
     job_id: usize,
@@ -303,12 +340,18 @@ fn sample_events(
     horizon: Time,
 ) -> Vec<FailSlowEvent> {
     let mut ev_rng = Rng::new(cfg.seed ^ 0xE7E47).fork(job_id as u64);
-    fleet_injection_model(cfg.failslow_boost).sample_job(
+    let mut events = fleet_injection_model(cfg.failslow_boost).sample_job(
         spec.n_nodes(),
         spec.gpus_per_node,
         horizon,
         &mut ev_rng,
-    )
+    );
+    for (job, evs) in &cfg.scripted {
+        if *job == job_id {
+            events.extend(evs.iter().copied());
+        }
+    }
+    events
 }
 
 /// Match verified onsets to injected onsets chronologically: latency =
@@ -342,6 +385,8 @@ pub fn run_job(cfg: &FleetConfig, job_id: usize) -> JobResult {
     // borrowed iteration, so neither is cloned per run (the ignore-mode
     // re-run replays the identical trace from the same buffer).
     let mut sim = TrainingSim::new(spec);
+    // Horizon formula mirrored by scenario::ScenarioSpec::fleet_config
+    // (scripted-fault lowering) — change both together.
     let horizon = from_secs((sim.ideal_iter_s * cfg.iters as f64).max(60.0));
     let events = sample_events(cfg, job_id, &spec, horizon);
     sim.inject(events.iter().copied());
@@ -387,9 +432,21 @@ pub fn run_job(cfg: &FleetConfig, job_id: usize) -> JobResult {
 /// [`FleetConfig::policy`] is set.
 pub fn run_fleet(cfg: &FleetConfig) -> FleetReport {
     match cfg.policy {
-        Some(policy) => run_fleet_shared(cfg, policy),
+        Some(policy) => run_fleet_shared(cfg, policy, None),
         None => run_fleet_private(cfg),
     }
+}
+
+/// Run the fleet AND record the [`FleetTrace`] the what-if engine attributes
+/// contention blame from. Recording is read-only instrumentation: the
+/// report is bit-identical to [`run_fleet`]'s for the same config.
+pub fn run_fleet_traced(cfg: &FleetConfig) -> (FleetReport, FleetTrace) {
+    let mut trace = FleetTrace::default();
+    let report = match cfg.policy {
+        Some(policy) => run_fleet_shared(cfg, policy, Some(&mut trace)),
+        None => run_fleet_private(cfg),
+    };
+    (report, trace)
 }
 
 fn worker_count(cfg: &FleetConfig) -> usize {
@@ -490,7 +547,11 @@ fn node_degraded(sim: &TrainingSim, k: usize) -> bool {
     (0..gpn).any(|g| c.gpus[k * gpn + g].compute_scale < 1.0)
 }
 
-fn run_fleet_shared(cfg: &FleetConfig, policy: Policy) -> FleetReport {
+fn run_fleet_shared(
+    cfg: &FleetConfig,
+    policy: Policy,
+    mut trace: Option<&mut FleetTrace>,
+) -> FleetReport {
     let t0 = std::time::Instant::now();
     let workers = worker_count(cfg);
     let epoch_len = cfg.epoch_len.max(1);
@@ -527,8 +588,14 @@ fn run_fleet_shared(cfg: &FleetConfig, policy: Policy) -> FleetReport {
     let spares_initial = n_nodes - peak;
 
     let mut jobs: Vec<Mutex<SharedJob>> = Vec::with_capacity(cfg.jobs);
+    let mut ideal_iters: Vec<f64> = Vec::new(); // filled only when tracing
     for (id, spec) in specs.iter().enumerate() {
         let mut sim = TrainingSim::new(*spec);
+        if trace.is_some() {
+            ideal_iters.push(sim.ideal_iter_s);
+        }
+        // Horizon formula mirrored by scenario::ScenarioSpec::fleet_config
+        // (scripted-fault lowering) — change both together.
         let horizon = from_secs((sim.ideal_iter_s * cfg.iters as f64).max(60.0));
         let events = sample_events(cfg, id, spec, horizon);
         sim.inject(events.iter().copied());
@@ -638,10 +705,31 @@ fn run_fleet_shared(cfg: &FleetConfig, policy: Policy) -> FleetReport {
                 continue;
             }
             for (k, &shared) in job.placement.iter().enumerate() {
-                let scale = cluster.contention_share(leaf_volumes[cluster.leaf_of(shared)], id);
+                let leaf = cluster.leaf_of(shared);
+                let scale = cluster.contention_share(leaf_volumes[leaf], id);
                 job.sim.cluster.set_external_scale(k, scale);
                 contention_sum += scale;
                 contention_n += 1;
+                if let Some(tr) = trace.as_deref_mut() {
+                    // One sample per (epoch, job, leaf): this job's samples
+                    // are the most recent pushes, so a bounded tail scan
+                    // dedupes multi-node-per-leaf placements.
+                    let dup = tr
+                        .contention
+                        .iter()
+                        .rev()
+                        .take(job.placement.len())
+                        .any(|s| s.epoch == epoch && s.job == id && s.leaf == leaf);
+                    if !dup {
+                        tr.contention.push(ContentionSample {
+                            epoch,
+                            leaf,
+                            job: id,
+                            scale,
+                            volume: job.volume,
+                        });
+                    }
+                }
             }
         }
 
@@ -780,6 +868,11 @@ fn run_fleet_shared(cfg: &FleetConfig, policy: Policy) -> FleetReport {
     }
 
     // --- finalize ----------------------------------------------------------
+    if let Some(tr) = trace.as_deref_mut() {
+        tr.epoch_len = epoch_len;
+        tr.epochs = epoch;
+        tr.job_ideal_iter_s = ideal_iters;
+    }
     summary.preempted = arbiter.preempted;
     summary.grant_wait = LatencySummary::from_samples(&grant_waits);
     summary.mean_contention_scale =
@@ -1203,6 +1296,59 @@ mod tests {
             a_nodes < c_nodes,
             "staggered pool must be smaller than the burst pool: {a_nodes} vs {c_nodes}"
         );
+    }
+
+    #[test]
+    fn scripted_events_strike_only_their_job() {
+        use crate::inject::{FailSlowKind, Target};
+        let mut cfg = small_cfg();
+        cfg.failslow_boost = 0.0; // isolate the scripted fault
+        cfg.compare = false;
+        cfg.iters = 60;
+        cfg.scripted.push((
+            2,
+            vec![FailSlowEvent {
+                kind: FailSlowKind::GpuDegradation,
+                target: Target::Gpu(0),
+                start: 0,
+                duration: 600 * MINUTE,
+                scale: 0.4,
+            }],
+        ));
+        let r = run_fleet(&cfg);
+        for (i, jr) in r.results.iter().enumerate() {
+            assert_eq!(jr.injected, usize::from(i == 2), "job {i}");
+        }
+        let victim = &r.results[2];
+        assert!(
+            victim.mean_thpt < 0.95 * victim.ideal_thpt,
+            "scripted fault must slow its job: {} vs ideal {}",
+            victim.mean_thpt,
+            victim.ideal_thpt
+        );
+    }
+
+    #[test]
+    fn traced_shared_fleet_matches_untraced_and_records_contention() {
+        let mut cfg = shared_cfg();
+        cfg.jobs = 8;
+        cfg.iters = 30;
+        let (r, tr) = run_fleet_traced(&cfg);
+        assert_eq!(r.digest(), run_fleet(&cfg).digest(), "tracing perturbed the run");
+        assert_eq!(tr.epoch_len, cfg.epoch_len);
+        assert!(tr.epochs > 0);
+        assert_eq!(tr.job_ideal_iter_s.len(), cfg.jobs);
+        assert!(!tr.contention.is_empty(), "shared fleet recorded no contention");
+        assert!(tr
+            .contention
+            .iter()
+            .all(|s| s.job < cfg.jobs && s.scale > 0.0 && s.scale <= 1.0));
+        // Private mode records nothing: there is nobody to blame.
+        let mut private = cfg.clone();
+        private.policy = None;
+        let (_, tr) = run_fleet_traced(&private);
+        assert!(tr.contention.is_empty());
+        assert_eq!(tr.epoch_len, 0);
     }
 
     #[test]

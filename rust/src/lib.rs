@@ -11,9 +11,14 @@
 //! arbitration of S3/S4 mitigation resources — and [`scenario`] makes
 //! every experiment a declarative spec: `falcon run <file|name>` executes
 //! a fault script (or a whole fleet campaign) from one TOML document or
-//! the built-in library. See the top-level README.md for the architecture
-//! map and quickstart.
+//! the built-in library. [`whatif`] adds counterfactual analysis on top:
+//! record a run, replay it with one fault removed or one decision
+//! changed, and attribute the delay (`falcon whatif <scenario>`). See the
+//! top-level README.md for the architecture map and quickstart.
 
+/// In-tree `anyhow` stand-in for the pjrt feature (see the module docs).
+#[cfg(feature = "pjrt")]
+pub mod anyhow;
 pub mod cluster;
 pub mod collectives;
 pub mod coordinator;
@@ -35,3 +40,7 @@ pub mod simkit;
 #[cfg(feature = "pjrt")]
 pub mod trainer;
 pub mod util;
+pub mod whatif;
+/// In-tree `xla` PJRT stub for the pjrt feature (see the module docs).
+#[cfg(feature = "pjrt")]
+pub mod xla;

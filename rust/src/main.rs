@@ -14,6 +14,14 @@
 //!     (`falcon scenarios` lists them) or a TOML spec file (format:
 //!     docs/SCENARIOS.md). Prints the structured Outcome as ASCII, or as
 //!     JSON with --json.
+//! whatif <file|name> [--drop-fault i[,j..] | --no-mitigation
+//!        | --delay-mitigation N | --force S2@0.5 | --swap-policy P
+//!        | --sweep] [--iters N] [--seed S] [--json true]
+//!     Counterfactual analysis: record the scenario, replay it with the
+//!     given edit, and report the attributed JCT delta. With --sweep (or
+//!     no edit at all) runs the full attribution — one fault-removed
+//!     replay per [[fault]] plus a no-mitigation replay — fanned across
+//!     worker threads; fleet scenarios report contention blame instead.
 //! scenarios
 //!     List the built-in scenario library with descriptions.
 //! sim [--tp T] [--dp D] [--pp P] [--iters N] [--inject gpu|cpu|net]
@@ -63,6 +71,7 @@ fn main() {
             }
         }
         "run" => run_scenario(&args),
+        "whatif" => run_whatif(&args),
         "scenarios" => {
             for &name in falcon::scenario::LIBRARY {
                 let spec = falcon::scenario::find(name).expect("library names build");
@@ -81,33 +90,35 @@ fn main() {
         #[cfg(not(feature = "pjrt"))]
         "train" => {
             println!(
-                "the live PJRT trainer is compiled out: it needs the external \
-                 `xla`/`anyhow` crates, which are not yet vendored (see \
-                 ROADMAP open items). Once they are declared in rust/Cargo.toml, \
-                 build with `--features pjrt`."
+                "the live PJRT trainer is compiled out of this binary; rebuild \
+                 with `--features pjrt`. That build compiles against the \
+                 in-tree xla/anyhow stubs (rust/src/xla.rs), so real artifact \
+                 execution still needs the vendored crates — see the ROADMAP \
+                 open item."
             );
         }
         _ => {
             println!(
-                "usage: falcon <report|run|scenarios|train|sim|fleet|campaign|list> [flags]\n\
+                "usage: falcon <report|run|whatif|scenarios|train|sim|fleet|campaign|list> \
+                 [flags]\n\
                  see `falcon list` for report ids, `falcon scenarios` for the scenario\n\
-                 library, README.md for the quickstart, and docs/SCENARIOS.md for the\n\
-                 scenario spec format"
+                 library, README.md for the quickstart, docs/SCENARIOS.md for the\n\
+                 scenario spec format, and docs/WHATIF.md for counterfactual edits"
             );
         }
     }
 }
 
-/// `falcon run <library-name|path/to/spec.toml>`: one declarative scenario,
-/// end to end, through `ScenarioSpec::run`.
-fn run_scenario(args: &Args) {
+/// Resolve the `<library-name|path/to/spec.toml>` positional into a spec
+/// and apply the common CLI overrides (shared by `run` and `whatif`).
+fn load_spec(args: &Args, usage: &str) -> Option<ScenarioSpec> {
     let Some(what) = args.positional.get(1) else {
-        eprintln!("usage: falcon run <library-name|path/to/spec.toml> [--json true]");
+        eprintln!("usage: {usage}");
         eprintln!("library scenarios (details: `falcon scenarios`):");
         for &name in falcon::scenario::LIBRARY {
             eprintln!("  {name}");
         }
-        return;
+        return None;
     };
     let mut spec = if let Some(spec) = falcon::scenario::find(what) {
         spec
@@ -117,13 +128,13 @@ fn run_scenario(args: &Args) {
                 Ok(spec) => spec,
                 Err(e) => {
                     eprintln!("{what}: {e}");
-                    return;
+                    return None;
                 }
             },
             Err(io) => {
                 eprintln!("'{what}' is neither a library scenario nor a readable file ({io})");
                 eprintln!("library names: {:?}", falcon::scenario::LIBRARY);
-                return;
+                return None;
             }
         }
     };
@@ -137,6 +148,17 @@ fn run_scenario(args: &Args) {
     if args.has("mitigate") {
         spec = spec.mitigate(args.bool_or("mitigate", spec.run.mitigate));
     }
+    Some(spec)
+}
+
+/// `falcon run <library-name|path/to/spec.toml>`: one declarative scenario,
+/// end to end, through `ScenarioSpec::run`.
+fn run_scenario(args: &Args) {
+    let Some(spec) =
+        load_spec(args, "falcon run <library-name|path/to/spec.toml> [--json true]")
+    else {
+        return;
+    };
     match spec.run() {
         Ok(outcome) => {
             if args.bool_or("json", false) {
@@ -146,6 +168,227 @@ fn run_scenario(args: &Args) {
             }
         }
         Err(e) => eprintln!("scenario '{}' failed: {e}", spec.name),
+    }
+}
+
+/// `falcon whatif <scenario|file>`: record, counterfactually replay, and
+/// attribute (see `docs/WHATIF.md`).
+fn run_whatif(args: &Args) {
+    use falcon::whatif::{self, Edit, Recording, TraceConfig};
+
+    let Some(spec) = load_spec(
+        args,
+        "falcon whatif <library-name|path/to/spec.toml> [--drop-fault i[,j..] | \
+         --no-mitigation | --delay-mitigation N | --force S2@0.5 | \
+         --swap-policy P | --sweep] [--json true]",
+    ) else {
+        return;
+    };
+
+    // --- collect edits -----------------------------------------------------
+    // The flag map keeps only the last occurrence of a repeated flag, so
+    // repeats would silently drop edits; reject them (drop-fault merges
+    // several faults via a comma list instead).
+    for flag in ["drop-fault", "force", "swap-policy", "delay-mitigation"] {
+        if args.count(flag) > 1 {
+            eprintln!(
+                "--{flag} was passed {} times; pass it once{}",
+                args.count(flag),
+                if flag == "drop-fault" { " (it accepts a comma list: 0,2)" } else { "" }
+            );
+            return;
+        }
+    }
+    let mut edits: Vec<Edit> = Vec::new();
+    if let Some(v) = args.get("drop-fault") {
+        for part in v.split(',') {
+            match part.trim().parse() {
+                Ok(i) => edits.push(Edit::DropFault(i)),
+                Err(_) => {
+                    eprintln!("--drop-fault wants a fault index or comma list, got '{v}'");
+                    return;
+                }
+            }
+        }
+    }
+    if args.bool_or("no-mitigation", false) {
+        edits.push(Edit::NoMitigation);
+    }
+    if let Some(v) = args.get("delay-mitigation") {
+        match v.parse() {
+            Ok(n) => edits.push(Edit::DelayMitigation(n)),
+            Err(_) => {
+                eprintln!("--delay-mitigation wants an iteration count, got '{v}'");
+                return;
+            }
+        }
+    }
+    if let Some(v) = args.get("force") {
+        let (s, at) = match v.split_once('@') {
+            Some((s, at)) => match at.parse::<f64>() {
+                Ok(frac) if (0.0..=1.0).contains(&frac) => (s, frac),
+                _ => {
+                    eprintln!(
+                        "--force wants a fraction in [0, 1] after '@', got '{at}' in '{v}'"
+                    );
+                    return;
+                }
+            },
+            None => (v, 0.5),
+        };
+        let Some(strategy) = parse_strategy(s) else {
+            eprintln!("--force wants S1|S2|S3|S4[@frac], got '{v}'");
+            return;
+        };
+        edits.push(Edit::ForceLevel { strategy, at_frac: at });
+    }
+    if let Some(v) = args.get("swap-policy") {
+        let Some(p) = falcon::cluster::Policy::parse(v) else {
+            eprintln!("--swap-policy wants first-fit|packed|spread|straggler-aware, got '{v}'");
+            return;
+        };
+        edits.push(Edit::SwapPolicy(p));
+    }
+    if args.bool_or("sweep", false) && !edits.is_empty() {
+        eprintln!(
+            "--sweep runs the full attribution and cannot be combined with an \
+             explicit edit flag; drop one of them"
+        );
+        return;
+    }
+    let sweep_mode = args.bool_or("sweep", false) || edits.is_empty();
+    let json = args.bool_or("json", false);
+
+    // --- record ------------------------------------------------------------
+    let tcfg = TraceConfig { snapshot_every: args.usize_or("snapshot-every", 64) };
+    let recording = match whatif::record_scenario(&spec, &tcfg) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("whatif '{}' failed to record: {e}", spec.name);
+            return;
+        }
+    };
+
+    match &recording {
+        Recording::Single(trace) => {
+            if sweep_mode {
+                // Full attribution: one replay per fault + no-mitigation.
+                match whatif::attribute(trace, args.usize_or("workers", 0)) {
+                    Ok(attr) => {
+                        let mut outcome = trace.outcome.clone();
+                        outcome.attribution = Some(attr);
+                        if json {
+                            println!("{}", outcome.to_json().to_string());
+                        } else {
+                            println!("{}", outcome.render());
+                        }
+                    }
+                    Err(e) => eprintln!("attribution failed: {e}"),
+                }
+                return;
+            }
+            let edited = match recording.replay(&edits) {
+                Ok(o) => o,
+                Err(e) => {
+                    eprintln!("replay failed: {e}");
+                    return;
+                }
+            };
+            let baseline = &trace.outcome;
+            let delta = edited.jct_s - baseline.jct_s;
+            if json {
+                let doc = falcon::util::json::Json::obj(vec![
+                    ("baseline", baseline.to_json()),
+                    ("edited", edited.to_json()),
+                    ("jct_delta_s", falcon::util::json::Json::Num(delta)),
+                ]);
+                println!("{}", doc.to_string());
+                return;
+            }
+            println!(
+                "whatif '{}' — edits: {}",
+                spec.name,
+                edits.iter().map(|e| e.to_string()).collect::<Vec<_>>().join(", ")
+            );
+            println!(
+                "baseline: JCT {:.1} s (mean {:.3} iters/s, {} episodes detected)",
+                baseline.jct_s, baseline.mean_thpt, baseline.episodes_detected
+            );
+            println!(
+                "edited:   JCT {:.1} s (mean {:.3} iters/s, {} episodes detected)",
+                edited.jct_s, edited.mean_thpt, edited.episodes_detected
+            );
+            println!("JCT delta (edited - baseline): {delta:+.1} s");
+            if edits.iter().any(|e| matches!(e, Edit::DropFault(_))) {
+                println!("attributed delay of the dropped fault(s): {:+.1} s", -delta);
+            }
+            if edits.contains(&Edit::NoMitigation) {
+                println!("mitigation benefit on this trace: {delta:+.1} s");
+            }
+        }
+        Recording::Fleet(rec) => {
+            use falcon::util::json::Json;
+            let blame = whatif::contention_blame(&rec.trace);
+            // Replay first so --json can carry the edited outcome too.
+            let edited = if edits.is_empty() {
+                None
+            } else {
+                match recording.replay(&edits) {
+                    Ok(out) => Some(out),
+                    Err(e) => {
+                        eprintln!("fleet replay failed: {e}");
+                        return;
+                    }
+                }
+            };
+            if json {
+                let blame_json = Json::Arr(
+                    blame
+                        .iter()
+                        .map(|b| {
+                            Json::obj(vec![
+                                ("victim", Json::Num(b.victim as f64)),
+                                ("culprit", Json::Num(b.culprit as f64)),
+                                ("lost_s", Json::Num(b.lost_s)),
+                            ])
+                        })
+                        .collect(),
+                );
+                let doc = Json::obj(vec![
+                    ("baseline", rec.outcome.to_json()),
+                    ("blame", blame_json),
+                    ("edited", edited.as_ref().map_or(Json::Null, |o| o.to_json())),
+                ]);
+                println!("{}", doc.to_string());
+                return;
+            }
+            println!("{}", rec.outcome.render());
+            println!("contention blame (top 10):");
+            print!("{}", whatif::render_blame(&blame, 10));
+            if let Some(out) = edited {
+                println!(
+                    "\nedited fleet ({}): mean slowdown {:.3}x (baseline {:.3}x), \
+                     JCT {:.1} s (baseline {:.1} s)",
+                    edits.iter().map(|e| e.to_string()).collect::<Vec<_>>().join(", "),
+                    out.ideal_thpt / out.mean_thpt.max(1e-9),
+                    rec.outcome.ideal_thpt / rec.outcome.mean_thpt.max(1e-9),
+                    out.jct_s,
+                    rec.outcome.jct_s
+                );
+            }
+        }
+    }
+}
+
+/// Parse a mitigation-level token (`S1`..`S4`, case-insensitive).
+fn parse_strategy(s: &str) -> Option<falcon::mitigate::Strategy> {
+    use falcon::mitigate::Strategy;
+    match s.to_ascii_lowercase().as_str() {
+        "s1" | "ignore" => Some(Strategy::Ignore),
+        "s2" | "microbatch" => Some(Strategy::AdjustMicrobatch),
+        "s3" | "topology" => Some(Strategy::AdjustTopology),
+        "s4" | "restart" => Some(Strategy::CkptRestart),
+        _ => None,
     }
 }
 

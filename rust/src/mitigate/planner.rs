@@ -90,6 +90,7 @@ pub fn find_strategies(kind: FailSlowKind, ov: &Overheads) -> Vec<Strategy> {
 }
 
 /// Escalation decision for one ongoing fail-slow event.
+#[derive(Clone, Debug)]
 pub struct MitigationPlanner {
     pub candidates: Vec<Strategy>,
     pub overheads: Overheads,

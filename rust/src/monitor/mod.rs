@@ -92,6 +92,7 @@ pub enum MonitorMode {
 
 /// The per-job monitor: one log per rank plus per-group transfer-time
 /// aggregation used to find suspicious groups.
+#[derive(Clone, Debug)]
 pub struct Monitor {
     pub mode: MonitorMode,
     pub logs: Vec<RankLog>,

@@ -32,7 +32,7 @@ impl StageTimes {
 /// Reusable buffers for [`one_f1b_makespan_scratch`]: the four p×m
 /// completion/readiness matrices. The simulator's cache layer keeps one of
 /// these per job so steady-state recomputes allocate nothing.
-#[derive(Debug, Default)]
+#[derive(Clone, Debug, Default)]
 pub struct MakespanScratch {
     f_done: Vec<Vec<f64>>,
     b_done: Vec<Vec<f64>>,

@@ -19,6 +19,9 @@
 //! - [`fleet`] — beyond-paper fleet campaigns (`fleet`, `fleet_cluster`
 //!   ids): many concurrent jobs, optionally on one shared cluster with
 //!   contended uplinks and arbitrated mitigation (see [`crate::cluster`]).
+//! - [`whatif`] — beyond-paper counterfactual attribution (`whatif` id):
+//!   record a run, replay fault-removed/mitigation-changed variants, and
+//!   attribute the JCT delay (see [`crate::whatif`]).
 //!
 //! Conventions: every generator takes [`Args`] (knobs like `--iters`,
 //! `--seed`, `--fast`) and returns a self-contained string — no generator
@@ -31,6 +34,7 @@ pub mod fleet;
 pub mod mitigation;
 pub mod overhead;
 pub mod scale;
+pub mod whatif;
 
 use crate::util::cli::Args;
 
@@ -43,7 +47,7 @@ pub const ALL: &[&str] = &[
 
 /// Beyond-paper report ids (kept out of [`ALL`] so `report all` stays the
 /// paper set; `falcon list` prints them under their own section).
-pub const BEYOND_PAPER: &[&str] = &["fleet", "fleet_cluster"];
+pub const BEYOND_PAPER: &[&str] = &["fleet", "fleet_cluster", "whatif"];
 
 /// Generate one report by id. `args` supplies knobs like `--iters`,
 /// `--seed`, `--fast`.
@@ -75,6 +79,7 @@ pub fn generate(id: &str, args: &Args) -> String {
         // set; the `falcon fleet` subcommand is the primary entry).
         "fleet" => fleet::fleet(args),
         "fleet_cluster" => fleet::fleet_cluster(args),
+        "whatif" => whatif::whatif(args),
         other => format!(
             "unknown report '{other}'; available: {ALL:?} \
              plus beyond-paper: {BEYOND_PAPER:?}\n"

@@ -1,0 +1,101 @@
+//! What-if counterfactual report (`whatif` id): replay-based attribution
+//! for a single-job scenario plus contention blame for a shared fleet —
+//! the report-registry face of [`crate::whatif`] (the `falcon whatif`
+//! subcommand is the interactive entry with per-edit knobs).
+
+use crate::cluster::Policy;
+use crate::scenario::{find, FleetSpec, ScenarioSpec};
+use crate::util::cli::Args;
+use crate::whatif::{
+    attribute, contention_blame, record, record_fleet, render_blame, TraceConfig,
+};
+
+pub fn whatif(args: &Args) -> String {
+    let name = args.str_or("scenario", "slow-leak-gpu");
+    let workers = args.usize_or("workers", 0);
+    let mut out = String::new();
+
+    // --- single-job attribution -------------------------------------------
+    // A fleet --scenario drives the blame section below instead; anything
+    // unknown is reported, never silently substituted.
+    let requested_fleet = find(&name).filter(|s| s.fleet.is_some());
+    let spec = match find(&name) {
+        Some(s) if s.fleet.is_none() => s,
+        other => {
+            let why = if other.is_some() {
+                "is a fleet scenario — its contention blame is attributed below"
+            } else {
+                "is not a library scenario"
+            };
+            out.push_str(&format!(
+                "note: --scenario '{name}' {why}; the single-job attribution \
+                 uses the default 'slow-leak-gpu'\n",
+            ));
+            find("slow-leak-gpu").expect("library scenario")
+        }
+    };
+    let iters = args.usize_or("iters", spec.run.iters.min(300));
+    let spec = spec.iters(iters);
+    out.push_str(&format!(
+        "WHATIF — counterfactual attribution of '{}' ({} iters)\n\n",
+        spec.name, iters
+    ));
+    match record(&spec, &TraceConfig::default()) {
+        Err(e) => out.push_str(&format!("recording failed: {e}\n")),
+        Ok(trace) => match attribute(&trace, workers) {
+            Err(e) => out.push_str(&format!("attribution failed: {e}\n")),
+            Ok(attr) => out.push_str(&attr.render()),
+        },
+    }
+
+    // --- fleet contention blame -------------------------------------------
+    // The requested fleet scenario when one was named; otherwise a small
+    // synthetic packed fleet.
+    let fleet_spec = match requested_fleet {
+        Some(s) => {
+            let iters = args.usize_or("fleet-iters", s.run.iters.min(40));
+            s.iters(iters)
+        }
+        None => ScenarioSpec::new("whatif-fleet", 2, 4, 1)
+            .iters(args.usize_or("fleet-iters", 40))
+            .seed(args.u64_or("seed", 11))
+            .with_fleet(FleetSpec {
+                jobs: args.usize_or("jobs", 12),
+                workers,
+                boost: args.f64_or("boost", 4.0),
+                compare: false,
+                policy: Some(Policy::Packed),
+                spare: 0.1,
+                epoch_len: 10,
+                stagger: 0.0,
+            }),
+    };
+    let fleet_jobs = fleet_spec.fleet.as_ref().map_or(0, |f| f.jobs);
+    out.push_str(&format!(
+        "\ncontention blame — '{}': {} jobs x {} iters on a shared cluster\n",
+        fleet_spec.name, fleet_jobs, fleet_spec.run.iters
+    ));
+    match record_fleet(&fleet_spec) {
+        Err(e) => out.push_str(&format!("fleet recording failed: {e}\n")),
+        Ok(rec) => out.push_str(&render_blame(&contention_blame(&rec.trace), 10)),
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn whatif_report_renders_attribution_and_blame() {
+        let args = Args::parse(
+            ["--iters", "120", "--jobs", "6", "--fleet-iters", "20", "--workers", "2"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        let out = whatif(&args);
+        assert!(out.contains("WHATIF"), "{out}");
+        assert!(out.contains("what-if attribution"), "{out}");
+        assert!(out.contains("contention blame"), "{out}");
+    }
+}

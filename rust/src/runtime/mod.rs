@@ -7,16 +7,19 @@
 //! interchange format), compiles once per process, and executes on the
 //! PJRT CPU client. Nothing on this path imports or spawns Python.
 //!
-//! Build gating: the module sits behind the `pjrt` cargo feature because
-//! it needs the external `xla`/`anyhow` crates, which are not vendored yet
-//! (ROADMAP open item) — the default offline build compiles it out
-//! entirely. With the feature on, `ModelMeta::load` reads the preset's
+//! Build gating: the module sits behind the `pjrt` cargo feature. The
+//! default offline build compiles it out entirely; with the feature on it
+//! builds against the in-tree [`crate::xla`]/[`crate::anyhow`] shims (the
+//! real external crates are not vendored yet — ROADMAP open item — so
+//! executing an artifact reports "XLA backend not vendored" at runtime,
+//! but the whole path type-checks in CI). `ModelMeta::load` reads the preset's
 //! `model_<preset>.meta.json`, `Runtime::new` owns the PJRT client, and
 //! `crate::trainer::LiveTrainer` drives the compiled step function with
 //! FALCON attached (the `falcon train` subcommand and `bench_runtime`).
 //! Run `make artifacts` first to produce the HLO/meta files.
 
-use anyhow::{bail, Context, Result};
+use crate::anyhow::{self, bail, Context, Result};
+use crate::xla;
 use std::path::{Path, PathBuf};
 
 use crate::util::json::Json;

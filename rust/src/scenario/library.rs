@@ -17,8 +17,10 @@ pub const LIBRARY: &[&str] = &[
     "flapping-link",
     "transient-spikes",
     "cascading-leaf-congestion",
+    "correlated-storm",
     "multi-tenant-burst",
     "fleet-breathing",
+    "noisy-neighbor",
 ];
 
 /// Build one library scenario by name (`None` for unknown names).
@@ -84,6 +86,14 @@ pub fn find(name: &str) -> Option<ScenarioSpec> {
             .fault(FaultSpec::new(Net, Target::Uplink(1), 0.3, 0.25, 0.42))
             .fault(FaultSpec::new(Net, Target::Uplink(2), 0.5, 0.25, 0.34))
             .fault(FaultSpec::new(Net, Target::Uplink(3), 0.7, 0.25, 0.26)),
+        "correlated-storm" => ScenarioSpec::new(name, 2, 8, 1)
+            .describe("correlated storm: a leaf uplink jams while two co-located GPUs degrade")
+            .nodes(4)
+            .iters(500)
+            .seed(9)
+            .fault(FaultSpec::new(Net, Target::Uplink(1), 0.30, 0.25, 0.40))
+            .fault(FaultSpec::new(Gpu, Target::Gpu(4), 0.32, 0.22, 0.55))
+            .fault(FaultSpec::new(Gpu, Target::Gpu(5), 0.34, 0.20, 0.60)),
         // --- fleet / shared-cluster scenarios ----------------------------
         "multi-tenant-burst" => ScenarioSpec::new(name, 2, 4, 1)
             .describe("24 tenants burst onto one packed shared cluster at heavy injection")
@@ -113,6 +123,21 @@ pub fn find(name: &str) -> Option<ScenarioSpec> {
                 epoch_len: 10,
                 stagger: 2.0,
             }),
+        "noisy-neighbor" => ScenarioSpec::new(name, 2, 4, 1)
+            .describe("shared fleet where a scripted GPU fault strikes exactly job 0")
+            .iters(60)
+            .seed(13)
+            .fault(FaultSpec::new(Gpu, Target::Gpu(0), 0.2, 0.5, 0.5).on_job(0))
+            .with_fleet(FleetSpec {
+                jobs: 8,
+                workers: 0,
+                boost: 4.0,
+                compare: false,
+                policy: Some(Policy::FirstFit),
+                spare: 0.2,
+                epoch_len: 10,
+                stagger: 0.0,
+            }),
         _ => return None,
     })
 }
@@ -133,7 +158,7 @@ mod tests {
             assert!(!spec.description.is_empty(), "{} has no description", spec.name);
             assert!(LIBRARY.contains(&spec.name.as_str()));
         }
-        assert_eq!(LIBRARY.len(), 10);
+        assert_eq!(LIBRARY.len(), 12);
         assert!(find("no-such-scenario").is_none());
     }
 
@@ -147,6 +172,41 @@ mod tests {
         assert_eq!(outcome.timeline_thpt.len(), 150);
         assert!(outcome.mean_thpt > 0.0);
         assert!(outcome.mean_thpt < outcome.ideal_thpt, "the leak must cost throughput");
+    }
+
+    #[test]
+    fn correlated_storm_faults_are_colocated() {
+        // The storm's GPUs sit on the node whose uplink jams (node 1 at 4
+        // GPUs/node), and the three windows overlap.
+        let spec = find("correlated-storm").unwrap();
+        assert_eq!(spec.n_nodes(), 4);
+        let gpn = spec.topology.gpus_per_node;
+        let mut gpu_nodes = Vec::new();
+        let mut uplink = None;
+        for f in &spec.faults {
+            match f.target {
+                crate::inject::Target::Gpu(g) => gpu_nodes.push(g / gpn),
+                crate::inject::Target::Uplink(u) => uplink = Some(u),
+                other => panic!("unexpected target {other:?}"),
+            }
+        }
+        assert_eq!(gpu_nodes, vec![uplink.unwrap(), uplink.unwrap()]);
+        let first_end = spec.faults[0].start + spec.faults[0].duration;
+        assert!(spec.faults.iter().all(|f| f.start < first_end), "windows must overlap");
+        let outcome = spec.iters(150).run().unwrap();
+        assert_eq!(outcome.injected, 3);
+        assert!(outcome.mean_thpt < outcome.ideal_thpt, "the storm must cost throughput");
+    }
+
+    #[test]
+    fn noisy_neighbor_scripts_a_job_targeted_fault() {
+        let spec = find("noisy-neighbor").unwrap();
+        assert_eq!(spec.faults[0].job, Some(0));
+        let cfg = spec.fleet_config().expect("fleet scenario");
+        assert_eq!(cfg.scripted.len(), 1);
+        let (job, events) = &cfg.scripted[0];
+        assert_eq!(*job, 0);
+        assert_eq!(events.len(), 1, "one-shot fault expands to one event");
     }
 
     #[test]

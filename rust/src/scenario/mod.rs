@@ -152,6 +152,12 @@ pub struct FaultSpec {
     /// `ramp_steps` equal steps spanning `duration`.
     pub ramp_to: Option<f64>,
     pub ramp_steps: usize,
+    /// Fleet scenarios only: the fleet job this fault strikes. Targets and
+    /// horizon fractions are then interpreted against that job's palette
+    /// topology, and the events are injected on top of whatever the
+    /// §3-calibrated injection model samples for it. Must be `None` for
+    /// single-job scenarios.
+    pub job: Option<usize>,
 }
 
 impl FaultSpec {
@@ -166,7 +172,16 @@ impl FaultSpec {
             period: 0.0,
             ramp_to: None,
             ramp_steps: 8,
+            job: None,
         }
+    }
+
+    /// Aim the fault at fleet job `j` (fleet scenarios only): the fault
+    /// script rides on top of the calibrated injection model for exactly
+    /// that job.
+    pub fn on_job(mut self, j: usize) -> Self {
+        self.job = Some(j);
+        self
     }
 
     /// Make the fault recur `repeat` more times, `period` apart.
@@ -291,6 +306,7 @@ impl FleetSpec {
             spare_frac: self.spare,
             epoch_len: self.epoch_len,
             stagger: self.stagger,
+            scripted: Vec::new(),
             falcon: FalconConfig::default(),
         }
     }
@@ -448,13 +464,6 @@ impl ScenarioSpec {
             return Err(ScenarioError::field("run.iters", "must be >= 1"));
         }
         if let Some(fs) = &self.fleet {
-            if !self.faults.is_empty() {
-                return Err(ScenarioError::field(
-                    "fault",
-                    "fleet scenarios draw faults from the calibrated injection \
-                     model; remove the [[fault]] entries",
-                ));
-            }
             if fs.jobs == 0 {
                 return Err(ScenarioError::field("fleet.jobs", "must be >= 1"));
             }
@@ -474,64 +483,39 @@ impl ScenarioSpec {
                      per-mode behavior); drop mitigate = false",
                 ));
             }
+            // Fleet fault scripts must name their victim: the calibrated
+            // injection model supplies the untargeted background faults,
+            // and each [[fault]] rides on one specific palette job.
+            for (i, f) in self.faults.iter().enumerate() {
+                let field = format!("fault[{i}]");
+                let Some(job) = f.job else {
+                    return Err(ScenarioError::field(
+                        &field,
+                        "fleet scenarios need `job = N` on every [[fault]] \
+                         (untargeted faults come from the calibrated injection model)",
+                    ));
+                };
+                if job >= fs.jobs {
+                    return Err(ScenarioError::field(
+                        &field,
+                        format!("job {job} out of range for a {}-job fleet", fs.jobs),
+                    ));
+                }
+                let spec = crate::fleet::job_spec(self.run.seed, job);
+                validate_fault(f, &field, spec.n_nodes(), spec.gpus_per_node)?;
+            }
             return Ok(());
         }
         let nodes = self.n_nodes();
-        let gpus = nodes * t.gpus_per_node;
         for (i, f) in self.faults.iter().enumerate() {
             let field = format!("fault[{i}]");
-            if !(f.scale > 0.0 && f.scale <= 1.0) {
-                return Err(ScenarioError::field(&field, "scale must be in (0, 1]"));
-            }
-            if f.start < 0.0 || f.duration <= 0.0 {
+            if f.job.is_some() {
                 return Err(ScenarioError::field(
                     &field,
-                    "start must be >= 0 and duration > 0 (fractions of the horizon)",
+                    "`job = N` targets a fleet job; this is a single-job scenario",
                 ));
             }
-            if f.repeat > 0 && f.period <= 0.0 {
-                return Err(ScenarioError::field(&field, "recurring faults need period > 0"));
-            }
-            if f.repeat > 0 && f.period < f.duration {
-                // The sim's apply/revert event semantics reset the target
-                // to healthy when ANY occurrence ends, so overlapping
-                // occurrences would silently truncate the script.
-                return Err(ScenarioError::field(
-                    &field,
-                    "recurring occurrences must not overlap: need period >= duration",
-                ));
-            }
-            if let Some(to) = f.ramp_to {
-                if !(to > 0.0 && to <= 1.0) {
-                    return Err(ScenarioError::field(&field, "ramp_to must be in (0, 1]"));
-                }
-                if f.ramp_steps < 2 {
-                    return Err(ScenarioError::field(&field, "ramp needs ramp_steps >= 2"));
-                }
-            }
-            let ok = match (f.kind, f.target) {
-                (FailSlowKind::GpuDegradation, Target::Gpu(g)) => g < gpus,
-                (FailSlowKind::CpuContention, Target::Node(n)) => n < nodes,
-                (FailSlowKind::NetworkCongestion, Target::Uplink(u)) => u < nodes,
-                (FailSlowKind::NetworkCongestion, Target::Link(a, b)) => {
-                    a < nodes && b < nodes && a != b
-                }
-                _ => {
-                    return Err(ScenarioError::field(
-                        &field,
-                        format!("kind {:?} cannot target {:?}", f.kind, f.target),
-                    ))
-                }
-            };
-            if !ok {
-                return Err(ScenarioError::field(
-                    &field,
-                    format!(
-                        "target {:?} out of range for {} nodes x {} GPUs/node",
-                        f.target, nodes, t.gpus_per_node
-                    ),
-                ));
-            }
+            validate_fault(f, &field, nodes, t.gpus_per_node)?;
         }
         Ok(())
     }
@@ -562,6 +546,18 @@ impl ScenarioSpec {
         self.faults.iter().flat_map(|f| f.expand(horizon_s)).collect()
     }
 
+    /// Fault index of each event [`ScenarioSpec::events`] produces, in the
+    /// same order — the what-if engine's event → `[[fault]]` attribution
+    /// map (a ramp or recurring fault expands to several events that all
+    /// blame the same fault).
+    pub fn event_fault_indices(&self, horizon_s: f64) -> Vec<usize> {
+        let mut out = Vec::new();
+        for (i, f) in self.faults.iter().enumerate() {
+            out.extend(std::iter::repeat(i).take(f.expand(horizon_s).len()));
+        }
+        out
+    }
+
     /// Validate, build the simulated job, and inject the fault script.
     pub fn build_sim(&self) -> Result<TrainingSim, ScenarioError> {
         self.validate()?;
@@ -577,9 +573,27 @@ impl ScenarioSpec {
         Ok(sim)
     }
 
-    /// The fleet configuration, when this is a fleet scenario.
+    /// The fleet configuration, when this is a fleet scenario. Job-targeted
+    /// faults are expanded here against the target job's own horizon (its
+    /// palette topology fixes `ideal_iter_s`) and lowered onto
+    /// [`FleetConfig::scripted`] as absolute-time events.
     pub fn fleet_config(&self) -> Option<FleetConfig> {
-        self.fleet.as_ref().map(|fs| fs.to_config(self.run.iters, self.run.seed))
+        self.fleet.as_ref().map(|fs| {
+            let mut cfg = fs.to_config(self.run.iters, self.run.seed);
+            for f in &self.faults {
+                // Validated specs always carry a job id here; tolerate an
+                // unvalidated caller by skipping the (invalid) fault
+                // rather than aborting the process.
+                debug_assert!(f.job.is_some(), "fleet faults carry a job id after validate()");
+                let Some(job) = f.job else { continue };
+                let spec = crate::fleet::job_spec(cfg.seed, job);
+                let ideal = TrainingSim::new(spec).ideal_iter_s;
+                // Mirror the engine's horizon clamp so fractions line up.
+                let horizon_s = (ideal * cfg.iters as f64).max(60.0);
+                cfg.scripted.push((job, f.expand(horizon_s)));
+            }
+            cfg
+        })
     }
 
     /// Execute the scenario end to end and return the structured outcome.
@@ -615,6 +629,69 @@ impl ScenarioSpec {
     pub fn render(&self) -> String {
         parse::render(self)
     }
+}
+
+/// Shape/range checks for one fault against a topology of `nodes` nodes x
+/// `gpus_per_node` GPUs (the scenario's own job, or — for job-targeted
+/// fleet faults — the palette topology of the targeted fleet job).
+fn validate_fault(
+    f: &FaultSpec,
+    field: &str,
+    nodes: usize,
+    gpus_per_node: usize,
+) -> Result<(), ScenarioError> {
+    let gpus = nodes * gpus_per_node;
+    if !(f.scale > 0.0 && f.scale <= 1.0) {
+        return Err(ScenarioError::field(field, "scale must be in (0, 1]"));
+    }
+    if f.start < 0.0 || f.duration <= 0.0 {
+        return Err(ScenarioError::field(
+            field,
+            "start must be >= 0 and duration > 0 (fractions of the horizon)",
+        ));
+    }
+    if f.repeat > 0 && f.period <= 0.0 {
+        return Err(ScenarioError::field(field, "recurring faults need period > 0"));
+    }
+    if f.repeat > 0 && f.period < f.duration {
+        // The sim's apply/revert event semantics reset the target to
+        // healthy when ANY occurrence ends, so overlapping occurrences
+        // would silently truncate the script.
+        return Err(ScenarioError::field(
+            field,
+            "recurring occurrences must not overlap: need period >= duration",
+        ));
+    }
+    if let Some(to) = f.ramp_to {
+        if !(to > 0.0 && to <= 1.0) {
+            return Err(ScenarioError::field(field, "ramp_to must be in (0, 1]"));
+        }
+        if f.ramp_steps < 2 {
+            return Err(ScenarioError::field(field, "ramp needs ramp_steps >= 2"));
+        }
+    }
+    let ok = match (f.kind, f.target) {
+        (FailSlowKind::GpuDegradation, Target::Gpu(g)) => g < gpus,
+        (FailSlowKind::CpuContention, Target::Node(n)) => n < nodes,
+        (FailSlowKind::NetworkCongestion, Target::Uplink(u)) => u < nodes,
+        (FailSlowKind::NetworkCongestion, Target::Link(a, b)) => a < nodes && b < nodes && a != b,
+        _ => {
+            return Err(ScenarioError::field(
+                field,
+                format!("kind {:?} cannot target {:?}", f.kind, f.target),
+            ))
+        }
+    };
+    if !ok {
+        return Err(ScenarioError::field(
+            field,
+            format!(
+                "target {:?} out of range for {nodes} nodes x {gpus_per_node} GPUs/node",
+                f.target
+            ),
+        ));
+    }
+    Ok(())
 }
 
 // --- token helpers shared by the parser, renderer, and outcome -------------

@@ -68,6 +68,11 @@ pub struct Outcome {
     pub ideal_thpt: f64,
     /// Achieved mean throughput, iters/s (fleet: mean across jobs).
     pub mean_thpt: f64,
+    /// Job completion time in simulated seconds: the sim clock at the end
+    /// of the run, every pause and restart included (fleet: mean over jobs
+    /// of `iters / mean_thpt`). The what-if engine's attribution deltas
+    /// are differences of this field across counterfactual replays.
+    pub jct_s: f64,
     /// Injected fail-slow events (fleet: across all jobs).
     pub injected: usize,
     /// Verified episodes the detector(s) opened.
@@ -79,6 +84,10 @@ pub struct Outcome {
     pub timeline_mins: Vec<f64>,
     pub timeline_thpt: Vec<f64>,
     pub fleet: Option<FleetOutcome>,
+    /// What-if attribution (per-fault delay, mitigation benefit, JCT-delay
+    /// %), attached by `falcon whatif` / [`crate::whatif::attribute`];
+    /// `None` on a plain run.
+    pub attribution: Option<crate::whatif::Attribution>,
 }
 
 fn action_token(what: &ActionKind) -> String {
@@ -109,6 +118,7 @@ impl Outcome {
             iters: spec.run.iters,
             ideal_thpt: 1.0 / sim.ideal_iter_s,
             mean_thpt: sim.timeline.mean_throughput(),
+            jct_s: crate::simkit::secs(sim.now),
             injected: injected.len(),
             episodes_detected: falcon.detector.episodes.len(),
             detection_latency_s: latencies,
@@ -124,6 +134,7 @@ impl Outcome {
             timeline_mins: sim.timeline.xs_mins(),
             timeline_thpt: sim.timeline.ys(),
             fleet: None,
+            attribution: None,
         }
     }
 
@@ -163,6 +174,12 @@ impl Outcome {
             grant_wait_p50_s: c.map_or(0.0, |c| c.grant_wait.p50),
             grant_wait_p99_s: c.map_or(0.0, |c| c.grant_wait.p99),
         };
+        let jcts: Vec<f64> = report
+            .results
+            .iter()
+            .filter(|r| r.mean_thpt > 0.0)
+            .map(|r| report.iters as f64 / r.mean_thpt)
+            .collect();
         Outcome {
             scenario: spec.name.clone(),
             label: "fleet".to_string(),
@@ -171,6 +188,7 @@ impl Outcome {
             iters: report.iters,
             ideal_thpt: stats::mean(&ideals),
             mean_thpt: stats::mean(&means),
+            jct_s: stats::mean(&jcts),
             injected: report.episodes_injected,
             episodes_detected: report.episodes_detected,
             detection_latency_s: pooled,
@@ -178,6 +196,7 @@ impl Outcome {
             timeline_mins: Vec::new(),
             timeline_thpt: Vec::new(),
             fleet: Some(fleet),
+            attribution: None,
         }
     }
 
@@ -192,6 +211,7 @@ impl Outcome {
             ("iters", Json::Num(self.iters as f64)),
             ("ideal_thpt", Json::Num(self.ideal_thpt)),
             ("mean_thpt", Json::Num(self.mean_thpt)),
+            ("jct_s", Json::Num(self.jct_s)),
             ("injected", Json::Num(self.injected as f64)),
             ("episodes_detected", Json::Num(self.episodes_detected as f64)),
             ("detection_latency_s", Json::arr_f64(&self.detection_latency_s)),
@@ -247,6 +267,10 @@ impl Outcome {
             ]),
         };
         fields.push(("fleet", fleet));
+        fields.push((
+            "attribution",
+            self.attribution.as_ref().map_or(Json::Null, |a| a.to_json()),
+        ));
         Json::obj(fields)
     }
 
@@ -285,8 +309,8 @@ impl Outcome {
             ));
         }
         out.push_str(&format!(
-            "mean throughput {:.3} iters/s (ideal {:.3})\n",
-            self.mean_thpt, self.ideal_thpt
+            "mean throughput {:.3} iters/s (ideal {:.3}); JCT {:.1} s\n",
+            self.mean_thpt, self.ideal_thpt, self.jct_s
         ));
         if let Some(f) = &self.fleet {
             out.push_str(&format!(
@@ -322,6 +346,9 @@ impl Outcome {
                 ));
             }
         }
+        if let Some(a) = &self.attribution {
+            out.push_str(&a.render());
+        }
         out
     }
 }
@@ -339,6 +366,7 @@ mod tests {
             iters: 4,
             ideal_thpt: 0.5,
             mean_thpt: 0.25,
+            jct_s: 16.0,
             injected: 1,
             episodes_detected: 1,
             detection_latency_s: vec![12.5],
@@ -350,6 +378,7 @@ mod tests {
             timeline_mins: vec![0.0, 2.0],
             timeline_thpt: vec![0.5, 0.25],
             fleet: None,
+            attribution: None,
         }
     }
 
@@ -360,12 +389,12 @@ mod tests {
         // incidental key order or whitespace.
         let expected = r#"{
             "scenario": "golden", "label": "2T4D1P", "nodes": 1, "world": 8,
-            "iters": 4, "ideal_thpt": 0.5, "mean_thpt": 0.25,
+            "iters": 4, "ideal_thpt": 0.5, "mean_thpt": 0.25, "jct_s": 16,
             "injected": 1, "episodes_detected": 1,
             "detection_latency_s": [12.5],
             "actions": [{"t_min": 1.5, "iter": 2, "kind": "episode_opened"}],
             "timeline_mins": [0, 2], "timeline_thpt": [0.5, 0.25],
-            "fleet": null
+            "fleet": null, "attribution": null
         }"#;
         assert_eq!(Json::parse(expected).unwrap(), small_outcome().to_json());
     }
@@ -375,6 +404,20 @@ mod tests {
         let j = small_outcome().to_json();
         let text = j.to_string();
         assert_eq!(Json::parse(&text).unwrap(), j);
+    }
+
+    #[test]
+    fn non_finite_outcome_fields_stay_valid_json() {
+        // Audit pin: a degenerate run (zero-throughput job, NaN latency)
+        // must never emit invalid JSON — non-finite numbers become null.
+        let mut o = small_outcome();
+        o.mean_thpt = f64::NAN;
+        o.jct_s = f64::INFINITY;
+        o.detection_latency_s = vec![f64::NEG_INFINITY];
+        let text = o.to_json().to_string();
+        let back = Json::parse(&text).expect("non-finite outcome must stay parseable");
+        assert_eq!(back.get("mean_thpt"), Some(&Json::Null));
+        assert_eq!(back.get("jct_s"), Some(&Json::Null));
     }
 
     #[test]

@@ -19,6 +19,7 @@
 //! [[fault]]                       # array of tables: the fault script
 //! kind = "net"                    # cpu | gpu | net
 //! target = "uplink:1"             # gpu:N | node:N | uplink:N | link:A-B
+//! job = 2                         # fleet scenarios: which job it strikes
 //! start = 0.1                     # fractions of the horizon
 //! duration = 0.05
 //! scale = 0.3
@@ -97,6 +98,7 @@ struct FaultDraft {
     period: f64,
     ramp_to: Option<f64>,
     ramp_steps: usize,
+    job: Option<usize>,
 }
 
 impl FaultDraft {
@@ -112,6 +114,7 @@ impl FaultDraft {
             period: 0.0,
             ramp_to: None,
             ramp_steps: 8,
+            job: None,
         }
     }
 
@@ -127,6 +130,7 @@ impl FaultDraft {
             period: self.period,
             ramp_to: self.ramp_to,
             ramp_steps: self.ramp_steps,
+            job: self.job,
         })
     }
 }
@@ -272,6 +276,7 @@ pub(crate) fn parse(src: &str) -> Result<ScenarioSpec, ScenarioError> {
                     "period" => d.period = p_f64(val, ln)?,
                     "ramp_to" => d.ramp_to = Some(p_f64(val, ln)?),
                     "ramp_steps" => d.ramp_steps = p_usize(val, ln)?,
+                    "job" => d.job = Some(p_usize(val, ln)?),
                     _ => return Err(perr(ln, format!("unknown [[fault]] key '{key}'"))),
                 }
             }
@@ -313,6 +318,9 @@ pub(crate) fn render(spec: &ScenarioSpec) -> String {
         out.push_str("\n[[fault]]\n");
         let _ = writeln!(out, "kind = \"{}\"", kind_token(f.kind));
         let _ = writeln!(out, "target = \"{}\"", target_token(f.target));
+        if let Some(j) = f.job {
+            let _ = writeln!(out, "job = {j}");
+        }
         let _ = writeln!(out, "start = {}", f.start);
         let _ = writeln!(out, "duration = {}", f.duration);
         let _ = writeln!(out, "scale = {}", f.scale);

@@ -36,6 +36,7 @@ use crate::pipeline::{
 use crate::util::rng::Rng;
 
 /// Memoized 1F1B makespan of one DP replica.
+#[derive(Clone)]
 struct ReplicaCache {
     /// Physical nodes hosting this replica's ranks (deduped).
     nodes: Vec<usize>,
@@ -49,6 +50,7 @@ struct ReplicaCache {
 
 /// Memoized all-reduce plan of one DP gradient ring (the tp = 0 ring of a
 /// pipeline stage — the representative ring `TrainingSim::step` samples).
+#[derive(Clone)]
 struct RingCache {
     group: CommGroup,
     nodes: Vec<usize>,
@@ -60,6 +62,7 @@ struct RingCache {
 /// Placement- and health-independent op-log constants for one rank: the
 /// monitor's communication-group ids depend only on rank sets, so they are
 /// computed once at construction instead of once per rank per step.
+#[derive(Clone)]
 pub(super) struct RankOpLog {
     pub(super) coord: RankCoord,
     pub(super) tp_gid: u64,
@@ -68,6 +71,7 @@ pub(super) struct RankOpLog {
     pub(super) self_gid: u64,
 }
 
+#[derive(Clone)]
 pub(super) struct SimCaches {
     /// [`RankGrid::generation`] the node lists / ring GPUs derive from.
     topo_gen: u64,

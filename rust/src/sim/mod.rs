@@ -94,6 +94,11 @@ impl IterObs {
     }
 }
 
+/// `Clone` captures the complete run state — cluster health, placement,
+/// RNG stream position, scheduled events, allocation, timeline, and the
+/// memo layer — so the what-if engine can snapshot a run mid-flight and
+/// replay counterfactual tails from the exact recorded state.
+#[derive(Clone)]
 pub struct TrainingSim {
     pub spec: JobSpec,
     pub cluster: Cluster,
@@ -158,6 +163,38 @@ impl TrainingSim {
         let before = self.events.len();
         self.events.extend(events);
         self.applied.extend(std::iter::repeat(false).take(self.events.len() - before));
+    }
+
+    /// Remove scheduled fail-slow events matching `pred`, reverting any
+    /// that are currently applied, and return how many were removed. The
+    /// what-if replay engine uses this to excise one fault's events from a
+    /// restored snapshot before re-running the tail (`Edit::DropFault`).
+    pub fn remove_events(&mut self, mut pred: impl FnMut(&FailSlowEvent) -> bool) -> usize {
+        let mut keep_ev = Vec::with_capacity(self.events.len());
+        let mut keep_ap = Vec::with_capacity(self.applied.len());
+        let mut removed = 0;
+        for i in 0..self.events.len() {
+            let ev = self.events[i];
+            if pred(&ev) {
+                if self.applied[i] {
+                    ev.revert(&mut self.cluster);
+                }
+                removed += 1;
+            } else {
+                keep_ev.push(ev);
+                keep_ap.push(self.applied[i]);
+            }
+        }
+        self.events = keep_ev;
+        self.applied = keep_ap;
+        removed
+    }
+
+    /// Indices (into the current `events` list) of episodes applied to the
+    /// cluster right now — the active fault set the what-if trace records
+    /// per iteration.
+    pub fn active_event_indices(&self) -> Vec<usize> {
+        (0..self.events.len()).filter(|&i| self.applied[i]).collect()
     }
 
     /// Drop every memoized value; the next step recomputes from scratch.

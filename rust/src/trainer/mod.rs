@@ -14,7 +14,8 @@
 //! fail-slow injection scaling each worker's effective time — identical
 //! observable behaviour to parallel workers for everything FALCON sees.
 
-use anyhow::{Context, Result};
+use crate::anyhow::{self, Context, Result};
+use crate::xla;
 use std::path::Path;
 use std::time::Instant;
 

@@ -49,6 +49,13 @@ impl Args {
         self.flags.contains_key(key)
     }
 
+    /// How many times `--key` appeared. The value map keeps only the last
+    /// occurrence, so callers that cannot merge repeats use this to reject
+    /// them instead of silently dropping all but one.
+    pub fn count(&self, key: &str) -> usize {
+        self.present.iter().filter(|k| k.as_str() == key).count()
+    }
+
     pub fn get(&self, key: &str) -> Option<&str> {
         self.flags.get(key).map(|s| s.as_str())
     }
@@ -108,6 +115,14 @@ mod tests {
         let a = parse(&["--verbose", "--dp", "4"]);
         assert!(a.bool_or("verbose", false));
         assert_eq!(a.usize_or("dp", 0), 4);
+    }
+
+    #[test]
+    fn repeated_flags_keep_last_but_are_countable() {
+        let a = parse(&["--drop-fault", "0", "--drop-fault", "1"]);
+        assert_eq!(a.usize_or("drop-fault", 9), 1, "value map keeps the last");
+        assert_eq!(a.count("drop-fault"), 2);
+        assert_eq!(a.count("missing"), 0);
     }
 
     #[test]

@@ -97,7 +97,12 @@ impl Json {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 1e15 {
+                if !n.is_finite() {
+                    // JSON has no NaN/Infinity literal; Rust's `{}` would
+                    // emit `NaN`/`inf` and corrupt the document. Every
+                    // non-finite number serializes as null.
+                    out.push_str("null");
+                } else if n.fract() == 0.0 && n.abs() < 1e15 {
                     let _ = write!(out, "{}", *n as i64);
                 } else {
                     let _ = write!(out, "{}", n);
@@ -341,6 +346,26 @@ mod tests {
         let j = Json::parse(src).unwrap();
         let j2 = Json::parse(&j.to_string()).unwrap();
         assert_eq!(j, j2);
+    }
+
+    #[test]
+    fn non_finite_numbers_serialize_as_null() {
+        // Invalid-JSON audit pin: NaN/inf anywhere in a document must not
+        // leak `NaN`/`inf` tokens; they degrade to null and the output
+        // stays parseable.
+        for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            assert_eq!(Json::Num(bad).to_string(), "null");
+        }
+        let doc = Json::obj(vec![
+            ("ok", Json::Num(1.5)),
+            ("nan", Json::Num(f64::NAN)),
+            ("arr", Json::arr_f64(&[0.25, f64::INFINITY])),
+        ]);
+        let text = doc.to_string();
+        let back = Json::parse(&text).expect("non-finite docs must stay valid JSON");
+        assert_eq!(back.get("nan"), Some(&Json::Null));
+        assert_eq!(back.get("arr").unwrap().as_arr().unwrap()[1], Json::Null);
+        assert_eq!(back.get("ok").unwrap().as_f64(), Some(1.5));
     }
 
     #[test]

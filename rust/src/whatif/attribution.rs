@@ -1,0 +1,364 @@
+//! Blame attribution: turn counterfactual replays into per-fault delay,
+//! per-mitigation benefit, paper-style aggregate JCT-delay %, and — for
+//! shared-cluster fleets — per-job contention blame.
+
+use std::collections::BTreeMap;
+
+use crate::fleet::FleetTrace;
+use crate::util::json::Json;
+
+use super::trace::RunTrace;
+use super::{sweep, Edit, WhatifError};
+
+/// Delay attributed to one `[[fault]]` entry: baseline JCT minus the JCT
+/// of the replay with that fault dropped. Positive = the fault cost time.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultAttribution {
+    /// Index into the spec's fault script.
+    pub fault: usize,
+    /// Compact description, e.g. `gpu gpu:3 @0.10`.
+    pub label: String,
+    /// Events the fault expanded to (ramp steps, recurrences).
+    pub events: usize,
+    pub delay_s: f64,
+    /// `delay_s` as a percentage of the ideal JCT.
+    pub delay_pct: f64,
+}
+
+/// The what-if attribution of one recorded single-job run.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Attribution {
+    pub baseline_jct_s: f64,
+    /// Fault-free, pause-free JCT (`iters * ideal_iter_s`).
+    pub ideal_jct_s: f64,
+    /// Paper-style aggregate: `100 * (baseline - ideal) / ideal`.
+    pub jct_delay_pct: f64,
+    pub faults: Vec<FaultAttribution>,
+    /// JCT excess of the `NoMitigation` replay over the baseline: what
+    /// FALCON-MITIGATE saved (negative = mitigation cost more than it
+    /// bought on this trace). 0 for detection-only runs.
+    pub mitigation_benefit_s: f64,
+    pub mitigation_benefit_pct: f64,
+    /// `(baseline - ideal) - Σ fault delays`: measurement jitter, stall
+    /// spikes, detection/validation pauses, and fault interaction.
+    pub unattributed_s: f64,
+    /// Counterfactual replays executed to produce this attribution.
+    pub replays: usize,
+}
+
+impl Attribution {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("baseline_jct_s", Json::Num(self.baseline_jct_s)),
+            ("ideal_jct_s", Json::Num(self.ideal_jct_s)),
+            ("jct_delay_pct", Json::Num(self.jct_delay_pct)),
+            (
+                "faults",
+                Json::Arr(
+                    self.faults
+                        .iter()
+                        .map(|f| {
+                            Json::obj(vec![
+                                ("fault", Json::Num(f.fault as f64)),
+                                ("label", Json::str(&f.label)),
+                                ("events", Json::Num(f.events as f64)),
+                                ("delay_s", Json::Num(f.delay_s)),
+                                ("delay_pct", Json::Num(f.delay_pct)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("mitigation_benefit_s", Json::Num(self.mitigation_benefit_s)),
+            ("mitigation_benefit_pct", Json::Num(self.mitigation_benefit_pct)),
+            ("unattributed_s", Json::Num(self.unattributed_s)),
+            ("replays", Json::Num(self.replays as f64)),
+        ])
+    }
+
+    /// Human-readable attribution block (appended to `Outcome::render`).
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "what-if attribution ({} replays): JCT {:.1} s vs ideal {:.1} s \
+             ({:+.2}% delay)\n",
+            self.replays, self.baseline_jct_s, self.ideal_jct_s, self.jct_delay_pct
+        );
+        for f in &self.faults {
+            out.push_str(&format!(
+                "  fault[{}] {} ({} events): {:+.1} s ({:+.2}%)\n",
+                f.fault, f.label, f.events, f.delay_s, f.delay_pct
+            ));
+        }
+        if self.mitigation_benefit_s != 0.0 {
+            out.push_str(&format!(
+                "  mitigation benefit: {:+.1} s ({:+.2}%)\n",
+                self.mitigation_benefit_s, self.mitigation_benefit_pct
+            ));
+        }
+        out.push_str(&format!(
+            "  unattributed (jitter/spikes/pauses/interaction): {:+.1} s\n",
+            self.unattributed_s
+        ));
+        out
+    }
+}
+
+/// Full attribution of a recorded run: one fault-removed replay per
+/// `[[fault]]` entry plus (when the run mitigates) a `NoMitigation`
+/// replay, fanned across `workers` threads.
+pub fn attribute(trace: &RunTrace, workers: usize) -> Result<Attribution, WhatifError> {
+    let spec = &trace.spec;
+    let mut edit_sets: Vec<Vec<Edit>> =
+        (0..spec.faults.len()).map(|i| vec![Edit::DropFault(i)]).collect();
+    let mitigation_idx = if spec.run.mitigate {
+        edit_sets.push(vec![Edit::NoMitigation]);
+        Some(edit_sets.len() - 1)
+    } else {
+        None
+    };
+
+    let outs = sweep(trace, &edit_sets, workers);
+    let baseline = trace.outcome.jct_s;
+    let ideal = trace.outcome.iters as f64 / trace.outcome.ideal_thpt;
+
+    let mut faults = Vec::with_capacity(spec.faults.len());
+    for (i, f) in spec.faults.iter().enumerate() {
+        let out = outs[i].as_ref().map_err(|e| e.clone())?;
+        let delay_s = baseline - out.jct_s;
+        faults.push(FaultAttribution {
+            fault: i,
+            label: format!(
+                "{} {} @{:.2}",
+                crate::scenario::kind_token(f.kind),
+                crate::scenario::target_token(f.target),
+                f.start
+            ),
+            events: trace.event_fault.iter().filter(|&&fi| fi == i).count(),
+            delay_s,
+            delay_pct: 100.0 * delay_s / ideal.max(1e-9),
+        });
+    }
+    let mitigation_benefit_s = match mitigation_idx {
+        Some(k) => outs[k].as_ref().map_err(|e| e.clone())?.jct_s - baseline,
+        None => 0.0,
+    };
+    let attributed: f64 = faults.iter().map(|f| f.delay_s).sum();
+    Ok(Attribution {
+        baseline_jct_s: baseline,
+        ideal_jct_s: ideal,
+        jct_delay_pct: 100.0 * (baseline - ideal) / ideal.max(1e-9),
+        faults,
+        mitigation_benefit_s,
+        mitigation_benefit_pct: 100.0 * mitigation_benefit_s / ideal.max(1e-9),
+        unattributed_s: (baseline - ideal) - attributed,
+        replays: edit_sets.len(),
+    })
+}
+
+/// Fleet-level contention blame: `victim` lost ~`lost_s` seconds to
+/// `culprit`'s traffic on shared leaf uplinks.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BlameEntry {
+    pub victim: usize,
+    pub culprit: usize,
+    /// Exposure-weighted upper bound on the time `culprit` cost `victim`:
+    /// `(1/scale - 1) * epoch_len * ideal_iter_s(victim)`, split across the
+    /// leaf's other residents by communication-volume share. An upper
+    /// bound because it assumes the victim's iterations are fully
+    /// communication-bound while contended.
+    pub lost_s: f64,
+}
+
+/// Attribute each job's uplink slowdown to the co-resident jobs whose
+/// traffic caused it, from the recorded per-epoch contention rosters.
+/// Deterministic: aggregation runs over ordered maps, and the result is
+/// sorted by `lost_s` descending (ties by victim, then culprit id).
+pub fn contention_blame(trace: &FleetTrace) -> Vec<BlameEntry> {
+    // Group samples by (epoch, leaf); samples are per (job, leaf) already.
+    let mut groups: BTreeMap<(usize, usize), Vec<usize>> = BTreeMap::new();
+    for (i, s) in trace.contention.iter().enumerate() {
+        groups.entry((s.epoch, s.leaf)).or_default().push(i);
+    }
+    let mut blame: BTreeMap<(usize, usize), f64> = BTreeMap::new();
+    for members in groups.values() {
+        for &vi in members {
+            let v = trace.contention[vi];
+            if v.scale >= 1.0 {
+                continue; // uncontended this epoch
+            }
+            let culprit_vol: f64 = members
+                .iter()
+                .filter(|&&ci| trace.contention[ci].job != v.job)
+                .map(|&ci| trace.contention[ci].volume)
+                .sum();
+            if culprit_vol <= 0.0 {
+                continue;
+            }
+            let ideal = trace.job_ideal_iter_s.get(v.job).copied().unwrap_or(0.0);
+            let lost = (1.0 / v.scale - 1.0) * trace.epoch_len as f64 * ideal;
+            for &ci in members {
+                let c = trace.contention[ci];
+                if c.job == v.job {
+                    continue;
+                }
+                *blame.entry((v.job, c.job)).or_insert(0.0) +=
+                    lost * c.volume / culprit_vol;
+            }
+        }
+    }
+    let mut out: Vec<BlameEntry> = blame
+        .into_iter()
+        .filter(|&(_, lost)| lost > 0.0)
+        .map(|((victim, culprit), lost_s)| BlameEntry { victim, culprit, lost_s })
+        .collect();
+    out.sort_by(|a, b| {
+        b.lost_s
+            .total_cmp(&a.lost_s)
+            .then(a.victim.cmp(&b.victim))
+            .then(a.culprit.cmp(&b.culprit))
+    });
+    out
+}
+
+/// Render the top `limit` blame pairs as text lines — the one formatter
+/// shared by the `falcon whatif` CLI and the `whatif` report.
+pub fn render_blame(blame: &[BlameEntry], limit: usize) -> String {
+    if blame.is_empty() {
+        return "  no cross-job contention recorded\n".to_string();
+    }
+    let mut out = String::new();
+    for b in blame.iter().take(limit) {
+        out.push_str(&format!(
+            "  job {:>3} slowed by job {:>3}: ~{:.1} s\n",
+            b.victim, b.culprit, b.lost_s
+        ));
+    }
+    if blame.len() > limit {
+        out.push_str(&format!("  ... and {} more pairs\n", blame.len() - limit));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::trace::{record, record_fleet, TraceConfig};
+    use super::*;
+    use crate::fleet::ContentionSample;
+    use crate::scenario::{find, FleetSpec, ScenarioSpec};
+
+    #[test]
+    fn attribution_blames_the_slow_leak() {
+        // The acceptance scenario: `whatif slow-leak-gpu --drop-fault 0`
+        // must report a positive attributed delay for the fault.
+        let spec = find("slow-leak-gpu").unwrap().iters(160);
+        let trace = record(&spec, &TraceConfig::default()).unwrap();
+        let attr = attribute(&trace, 2).unwrap();
+        assert_eq!(attr.faults.len(), 1);
+        assert_eq!(attr.faults[0].events, 10, "ramp expands to ten events");
+        assert!(
+            attr.faults[0].delay_s > 0.0,
+            "the leak must have a positive attributed delay: {:?}",
+            attr.faults[0]
+        );
+        assert!(attr.jct_delay_pct > 0.0);
+        assert_eq!(attr.replays, 2, "one drop-fault replay + one no-mitigation replay");
+        // Attribution is reproducible (deterministic replays).
+        let again = attribute(&trace, 1).unwrap();
+        assert_eq!(attr, again);
+    }
+
+    #[test]
+    fn golden_attribution_json_schema() {
+        // Pins the whatif JSON schema (field names, nesting, encoding),
+        // compared as parsed JSON like the Outcome golden test.
+        let attr = Attribution {
+            baseline_jct_s: 120.5,
+            ideal_jct_s: 100.0,
+            jct_delay_pct: 20.5,
+            faults: vec![FaultAttribution {
+                fault: 0,
+                label: "gpu gpu:3 @0.10".to_string(),
+                events: 10,
+                delay_s: 15.25,
+                delay_pct: 15.25,
+            }],
+            mitigation_benefit_s: 4.5,
+            mitigation_benefit_pct: 4.5,
+            unattributed_s: 5.25,
+            replays: 2,
+        };
+        let expected = r#"{
+            "baseline_jct_s": 120.5, "ideal_jct_s": 100,
+            "jct_delay_pct": 20.5,
+            "faults": [{"fault": 0, "label": "gpu gpu:3 @0.10", "events": 10,
+                        "delay_s": 15.25, "delay_pct": 15.25}],
+            "mitigation_benefit_s": 4.5, "mitigation_benefit_pct": 4.5,
+            "unattributed_s": 5.25, "replays": 2
+        }"#;
+        assert_eq!(Json::parse(expected).unwrap(), attr.to_json());
+        let rendered = attr.render();
+        assert!(rendered.contains("what-if attribution (2 replays)"));
+        assert!(rendered.contains("fault[0] gpu gpu:3 @0.10"));
+    }
+
+    #[test]
+    fn blame_splits_by_volume_share() {
+        // Hand-built roster: jobs 1 and 2 squeeze job 0 on leaf 0, with
+        // job 2 sending three times the volume — it takes 3/4 of the blame.
+        let trace = FleetTrace {
+            epoch_len: 10,
+            epochs: 1,
+            contention: vec![
+                ContentionSample { epoch: 0, leaf: 0, job: 0, scale: 0.5, volume: 1e6 },
+                ContentionSample { epoch: 0, leaf: 0, job: 1, scale: 0.8, volume: 1e6 },
+                ContentionSample { epoch: 0, leaf: 0, job: 2, scale: 0.8, volume: 3e6 },
+            ],
+            job_ideal_iter_s: vec![2.0, 1.0, 1.0],
+        };
+        let blame = contention_blame(&trace);
+        let get = |v: usize, c: usize| {
+            blame
+                .iter()
+                .find(|b| b.victim == v && b.culprit == c)
+                .map(|b| b.lost_s)
+                .unwrap_or(0.0)
+        };
+        // Job 0 lost (1/0.5 - 1) * 10 * 2.0 = 20 s, split 1:3.
+        assert!((get(0, 1) - 5.0).abs() < 1e-9, "{blame:?}");
+        assert!((get(0, 2) - 15.0).abs() < 1e-9, "{blame:?}");
+        // Victims with scale 1.0 or no culprit volume accrue nothing.
+        assert!(blame.iter().all(|b| b.lost_s > 0.0));
+        // Sorted by lost_s descending.
+        assert!(blame.windows(2).all(|w| w[0].lost_s >= w[1].lost_s));
+    }
+
+    #[test]
+    fn shared_fleet_blame_is_nonempty_and_deterministic() {
+        let spec = ScenarioSpec::new("blame-fleet", 2, 4, 1).iters(30).seed(11).with_fleet(
+            FleetSpec {
+                jobs: 8,
+                workers: 2,
+                boost: 0.0,
+                compare: false,
+                policy: Some(crate::cluster::Policy::Packed),
+                spare: 0.1,
+                epoch_len: 5,
+                stagger: 0.0,
+            },
+        );
+        let rec = record_fleet(&spec).unwrap();
+        let blame = contention_blame(&rec.trace);
+        assert!(
+            !blame.is_empty(),
+            "packed multi-node jobs must contend somewhere: {:?}",
+            rec.trace.contention.len()
+        );
+        for b in &blame {
+            assert!(b.victim != b.culprit);
+            assert!(b.victim < 8 && b.culprit < 8);
+            assert!(b.lost_s > 0.0);
+        }
+        let again = contention_blame(&record_fleet(&spec).unwrap().trace);
+        assert_eq!(blame, again, "blame must be deterministic");
+    }
+}

@@ -1,0 +1,160 @@
+//! What-if engine: recorded traces, counterfactual replay, and blame
+//! attribution.
+//!
+//! FALCON's evaluation quantifies fail-slow damage only in aggregate;
+//! "Understanding Stragglers in Large Model Training Using What-if
+//! Analysis" (PAPERS.md) argues the right primitive is **counterfactual
+//! simulation**: replay the same run with one fault removed or one
+//! decision changed, and attribute the delay to whatever the edit
+//! excised. This module builds that primitive on top of the deterministic
+//! scenario API:
+//!
+//! - **Recording** ([`record`] / [`record_fleet`] / [`record_scenario`]):
+//!   run a [`ScenarioSpec`] while capturing a compact per-iteration trace
+//!   — iteration times, the active fault set, the cluster health epoch —
+//!   plus the coordinator's full action log (including arbiter
+//!   grants/denials) and periodic **full-state snapshots** (sim +
+//!   coordinator, [`TraceConfig::snapshot_every`] iterations apart).
+//!   Shared-cluster fleet runs additionally record per-epoch contention
+//!   rosters ([`crate::fleet::FleetTrace`]).
+//!
+//! - **Replay** ([`RunTrace::replay`]): apply typed [`Edit`]s
+//!   ([`Edit::DropFault`], [`Edit::NoMitigation`],
+//!   [`Edit::DelayMitigation`], [`Edit::ForceLevel`],
+//!   [`Edit::SwapPolicy`]) and deterministically re-execute. The engine
+//!   computes each edit's **divergence iteration** — the first iteration
+//!   the edit can possibly affect — restores the latest snapshot at or
+//!   before it (cluster health, RNG stream position, detector posterior,
+//!   planner cursor, and the warm [`crate::sim`] caches all come along),
+//!   and re-simulates only the tail. A replay therefore costs
+//!   O(iterations after divergence) instead of a cold run's O(all
+//!   iterations), on unchanged base RNG streams. An empty edit list
+//!   restores the final snapshot and reproduces the recorded baseline
+//!   bit for bit (pinned over the whole scenario library).
+//!
+//! - **Attribution** ([`attribute`], [`contention_blame`]): per-fault
+//!   delay (baseline JCT minus the fault-removed replay's JCT),
+//!   mitigation benefit (the `NoMitigation` replay's excess), the
+//!   paper-style aggregate JCT-delay %, and — for shared-cluster fleets —
+//!   per-job contention blame (which job slowed which on the leaf
+//!   uplinks). Edit sweeps fan out across `std::thread` workers exactly
+//!   like the fleet engine ([`sweep`]).
+//!
+//! `falcon whatif <scenario|file>` is the CLI entry; the `whatif` report
+//! id renders the same analysis through `falcon report`. See
+//! `docs/WHATIF.md` for the edit grammar and attribution semantics.
+
+mod attribution;
+mod replay;
+mod trace;
+
+pub use attribution::{
+    attribute, contention_blame, render_blame, Attribution, BlameEntry, FaultAttribution,
+};
+pub use replay::{replay_cold, sweep};
+pub use trace::{
+    record, record_fleet, FleetRecord, IterRecord, RunTrace, TraceConfig, MAX_SNAPSHOTS,
+};
+
+use crate::cluster::Policy;
+use crate::mitigate::Strategy;
+use crate::scenario::{Outcome, ScenarioError, ScenarioSpec};
+
+/// One typed counterfactual edit to a recorded run.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Edit {
+    /// Remove fault `i` (an index into the spec's `[[fault]]` script; every
+    /// event the fault expanded to — ramp steps, recurrences — vanishes).
+    DropFault(usize),
+    /// Run the same trace with FALCON-MITIGATE switched off (detection
+    /// still runs — the paper's probe mode).
+    NoMitigation,
+    /// Hold mitigation back for this many extra iterations after each
+    /// episode opens ("what if FALCON had reacted later?").
+    DelayMitigation(usize),
+    /// Force-execute a strategy at `at_frac` of the horizon, bypassing the
+    /// ski-rental planner ("what if S3 had run at t?").
+    ForceLevel { strategy: Strategy, at_frac: f64 },
+    /// Fleet scenarios: re-run the campaign under a different shared
+    /// cluster policy.
+    SwapPolicy(Policy),
+}
+
+impl std::fmt::Display for Edit {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Edit::DropFault(i) => write!(f, "drop-fault {i}"),
+            Edit::NoMitigation => write!(f, "no-mitigation"),
+            Edit::DelayMitigation(n) => write!(f, "delay-mitigation {n}"),
+            Edit::ForceLevel { strategy, at_frac } => {
+                write!(f, "force {} @{at_frac}", strategy.name())
+            }
+            Edit::SwapPolicy(p) => write!(f, "swap-policy {}", p.name()),
+        }
+    }
+}
+
+/// What-if failure: an edit that does not apply to the recorded scenario,
+/// or an invalid scenario underneath.
+#[derive(Clone, Debug, PartialEq)]
+pub enum WhatifError {
+    Scenario(ScenarioError),
+    /// The edit cannot apply to this recording (wrong mode or bad index).
+    Unsupported(String),
+}
+
+impl std::fmt::Display for WhatifError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WhatifError::Scenario(e) => write!(f, "{e}"),
+            WhatifError::Unsupported(msg) => write!(f, "unsupported edit: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for WhatifError {}
+
+impl From<ScenarioError> for WhatifError {
+    fn from(e: ScenarioError) -> Self {
+        WhatifError::Scenario(e)
+    }
+}
+
+/// A recorded run of either mode, behind one replay interface.
+pub enum Recording {
+    Single(Box<RunTrace>),
+    Fleet(Box<FleetRecord>),
+}
+
+/// Record a scenario in whichever mode it declares: single jobs get the
+/// snapshot-backed [`RunTrace`]; fleet scenarios get a [`FleetRecord`]
+/// (cold re-runs + contention rosters).
+pub fn record_scenario(
+    spec: &ScenarioSpec,
+    cfg: &TraceConfig,
+) -> Result<Recording, ScenarioError> {
+    if spec.fleet.is_some() {
+        record_fleet(spec).map(|f| Recording::Fleet(Box::new(f)))
+    } else {
+        record(spec, cfg).map(|t| Recording::Single(Box::new(t)))
+    }
+}
+
+impl Recording {
+    /// The baseline outcome the recording captured.
+    pub fn outcome(&self) -> &Outcome {
+        match self {
+            Recording::Single(t) => &t.outcome,
+            Recording::Fleet(f) => &f.outcome,
+        }
+    }
+
+    /// Replay with the edits applied (see [`RunTrace::replay`] and
+    /// [`FleetRecord::replay`] for the per-mode mechanics).
+    pub fn replay(&self, edits: &[Edit]) -> Result<Outcome, WhatifError> {
+        match self {
+            Recording::Single(t) => t.replay(edits),
+            Recording::Fleet(f) => f.replay(edits),
+        }
+    }
+}

@@ -1,0 +1,465 @@
+//! Counterfactual replay: apply typed edits to a recorded run and
+//! deterministically re-execute from the latest snapshot the edits cannot
+//! have affected.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::coordinator::Falcon;
+use crate::inject::FailSlowEvent;
+use crate::mitigate::Strategy;
+use crate::scenario::{Outcome, ScenarioSpec};
+use crate::sim::TrainingSim;
+
+use super::trace::{FleetRecord, RunTrace};
+use super::{Edit, WhatifError};
+
+/// First iteration an edit can possibly change, against this trace. A
+/// replay restores the latest snapshot at or before the minimum over its
+/// edits — everything earlier is bit-identical to the baseline by
+/// construction, so re-simulating it would only burn time.
+fn divergence_iter(trace: &RunTrace, edit: &Edit) -> usize {
+    match *edit {
+        Edit::DropFault(i) => trace
+            .iters
+            .iter()
+            .position(|r| {
+                r.active_faults.iter().any(|&e| trace.event_fault[e as usize] == i)
+            })
+            .unwrap_or(usize::MAX),
+        // NoMitigation can matter as soon as any fault is applied: the
+        // coordinator's healthy-housekeeping re-solve (mitigate-gated,
+        // every 20th iteration) acts on skewed replica times even before
+        // an episode verifies. On a fault-free, episode-free prefix the
+        // re-solve is a no-op, so the earlier of (first active fault,
+        // first verified episode) bounds the divergence.
+        Edit::NoMitigation => {
+            let first_active = trace
+                .iters
+                .iter()
+                .position(|r| !r.active_faults.is_empty())
+                .unwrap_or(usize::MAX);
+            first_active.min(first_episode_open(trace))
+        }
+        // A delayed planner behaves identically until an episode opens:
+        // the delay gates only the post-open escalation branch.
+        Edit::DelayMitigation(_) => first_episode_open(trace),
+        Edit::ForceLevel { at_frac, .. } => force_iter(at_frac, trace.spec.run.iters),
+        Edit::SwapPolicy(_) => 0,
+    }
+}
+
+/// Iteration a forced strategy fires at: `at_frac` of the horizon, capped
+/// to the last executed iteration so `@1.0` means "at the very end"
+/// rather than silently never firing.
+fn force_iter(at_frac: f64, total_iters: usize) -> usize {
+    let at = (at_frac.clamp(0.0, 1.0) * total_iters as f64) as usize;
+    at.min(total_iters.saturating_sub(1))
+}
+
+/// Iteration of the first verified episode open (`usize::MAX` if none).
+fn first_episode_open(trace: &RunTrace) -> usize {
+    trace
+        .outcome
+        .actions
+        .iter()
+        .find(|a| a.kind == "episode_opened")
+        .map(|a| a.iter)
+        .unwrap_or(usize::MAX)
+}
+
+fn check_edits(spec: &ScenarioSpec, edits: &[Edit]) -> Result<(), WhatifError> {
+    for e in edits {
+        match *e {
+            Edit::DropFault(i) if i >= spec.faults.len() => {
+                return Err(WhatifError::Unsupported(format!(
+                    "drop-fault {i}: scenario '{}' has {} faults",
+                    spec.name,
+                    spec.faults.len()
+                )))
+            }
+            Edit::SwapPolicy(_) if spec.fleet.is_none() => {
+                return Err(WhatifError::Unsupported(
+                    "swap-policy applies to fleet scenarios only".to_string(),
+                ))
+            }
+            _ => {}
+        }
+    }
+    Ok(())
+}
+
+/// Apply the state-level edits to a restored (or fresh) sim + coordinator.
+/// Returns the post-edit injected-event list (for detection-latency
+/// accounting) and the forced-strategy schedule for the step loop.
+fn apply_edits(
+    injected: &[FailSlowEvent],
+    event_fault: &[usize],
+    total_iters: usize,
+    edits: &[Edit],
+    sim: &mut TrainingSim,
+    falcon: &mut Falcon,
+) -> (Vec<FailSlowEvent>, Vec<(usize, Strategy)>) {
+    let mut keep = vec![true; injected.len()];
+    let mut forced: Vec<(usize, Strategy)> = Vec::new();
+    for e in edits {
+        match *e {
+            Edit::DropFault(i) => {
+                for (k, &fi) in event_fault.iter().enumerate() {
+                    if fi == i {
+                        keep[k] = false;
+                    }
+                }
+            }
+            Edit::NoMitigation => falcon.cfg.mitigate = false,
+            Edit::DelayMitigation(n) => falcon.cfg.mitigation_delay_iters += n,
+            Edit::ForceLevel { strategy, at_frac } => {
+                forced.push((force_iter(at_frac, total_iters), strategy));
+            }
+            Edit::SwapPolicy(_) => unreachable!("checked: fleet-only edit"),
+        }
+    }
+    let dropped: Vec<FailSlowEvent> = injected
+        .iter()
+        .zip(&keep)
+        .filter(|(_, &k)| !k)
+        .map(|(ev, _)| *ev)
+        .collect();
+    if !dropped.is_empty() {
+        // Excise one sim event per dropped original (value-matched: the
+        // sim's list is a subsequence of the original).
+        let mut remaining = dropped;
+        sim.remove_events(|ev| {
+            if let Some(p) = remaining.iter().position(|d| d == ev) {
+                remaining.swap_remove(p);
+                true
+            } else {
+                false
+            }
+        });
+    }
+    let new_injected =
+        injected.iter().zip(&keep).filter(|(_, &k)| k).map(|(ev, _)| *ev).collect();
+    forced.sort_by_key(|&(at, _)| at);
+    (new_injected, forced)
+}
+
+/// Step the tail of a (restored or fresh) run to the horizon, firing any
+/// forced strategies, and assemble the outcome.
+fn run_tail(
+    spec: &ScenarioSpec,
+    mut sim: TrainingSim,
+    mut falcon: Falcon,
+    injected: Vec<FailSlowEvent>,
+    forced: &[(usize, Strategy)],
+    from_iter: usize,
+) -> Outcome {
+    for i in from_iter..spec.run.iters {
+        for &(at, strategy) in forced {
+            if at == i {
+                falcon.force(&mut sim, strategy);
+            }
+        }
+        let obs = sim.step();
+        falcon.on_iteration(&mut sim, obs.iter, obs.duration_s());
+    }
+    Outcome::from_single(spec, &sim, &falcon, &injected)
+}
+
+impl RunTrace {
+    /// Replay this recording with `edits` applied.
+    ///
+    /// The run restarts from the latest snapshot at or before the edits'
+    /// earliest divergence iteration, so the cost is proportional to the
+    /// re-simulated tail — an empty edit list restores the final snapshot
+    /// and returns the baseline outcome bit for bit, and dropping a
+    /// late-run fault re-simulates only the iterations it could touch.
+    pub fn replay(&self, edits: &[Edit]) -> Result<Outcome, WhatifError> {
+        check_edits(&self.spec, edits)?;
+        let total = self.spec.run.iters;
+        let d = edits
+            .iter()
+            .map(|e| divergence_iter(self, e))
+            .min()
+            .unwrap_or(usize::MAX)
+            .min(total);
+        let snap = self
+            .snapshots
+            .iter()
+            .rev()
+            .find(|s| s.iter <= d)
+            .expect("snapshot at iteration 0 always exists");
+        let mut sim = snap.sim.clone();
+        let mut falcon = snap.falcon.clone();
+        let (injected, forced) = apply_edits(
+            &self.injected,
+            &self.event_fault,
+            total,
+            edits,
+            &mut sim,
+            &mut falcon,
+        );
+        Ok(run_tail(&self.spec, sim, falcon, injected, &forced, snap.iter))
+    }
+}
+
+/// Replay a scenario from scratch with the edits applied — no trace, no
+/// snapshots: the full-cost baseline the snapshot path is measured (and
+/// bit-compared) against.
+pub fn replay_cold(spec: &ScenarioSpec, edits: &[Edit]) -> Result<Outcome, WhatifError> {
+    if spec.fleet.is_some() {
+        return replay_fleet(spec, edits);
+    }
+    check_edits(spec, edits)?;
+    let mut sim = spec.build_sim().map_err(WhatifError::Scenario)?;
+    let injected = sim.events.clone();
+    let horizon_s = sim.ideal_iter_s * spec.run.iters as f64;
+    let event_fault = spec.event_fault_indices(horizon_s);
+    let mut falcon = Falcon::new(crate::coordinator::FalconConfig {
+        mitigate: spec.run.mitigate,
+        ..Default::default()
+    });
+    let (injected, forced) = apply_edits(
+        &injected,
+        &event_fault,
+        spec.run.iters,
+        edits,
+        &mut sim,
+        &mut falcon,
+    );
+    Ok(run_tail(spec, sim, falcon, injected, &forced, 0))
+}
+
+/// Fleet counterfactual: lower the edits onto a modified spec and re-run
+/// the campaign cold (deterministic, so "cold" is still exact).
+fn replay_fleet(spec: &ScenarioSpec, edits: &[Edit]) -> Result<Outcome, WhatifError> {
+    let mut spec = spec.clone();
+    let mut drops: Vec<usize> = Vec::new();
+    for e in edits {
+        match *e {
+            Edit::SwapPolicy(p) => {
+                spec.fleet.as_mut().expect("fleet spec").policy = Some(p);
+            }
+            Edit::DropFault(i) => drops.push(i),
+            other => {
+                return Err(WhatifError::Unsupported(format!(
+                    "{other} does not apply to fleet scenarios (the engine forces \
+                     per-mode mitigation)"
+                )))
+            }
+        }
+    }
+    drops.sort_unstable();
+    drops.dedup();
+    for &i in drops.iter().rev() {
+        if i >= spec.faults.len() {
+            return Err(WhatifError::Unsupported(format!(
+                "drop-fault {i}: scenario '{}' has {} faults",
+                spec.name,
+                spec.faults.len()
+            )));
+        }
+        spec.faults.remove(i);
+    }
+    spec.run().map_err(WhatifError::Scenario)
+}
+
+impl FleetRecord {
+    /// Replay the fleet with edits applied ([`Edit::SwapPolicy`] /
+    /// [`Edit::DropFault`]; per-job mitigation shaping is not meaningful —
+    /// the engine forces per-mode behavior).
+    pub fn replay(&self, edits: &[Edit]) -> Result<Outcome, WhatifError> {
+        replay_fleet(&self.spec, edits)
+    }
+}
+
+/// Fan a sweep of edit sets across `workers` std::thread workers (0 = one
+/// per core), exactly like the fleet engine shards jobs: an atomic cursor
+/// hands out indices, results land in per-index slots, so the output
+/// order matches the input regardless of scheduling.
+pub fn sweep(
+    trace: &RunTrace,
+    edit_sets: &[Vec<Edit>],
+    workers: usize,
+) -> Vec<Result<Outcome, WhatifError>> {
+    let n = edit_sets.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = if workers > 0 {
+        workers
+    } else {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+    }
+    .min(n);
+    let next = AtomicUsize::new(0);
+    let slots: Mutex<Vec<Option<Result<Outcome, WhatifError>>>> = Mutex::new(vec![None; n]);
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let r = trace.replay(&edit_sets[i]);
+                slots.lock().unwrap()[i] = Some(r);
+            });
+        }
+    });
+    slots
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|r| r.expect("every sweep slot completes"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::trace::{record, TraceConfig};
+    use super::*;
+    use crate::scenario::{find, library};
+
+    fn cap(mut spec: ScenarioSpec) -> ScenarioSpec {
+        let cap = if spec.fleet.is_some() { 30 } else { 120 };
+        spec.run.iters = spec.run.iters.min(cap);
+        spec
+    }
+
+    #[test]
+    fn empty_edit_replay_is_bit_identical_across_library() {
+        // The acceptance property: for EVERY library entry, recording a
+        // run and replaying it with no edits reproduces the baseline
+        // Outcome::to_json bit for bit (single-job entries exercise the
+        // final-snapshot restore; fleet entries the deterministic cold
+        // path).
+        for spec in library::all() {
+            let spec = cap(spec);
+            let rec = super::super::record_scenario(&spec, &TraceConfig { snapshot_every: 40 })
+                .unwrap_or_else(|e| panic!("{}: {e}", spec.name));
+            let baseline = rec.outcome().to_json().to_string();
+            let replayed = rec
+                .replay(&[])
+                .unwrap_or_else(|e| panic!("{}: {e}", spec.name))
+                .to_json()
+                .to_string();
+            assert_eq!(baseline, replayed, "scenario '{}' empty-edit replay diverged", spec.name);
+        }
+    }
+
+    #[test]
+    fn snapshot_replay_matches_cold_replay_bitwise() {
+        // The replay engine's correctness bar: restoring a mid-run
+        // snapshot and re-simulating the tail must equal a from-scratch
+        // run with the same edit — for a fault edit and a mitigation edit.
+        let spec = find("slow-leak-gpu").unwrap().iters(160);
+        let trace = record(&spec, &TraceConfig { snapshot_every: 25 }).unwrap();
+        for edits in [
+            vec![Edit::DropFault(0)],
+            vec![Edit::NoMitigation],
+            vec![Edit::DelayMitigation(30)],
+            vec![Edit::ForceLevel { strategy: Strategy::AdjustMicrobatch, at_frac: 0.5 }],
+        ] {
+            let warm = trace.replay(&edits).unwrap().to_json().to_string();
+            let cold = replay_cold(&spec, &edits).unwrap().to_json().to_string();
+            assert_eq!(warm, cold, "edits {edits:?} diverged from cold replay");
+        }
+    }
+
+    #[test]
+    fn drop_fault_removes_events_and_speeds_the_run() {
+        let spec = find("slow-leak-gpu").unwrap().iters(160);
+        let trace = record(&spec, &TraceConfig::default()).unwrap();
+        let out = trace.replay(&[Edit::DropFault(0)]).unwrap();
+        assert_eq!(out.injected, 0, "the ramp's events must all vanish");
+        assert!(
+            out.jct_s < trace.outcome.jct_s,
+            "dropping the only fault must speed the run: {} vs {}",
+            out.jct_s,
+            trace.outcome.jct_s
+        );
+    }
+
+    #[test]
+    fn force_level_restart_charges_its_cost() {
+        // Forcing S4 on a healthy run pays the checkpoint-restart pause
+        // and nothing else: JCT grows by at least the restart cost.
+        let spec = ScenarioSpec::new("forced", 2, 4, 1).nodes(1).iters(80).seed(5);
+        let trace = record(&spec, &TraceConfig::default()).unwrap();
+        let out = trace
+            .replay(&[Edit::ForceLevel { strategy: Strategy::CkptRestart, at_frac: 0.5 }])
+            .unwrap();
+        let restart_s = 20.0 * 60.0; // FalconConfig::default().restart_cost
+        assert!(
+            out.jct_s >= trace.outcome.jct_s + 0.9 * restart_s,
+            "forced S4 must charge the restart: {} vs baseline {}",
+            out.jct_s,
+            trace.outcome.jct_s
+        );
+    }
+
+    #[test]
+    fn force_at_frac_one_fires_on_the_last_iteration() {
+        // @1.0 caps to the final executed iteration instead of silently
+        // never firing (the loop is exclusive of `iters`).
+        let spec = ScenarioSpec::new("forced-end", 2, 4, 1).nodes(1).iters(60).seed(6);
+        let trace = record(&spec, &TraceConfig::default()).unwrap();
+        let out = trace
+            .replay(&[Edit::ForceLevel { strategy: Strategy::CkptRestart, at_frac: 1.0 }])
+            .unwrap();
+        assert!(
+            out.jct_s > trace.outcome.jct_s + 1000.0,
+            "forced S4 at @1.0 must still charge the restart: {} vs {}",
+            out.jct_s,
+            trace.outcome.jct_s
+        );
+    }
+
+    #[test]
+    fn bad_edits_are_rejected() {
+        let spec = find("gpu-thermal").unwrap().iters(60);
+        let trace = record(&spec, &TraceConfig::default()).unwrap();
+        assert!(matches!(
+            trace.replay(&[Edit::DropFault(7)]),
+            Err(WhatifError::Unsupported(_))
+        ));
+        assert!(matches!(
+            trace.replay(&[Edit::SwapPolicy(crate::cluster::Policy::Packed)]),
+            Err(WhatifError::Unsupported(_))
+        ));
+        // Fleet records reject per-job mitigation shaping.
+        let mut fleet = find("noisy-neighbor").unwrap();
+        fleet.run.iters = 20;
+        let rec = super::super::record_fleet(&fleet).unwrap();
+        assert!(matches!(
+            rec.replay(&[Edit::NoMitigation]),
+            Err(WhatifError::Unsupported(_))
+        ));
+        // Swapping the policy re-runs under the new arbiter.
+        let swapped = rec
+            .replay(&[Edit::SwapPolicy(crate::cluster::Policy::Spread)])
+            .unwrap();
+        assert_eq!(swapped.fleet.unwrap().policy.as_deref(), Some("spread"));
+    }
+
+    #[test]
+    fn sweep_matches_serial_replays() {
+        let spec = find("cpu-contention").unwrap().iters(120);
+        let trace = record(&spec, &TraceConfig::default()).unwrap();
+        let sets = vec![
+            vec![],
+            vec![Edit::DropFault(0)],
+            vec![Edit::DropFault(1)],
+            vec![Edit::NoMitigation],
+        ];
+        let fanned = sweep(&trace, &sets, 3);
+        for (set, out) in sets.iter().zip(&fanned) {
+            let serial = trace.replay(set).unwrap();
+            assert_eq!(
+                out.as_ref().unwrap().to_json().to_string(),
+                serial.to_json().to_string(),
+                "sweep diverged on {set:?}"
+            );
+        }
+    }
+}

@@ -1,0 +1,235 @@
+//! Run recording: per-iteration records plus periodic full-state
+//! snapshots, the substrate counterfactual replay restores from.
+
+use crate::coordinator::{Falcon, FalconConfig};
+use crate::fleet::{run_fleet_traced, FleetTrace};
+use crate::inject::FailSlowEvent;
+use crate::scenario::{Outcome, ScenarioError, ScenarioSpec};
+use crate::sim::TrainingSim;
+use crate::simkit::Time;
+
+/// Upper bound on interior snapshots per recording: on long horizons the
+/// effective cadence is raised to `iters / MAX_SNAPSHOTS` so snapshot
+/// memory stays O(MAX_SNAPSHOTS × state) — each snapshot clones the sim
+/// whole, timeline included, which would otherwise grow quadratically
+/// with the horizon.
+pub const MAX_SNAPSHOTS: usize = 64;
+
+/// Recording knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct TraceConfig {
+    /// Take a full-state snapshot every this many iterations (plus one at
+    /// iteration 0 and one at the end). Smaller = cheaper replays, more
+    /// memory: each snapshot clones the sim and coordinator. Cadences
+    /// finer than `iters / MAX_SNAPSHOTS` are coarsened to that bound.
+    pub snapshot_every: usize,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig { snapshot_every: 64 }
+    }
+}
+
+/// One iteration of the recorded baseline, compact.
+#[derive(Clone, Debug, PartialEq)]
+pub struct IterRecord {
+    /// Observed iteration duration (the sample FALCON-DETECT consumed).
+    pub duration_s: f64,
+    /// Sim clock at the start of the iteration.
+    pub start: Time,
+    /// Indices (into [`RunTrace::injected`]) of the fail-slow events
+    /// applied to the cluster during this iteration's step (captured
+    /// before the coordinator reacts, so a restart cannot hide a fault
+    /// that fired on the same iteration it was cleared).
+    pub active_faults: Vec<u32>,
+    /// Cluster health epoch after the iteration — consecutive records with
+    /// equal epochs saw identical cluster health (the generation-delta
+    /// view of the run).
+    pub health_epoch: u64,
+}
+
+/// Full engine state at one iteration boundary: everything a replay needs
+/// to continue the run bit-exactly (cluster health, RNG stream position,
+/// detector posterior, planner cursor, warm sim caches).
+pub(super) struct Snapshot {
+    pub(super) iter: usize,
+    pub(super) sim: TrainingSim,
+    pub(super) falcon: Falcon,
+}
+
+/// A recorded single-job run: the spec, the injected events, the
+/// per-iteration trace, the baseline [`Outcome`] (whose `actions` carry
+/// every coordinator decision, arbiter grants/denials included), and the
+/// snapshots replay restores from.
+pub struct RunTrace {
+    pub spec: ScenarioSpec,
+    /// The fault script as injected at t=0 (absolute times).
+    pub injected: Vec<FailSlowEvent>,
+    /// `injected[k]` expanded from `spec.faults[event_fault[k]]`.
+    pub event_fault: Vec<usize>,
+    pub iters: Vec<IterRecord>,
+    /// The baseline outcome (bit-identical to `spec.run()`'s).
+    pub outcome: Outcome,
+    pub(super) snapshots: Vec<Snapshot>,
+}
+
+impl RunTrace {
+    /// Number of snapshots held (diagnostics; memory is proportional).
+    pub fn snapshot_count(&self) -> usize {
+        self.snapshots.len()
+    }
+}
+
+/// Map the sim's currently applied events back to indices into the
+/// original injected list. `sim.events` is an order-preserving subsequence
+/// of `injected` (restart clears, `remove_events` filters — neither
+/// reorders), so a greedy forward match recovers exact original indices.
+pub(super) fn map_active(injected: &[FailSlowEvent], sim: &TrainingSim) -> Vec<u32> {
+    let active = sim.active_event_indices();
+    let mut out = Vec::with_capacity(active.len());
+    let mut oi = 0usize;
+    let mut ai = 0usize;
+    for (ci, ev) in sim.events.iter().enumerate() {
+        while oi < injected.len() && injected[oi] != *ev {
+            oi += 1;
+        }
+        if oi >= injected.len() {
+            break; // defensive: unmatched event (never expected)
+        }
+        if ai < active.len() && active[ai] == ci {
+            out.push(oi as u32);
+            ai += 1;
+        }
+        oi += 1;
+    }
+    out
+}
+
+/// Record a single-job scenario: execute it exactly like
+/// [`ScenarioSpec::run`] while capturing the per-iteration trace and
+/// snapshots. The recorded `outcome` is bit-identical to a plain run.
+pub fn record(spec: &ScenarioSpec, cfg: &TraceConfig) -> Result<RunTrace, ScenarioError> {
+    if spec.fleet.is_some() {
+        return Err(ScenarioError::field(
+            "fleet",
+            "fleet scenarios record through whatif::record_fleet",
+        ));
+    }
+    let mut sim = spec.build_sim()?;
+    let injected = sim.events.clone();
+    let horizon_s = sim.ideal_iter_s * spec.run.iters as f64;
+    let event_fault = spec.event_fault_indices(horizon_s);
+    debug_assert_eq!(event_fault.len(), injected.len());
+
+    let mut falcon = Falcon::new(FalconConfig {
+        mitigate: spec.run.mitigate,
+        ..FalconConfig::default()
+    });
+    let total = spec.run.iters;
+    let every = cfg.snapshot_every.max(total / MAX_SNAPSHOTS).max(1);
+    let mut snapshots =
+        vec![Snapshot { iter: 0, sim: sim.clone(), falcon: falcon.clone() }];
+    let mut iters = Vec::with_capacity(total);
+    for i in 0..total {
+        let obs = sim.step();
+        // Capture the active set BEFORE the coordinator reacts: an S4
+        // restart inside on_iteration clears sim.events, which would hide
+        // a fault that first applied during this very step (and push
+        // DropFault's divergence iteration past its real first effect).
+        let active_faults = map_active(&injected, &sim);
+        falcon.on_iteration(&mut sim, obs.iter, obs.duration_s());
+        iters.push(IterRecord {
+            duration_s: obs.duration_s(),
+            start: obs.start,
+            active_faults,
+            health_epoch: sim.cluster.health_epoch(),
+        });
+        if (i + 1) % every == 0 && i + 1 < total {
+            snapshots.push(Snapshot { iter: i + 1, sim: sim.clone(), falcon: falcon.clone() });
+        }
+    }
+    snapshots.push(Snapshot { iter: total, sim: sim.clone(), falcon: falcon.clone() });
+    let outcome = Outcome::from_single(spec, &sim, &falcon, &injected);
+    Ok(RunTrace { spec: spec.clone(), injected, event_fault, iters, outcome, snapshots })
+}
+
+/// A recorded fleet run: the baseline outcome plus the shared-cluster
+/// contention rosters ([`FleetTrace`]) blame attribution reads. Fleet
+/// counterfactuals re-run cold — the engine is already sharded across
+/// workers, and cross-job coupling defeats per-job snapshot reuse.
+pub struct FleetRecord {
+    pub spec: ScenarioSpec,
+    pub outcome: Outcome,
+    pub trace: FleetTrace,
+}
+
+/// Record a fleet scenario (shared-cluster runs also capture the
+/// contention rosters; private fleets record an empty roster).
+pub fn record_fleet(spec: &ScenarioSpec) -> Result<FleetRecord, ScenarioError> {
+    spec.validate()?;
+    let Some(cfg) = spec.fleet_config() else {
+        return Err(ScenarioError::field(
+            "fleet",
+            "single-job scenarios record through whatif::record",
+        ));
+    };
+    let (report, trace) = run_fleet_traced(&cfg);
+    let outcome = Outcome::from_fleet(spec, &report);
+    Ok(FleetRecord { spec: spec.clone(), outcome, trace })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::find;
+
+    #[test]
+    fn recording_matches_plain_run_bitwise() {
+        let spec = find("gpu-thermal").unwrap().iters(120);
+        let trace = record(&spec, &TraceConfig::default()).unwrap();
+        let plain = spec.run().unwrap();
+        assert_eq!(
+            trace.outcome.to_json().to_string(),
+            plain.to_json().to_string(),
+            "recording must not perturb the run"
+        );
+        assert_eq!(trace.iters.len(), 120);
+        // Snapshots: t=0, every 64th, and the end.
+        assert_eq!(trace.snapshot_count(), 1 + 1 + 1);
+        assert!(trace.iters.iter().all(|r| r.duration_s > 0.0));
+        // The thermal fault is active from the start of the run.
+        assert_eq!(trace.iters[0].active_faults, vec![0]);
+        // Health epoch moves when the fault expires.
+        let first = trace.iters.first().unwrap().health_epoch;
+        let last = trace.iters.last().unwrap().health_epoch;
+        assert!(last > first, "fault relief must bump the health epoch");
+    }
+
+    #[test]
+    fn active_fault_indices_follow_the_script() {
+        // Two disjoint CPU bursts: the active set names each event while
+        // (and only while) it is applied. Probe mode keeps the script
+        // untouched (no S4 restart can clear events mid-run).
+        let spec = find("cpu-contention").unwrap().iters(150).mitigate(false);
+        let trace = record(&spec, &TraceConfig::default()).unwrap();
+        let mut seen: Vec<u32> = trace
+            .iters
+            .iter()
+            .flat_map(|r| r.active_faults.iter().copied())
+            .collect();
+        seen.dedup();
+        assert_eq!(seen, vec![0, 1], "bursts activate in order, one at a time");
+        assert_eq!(trace.event_fault, vec![0, 1]);
+    }
+
+    #[test]
+    fn fleet_recording_matches_plain_run() {
+        let mut spec = find("noisy-neighbor").unwrap();
+        spec.run.iters = 30;
+        let rec = record_fleet(&spec).unwrap();
+        let plain = spec.run().unwrap();
+        assert_eq!(rec.outcome.to_json().to_string(), plain.to_json().to_string());
+        assert!(rec.trace.epochs > 0);
+    }
+}

@@ -75,6 +75,22 @@ def policy_sweep(doc):
     }
 
 
+def whatif_sweep(doc):
+    """(counterfactuals/sec, speedup-vs-cold) of the whatif sweep, or None.
+
+    Informational only — printed, never gated: replay throughput tracks the
+    edit mix, which is expected to evolve between PRs.
+    """
+    ws = doc.get("whatif_sweep")
+    if not isinstance(ws, dict):
+        return None
+    rate = ws.get("counterfactuals_per_sec")
+    if not isinstance(rate, (int, float)):
+        return None
+    speedup = ws.get("speedup_vs_cold")
+    return (rate, speedup if isinstance(speedup, (int, float)) else None)
+
+
 def sparkline(values):
     ticks = "▁▂▃▄▅▆▇█"
     lo, hi = min(values), max(values)
@@ -91,7 +107,8 @@ def check(points):
     if len(points) < 2:
         print("--check: fewer than two recorded runs; nothing to compare (ok)")
         return 0
-    (pf, _, prev, _), (cf, _, cur, _) = points[-2], points[-1]
+    pf, prev = points[-2][0], points[-2][2]
+    cf, cur = points[-1][0], points[-1][2]
     if prev <= 0.0:
         print(f"--check: previous run {pf} recorded no throughput (ok)")
         return 0
@@ -119,7 +136,7 @@ def main(argv):
         if h is None:
             print(f"skipping {f}: no private engine runs recorded", file=sys.stderr)
             continue
-        points.append((f, h[0], h[1], policy_sweep(doc)))
+        points.append((f, h[0], h[1], policy_sweep(doc), whatif_sweep(doc)))
 
     if check_mode:
         return check(points)
@@ -132,7 +149,7 @@ def main(argv):
     print(f"fleet engine trajectory ({len(points)} recorded run(s)):\n")
     print(f"  {'artifact':<{width}}  {'jobs':>6}  {'jobs/sec':>9}  policy sweep")
     prev = None
-    for f, jobs, jps, sweep in points:
+    for f, jobs, jps, sweep, _ws in points:
         delta = "" if prev is None else f" ({100.0 * (jps / prev - 1.0):+.1f}%)"
         sweep_txt = (
             "  ".join(f"{p}={v:.0f}" for p, v in sorted(sweep.items())) or "-"
@@ -146,6 +163,15 @@ def main(argv):
     print(f"\n  trajectory: {sparkline(rates)}  "
           f"(first {rates[0]:.1f} -> last {rates[-1]:.1f} jobs/s, "
           f"{100.0 * (rates[-1] / rates[0] - 1.0):+.1f}%)")
+    # Informational (never gated): what-if counterfactual replay rate.
+    for f, *_rest, ws in points:
+        if ws is not None:
+            rate, speedup = ws
+            extra = "" if speedup is None else f" ({speedup:.1f}x vs cold runs)"
+            print(
+                f"  whatif sweep [{os.path.relpath(f)}]: "
+                f"{rate:.1f} counterfactuals/s{extra}"
+            )
     return 0
 
 
