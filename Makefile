@@ -6,7 +6,7 @@
 CARGO ?= cargo
 RUST_DIR := rust
 
-.PHONY: verify test build fmt-check doc bench-fleet fleet
+.PHONY: verify test build fmt-check doc audit clippy bench-fleet fleet
 
 verify: build test
 
@@ -18,6 +18,17 @@ test:
 
 fmt-check:
 	cd $(RUST_DIR) && $(CARGO) fmt --check
+
+# In-tree invariant lint (docs/AUDIT.md): determinism, RNG-stream, and
+# cache-coherence discipline over rust/src. Blocking in CI; exits
+# non-zero on any violation. `-- audit --json true` for the machine form.
+audit:
+	cd $(RUST_DIR) && $(CARGO) run --release -- audit
+
+# Mirrors the blocking CI clippy step (structural lints allowed there
+# via -A; run plain clippy locally to see everything).
+clippy:
+	cd $(RUST_DIR) && $(CARGO) clippy --all-targets
 
 # Rustdoc with warnings denied: broken intra-doc links fail, same as CI.
 doc:

@@ -1,0 +1,439 @@
+//! AST-lite source model for the audit scanner.
+//!
+//! Rules never see raw source. [`SourceModel::parse`] runs two passes:
+//!
+//! 1. **Blanking** — a char-level state machine replaces comments, string
+//!    literals (plain, byte, raw, any `#` depth), and char literals with
+//!    spaces, preserving line structure, so `"HashMap"` inside a string or
+//!    a doc comment can never trip a rule. Line comments are captured on
+//!    the way out because they may carry `audit:allow` directives.
+//! 2. **Structure** — a brace-depth walk over the blanked text marks
+//!    `#[cfg(test)]` / `#[test]` regions (rules skip test code), and
+//!    tracks the innermost enclosing `fn` name so rules can bless specific
+//!    functions (e.g. the `Cluster` setters).
+//!
+//! The output is one [`LineInfo`] per source line: blanked code, test
+//! flag, enclosing function, and any allow directives attached to it.
+
+/// One parsed `// audit:allow(rule-id): reason` directive.
+#[derive(Clone, Debug)]
+pub struct Allow {
+    /// Rule id inside the parentheses (not yet validated against the
+    /// registry — the `allow-grammar` meta-rule does that).
+    pub rule: String,
+    /// Whether a non-empty reason followed the closing paren.
+    pub has_reason: bool,
+    /// Line the directive comment itself sits on (1-based), for
+    /// diagnostics about the directive.
+    pub at_line: usize,
+}
+
+/// Everything a rule may know about one source line.
+#[derive(Clone, Debug, Default)]
+pub struct LineInfo {
+    /// The line with comments/strings/chars blanked to spaces.
+    pub code: String,
+    /// Inside a `#[cfg(test)]` module or `#[test]` function.
+    pub in_test: bool,
+    /// Innermost enclosing function name, if any.
+    pub fn_name: Option<String>,
+    /// Allow directives that apply to this line (trailing comments attach
+    /// to their own line; standalone comment lines attach to the next
+    /// code line).
+    pub allows: Vec<Allow>,
+}
+
+/// Parsed model of one `.rs` file.
+#[derive(Debug, Default)]
+pub struct SourceModel {
+    pub lines: Vec<LineInfo>,
+}
+
+impl SourceModel {
+    pub fn parse(text: &str) -> SourceModel {
+        let (blanked, comments) = blank(text);
+        let mut lines = structure(&blanked);
+        attach_allows(&mut lines, &comments);
+        SourceModel { lines }
+    }
+}
+
+fn is_ident(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Pass 1: blank comments, strings, and char literals; collect line
+/// comments as `(0-based line, text)`.
+fn blank(text: &str) -> (String, Vec<(usize, String)>) {
+    let chars: Vec<char> = text.chars().collect();
+    let n = chars.len();
+    let mut out = String::with_capacity(text.len());
+    let mut comments: Vec<(usize, String)> = Vec::new();
+    let mut line = 0usize;
+    let mut i = 0usize;
+    while i < n {
+        let c = chars[i];
+        // Line comment: capture, blank to end of line.
+        if c == '/' && i + 1 < n && chars[i + 1] == '/' {
+            let start = i;
+            while i < n && chars[i] != '\n' {
+                out.push(' ');
+                i += 1;
+            }
+            comments.push((line, chars[start..i].iter().collect()));
+            continue;
+        }
+        // Block comment: blank, honoring nesting.
+        if c == '/' && i + 1 < n && chars[i + 1] == '*' {
+            let mut depth = 1usize;
+            out.push_str("  ");
+            i += 2;
+            while i < n && depth > 0 {
+                if chars[i] == '/' && i + 1 < n && chars[i + 1] == '*' {
+                    depth += 1;
+                    out.push_str("  ");
+                    i += 2;
+                } else if chars[i] == '*' && i + 1 < n && chars[i + 1] == '/' {
+                    depth -= 1;
+                    out.push_str("  ");
+                    i += 2;
+                } else {
+                    if chars[i] == '\n' {
+                        out.push('\n');
+                        line += 1;
+                    } else {
+                        out.push(' ');
+                    }
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // Raw / byte-raw string: r"..", r#".."#, br".." — no escapes.
+        if (c == 'r' || c == 'b') && !(i > 0 && is_ident(chars[i - 1])) {
+            let mut j = i + 1;
+            if c == 'b' && j < n && chars[j] == 'r' {
+                j += 1;
+            }
+            let raw = c == 'r' || j > i + 1;
+            let mut hashes = 0usize;
+            while raw && j < n && chars[j] == '#' {
+                hashes += 1;
+                j += 1;
+            }
+            if raw && j < n && chars[j] == '"' {
+                for _ in i..=j {
+                    out.push(' ');
+                }
+                i = j + 1;
+                'raw: while i < n {
+                    if chars[i] == '"' {
+                        let mut k = 0usize;
+                        while k < hashes && i + 1 + k < n && chars[i + 1 + k] == '#' {
+                            k += 1;
+                        }
+                        if k == hashes {
+                            for _ in 0..=hashes {
+                                out.push(' ');
+                            }
+                            i += 1 + hashes;
+                            break 'raw;
+                        }
+                    }
+                    if chars[i] == '\n' {
+                        out.push('\n');
+                        line += 1;
+                    } else {
+                        out.push(' ');
+                    }
+                    i += 1;
+                }
+                continue;
+            }
+            // `b"..."` (non-raw byte string) falls through to the string
+            // arm below via its `"`; a lone identifier starting with r/b
+            // falls through to the default arm.
+        }
+        // Plain string literal (escapes honored).
+        if c == '"' {
+            out.push(' ');
+            i += 1;
+            while i < n {
+                if chars[i] == '\\' {
+                    out.push(' ');
+                    i += 1;
+                    if i < n {
+                        if chars[i] == '\n' {
+                            out.push('\n');
+                            line += 1;
+                        } else {
+                            out.push(' ');
+                        }
+                        i += 1;
+                    }
+                } else if chars[i] == '"' {
+                    out.push(' ');
+                    i += 1;
+                    break;
+                } else {
+                    if chars[i] == '\n' {
+                        out.push('\n');
+                        line += 1;
+                    } else {
+                        out.push(' ');
+                    }
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // Char literal vs lifetime: 'x' / '\n' are literals; 'a in
+        // `<'a>` is a lifetime (left alone).
+        if c == '\'' {
+            let lit = (i + 1 < n && chars[i + 1] == '\\')
+                || (i + 2 < n && chars[i + 2] == '\'' && chars[i + 1] != '\'');
+            if lit {
+                out.push(' ');
+                i += 1;
+                while i < n {
+                    if chars[i] == '\\' {
+                        out.push(' ');
+                        i += 1;
+                        if i < n {
+                            out.push(' ');
+                            i += 1;
+                        }
+                    } else if chars[i] == '\'' {
+                        out.push(' ');
+                        i += 1;
+                        break;
+                    } else {
+                        out.push(' ');
+                        i += 1;
+                    }
+                }
+                continue;
+            }
+        }
+        if c == '\n' {
+            line += 1;
+        }
+        out.push(c);
+        i += 1;
+    }
+    (out, comments)
+}
+
+/// Pass 2: walk the blanked text line by line, tracking brace depth,
+/// test regions, and the enclosing-function stack.
+fn structure(blanked: &str) -> Vec<LineInfo> {
+    let mut lines: Vec<LineInfo> = Vec::new();
+    let mut depth = 0usize;
+    // Depth at which the active `#[cfg(test)]` / `#[test]` region's brace
+    // opened; the region ends when that brace closes.
+    let mut test_until: Option<usize> = None;
+    // A test attribute was seen; latches onto the next `{` (cleared by a
+    // `;` first — bodyless items like `#[cfg(test)] use x;`).
+    let mut pending_test = false;
+    // (fn name, depth its body opened at).
+    let mut fn_stack: Vec<(String, usize)> = Vec::new();
+    let mut pending_fn: Option<String> = None;
+
+    for raw in blanked.split('\n') {
+        if raw.contains("#[cfg(test)]") || raw.contains("#[test]") || raw.contains("#[cfg(all(test")
+        {
+            pending_test = true;
+        }
+        let in_test = test_until.is_some() || pending_test;
+        let fn_at_start = fn_stack.last().map(|(name, _)| name.clone());
+
+        let cs: Vec<char> = raw.chars().collect();
+        let mut k = 0usize;
+        let mut after_fn_kw = false;
+        while k < cs.len() {
+            let ch = cs[k];
+            if is_ident(ch) && !ch.is_ascii_digit() {
+                let start = k;
+                while k < cs.len() && is_ident(cs[k]) {
+                    k += 1;
+                }
+                let word: String = cs[start..k].iter().collect();
+                if word == "fn" {
+                    after_fn_kw = true;
+                } else if after_fn_kw {
+                    pending_fn = Some(word);
+                    after_fn_kw = false;
+                }
+                continue;
+            }
+            match ch {
+                '{' => {
+                    depth += 1;
+                    if pending_test && test_until.is_none() {
+                        test_until = Some(depth);
+                    }
+                    pending_test = false;
+                    if let Some(name) = pending_fn.take() {
+                        fn_stack.push((name, depth));
+                    }
+                }
+                '}' => {
+                    if test_until == Some(depth) {
+                        test_until = None;
+                    }
+                    while fn_stack.last().is_some_and(|&(_, d)| d == depth) {
+                        fn_stack.pop();
+                    }
+                    depth = depth.saturating_sub(1);
+                }
+                ';' => {
+                    // A `;` before any `{` means the pending item was
+                    // bodyless (trait method, cfg'd use/const).
+                    if pending_test && test_until.is_none() {
+                        pending_test = false;
+                    }
+                    if pending_fn.is_some() {
+                        pending_fn = None;
+                    }
+                }
+                _ => {}
+            }
+            k += 1;
+        }
+
+        let fn_at_end = fn_stack.last().map(|(name, _)| name.clone());
+        lines.push(LineInfo {
+            code: raw.to_string(),
+            in_test,
+            // A fn signature line belongs to the fn it opens; a closing
+            // `}` line still belongs to the fn it closes.
+            fn_name: fn_at_start.or(fn_at_end),
+            allows: Vec::new(),
+        });
+    }
+    lines
+}
+
+/// Parse allow directives out of captured line comments and attach each
+/// to the line it governs.
+fn attach_allows(lines: &mut [LineInfo], comments: &[(usize, String)]) {
+    for &(line0, ref text) in comments {
+        let Some(allow) = parse_allow(text, line0 + 1) else {
+            continue;
+        };
+        // Trailing comment: the line has code of its own. Standalone
+        // comment line: attach to the next non-blank code line.
+        let mut target = line0;
+        if lines[line0].code.trim().is_empty() {
+            let mut j = line0 + 1;
+            while j < lines.len() && lines[j].code.trim().is_empty() {
+                j += 1;
+            }
+            if j < lines.len() {
+                target = j;
+            }
+        }
+        lines[target].allows.push(allow);
+    }
+}
+
+/// Parse one comment's text as an allow directive. The directive must be
+/// the comment's first payload — `audit:allow` right after the `//`(`/`,
+/// `!`) markers — so prose that merely *mentions* the grammar (like this
+/// sentence) is not a directive. Returns `None` for non-directives; a
+/// directive with a bad tail comes back with an empty rule id so the
+/// `allow-grammar` rule can report it.
+fn parse_allow(comment: &str, at_line: usize) -> Option<Allow> {
+    // Strip exactly one comment marker (`//`, `///`, `//!`), not any
+    // nested one — a doc example quoting a directive stays prose.
+    let payload = comment.trim_start().trim_start_matches('/');
+    let payload = payload.strip_prefix('!').unwrap_or(payload).trim_start();
+    let rest = payload.strip_prefix("audit:allow")?;
+    let rest = rest.trim_start();
+    let Some(rest) = rest.strip_prefix('(') else {
+        return Some(Allow { rule: String::new(), has_reason: false, at_line });
+    };
+    let Some(close) = rest.find(')') else {
+        return Some(Allow { rule: String::new(), has_reason: false, at_line });
+    };
+    let rule = rest[..close].trim().to_string();
+    let tail = rest[close + 1..].trim_start();
+    let has_reason = match tail.strip_prefix(':') {
+        Some(reason) => !reason.trim().is_empty(),
+        None => false,
+    };
+    Some(Allow { rule, has_reason, at_line })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strings_and_comments_are_blanked() {
+        let m = SourceModel::parse("let x = \"HashMap\"; // HashMap too\nlet y = 1;\n");
+        assert!(!m.lines[0].code.contains("HashMap"));
+        assert!(m.lines[1].code.contains("let y"));
+    }
+
+    #[test]
+    fn raw_strings_and_char_literals() {
+        let src = "let r = r#\"Instant \"quoted\" inside\"#;\nlet c = '\\n';\n\
+                   let l: &'static str = s;\n";
+        let m = SourceModel::parse(src);
+        assert!(!m.lines[0].code.contains("Instant"));
+        assert!(m.lines[1].code.contains("let c"));
+        assert!(m.lines[2].code.contains("static"), "lifetime must survive");
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let m = SourceModel::parse("/* outer /* inner */ still comment */ let z = 2;\n");
+        assert!(!m.lines[0].code.contains("comment"));
+        assert!(m.lines[0].code.contains("let z"));
+    }
+
+    #[test]
+    fn test_regions_are_marked() {
+        let src = "fn lib() {}\n#[cfg(test)]\nmod tests {\n    fn t() {}\n}\nfn after() {}\n";
+        let m = SourceModel::parse(src);
+        assert!(!m.lines[0].in_test);
+        assert!(m.lines[3].in_test);
+        assert!(!m.lines[5].in_test);
+    }
+
+    #[test]
+    fn bodyless_cfg_test_item_does_not_latch() {
+        let src = "#[cfg(test)]\nuse foo::Bar;\nfn real() {\n    work();\n}\n";
+        let m = SourceModel::parse(src);
+        assert!(m.lines[1].in_test, "the cfg'd use itself is test-only");
+        assert!(!m.lines[3].in_test, "the next fn must not inherit it");
+    }
+
+    #[test]
+    fn enclosing_fn_names() {
+        let src = "impl Foo {\n    pub fn set_x(&mut self) {\n        self.x = 1;\n    }\n}\n";
+        let m = SourceModel::parse(src);
+        assert_eq!(m.lines[2].fn_name.as_deref(), Some("set_x"));
+        assert_eq!(m.lines[1].fn_name.as_deref(), Some("set_x"));
+    }
+
+    #[test]
+    fn allow_directives_attach() {
+        let src = "// audit:allow(clock-hygiene): measured overhead\nlet t = now();\n\
+                   let u = later(); // audit:allow(rng-stream): root stream\n";
+        let m = SourceModel::parse(src);
+        assert_eq!(m.lines[1].allows.len(), 1);
+        assert_eq!(m.lines[1].allows[0].rule, "clock-hygiene");
+        assert!(m.lines[1].allows[0].has_reason);
+        assert_eq!(m.lines[2].allows[0].rule, "rng-stream");
+    }
+
+    #[test]
+    fn malformed_allow_is_surfaced_not_dropped() {
+        let src = "// audit:allow(panic-budget)\nfoo();\n";
+        let m = SourceModel::parse(src);
+        assert_eq!(m.lines[1].allows.len(), 1);
+        assert!(!m.lines[1].allows[0].has_reason);
+    }
+}

@@ -1,0 +1,358 @@
+//! The audit rule registry.
+//!
+//! Each rule is a pure function over one [`LineInfo`] (plus the file's
+//! repo-relative path); the engine in `mod.rs` handles allow suppression
+//! and the panic budget. Rules are scoped by *exclusion* — a file is in
+//! scope unless its path is listed — so fixture files under arbitrary
+//! paths still fire.
+
+use super::lexer::{LineInfo, SourceModel};
+use super::{Diagnostic, RULES};
+
+/// `fabric::Cluster` health/scale fields whose writes must route through
+/// the generation-bumping setters (the PR 4 cache-coherence contract).
+const CLUSTER_FIELDS: &[&str] = &[
+    "compute_scale",
+    "temp_c",
+    "cpu_satisfaction",
+    "high_cpu_jobs",
+    "bandwidth_scale",
+    "external_scale",
+];
+
+/// Methods that mutate a map in place (for `pair_scale`).
+const MAP_MUTATORS: &[&str] = &["insert", "remove", "clear", "entry", "get_mut", "retain"];
+
+/// The only functions allowed to write `Cluster` fields directly: the
+/// setters themselves, all in `fabric/mod.rs`.
+const BLESSED_SETTERS: &[&str] = &[
+    "set_gpu_health",
+    "set_cpu_health",
+    "set_uplink_scale",
+    "set_pair_scale",
+    "set_external_scale",
+    "heal_all",
+];
+
+/// Paths exempt from `digest-determinism` (no digest/replay-reachable
+/// state): the substrate, this scanner, the CLI shell, and the
+/// pjrt-gated live path.
+const DIGEST_EXEMPT: &[&str] =
+    &["util/", "audit/", "trainer/", "runtime/", "main.rs", "xla.rs", "anyhow.rs"];
+
+/// Paths allowed to construct RNG roots freely: the RNG substrate and
+/// everything outside the deterministic sim/replay surface.
+const RNG_EXEMPT: &[&str] =
+    &["util/", "audit/", "reports/", "trainer/", "runtime/", "main.rs", "xla.rs", "anyhow.rs"];
+
+/// Ambient / ad-hoc RNG constructors that break replayability anywhere.
+const RNG_AMBIENT: &[&str] = &["thread_rng", "from_entropy", "seed_from_u64"];
+
+fn exempt(path: &str, list: &[&str]) -> bool {
+    list.iter().any(|p| {
+        if p.ends_with('/') {
+            path.starts_with(p)
+        } else {
+            path == *p
+        }
+    })
+}
+
+/// Whole-word identifier tokens of a blanked line, with char positions.
+fn tokens(code: &str) -> Vec<(usize, String)> {
+    let cs: Vec<char> = code.chars().collect();
+    let mut out = Vec::new();
+    let mut k = 0usize;
+    while k < cs.len() {
+        let c = cs[k];
+        if (c.is_ascii_alphabetic() || c == '_') && !(k > 0 && cs[k - 1].is_ascii_digit()) {
+            let start = k;
+            while k < cs.len() && (cs[k].is_ascii_alphanumeric() || cs[k] == '_') {
+                k += 1;
+            }
+            out.push((start, cs[start..k].iter().collect()));
+        } else {
+            k += 1;
+        }
+    }
+    out
+}
+
+fn prev_nonspace(cs: &[char], mut k: usize) -> Option<char> {
+    while k > 0 {
+        k -= 1;
+        if cs[k] != ' ' && cs[k] != '\t' {
+            return Some(cs[k]);
+        }
+    }
+    None
+}
+
+fn next_nonspace(cs: &[char], mut k: usize) -> Option<(usize, char)> {
+    while k < cs.len() {
+        if cs[k] != ' ' && cs[k] != '\t' {
+            return Some((k, cs[k]));
+        }
+        k += 1;
+    }
+    None
+}
+
+/// After a field token (and optional `[index]`), is the next operator a
+/// plain or compound assignment?
+fn is_assignment(cs: &[char], mut k: usize) -> bool {
+    // Skip one bracketed index expression, line-locally.
+    if let Some((p, '[')) = next_nonspace(cs, k) {
+        let mut depth = 1usize;
+        k = p + 1;
+        while k < cs.len() && depth > 0 {
+            match cs[k] {
+                '[' => depth += 1,
+                ']' => depth -= 1,
+                _ => {}
+            }
+            k += 1;
+        }
+        if depth > 0 {
+            return false;
+        }
+    }
+    match next_nonspace(cs, k) {
+        Some((p, '=')) => cs.get(p + 1) != Some(&'='),
+        Some((p, c)) if matches!(c, '+' | '-' | '*' | '/') => cs.get(p + 1) == Some(&'='),
+        _ => false,
+    }
+}
+
+fn diag(rule: &'static str, path: &str, line: usize, msg: String, code: &str) -> Diagnostic {
+    Diagnostic {
+        rule,
+        path: path.to_string(),
+        line,
+        msg,
+        snippet: code.trim().to_string(),
+    }
+}
+
+/// Run every rule over one parsed file. Allow suppression happens in the
+/// engine; this returns raw findings (including `allow-grammar` ones).
+pub fn check(path: &str, model: &SourceModel) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    for (idx, info) in model.lines.iter().enumerate() {
+        let line = idx + 1;
+        check_allow_grammar(path, info, &mut out);
+        if info.in_test {
+            continue;
+        }
+        let toks = tokens(&info.code);
+        if toks.is_empty() {
+            continue;
+        }
+        let cs: Vec<char> = info.code.chars().collect();
+        check_generation(path, line, info, &toks, &cs, &mut out);
+        check_digest(path, line, info, &toks, &mut out);
+        check_clock(path, line, info, &toks, &mut out);
+        check_rng(path, line, info, &toks, &cs, &mut out);
+        check_panic(path, line, info, &toks, &cs, &mut out);
+    }
+    out
+}
+
+fn check_allow_grammar(path: &str, info: &LineInfo, out: &mut Vec<Diagnostic>) {
+    for allow in &info.allows {
+        let known = RULES.iter().any(|r| r.id == allow.rule) && allow.rule != "allow-grammar";
+        if !known {
+            out.push(diag(
+                "allow-grammar",
+                path,
+                allow.at_line,
+                format!("allow names unknown rule `{}`", allow.rule),
+                &info.code,
+            ));
+        } else if !allow.has_reason {
+            out.push(diag(
+                "allow-grammar",
+                path,
+                allow.at_line,
+                format!("allow({}) missing a `: reason`", allow.rule),
+                &info.code,
+            ));
+        }
+    }
+}
+
+fn check_generation(
+    path: &str,
+    line: usize,
+    info: &LineInfo,
+    toks: &[(usize, String)],
+    cs: &[char],
+    out: &mut Vec<Diagnostic>,
+) {
+    let blessed = path == "fabric/mod.rs"
+        && info
+            .fn_name
+            .as_deref()
+            .is_some_and(|f| BLESSED_SETTERS.contains(&f));
+    if blessed {
+        return;
+    }
+    for &(pos, ref word) in toks {
+        let field_write = CLUSTER_FIELDS.contains(&word.as_str())
+            && prev_nonspace(cs, pos) == Some('.')
+            && is_assignment(cs, pos + word.len());
+        let pair_mutation = word == "pair_scale" && prev_nonspace(cs, pos) == Some('.') && {
+            let after = pos + word.len();
+            is_assignment(cs, after)
+                || match next_nonspace(cs, after) {
+                    Some((p, '.')) => toks
+                        .iter()
+                        .any(|&(tp, ref t)| tp == p + 1 && MAP_MUTATORS.contains(&t.as_str())),
+                    _ => false,
+                }
+        };
+        if field_write || pair_mutation {
+            out.push(diag(
+                "generation-discipline",
+                path,
+                line,
+                format!(
+                    "direct write to Cluster::{word} outside a generation-bumping setter \
+                     (stale caches: route through set_*/heal_all)"
+                ),
+                &info.code,
+            ));
+        }
+    }
+}
+
+fn check_digest(
+    path: &str,
+    line: usize,
+    info: &LineInfo,
+    toks: &[(usize, String)],
+    out: &mut Vec<Diagnostic>,
+) {
+    if exempt(path, DIGEST_EXEMPT) {
+        return;
+    }
+    for &(_, ref word) in toks {
+        if word == "HashMap" || word == "HashSet" {
+            out.push(diag(
+                "digest-determinism",
+                path,
+                line,
+                format!(
+                    "{word} in digest/replay-reachable code: iteration order is \
+                     nondeterministic; use BTreeMap/BTreeSet or sort before use"
+                ),
+                &info.code,
+            ));
+        }
+    }
+}
+
+fn check_clock(
+    path: &str,
+    line: usize,
+    info: &LineInfo,
+    toks: &[(usize, String)],
+    out: &mut Vec<Diagnostic>,
+) {
+    for &(_, ref word) in toks {
+        if word == "Instant" || word == "SystemTime" {
+            out.push(diag(
+                "clock-hygiene",
+                path,
+                line,
+                format!(
+                    "{word} (wall clock) in library code: sim time must come from \
+                     simkit::Time; annotate real overhead-measurement sites"
+                ),
+                &info.code,
+            ));
+        }
+    }
+}
+
+fn check_rng(
+    path: &str,
+    line: usize,
+    info: &LineInfo,
+    toks: &[(usize, String)],
+    cs: &[char],
+    out: &mut Vec<Diagnostic>,
+) {
+    for (i, &(pos, ref word)) in toks.iter().enumerate() {
+        if RNG_AMBIENT.contains(&word.as_str()) {
+            out.push(diag(
+                "rng-stream",
+                path,
+                line,
+                format!("ambient/ad-hoc RNG `{word}` breaks replay determinism"),
+                &info.code,
+            ));
+            continue;
+        }
+        // `rand::` — the external crate's ambient entry points.
+        if word == "rand" && cs.get(pos + word.len()) == Some(&':') {
+            out.push(diag(
+                "rng-stream",
+                path,
+                line,
+                "external `rand::` usage: the tree's RNG substrate is util::rng".to_string(),
+                &info.code,
+            ));
+            continue;
+        }
+        // `Rng::new(...)` — a fresh root stream. Forking (`.fork(n)`) is
+        // the blessed derivation; new roots need an allow outside the
+        // exempt paths.
+        if word == "Rng"
+            && !exempt(path, RNG_EXEMPT)
+            && toks.get(i + 1).is_some_and(|&(p, ref t)| {
+                t == "new" && p == pos + word.len() + 2 && cs.get(pos + word.len()) == Some(&':')
+            })
+        {
+            out.push(diag(
+                "rng-stream",
+                path,
+                line,
+                "new RNG root stream: derive via .fork(tag) from the run's root seed, \
+                 or annotate the blessed root-derivation site"
+                    .to_string(),
+                &info.code,
+            ));
+        }
+    }
+}
+
+fn check_panic(
+    path: &str,
+    line: usize,
+    info: &LineInfo,
+    toks: &[(usize, String)],
+    cs: &[char],
+    out: &mut Vec<Diagnostic>,
+) {
+    for &(pos, ref word) in toks {
+        let after = pos + word.len();
+        let hit = match word.as_str() {
+            "unwrap" | "expect" => {
+                prev_nonspace(cs, pos) == Some('.') && cs.get(after) == Some(&'(')
+            }
+            "panic" | "unreachable" | "todo" | "unimplemented" => cs.get(after) == Some(&'!'),
+            _ => false,
+        };
+        if hit {
+            out.push(diag(
+                "panic-budget",
+                path,
+                line,
+                format!("`{word}` in non-test library code: return a Result or annotate why \
+                     the invariant holds"),
+                &info.code,
+            ));
+        }
+    }
+}

@@ -251,7 +251,7 @@ impl Falcon {
         // healthy edge to compare against — the pooled median supplies it).
         let mut slow_edges: Vec<SlowEdge> = Vec::new();
         if !suspicious.is_empty() {
-            let suspicious_ids: std::collections::HashSet<u64> =
+            let suspicious_ids: std::collections::BTreeSet<u64> =
                 suspicious.iter().map(|g| g.id).collect();
             let mut measurements: Vec<(u64, usize, usize, f64)> = Vec::new();
             for g in &raw {

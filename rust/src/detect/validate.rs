@@ -33,7 +33,7 @@ impl ValidationPlan {
     /// No rank appears twice within a pass (concurrency invariant).
     pub fn passes_disjoint(&self) -> bool {
         self.passes.iter().all(|pass| {
-            let mut seen = std::collections::HashSet::new();
+            let mut seen = std::collections::BTreeSet::new();
             pass.iter().all(|&(a, b)| seen.insert(a) && seen.insert(b))
         })
     }

@@ -189,7 +189,7 @@ pub struct Cluster {
     /// bandwidth multiplier for traffic between the unordered pair. This is
     /// the granularity Fig 10's "congested link between nodes 3 and 4"
     /// lives at; S3 moves traffic classes across these pairs.
-    pub pair_scale: std::collections::HashMap<(usize, usize), f64>,
+    pub pair_scale: std::collections::BTreeMap<(usize, usize), f64>,
     /// Per-node health generation (see the struct docs).
     node_gen: Vec<u64>,
     /// Global health epoch: bumped on every tracked health change.
@@ -202,7 +202,7 @@ impl Cluster {
             gpus: vec![GpuState::default(); spec.total_gpus()],
             nodes: vec![NodeState::default(); spec.nodes],
             uplinks: vec![LinkState::default(); spec.nodes],
-            pair_scale: std::collections::HashMap::new(),
+            pair_scale: std::collections::BTreeMap::new(),
             node_gen: vec![0; spec.nodes],
             epoch: 0,
             spec,

@@ -116,6 +116,9 @@ impl FailSlowEvent {
             (FailSlowKind::NetworkCongestion, Target::Link(a, b)) => {
                 cluster.set_pair_scale(a, b, self.scale);
             }
+            // audit:allow(panic-budget): kind/target pairs are validated
+            // when the fault script is parsed; a mismatch here is a bug in
+            // event construction, not recoverable state.
             (k, t) => panic!("mismatched injection {k:?} on {t:?}"),
         }
     }
@@ -135,6 +138,8 @@ impl FailSlowEvent {
             (FailSlowKind::NetworkCongestion, Target::Link(a, b)) => {
                 cluster.set_pair_scale(a, b, 1.0);
             }
+            // audit:allow(panic-budget): revert sees exactly the pairs
+            // apply accepted; any other combination cannot be constructed.
             _ => unreachable!(),
         }
     }

@@ -13,12 +13,18 @@
 //! a fault script (or a whole fleet campaign) from one TOML document or
 //! the built-in library. [`whatif`] adds counterfactual analysis on top:
 //! record a run, replay it with one fault removed or one decision
-//! changed, and attribute the delay (`falcon whatif <scenario>`). See the
-//! top-level README.md for the architecture map and quickstart.
+//! changed, and attribute the delay (`falcon whatif <scenario>`). The
+//! determinism conventions all of this rests on are machine-checked by
+//! [`audit`] (`falcon audit`), a dependency-free static-analysis pass
+//! over this crate's own source. See the top-level README.md for the
+//! architecture map and quickstart.
+
+#![forbid(unsafe_code)]
 
 /// In-tree `anyhow` stand-in for the pjrt feature (see the module docs).
 #[cfg(feature = "pjrt")]
 pub mod anyhow;
+pub mod audit;
 pub mod cluster;
 pub mod collectives;
 pub mod coordinator;

@@ -39,6 +39,10 @@
 //!     the pool breathes).
 //! campaign [--fast true|false]
 //!     The §3 characterization campaign (Fig 1 + Table 1).
+//! audit [--src DIR] [--json true]
+//!     Run the in-tree invariant lint (determinism, RNG-stream, and
+//!     cache-coherence discipline) over the crate's own source; exits
+//!     non-zero on any violation. Rule catalog: docs/AUDIT.md.
 //! list
 //!     List available report ids (paper set plus beyond-paper reports).
 //! ```
@@ -81,6 +85,7 @@ fn main() {
         }
         "sim" => run_sim(&args),
         "fleet" => run_fleet_cmd(&args),
+        "audit" => run_audit(&args),
         "campaign" => {
             println!("{}", falcon::reports::generate("fig1", &args));
             println!("{}", falcon::reports::generate("tab1", &args));
@@ -99,11 +104,12 @@ fn main() {
         }
         _ => {
             println!(
-                "usage: falcon <report|run|whatif|scenarios|train|sim|fleet|campaign|list> \
+                "usage: falcon <report|run|whatif|scenarios|train|sim|fleet|campaign|audit|list> \
                  [flags]\n\
                  see `falcon list` for report ids, `falcon scenarios` for the scenario\n\
                  library, README.md for the quickstart, docs/SCENARIOS.md for the\n\
-                 scenario spec format, and docs/WHATIF.md for counterfactual edits"
+                 scenario spec format, docs/WHATIF.md for counterfactual edits, and\n\
+                 docs/AUDIT.md for the `falcon audit` invariant-lint rules"
             );
         }
     }
@@ -162,7 +168,7 @@ fn run_scenario(args: &Args) {
     match spec.run() {
         Ok(outcome) => {
             if args.bool_or("json", false) {
-                println!("{}", outcome.to_json().to_string());
+                println!("{}", outcome.to_json());
             } else {
                 println!("{}", outcome.render());
             }
@@ -278,7 +284,7 @@ fn run_whatif(args: &Args) {
                         let mut outcome = trace.outcome.clone();
                         outcome.attribution = Some(attr);
                         if json {
-                            println!("{}", outcome.to_json().to_string());
+                            println!("{}", outcome.to_json());
                         } else {
                             println!("{}", outcome.render());
                         }
@@ -302,7 +308,7 @@ fn run_whatif(args: &Args) {
                     ("edited", edited.to_json()),
                     ("jct_delta_s", falcon::util::json::Json::Num(delta)),
                 ]);
-                println!("{}", doc.to_string());
+                println!("{doc}");
                 return;
             }
             println!(
@@ -359,7 +365,7 @@ fn run_whatif(args: &Args) {
                     ("blame", blame_json),
                     ("edited", edited.as_ref().map_or(Json::Null, |o| o.to_json())),
                 ]);
-                println!("{}", doc.to_string());
+                println!("{doc}");
                 return;
             }
             println!("{}", rec.outcome.render());
@@ -452,6 +458,38 @@ fn run_fleet_cmd(args: &Args) {
     println!("{}", report.render());
 }
 
+/// `falcon audit`: run the invariant lint over the crate source (or
+/// `--src DIR`) and exit non-zero unless the tree is clean.
+fn run_audit(args: &Args) {
+    let src = args.str_or("src", "");
+    let root = if src.is_empty() {
+        // Works from the repo root and from rust/.
+        ["rust/src", "src"]
+            .iter()
+            .find(|p| std::path::Path::new(p).is_dir())
+            .map(|p| p.to_string())
+            .unwrap_or_else(|| "src".to_string())
+    } else {
+        src
+    };
+    match falcon::audit::audit_dir(std::path::Path::new(&root)) {
+        Ok(report) => {
+            if args.bool_or("json", false) {
+                println!("{}", report.to_json());
+            } else {
+                print!("{}", report.render());
+            }
+            if !report.clean() {
+                std::process::exit(1);
+            }
+        }
+        Err(e) => {
+            eprintln!("audit: cannot scan '{root}': {e}");
+            std::process::exit(2);
+        }
+    }
+}
+
 #[cfg(feature = "pjrt")]
 fn run_train(args: &Args) {
     use falcon::detect::{BocdConfig, Detector};
@@ -483,6 +521,8 @@ fn run_train(args: &Args) {
     println!("step, loss, iter_time_s, alloc");
     for step in 0..steps {
         if inject && step == inject_at {
+            // audit:allow(generation-discipline): LiveTrainer's own per-worker
+            // scale vector, not a fabric::Cluster health field.
             t.compute_scale[0] = inject_scale;
             eprintln!("[inject] worker 0 compute scale -> {inject_scale}");
         }

@@ -90,6 +90,8 @@ pub fn solve(times: &[f64], total: usize) -> Allocation {
         .map(|i| Reverse(Slot(2.0 * times[i], i))) // completion if given a 2nd
         .collect();
     for _ in 0..total - d {
+        // audit:allow(panic-budget): the heap holds exactly d slots (one
+        // per replica) and every pop is followed by a push.
         let Reverse(Slot(_, i)) = heap.pop().unwrap();
         m[i] += 1;
         heap.push(Reverse(Slot((m[i] + 1) as f64 * times[i], i)));
@@ -134,6 +136,8 @@ pub fn solve_brute(times: &[f64], total: usize) -> Allocation {
         }
     }
     rec(0, total - d, &mut m, times, &mut best);
+    // audit:allow(panic-budget): rec's base case always records a
+    // candidate (extra=0 is in every range), so best is Some.
     best.unwrap()
 }
 

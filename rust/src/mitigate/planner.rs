@@ -85,7 +85,7 @@ pub fn find_strategies(kind: FailSlowKind, ov: &Overheads) -> Vec<Strategy> {
     .into_iter()
     .filter(|s| s.effective_against(kind))
     .collect();
-    cands.sort_by(|a, b| ov.of(*a).partial_cmp(&ov.of(*b)).unwrap());
+    cands.sort_by(|a, b| ov.of(*a).total_cmp(&ov.of(*b)));
     cands
 }
 

@@ -25,7 +25,7 @@
 
 use crate::collectives::CollOp;
 use crate::simkit::Time;
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 /// One intercepted communication call.
 #[derive(Clone, Copy, Debug)]
@@ -97,7 +97,9 @@ pub struct Monitor {
     pub mode: MonitorMode,
     pub logs: Vec<RankLog>,
     /// group id -> accumulated (transfer time, call count) this window.
-    group_time: HashMap<u64, (f64, u64)>,
+    /// BTreeMap so aggregation order (and any downstream tie-break) is
+    /// deterministic — see the digest-determinism audit rule.
+    group_time: BTreeMap<u64, (f64, u64)>,
     /// Fractional per-call overhead the shim itself adds (Fig 18 measures
     /// this end to end; the constant is calibrated to the paper's <=1.1%).
     pub overhead_frac: f64,
@@ -108,7 +110,7 @@ impl Monitor {
         Monitor {
             mode: MonitorMode::Tracking,
             logs: (0..n_ranks).map(|_| RankLog::with_capacity(per_rank_cap)).collect(),
-            group_time: HashMap::new(),
+            group_time: BTreeMap::new(),
             overhead_frac: 0.0039, // 0.39% mean overhead (§7.4)
         }
     }
@@ -134,13 +136,12 @@ impl Monitor {
 
     /// Mean transfer time per call for each group observed while profiling.
     pub fn group_mean_times(&self) -> Vec<(u64, f64)> {
-        let mut v: Vec<(u64, f64)> = self
-            .group_time
+        // BTreeMap iteration is already key-sorted, so the output order
+        // is stable without an explicit sort.
+        self.group_time
             .iter()
             .map(|(&g, &(t, n))| (g, if n > 0 { t / n as f64 } else { 0.0 }))
-            .collect();
-        v.sort_by_key(|&(g, _)| g);
-        v
+            .collect()
     }
 
     pub fn clear_profile(&mut self) {

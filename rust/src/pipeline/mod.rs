@@ -150,6 +150,9 @@ impl ModelDims {
             "gpt2-13b" => {
                 ModelDims { layers: 40, hidden: 5120, heads: 40, vocab: 50257, ctx: 2048 }
             }
+            // audit:allow(panic-budget): preset names are compile-time
+            // literals in reports/presets; an unknown name is a typo to
+            // surface immediately, not a runtime condition.
             _ => panic!("unknown model {name}"),
         }
     }

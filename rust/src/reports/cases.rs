@@ -172,11 +172,11 @@ pub fn tab2(args: &Args) -> String {
         .map(|i| {
             // ~8% of samples fall inside a congestion episode.
             let congested = (i % 100) < 8;
-            cluster.uplinks[1].bandwidth_scale = if congested { 0.3 } else { 1.0 };
+            cluster.set_uplink_scale(1, if congested { 0.3 } else { 1.0 });
             cluster.transfer_time_s(a, b, bytes, &mut rng)
         })
         .collect();
-    cluster.uplinks[1].bandwidth_scale = 1.0;
+    cluster.set_uplink_scale(1, 1.0);
     record("RDMA (incl. congestion episodes)", stats::cov(&xs), 0.29);
 
     let mut out =

@@ -227,7 +227,9 @@ pub(crate) fn parse(src: &str) -> Result<ScenarioSpec, ScenarioError> {
                 _ => return Err(perr(ln, format!("unknown [run] key '{key}'"))),
             },
             Section::Fleet => {
-                let f = spec.fleet.as_mut().expect("section implies fleet");
+                let Some(f) = spec.fleet.as_mut() else {
+                    return Err(perr(ln, "[fleet] section lost its spec".to_string()));
+                };
                 match key {
                     "jobs" => f.jobs = p_usize(val, ln)?,
                     "workers" => f.workers = p_usize(val, ln)?,
@@ -249,7 +251,9 @@ pub(crate) fn parse(src: &str) -> Result<ScenarioSpec, ScenarioError> {
                 }
             }
             Section::Fault => {
-                let d = drafts.last_mut().expect("section implies a draft");
+                let Some(d) = drafts.last_mut() else {
+                    return Err(perr(ln, "[[fault]] section lost its draft".to_string()));
+                };
                 match key {
                     "kind" => {
                         let s = p_str(val, ln)?;

@@ -119,7 +119,7 @@ impl<E> Sim<E> {
             if at > until {
                 break;
             }
-            let (t, e) = self.next().unwrap();
+            let Some((t, e)) = self.next() else { break };
             handler(self, t, e);
         }
         // Advance to the bound only if work remains beyond it; an exhausted

@@ -86,12 +86,6 @@ impl Json {
 
     // -- serialization -----------------------------------------------------
 
-    pub fn to_string(&self) -> String {
-        let mut out = String::new();
-        self.write(&mut out);
-        out
-    }
-
     fn write(&self, out: &mut String) {
         match self {
             Json::Null => out.push_str("null"),
@@ -148,6 +142,16 @@ impl Json {
                 out.push('}');
             }
         }
+    }
+}
+
+/// Serialization lives behind `Display`, so `.to_string()` keeps working
+/// at every call site via the `ToString` blanket impl.
+impl std::fmt::Display for Json {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut out = String::new();
+        self.write(&mut out);
+        f.write_str(&out)
     }
 }
 

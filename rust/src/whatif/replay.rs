@@ -116,6 +116,8 @@ fn apply_edits(
             Edit::ForceLevel { strategy, at_frac } => {
                 forced.push((force_iter(at_frac, total_iters), strategy));
             }
+            // audit:allow(panic-budget): check_edits rejects SwapPolicy for
+            // single-job traces before apply_edits can see one.
             Edit::SwapPolicy(_) => unreachable!("checked: fleet-only edit"),
         }
     }
@@ -183,12 +185,13 @@ impl RunTrace {
             .min()
             .unwrap_or(usize::MAX)
             .min(total);
-        let snap = self
-            .snapshots
-            .iter()
-            .rev()
-            .find(|s| s.iter <= d)
-            .expect("snapshot at iteration 0 always exists");
+        let Some(snap) = self.snapshots.iter().rev().find(|s| s.iter <= d) else {
+            // Recordings always snapshot iteration 0, so this is a
+            // corrupted/hand-built trace — refuse rather than crash.
+            return Err(WhatifError::Unsupported(
+                "trace has no snapshot at or before the divergence iteration".to_string(),
+            ));
+        };
         let mut sim = snap.sim.clone();
         let mut falcon = snap.falcon.clone();
         let (injected, forced) = apply_edits(
@@ -238,7 +241,12 @@ fn replay_fleet(spec: &ScenarioSpec, edits: &[Edit]) -> Result<Outcome, WhatifEr
     for e in edits {
         match *e {
             Edit::SwapPolicy(p) => {
-                spec.fleet.as_mut().expect("fleet spec").policy = Some(p);
+                let Some(f) = spec.fleet.as_mut() else {
+                    return Err(WhatifError::Unsupported(
+                        "swap-policy needs a fleet scenario".to_string(),
+                    ));
+                };
+                f.policy = Some(p);
             }
             Edit::DropFault(i) => drops.push(i),
             other => {
@@ -302,14 +310,16 @@ pub fn sweep(
                     break;
                 }
                 let r = trace.replay(&edit_sets[i]);
-                slots.lock().unwrap()[i] = Some(r);
+                slots.lock().unwrap_or_else(|e| e.into_inner())[i] = Some(r);
             });
         }
     });
     slots
         .into_inner()
-        .unwrap()
+        .unwrap_or_else(|e| e.into_inner())
         .into_iter()
+        // audit:allow(panic-budget): the worker loop claims every index
+        // below n exactly once and scope() joins all workers first.
         .map(|r| r.expect("every sweep slot completes"))
         .collect()
 }

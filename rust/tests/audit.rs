@@ -1,0 +1,162 @@
+//! Golden tests for the `falcon-audit` scanner: every rule has a fixture
+//! under `tests/audit_fixtures/` that fires at an exact `(rule, line)`,
+//! allow suppression is pinned, and a self-audit keeps `src/` clean.
+//!
+//! Fixture files live in a subdirectory so cargo never compiles them —
+//! they are scanned as text, under *virtual* paths chosen to put each
+//! one in the rule's scope.
+
+use falcon::audit::{audit_dir, audit_source, FileFindings, PANIC_BUDGET, RULES};
+
+fn fired(path: &str, fixture: &str) -> Vec<(&'static str, usize)> {
+    let f = audit_source(path, fixture);
+    assert!(
+        f.panic_sites.is_empty(),
+        "unexpected panic sites in {path}: {:?}",
+        f.panic_sites
+    );
+    f.violations.iter().map(|d| (d.rule, d.line)).collect()
+}
+
+#[test]
+fn generation_discipline_fires_on_direct_field_writes() {
+    let fx = include_str!("audit_fixtures/generation_discipline.rs");
+    assert_eq!(
+        fired("mitigate/planner.rs", fx),
+        vec![
+            ("generation-discipline", 4), // plain assignment
+            ("generation-discipline", 5), // compound assignment
+            ("generation-discipline", 6), // pair_scale map mutator
+        ]
+    );
+}
+
+#[test]
+fn generation_discipline_blesses_the_setters_themselves() {
+    // Same writes inside a blessed setter in fabric/mod.rs are the point.
+    let fx = "pub fn set_uplink_scale(&mut self, n: usize, s: f64) {\n    \
+              self.uplinks[n].bandwidth_scale = s;\n}\n";
+    assert_eq!(fired("fabric/mod.rs", fx), vec![]);
+    // ...but only there: any other file is still in scope.
+    assert_eq!(fired("sim/mod.rs", fx), vec![("generation-discipline", 2)]);
+}
+
+#[test]
+fn digest_determinism_fires_on_hash_collections() {
+    let fx = include_str!("audit_fixtures/digest_determinism.rs");
+    assert_eq!(
+        fired("fleet/mod.rs", fx),
+        vec![("digest-determinism", 3), ("digest-determinism", 6)]
+    );
+    // The substrate is exempt: no digest-reachable state there.
+    assert_eq!(fired("util/stats.rs", fx), vec![]);
+}
+
+#[test]
+fn clock_hygiene_fires_on_wall_clock() {
+    let fx = include_str!("audit_fixtures/clock_hygiene.rs");
+    assert_eq!(
+        fired("sim/mod.rs", fx),
+        vec![("clock-hygiene", 4), ("clock-hygiene", 5)]
+    );
+}
+
+#[test]
+fn rng_stream_fires_on_adhoc_roots() {
+    let fx = include_str!("audit_fixtures/rng_stream.rs");
+    assert_eq!(
+        fired("sim/mod.rs", fx),
+        vec![
+            ("rng-stream", 4), // Rng::new root
+            ("rng-stream", 5), // rand:: crate
+            ("rng-stream", 6), // thread_rng
+        ]
+    );
+    // reports/ may seed its own illustrative streams (exempt from the
+    // root-stream rule), but ambient RNG is banned everywhere.
+    assert_eq!(
+        fired("reports/cases.rs", fx),
+        vec![("rng-stream", 5), ("rng-stream", 6)]
+    );
+}
+
+#[test]
+fn panic_budget_meters_sites_separately() {
+    let fx = include_str!("audit_fixtures/panic_budget.rs");
+    let f: FileFindings = audit_source("fleet/mod.rs", fx);
+    assert!(f.violations.is_empty(), "{:?}", f.violations);
+    let sites: Vec<(&str, usize)> = f.panic_sites.iter().map(|d| (d.rule, d.line)).collect();
+    // `.unwrap(` and `panic!` fire; `unwrap_or` on line 16 must not.
+    assert_eq!(sites, vec![("panic-budget", 4), ("panic-budget", 11)]);
+}
+
+#[test]
+fn allow_grammar_flags_malformed_directives() {
+    let fx = include_str!("audit_fixtures/allow_grammar.rs");
+    assert_eq!(
+        fired("sim/mod.rs", fx),
+        vec![
+            ("allow-grammar", 4),  // reason-less allow
+            ("clock-hygiene", 5),  // ...which therefore does not suppress
+            ("allow-grammar", 6),  // unknown rule id
+            ("clock-hygiene", 7),  // ...ditto
+        ]
+    );
+}
+
+#[test]
+fn wellformed_allow_suppresses_and_tests_are_out_of_scope() {
+    let fx = include_str!("audit_fixtures/allow_suppression.rs");
+    let f = audit_source("sim/mod.rs", fx);
+    assert!(f.violations.is_empty(), "{:?}", f.violations);
+    assert!(f.panic_sites.is_empty(), "{:?}", f.panic_sites);
+    assert_eq!(f.allowed, 1);
+}
+
+#[test]
+fn every_rule_has_a_registry_entry_and_vice_versa() {
+    let ids: Vec<&str> = RULES.iter().map(|r| r.id).collect();
+    for id in [
+        "generation-discipline",
+        "digest-determinism",
+        "clock-hygiene",
+        "rng-stream",
+        "panic-budget",
+        "allow-grammar",
+    ] {
+        assert!(ids.contains(&id), "missing registry entry for {id}");
+    }
+    assert_eq!(ids.len(), 6);
+}
+
+#[test]
+fn shipped_tree_is_audit_clean() {
+    let src = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+    let report = audit_dir(&src).expect("scan src/");
+    assert!(
+        report.clean(),
+        "shipped tree has audit violations:\n{}",
+        report.render()
+    );
+    // Budgets are a ratchet: every metered module must be at or under
+    // its allowance (clean() already implies this; pin it explicitly).
+    for (prefix, used, allowance) in &report.budget_used {
+        assert!(used <= allowance, "{prefix}: {used} > {allowance}");
+    }
+    assert!(report.files > 40, "suspiciously few files: {}", report.files);
+}
+
+#[test]
+fn shipped_tree_report_is_machine_readable() {
+    let src = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+    let report = audit_dir(&src).expect("scan src/");
+    let json = report.to_json().to_string();
+    assert!(json.contains("\"clean\":true"), "{json}");
+    assert!(json.contains("\"rules\":"), "{json}");
+    // Budget entries survive serialization with their allowances.
+    for (prefix, _, _) in PANIC_BUDGET {
+        if report.budget_used.iter().any(|(p, _, _)| p == prefix) {
+            assert!(json.contains(&format!("\"prefix\":\"{prefix}\"")), "{json}");
+        }
+    }
+}

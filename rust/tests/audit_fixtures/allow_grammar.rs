@@ -1,0 +1,9 @@
+//! Fixture: malformed allow directives are themselves findings.
+
+pub fn bad() -> f64 {
+    // audit:allow(clock-hygiene)
+    let t0 = std::time::Instant::now();
+    // audit:allow(no-such-rule): a reason does not save an unknown id
+    let t1 = std::time::Instant::now();
+    t0.elapsed().as_secs_f64() + t1.elapsed().as_secs_f64()
+}

@@ -1,0 +1,19 @@
+//! Fixture: a well-formed allow suppresses exactly its rule on its line,
+//! and `#[cfg(test)]` regions are out of scope.
+
+pub fn measured() -> f64 {
+    // audit:allow(clock-hygiene): fixture models a real measurement site
+    let t0 = std::time::Instant::now();
+    t0.elapsed().as_secs_f64()
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn tests_may_use_wall_clock_and_unwrap() {
+        let t0 = std::time::Instant::now();
+        let v = vec![1u32];
+        assert_eq!(*v.first().unwrap(), 1);
+        assert!(t0.elapsed().as_secs_f64() >= 0.0);
+    }
+}

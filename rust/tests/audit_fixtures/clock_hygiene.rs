@@ -1,0 +1,8 @@
+//! Fixture: wall-clock reads inside the deterministic sim surface.
+
+pub fn step_time() -> f64 {
+    let t0 = std::time::Instant::now();
+    let wall = std::time::SystemTime::now();
+    let _ = wall;
+    t0.elapsed().as_secs_f64()
+}

@@ -1,0 +1,15 @@
+//! Fixture: hash collections in digest/replay-reachable code.
+
+use std::collections::HashMap;
+
+pub fn digest(xs: &[u64]) -> u64 {
+    let mut seen = std::collections::HashSet::new();
+    let mut acc = 0u64;
+    for &x in xs {
+        if seen.insert(x) {
+            acc = acc.wrapping_mul(31).wrapping_add(x);
+        }
+    }
+    let ordered = std::collections::BTreeMap::from([(0u64, acc)]);
+    ordered[&0]
+}

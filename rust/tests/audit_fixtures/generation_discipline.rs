@@ -1,0 +1,9 @@
+//! Fixture: direct Cluster health-field writes outside the blessed setters.
+
+pub fn tamper(cluster: &mut crate::fabric::Cluster) {
+    cluster.gpus[3].compute_scale = 0.25;
+    cluster.uplinks[1].bandwidth_scale *= 0.5;
+    cluster.pair_scale.insert((0, 1), 0.3);
+    let read_is_fine = cluster.gpus[0].compute_scale;
+    let _ = read_is_fine;
+}

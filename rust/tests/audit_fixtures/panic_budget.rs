@@ -1,0 +1,17 @@
+//! Fixture: panics in non-test library code.
+
+pub fn head(v: &[u32]) -> u32 {
+    *v.first().unwrap()
+}
+
+pub fn mode(name: &str) -> u32 {
+    match name {
+        "fast" => 1,
+        "slow" => 2,
+        _ => panic!("unknown mode {name}"),
+    }
+}
+
+pub fn soft(v: &[u32]) -> u32 {
+    v.first().copied().unwrap_or(0)
+}

@@ -1,0 +1,9 @@
+//! Fixture: ad-hoc RNG roots off the blessed derivation path.
+
+pub fn roll() -> u64 {
+    let mut r = Rng::new(0xDEAD);
+    let ambient = rand::random::<u64>();
+    let mut t = thread_rng();
+    let forked = r.fork(7).u64();
+    forked ^ ambient ^ t.next_u64()
+}
