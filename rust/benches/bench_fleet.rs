@@ -129,6 +129,97 @@ fn bench_whatif_sweep() -> Json {
     ])
 }
 
+/// Hang-vs-slow diagnosis scorecard + op-trace overhead: per-class
+/// accuracy over the labeled library (native horizons), and steady-state
+/// iters/sec for one large job with the per-collective op-trace recording
+/// on vs off. Tracing is RNG-free by contract, so both runs simulate
+/// identically — asserted via the clocks — and the gap is pure trace cost.
+fn bench_diagnosis() -> Json {
+    use falcon::reports::diagnosis as dx;
+
+    let t0 = std::time::Instant::now();
+    let eval = dx::evaluate(0).expect("labeled library runs");
+    let eval_s = t0.elapsed().as_secs_f64();
+    println!(
+        "  labeled library ({} scenarios): {} diagnoses, overall accuracy {:.3} \
+         ({eval_s:.2} s)",
+        dx::LABELED.len(),
+        eval.scored.len(),
+        eval.overall_accuracy()
+    );
+    let per_class: Vec<Json> = eval
+        .stats
+        .iter()
+        .map(|s| {
+            println!(
+                "    {:<17} truth {:>2}  correct {:>2}  precision {:.3}  recall {:.3}  \
+                 latency {:>6.1} s",
+                s.class,
+                s.truth_n,
+                s.correct,
+                s.precision(),
+                s.recall(),
+                s.mean_latency_s
+            );
+            Json::obj(vec![
+                ("class", Json::str(s.class)),
+                ("truth", Json::Num(s.truth_n as f64)),
+                ("correct", Json::Num(s.correct as f64)),
+                ("precision", Json::Num(s.precision())),
+                ("recall", Json::Num(s.recall())),
+                ("mean_latency_s", Json::Num(s.mean_latency_s)),
+            ])
+        })
+        .collect();
+
+    let mut spec = demo_spec(ParallelConfig::new(4, 8, 8), 2024);
+    spec.wl.microbatches = 16;
+    let iters = 400usize;
+
+    let mut traced = TrainingSim::new(spec);
+    let t0 = std::time::Instant::now();
+    for _ in 0..iters {
+        traced.step();
+    }
+    let traced_rate = iters as f64 / t0.elapsed().as_secs_f64().max(1e-9);
+
+    let mut untraced = TrainingSim::new(spec);
+    untraced.op_trace.enabled = false;
+    let t0 = std::time::Instant::now();
+    for _ in 0..iters {
+        untraced.step();
+    }
+    let untraced_rate = iters as f64 / t0.elapsed().as_secs_f64().max(1e-9);
+
+    assert_eq!(
+        traced.now, untraced.now,
+        "op-trace recording must not move the simulated clock"
+    );
+    let overhead_pct = 100.0 * (untraced_rate / traced_rate.max(1e-9) - 1.0);
+    println!(
+        "  op-trace overhead ({} x {iters} iters): {traced_rate:>9.1} iters/s traced, \
+         {untraced_rate:>9.1} iters/s untraced ({overhead_pct:+.1}%)",
+        spec.cfg.label()
+    );
+
+    Json::obj(vec![
+        ("scenarios", Json::Num(dx::LABELED.len() as f64)),
+        ("diagnoses", Json::Num(eval.scored.len() as f64)),
+        ("overall_accuracy", Json::Num(eval.overall_accuracy())),
+        ("per_class", Json::Arr(per_class)),
+        ("eval_s", Json::Num(eval_s)),
+        (
+            "trace_overhead",
+            Json::obj(vec![
+                ("iters", Json::Num(iters as f64)),
+                ("iters_per_sec_traced", Json::Num(traced_rate)),
+                ("iters_per_sec_untraced", Json::Num(untraced_rate)),
+                ("overhead_pct", Json::Num(overhead_pct)),
+            ]),
+        ),
+    ])
+}
+
 const BENCH_PATH: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_fleet.json");
 
 /// jobs/sec of the headline (largest private) config in a BENCH_fleet.json
@@ -163,6 +254,9 @@ fn main() {
 
     section("what-if engine: counterfactual sweep vs cold runs");
     let whatif_sweep = bench_whatif_sweep();
+
+    section("diagnosis taxonomy: accuracy and op-trace overhead");
+    let diagnosis = bench_diagnosis();
 
     section("fleet engine throughput (jobs/sec)");
     for (jobs, iters) in [(64usize, 60usize), (256, 60), (512, 120)] {
@@ -277,6 +371,7 @@ fn main() {
         ("host_workers", Json::Num(workers as f64)),
         ("single_job", single_job),
         ("whatif_sweep", whatif_sweep),
+        ("diagnosis", diagnosis),
         ("runs", Json::Arr(runs)),
     ]);
     match std::fs::write(BENCH_PATH, out.to_string() + "\n") {

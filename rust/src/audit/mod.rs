@@ -96,6 +96,12 @@ pub const PANIC_BUDGET: &[(&str, usize, &str)] = &[
         "rendering layer over already-validated outcomes",
     ),
     (
+        "diagnose/",
+        0,
+        "classification layer over op-trace evidence: every input is \
+         already validated, so any panic is a bug — the budget is zero",
+    ),
+    (
         "trainer/",
         1,
         "pjrt-gated live-training path; not part of the deterministic sim",

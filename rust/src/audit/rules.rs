@@ -20,7 +20,7 @@ const CLUSTER_FIELDS: &[&str] = &[
     "external_scale",
 ];
 
-/// Methods that mutate a map in place (for `pair_scale`).
+/// Methods that mutate a map/set in place (for `pair_scale`/`hung_paths`).
 const MAP_MUTATORS: &[&str] = &["insert", "remove", "clear", "entry", "get_mut", "retain"];
 
 /// The only functions allowed to write `Cluster` fields directly: the
@@ -30,6 +30,7 @@ const BLESSED_SETTERS: &[&str] = &[
     "set_cpu_health",
     "set_uplink_scale",
     "set_pair_scale",
+    "set_path_hang",
     "set_external_scale",
     "heal_all",
 ];
@@ -201,7 +202,9 @@ fn check_generation(
         let field_write = CLUSTER_FIELDS.contains(&word.as_str())
             && prev_nonspace(cs, pos) == Some('.')
             && is_assignment(cs, pos + word.len());
-        let pair_mutation = word == "pair_scale" && prev_nonspace(cs, pos) == Some('.') && {
+        let pair_mutation = (word == "pair_scale" || word == "hung_paths")
+            && prev_nonspace(cs, pos) == Some('.')
+            && {
             let after = pos + word.len();
             is_assignment(cs, after)
                 || match next_nonspace(cs, after) {

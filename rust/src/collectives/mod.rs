@@ -11,6 +11,13 @@
 use crate::fabric::{Cluster, GpuId};
 use crate::util::rng::Rng;
 
+/// Watchdog timeout (seconds) a *hung* collective charges before the
+/// runtime declares it wedged. A hang blocks instead of stretching, so
+/// its observable cost is this fixed timeout — large against a healthy
+/// iteration (~1 s) yet finite, so the sim progresses, BOCD fires fast,
+/// and the op-trace records the blocked edge for `crate::diagnose`.
+pub const HANG_WATCHDOG_S: f64 = 30.0;
+
 /// Collective op kinds logged by the monitor shim (Fig 8's vocabulary).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum CollOp {
@@ -112,23 +119,31 @@ impl CommGroup {
             Topology::Ring => {
                 let chunk = bytes / n as f64;
                 let mut edges = Vec::with_capacity(n);
-                for (a, b) in self.edges() {
+                let mut hung_edges = Vec::new();
+                for (i, (a, b)) in self.edges().into_iter().enumerate() {
                     let t = cluster.transfer_time_nominal_s(self.gpus[a], self.gpus[b], chunk);
                     let cov = cluster.link_class(self.gpus[a], self.gpus[b]).base_cov();
+                    if cluster.path_hung(self.gpus[a], self.gpus[b]) {
+                        hung_edges.push(i);
+                    }
                     edges.push((t, cov));
                 }
-                AllReducePlan { edges, rounds: 2.0 * (n - 1) as f64 }
+                AllReducePlan { edges, rounds: 2.0 * (n - 1) as f64, hung_edges }
             }
             Topology::Tree => {
                 // Reduce up + broadcast down: 2 * depth rounds of `bytes`.
                 let depth = (usize::BITS - n.leading_zeros()) as f64;
                 let mut edges = Vec::with_capacity(n - 1);
-                for (a, b) in self.edges() {
+                let mut hung_edges = Vec::new();
+                for (i, (a, b)) in self.edges().into_iter().enumerate() {
                     let t = cluster.transfer_time_nominal_s(self.gpus[a], self.gpus[b], bytes);
                     let cov = cluster.link_class(self.gpus[a], self.gpus[b]).base_cov();
+                    if cluster.path_hung(self.gpus[a], self.gpus[b]) {
+                        hung_edges.push(i);
+                    }
                     edges.push((t, cov));
                 }
-                AllReducePlan { edges, rounds: 2.0 * depth }
+                AllReducePlan { edges, rounds: 2.0 * depth, hung_edges }
             }
         }
     }
@@ -159,22 +174,35 @@ pub struct AllReducePlan {
     pub edges: Vec<(f64, f64)>,
     /// Synchronous rounds each edge is traversed.
     pub rounds: f64,
+    /// Edge indices (into `edges`) whose path is hung: the collective
+    /// blocks on them and both `sample` and `nominal` return the
+    /// [`HANG_WATCHDOG_S`] timeout instead of the α–β estimate.
+    pub hung_edges: Vec<usize>,
 }
 
 impl AllReducePlan {
     /// Apply per-call measurement noise: one `rng.normal()` per edge, in
-    /// edge order, slowest noisy edge paces every round.
+    /// edge order, slowest noisy edge paces every round. A hung edge
+    /// overrides the result with the watchdog timeout — every per-edge
+    /// normal is still drawn first, so the RNG stream position never
+    /// depends on hang state (the cached-vs-naive bit-equality contract).
     pub fn sample(&self, rng: &mut Rng) -> f64 {
         let mut worst = 0.0f64;
         for &(t, cov) in &self.edges {
             let t = t * (1.0 + cov * rng.normal()).max(0.05);
             worst = worst.max(t);
         }
+        if !self.hung_edges.is_empty() {
+            return HANG_WATCHDOG_S;
+        }
         self.rounds * worst
     }
 
     /// Noise-free value at the frozen health; touches no RNG.
     pub fn nominal(&self) -> f64 {
+        if !self.hung_edges.is_empty() {
+            return HANG_WATCHDOG_S;
+        }
         let mut worst = 0.0f64;
         for &(t, _) in &self.edges {
             worst = worst.max(t);
@@ -320,6 +348,31 @@ mod tests {
         let solo = group(&c, &[0], Topology::Ring);
         assert!(solo.allreduce_plan(&c, 1e9).edges.is_empty());
         assert_eq!(solo.allreduce_plan(&c, 1e9).nominal(), 0.0);
+    }
+
+    #[test]
+    fn hung_edge_blocks_at_watchdog_and_preserves_stream() {
+        let mut c = Cluster::new(ClusterSpec::new(4, 2, GpuClass::H800));
+        let g = group(&c, &[0, 2, 4, 6], Topology::Ring);
+        let healthy = g.allreduce_plan(&c, 1e9);
+        assert!(healthy.hung_edges.is_empty());
+        c.set_path_hang(1, 2, true);
+        let hung = g.allreduce_plan(&c, 1e9);
+        assert_eq!(hung.hung_edges, vec![1], "ring edge node1->node2");
+        assert_eq!(hung.nominal(), HANG_WATCHDOG_S);
+        assert!(hung.nominal() > 20.0 * healthy.nominal(), "a hang dwarfs a healthy step");
+        // The hang must not move the RNG stream: sample() draws exactly
+        // one normal per edge whether or not an edge is hung.
+        let mut r1 = Rng::new(33);
+        let mut r2 = Rng::new(33);
+        assert_eq!(hung.sample(&mut r1), HANG_WATCHDOG_S);
+        let _ = healthy.sample(&mut r2);
+        assert_eq!(r1.next_u64(), r2.next_u64(), "stream diverged on hang");
+        // Uplink-wide hang ((u, u) key) wedges every edge touching node 3.
+        c.set_path_hang(1, 2, false);
+        c.set_path_hang(3, 3, true);
+        let wedged = g.allreduce_plan(&c, 1e9);
+        assert_eq!(wedged.hung_edges, vec![2, 3], "both edges at node 3");
     }
 
     #[test]

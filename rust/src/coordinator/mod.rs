@@ -19,6 +19,7 @@ use crate::detect::bocd::BocdConfig;
 use crate::detect::detector::Detector;
 use crate::detect::profiler::{self, GroupProfile};
 use crate::detect::validate::{self, SlowEdge, SlowGpu};
+use crate::diagnose::{self, EpisodeDiagnosis};
 use crate::inject::FailSlowKind;
 use crate::mitigate::microbatch;
 use crate::mitigate::planner::{MitigationPlanner, Overheads, Strategy};
@@ -120,6 +121,12 @@ pub struct Falcon {
     /// Iteration at which the currently open episode was verified (drives
     /// the `mitigation_delay_iters` counterfactual gate).
     episode_open_iter: Option<usize>,
+    /// Op-trace verdicts (`crate::diagnose`): one per episode open or
+    /// compound re-diagnosis. Surfaced as `Outcome::diagnosis`.
+    pub episode_diagnoses: Vec<EpisodeDiagnosis>,
+    /// A hang verdict's S4 held back by `mitigation_delay_iters`: the
+    /// iteration at which the restart fires (`None` = nothing pending).
+    hang_restart_due: Option<usize>,
 }
 
 impl Falcon {
@@ -133,6 +140,8 @@ impl Falcon {
             restarts: 0,
             pending_grant: None,
             episode_open_iter: None,
+            episode_diagnoses: Vec::new(),
+            hang_restart_due: None,
         }
     }
 
@@ -152,12 +161,14 @@ impl Falcon {
                     what: ActionKind::Diagnosed(diag.clone()),
                 });
                 self.diagnosis = Some(diag);
+                self.classify_episode(sim, iter);
             }
             Some(false) => {
                 self.actions.push(Action { at: sim.now, iter, what: ActionKind::EpisodeClosed });
                 self.planner = None;
                 self.diagnosis = None;
                 self.episode_open_iter = None;
+                self.hang_restart_due = None;
                 if self.cfg.mitigate {
                     // Re-solve the allocation for the *current* replica
                     // speeds: if the underlying degradation healed this is
@@ -179,6 +190,12 @@ impl Falcon {
             .episode_open_iter
             .map_or(true, |o| iter >= o + self.cfg.mitigation_delay_iters);
         if self.detector.slow_now() && self.cfg.mitigate && delay_passed {
+            // A hang verdict whose S4 was held back by the delay gate
+            // fires as soon as the gate opens (and the episode persists).
+            if self.hang_restart_due.is_some_and(|due| iter >= due) {
+                self.hang_restart_due = None;
+                self.apply(sim, iter, Strategy::CkptRestart);
+            }
             // Compound escalation (Fig 17): a further verified upward shift
             // inside the episode means a NEW root cause arrived — re-run
             // profiling + validation and retarget the planner, carrying the
@@ -194,6 +211,7 @@ impl Falcon {
                     what: ActionKind::Diagnosed(diag.clone()),
                 });
                 self.diagnosis = Some(diag);
+                self.classify_episode(sim, iter);
             }
             let healthy = self.detector.baseline();
             let escalate = self
@@ -212,6 +230,29 @@ impl Falcon {
             let solved = microbatch::solve(&times, total).m;
             if solved != sim.microbatch_alloc {
                 sim.set_microbatch_alloc(solved);
+            }
+        }
+    }
+
+    /// Op-trace classification (the hang-vs-slow taxonomy of
+    /// `crate::diagnose`): fold the recent trace window into a class +
+    /// culprit verdict. Hang verdicts route STRAIGHT to S4 — the paper's
+    /// bench-driven diagnosis above cannot see a hang (its probes run on
+    /// nominal health, where a wedged path still times healthy) and the
+    /// S1–S3 ladder cannot unwedge a blocked collective; every iteration
+    /// spent escalating is priced at the watchdog timeout. Slow verdicts
+    /// change nothing: the ski-rental escalation already handles them.
+    fn classify_episode(&mut self, sim: &mut TrainingSim, iter: usize) {
+        let Some(verdict) = diagnose::classify(&sim.op_trace) else {
+            return; // below every evidence bar: transient, let it close
+        };
+        let hang = verdict.class.is_hang();
+        self.episode_diagnoses.push(EpisodeDiagnosis { iter, at: sim.now, verdict });
+        if hang && self.cfg.mitigate {
+            if self.cfg.mitigation_delay_iters == 0 {
+                self.apply(sim, iter, Strategy::CkptRestart);
+            } else {
+                self.hang_restart_due = Some(iter + self.cfg.mitigation_delay_iters);
             }
         }
     }
@@ -569,6 +610,65 @@ mod tests {
         falcon.execute_granted(&mut sim, req);
         assert_eq!(falcon.restarts(), 1);
         assert!(falcon.applied_strategies().contains(&Strategy::CkptRestart));
+    }
+
+    fn hang_event(start_s: f64) -> FailSlowEvent {
+        FailSlowEvent {
+            kind: FailSlowKind::CommHang,
+            target: Target::Link(0, 1),
+            start: from_secs(start_s),
+            duration: 600 * MINUTE,
+            scale: 1.0,
+        }
+    }
+
+    #[test]
+    fn hang_routes_straight_to_restart() {
+        let mut sim = TrainingSim::new(demo_spec(ParallelConfig::new(2, 8, 1), 47)); // 2 nodes
+        let onset = sim.ideal_iter_s * 30.0;
+        sim.inject(vec![hang_event(onset)]);
+        let falcon = run_with_falcon(&mut sim, FalconConfig::default(), 120);
+        let d = falcon.episode_diagnoses.first().expect("hang episode classified");
+        assert!(d.verdict.class.is_hang(), "{:?}", d.verdict.class);
+        assert_eq!(d.verdict.culprit.label(), "link:0-1");
+        assert!(falcon.restarts() >= 1, "{:?}", falcon.applied_strategies());
+        // S4 fires at classification time — not after the ski-rental
+        // ladder: the restart lands the very iteration the episode opens.
+        let open = falcon
+            .actions
+            .iter()
+            .find(|a| matches!(a.what, ActionKind::EpisodeOpened))
+            .expect("episode opened")
+            .iter;
+        let applied = falcon
+            .actions
+            .iter()
+            .find(|a| matches!(a.what, ActionKind::Applied(Strategy::CkptRestart)))
+            .expect("restart applied")
+            .iter;
+        assert_eq!(applied, open, "hang bypasses S1–S3");
+    }
+
+    #[test]
+    fn hang_restart_honors_mitigation_delay() {
+        let restart_iter = |delay: usize| {
+            let mut sim = TrainingSim::new(demo_spec(ParallelConfig::new(2, 8, 1), 47));
+            let onset = sim.ideal_iter_s * 30.0;
+            sim.inject(vec![hang_event(onset)]);
+            let cfg = FalconConfig { mitigation_delay_iters: delay, ..FalconConfig::default() };
+            let falcon = run_with_falcon(&mut sim, cfg, 120);
+            falcon
+                .actions
+                .iter()
+                .find_map(|a| match a.what {
+                    ActionKind::Applied(Strategy::CkptRestart) => Some(a.iter),
+                    _ => None,
+                })
+                .expect("hang restart fires")
+        };
+        let now = restart_iter(0);
+        let later = restart_iter(6);
+        assert!(later >= now + 6, "delayed {later} vs immediate {now}");
     }
 
     #[test]

@@ -1,0 +1,447 @@
+//! Collective-level diagnosis: hang-vs-slow fault taxonomy (CCL-D).
+//!
+//! FALCON-DETECT tells us *when* iterations go anomalous; this module
+//! answers *what kind* and *where*. The simulator records a per-iteration
+//! [`TraceEntry`] — per-ring edge evidence plus per-replica compute
+//! evidence, every ratio normalized against a pristine healthy twin of the
+//! cluster so a healthy component reads exactly 1.0 — into a bounded
+//! [`OpTrace`] ring buffer. When the detector opens (or escalates) an
+//! episode, [`classify`] folds the most recent [`WINDOW`] entries into one
+//! of four classes and pinpoints the culprit component:
+//!
+//! - **comm-hang** — a collective is *blocked* (hung edges present), with
+//!   no independent slow evidence. The CCL-D distinction: a hang does not
+//!   stretch, it wedges at the watchdog; S1–S3 mitigations cannot help and
+//!   the coordinator routes straight to S4 (checkpoint restart).
+//! - **slow-masking-a-hang** — hung edges *plus* genuine slow evidence
+//!   (a degraded GPU or congested link underneath). Still routed to S4:
+//!   the hang dominates, but the report keeps both signals.
+//! - **comm-slow** — no hang, but a ring edge runs ≥ [`COMM_SLOW_RATIO`]
+//!   over its healthy-twin time (congestion); normal S1–S4 escalation.
+//! - **compute-slow** — rings healthy, a replica's 1F1B makespan runs ≥
+//!   [`COMPUTE_SLOW_RATIO`] over its healthy twin (GPU degradation or CPU
+//!   contention); normal escalation.
+//!
+//! Evidence below every threshold classifies as `None` — the episode is a
+//! transient/noise verdict the detector will close on its own.
+//!
+//! Determinism contract: every ratio here derives from *nominal* (noise
+//! free) cache products; building or classifying a trace draws no RNG and
+//! never perturbs the simulation stream. Collections are BTree-ordered so
+//! digests over diagnosis output are stable (`falcon-audit` pins this
+//! directory into the digest-determinism scope with a panic budget of 0).
+
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+
+use crate::simkit::Time;
+
+/// A ring edge runs this factor over its healthy-twin time → comm-slow
+/// evidence. The weakest library congestion (scale 0.45) lands near 2.2x;
+/// healthy edges read exactly 1.0, so 1.3 splits them with wide margin.
+pub const COMM_SLOW_RATIO: f64 = 1.3;
+
+/// A replica 1F1B makespan runs this factor over its healthy twin →
+/// compute-slow evidence. Compute faults dilute across the whole pipeline
+/// (the weakest library case, a 10% first leak step, lands near 1.10;
+/// mild CPU contention near 1.07), so the bar sits much lower than the
+/// comm bar — but healthy replicas read exactly 1.0, never near it.
+pub const COMPUTE_SLOW_RATIO: f64 = 1.04;
+
+/// How many most-recent trace entries one classification folds over.
+pub const WINDOW: usize = 8;
+
+/// Bounded op-trace length: enough for any episode's evidence window with
+/// slack for the report's retrospectives, small enough to keep the step
+/// loop O(what-changed) in memory too.
+pub const TRACE_CAP: usize = 256;
+
+/// The component a diagnosis pins the anomaly on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Culprit {
+    /// A GPU by flat index (node * gpus_per_node + local index).
+    Gpu(usize),
+    /// A node's host/CPU complex.
+    Node(usize),
+    /// The inter-node path between two nodes (normalized pair).
+    Link(usize, usize),
+    /// A node's spine uplink (every path touching the node).
+    Uplink(usize),
+}
+
+impl Culprit {
+    /// Stable textual form pinned by the golden fixtures:
+    /// `gpu:2`, `node:0`, `link:1-2`, `uplink:2`.
+    pub fn label(&self) -> String {
+        match *self {
+            Culprit::Gpu(g) => format!("gpu:{g}"),
+            Culprit::Node(n) => format!("node:{n}"),
+            Culprit::Link(a, b) => format!("link:{}-{}", a.min(b), a.max(b)),
+            Culprit::Uplink(u) => format!("uplink:{u}"),
+        }
+    }
+}
+
+/// The four-way hang-vs-slow taxonomy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum AnomalyClass {
+    ComputeSlow,
+    CommSlow,
+    CommHang,
+    SlowMaskingHang,
+}
+
+/// Every class, in presentation order (reports iterate this).
+pub const CLASSES: [AnomalyClass; 4] = [
+    AnomalyClass::ComputeSlow,
+    AnomalyClass::CommSlow,
+    AnomalyClass::CommHang,
+    AnomalyClass::SlowMaskingHang,
+];
+
+impl AnomalyClass {
+    /// Stable token used in JSON output and the golden fixtures.
+    pub fn token(self) -> &'static str {
+        match self {
+            AnomalyClass::ComputeSlow => "compute-slow",
+            AnomalyClass::CommSlow => "comm-slow",
+            AnomalyClass::CommHang => "comm-hang",
+            AnomalyClass::SlowMaskingHang => "slow-masking-hang",
+        }
+    }
+
+    /// Human-readable name for rendered reports.
+    pub fn name(self) -> &'static str {
+        match self {
+            AnomalyClass::ComputeSlow => "Compute Slow",
+            AnomalyClass::CommSlow => "Communication Slow",
+            AnomalyClass::CommHang => "Communication Hang",
+            AnomalyClass::SlowMaskingHang => "Slow Masking a Hang",
+        }
+    }
+
+    /// Hang classes skip S1–S3 and route straight to checkpoint restart.
+    pub fn is_hang(self) -> bool {
+        matches!(self, AnomalyClass::CommHang | AnomalyClass::SlowMaskingHang)
+    }
+}
+
+/// One DP gradient ring's evidence at one iteration.
+#[derive(Clone, Debug, Default)]
+pub struct RingObs {
+    /// Pipeline stage whose tp=0 ring this is.
+    pub stage: usize,
+    /// Worst per-edge nominal-vs-healthy-twin ratio across the ring.
+    pub worst_ratio: f64,
+    /// Normalized node pairs whose edge ratio ≥ [`COMM_SLOW_RATIO`].
+    pub slow: Vec<(usize, usize)>,
+    /// Normalized node pairs whose edge is *hung* (blocked, not slow).
+    pub blocked: Vec<(usize, usize)>,
+}
+
+/// The slowest replica's compute evidence at one iteration.
+#[derive(Clone, Debug)]
+pub struct ComputeObs {
+    /// DP replica index with the worst makespan ratio.
+    pub replica: usize,
+    /// That replica's 1F1B makespan over its healthy-twin makespan.
+    pub ratio: f64,
+    /// Telemetry-scan culprit (worst GPU, else worst node CPU) — valid
+    /// evidence only when `ratio` clears [`COMPUTE_SLOW_RATIO`].
+    pub culprit: Culprit,
+}
+
+/// One iteration's collective-level evidence.
+#[derive(Clone, Debug)]
+pub struct TraceEntry {
+    pub iter: usize,
+    /// Simulation time the iteration started.
+    pub at: Time,
+    pub rings: Vec<RingObs>,
+    pub compute: ComputeObs,
+}
+
+/// Bounded ring buffer of [`TraceEntry`] — the simulator pushes one per
+/// iteration (when `enabled`), dropping the oldest past [`TRACE_CAP`].
+#[derive(Clone, Debug)]
+pub struct OpTrace {
+    entries: VecDeque<TraceEntry>,
+    /// Tracing switch: the overhead bench flips this off to price the
+    /// trace; everything else leaves it on.
+    pub enabled: bool,
+}
+
+impl Default for OpTrace {
+    fn default() -> Self {
+        OpTrace { entries: VecDeque::new(), enabled: true }
+    }
+}
+
+impl OpTrace {
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Append one entry, evicting the oldest once full.
+    pub fn push(&mut self, e: TraceEntry) {
+        if self.entries.len() >= TRACE_CAP {
+            self.entries.pop_front();
+        }
+        self.entries.push_back(e);
+    }
+
+    /// All retained entries, oldest first.
+    pub fn entries(&self) -> impl Iterator<Item = &TraceEntry> {
+        self.entries.iter()
+    }
+
+    /// The most recent `n` entries (newest first).
+    pub fn last(&self, n: usize) -> impl Iterator<Item = &TraceEntry> {
+        self.entries.iter().rev().take(n)
+    }
+}
+
+/// One classified episode: class, culprit, and the evidence behind them.
+#[derive(Clone, Debug)]
+pub struct Classification {
+    pub class: AnomalyClass,
+    pub culprit: Culprit,
+    /// Sim-time span `[first, last]` of the evidence entries folded.
+    pub window: (Time, Time),
+    /// Worst ring-edge ratio observed in the window.
+    pub comm_ratio: f64,
+    /// Worst replica makespan ratio observed in the window.
+    pub compute_ratio: f64,
+}
+
+/// A [`Classification`] stamped with when the coordinator made it.
+#[derive(Clone, Debug)]
+pub struct EpisodeDiagnosis {
+    /// Iteration index the diagnosis was made at.
+    pub iter: usize,
+    /// Simulation time of the diagnosis.
+    pub at: Time,
+    pub verdict: Classification,
+}
+
+/// Classify the most recent [`WINDOW`] entries of the trace.
+///
+/// Dominance order mirrors the scenario ground-truth labeling exactly:
+/// hang evidence beats slow evidence, comm-slow beats compute-slow. Below
+/// every threshold → `None` (transient; the detector will close it).
+pub fn classify(trace: &OpTrace) -> Option<Classification> {
+    let mut blocked: BTreeSet<(usize, usize)> = BTreeSet::new();
+    let mut slow: BTreeSet<(usize, usize)> = BTreeSet::new();
+    let mut comm_ratio = 0.0f64;
+    let mut compute_ratio = 0.0f64;
+    let mut compute_culprit: Option<Culprit> = None;
+    let mut t_lo: Option<Time> = None;
+    let mut t_hi: Time = 0;
+    for e in trace.last(WINDOW) {
+        t_lo = Some(t_lo.map_or(e.at, |t| t.min(e.at)));
+        t_hi = t_hi.max(e.at);
+        for r in &e.rings {
+            comm_ratio = comm_ratio.max(r.worst_ratio);
+            blocked.extend(r.blocked.iter().copied());
+            slow.extend(r.slow.iter().copied());
+        }
+        if e.compute.ratio > compute_ratio {
+            compute_ratio = e.compute.ratio;
+            compute_culprit = Some(e.compute.culprit);
+        }
+    }
+    let window = (t_lo?, t_hi);
+    let done = |class, culprit| {
+        Some(Classification { class, culprit, window, comm_ratio, compute_ratio })
+    };
+    if !blocked.is_empty() {
+        // Hung edges dominate. A hang's own edges still read ratio 1.0
+        // (the α–β nominal is computed before the watchdog override), so
+        // any slow evidence here is an *independent* fault underneath.
+        let masked =
+            comm_ratio >= COMM_SLOW_RATIO || compute_ratio >= COMPUTE_SLOW_RATIO;
+        let class =
+            if masked { AnomalyClass::SlowMaskingHang } else { AnomalyClass::CommHang };
+        return done(class, pair_culprit(&blocked)?);
+    }
+    if comm_ratio >= COMM_SLOW_RATIO {
+        return done(AnomalyClass::CommSlow, pair_culprit(&slow)?);
+    }
+    if compute_ratio >= COMPUTE_SLOW_RATIO {
+        return done(AnomalyClass::ComputeSlow, compute_culprit?);
+    }
+    None
+}
+
+/// Pinpoint a component from a set of implicated node pairs: two or more
+/// distinct pairs sharing one node indict that node's uplink; a single
+/// pair indicts the path itself. (An uplink-wide wedge shows up as both
+/// ring edges touching the node; a single bad path shows up alone.)
+fn pair_culprit(pairs: &BTreeSet<(usize, usize)>) -> Option<Culprit> {
+    let &(a, b) = pairs.iter().next()?;
+    if pairs.len() == 1 {
+        return Some(if a == b { Culprit::Uplink(a) } else { Culprit::Link(a, b) });
+    }
+    let mut counts: BTreeMap<usize, usize> = BTreeMap::new();
+    for &(x, y) in pairs {
+        *counts.entry(x).or_insert(0) += 1;
+        if y != x {
+            *counts.entry(y).or_insert(0) += 1;
+        }
+    }
+    // Ascending iteration + strict `>` keeps ties on the smallest node.
+    let mut best = (usize::MAX, 0usize);
+    for (&node, &cnt) in &counts {
+        if cnt > best.1 {
+            best = (node, cnt);
+        }
+    }
+    if best.1 >= 2 {
+        Some(Culprit::Uplink(best.0))
+    } else {
+        Some(if a == b { Culprit::Uplink(a) } else { Culprit::Link(a, b) })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(iter: usize, rings: Vec<RingObs>, compute: ComputeObs) -> TraceEntry {
+        TraceEntry { iter, at: iter as Time * 1_000_000, rings, compute }
+    }
+
+    fn healthy_compute() -> ComputeObs {
+        ComputeObs { replica: 0, ratio: 1.0, culprit: Culprit::Node(0) }
+    }
+
+    fn healthy_ring(stage: usize) -> RingObs {
+        RingObs { stage, worst_ratio: 1.0, slow: vec![], blocked: vec![] }
+    }
+
+    #[test]
+    fn empty_and_healthy_traces_classify_none() {
+        let mut t = OpTrace::default();
+        assert!(classify(&t).is_none(), "no evidence, no verdict");
+        for i in 0..20 {
+            t.push(entry(i, vec![healthy_ring(0)], healthy_compute()));
+        }
+        assert!(classify(&t).is_none(), "all ratios 1.0 stay below every bar");
+        assert_eq!(t.len(), 20);
+    }
+
+    #[test]
+    fn ring_buffer_caps_at_trace_cap() {
+        let mut t = OpTrace::default();
+        for i in 0..(TRACE_CAP + 50) {
+            t.push(entry(i, vec![], healthy_compute()));
+        }
+        assert_eq!(t.len(), TRACE_CAP);
+        let first = t.entries().next().unwrap().iter;
+        assert_eq!(first, 50, "oldest entries evicted");
+    }
+
+    #[test]
+    fn comm_slow_pins_shared_uplink() {
+        // Congestion on node 2's uplink slows both ring edges touching it.
+        let mut t = OpTrace::default();
+        for i in 0..WINDOW {
+            let ring = RingObs {
+                stage: 0,
+                worst_ratio: 2.2,
+                slow: vec![(1, 2), (2, 3)],
+                blocked: vec![],
+            };
+            t.push(entry(i, vec![ring], healthy_compute()));
+        }
+        let c = classify(&t).expect("comm evidence verdicts");
+        assert_eq!(c.class, AnomalyClass::CommSlow);
+        assert_eq!(c.culprit, Culprit::Uplink(2));
+        assert_eq!(c.culprit.label(), "uplink:2");
+        assert!(c.comm_ratio >= COMM_SLOW_RATIO);
+    }
+
+    #[test]
+    fn single_slow_pair_pins_the_link() {
+        let mut t = OpTrace::default();
+        let ring = RingObs { stage: 0, worst_ratio: 1.9, slow: vec![(0, 1)], blocked: vec![] };
+        t.push(entry(0, vec![ring], healthy_compute()));
+        let c = classify(&t).unwrap();
+        assert_eq!(c.class, AnomalyClass::CommSlow);
+        assert_eq!(c.culprit.label(), "link:0-1");
+    }
+
+    #[test]
+    fn blocked_edge_without_slow_evidence_is_a_pure_hang() {
+        let mut t = OpTrace::default();
+        let ring = RingObs { stage: 0, worst_ratio: 1.0, slow: vec![], blocked: vec![(1, 2)] };
+        t.push(entry(0, vec![ring], healthy_compute()));
+        let c = classify(&t).unwrap();
+        assert_eq!(c.class, AnomalyClass::CommHang);
+        assert!(c.class.is_hang());
+        assert_eq!(c.culprit.label(), "link:1-2");
+    }
+
+    #[test]
+    fn blocked_plus_compute_slow_is_masking() {
+        let mut t = OpTrace::default();
+        let ring = RingObs { stage: 0, worst_ratio: 1.0, slow: vec![], blocked: vec![(0, 3)] };
+        let comp = ComputeObs { replica: 1, ratio: 1.6, culprit: Culprit::Gpu(2) };
+        t.push(entry(0, vec![ring], comp));
+        let c = classify(&t).unwrap();
+        assert_eq!(c.class, AnomalyClass::SlowMaskingHang);
+        assert!(c.class.is_hang());
+        assert_eq!(c.culprit.label(), "link:0-3", "the hang is the pinned culprit");
+        assert!(c.compute_ratio > COMPUTE_SLOW_RATIO, "the masked slow is retained");
+    }
+
+    #[test]
+    fn uplink_wide_hang_pins_the_common_node() {
+        let mut t = OpTrace::default();
+        let ring =
+            RingObs { stage: 0, worst_ratio: 1.0, slow: vec![], blocked: vec![(1, 2), (2, 3)] };
+        t.push(entry(0, vec![ring], healthy_compute()));
+        let c = classify(&t).unwrap();
+        assert_eq!(c.class, AnomalyClass::CommHang);
+        assert_eq!(c.culprit.label(), "uplink:2");
+    }
+
+    #[test]
+    fn compute_slow_uses_the_telemetry_culprit() {
+        let mut t = OpTrace::default();
+        for i in 0..4 {
+            let comp = ComputeObs { replica: 0, ratio: 1.08, culprit: Culprit::Gpu(3) };
+            t.push(entry(i, vec![healthy_ring(0)], comp));
+        }
+        let c = classify(&t).unwrap();
+        assert_eq!(c.class, AnomalyClass::ComputeSlow);
+        assert_eq!(c.culprit.label(), "gpu:3");
+        assert_eq!(c.window, (0, 3_000_000), "window spans the evidence entries");
+    }
+
+    #[test]
+    fn window_limits_how_far_back_evidence_reaches() {
+        // A hang WINDOW+1 entries ago followed by a healthy tail must not
+        // leak into the verdict.
+        let mut t = OpTrace::default();
+        let ring = RingObs { stage: 0, worst_ratio: 1.0, slow: vec![], blocked: vec![(0, 1)] };
+        t.push(entry(0, vec![ring], healthy_compute()));
+        for i in 1..=WINDOW {
+            t.push(entry(i, vec![healthy_ring(0)], healthy_compute()));
+        }
+        assert!(classify(&t).is_none(), "stale hang evidence aged out");
+    }
+
+    #[test]
+    fn class_tokens_and_names_are_stable() {
+        let toks: Vec<&str> = CLASSES.iter().map(|c| c.token()).collect();
+        assert_eq!(toks, vec!["compute-slow", "comm-slow", "comm-hang", "slow-masking-hang"]);
+        assert!(AnomalyClass::SlowMaskingHang.is_hang());
+        assert!(!AnomalyClass::CommSlow.is_hang());
+        assert_eq!(Culprit::Link(3, 0).label(), "link:0-3", "labels normalize pair order");
+        assert_eq!(Culprit::Node(1).label(), "node:1");
+    }
+}

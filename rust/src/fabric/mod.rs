@@ -190,6 +190,12 @@ pub struct Cluster {
     /// the granularity Fig 10's "congested link between nodes 3 and 4"
     /// lives at; S3 moves traffic classes across these pairs.
     pub pair_scale: std::collections::BTreeMap<(usize, usize), f64>,
+    /// Inter-node paths that are *hung* (a collective on them blocks, it
+    /// does not stretch — the CCL-D hang-vs-slow distinction). Keys are
+    /// normalized node pairs; the degenerate key `(u, u)` hangs every
+    /// inter-node path touching node `u` (a wedged NIC/uplink). Mutated
+    /// only through [`Cluster::set_path_hang`] / [`Cluster::heal_all`].
+    pub hung_paths: std::collections::BTreeSet<(usize, usize)>,
     /// Per-node health generation (see the struct docs).
     node_gen: Vec<u64>,
     /// Global health epoch: bumped on every tracked health change.
@@ -203,6 +209,7 @@ impl Cluster {
             nodes: vec![NodeState::default(); spec.nodes],
             uplinks: vec![LinkState::default(); spec.nodes],
             pair_scale: std::collections::BTreeMap::new(),
+            hung_paths: std::collections::BTreeSet::new(),
             node_gen: vec![0; spec.nodes],
             epoch: 0,
             spec,
@@ -277,6 +284,36 @@ impl Cluster {
             self.bump_node(a);
             self.bump_node(b);
         }
+    }
+
+    /// Hang (or un-hang) the inter-node path between two nodes, bumping
+    /// both endpoints' generations iff the state actually changed. The
+    /// degenerate call `set_path_hang(u, u, ..)` hangs node `u`'s uplink:
+    /// every inter-node path touching `u` blocks.
+    pub fn set_path_hang(&mut self, a: usize, b: usize, hung: bool) {
+        let key = Self::pair_key(a, b);
+        let changed = if hung {
+            self.hung_paths.insert(key)
+        } else {
+            self.hung_paths.remove(&key)
+        };
+        if changed {
+            self.bump_node(a);
+            if b != a {
+                self.bump_node(b);
+            }
+        }
+    }
+
+    /// Is the path between two GPUs hung? Intra-node paths never hang
+    /// (NVSwitch traffic does not traverse the wedgeable NIC/spine fabric).
+    pub fn path_hung(&self, a: GpuId, b: GpuId) -> bool {
+        if a.node == b.node {
+            return false;
+        }
+        self.hung_paths.contains(&Self::pair_key(a.node, b.node))
+            || self.hung_paths.contains(&(a.node, a.node))
+            || self.hung_paths.contains(&(b.node, b.node))
     }
 
     pub fn gpu(&self, id: GpuId) -> &GpuState {
@@ -369,6 +406,7 @@ impl Cluster {
             l.external_scale = external;
         }
         self.pair_scale.clear();
+        self.hung_paths.clear();
         for n in 0..self.node_gen.len() {
             self.bump_node(n);
         }
@@ -525,6 +563,38 @@ mod tests {
         for (n, b) in before.iter().enumerate() {
             assert!(c.node_generation(n) > *b);
         }
+    }
+
+    #[test]
+    fn hang_state_tracks_pairs_and_uplinks() {
+        let mut c = cluster();
+        let a = GpuId { node: 0, index: 0 };
+        let b = GpuId { node: 1, index: 0 };
+        let d = GpuId { node: 2, index: 0 };
+        let intra = GpuId { node: 0, index: 1 };
+        assert!(!c.path_hung(a, b));
+        // A pair hang blocks exactly that path and bumps both endpoints.
+        c.set_path_hang(1, 0, true);
+        assert!(c.path_hung(a, b) && c.path_hung(b, a), "normalized pair key");
+        assert!(!c.path_hung(a, d));
+        assert!(!c.path_hung(a, intra), "intra-node paths never hang");
+        assert_eq!(c.node_generation(0), 1);
+        assert_eq!(c.node_generation(1), 1);
+        // Re-hanging is a no-op; un-hanging bumps again.
+        c.set_path_hang(0, 1, true);
+        assert_eq!(c.node_generation(0), 1);
+        c.set_path_hang(0, 1, false);
+        assert!(!c.path_hung(a, b));
+        assert_eq!(c.node_generation(0), 2);
+        // The degenerate (u, u) key hangs every path touching node u.
+        c.set_path_hang(2, 2, true);
+        assert!(c.path_hung(a, d) && c.path_hung(d, b));
+        assert!(!c.path_hung(a, b));
+        assert_eq!(c.node_generation(2), 1, "uplink hang bumps its node once");
+        // heal_all clears hang state (the S4 restart contract).
+        c.heal_all();
+        assert!(c.hung_paths.is_empty());
+        assert!(!c.path_hung(a, d));
     }
 
     #[test]

@@ -17,6 +17,13 @@ pub enum FailSlowKind {
     CpuContention,
     GpuDegradation,
     NetworkCongestion,
+    /// A *hang*, not a slowdown: the targeted inter-node path blocks and
+    /// collectives crossing it stall at the watchdog timeout
+    /// ([`crate::collectives::HANG_WATCHDOG_S`]) instead of stretching.
+    /// "Permanent" vs "until-epoch" is expressed through the event's
+    /// `duration` (>= remaining horizon = permanent); the `scale` field is
+    /// carried but semantically unused (hangs have no residual rate).
+    CommHang,
 }
 
 impl FailSlowKind {
@@ -25,11 +32,12 @@ impl FailSlowKind {
             FailSlowKind::CpuContention => "CPU Contention",
             FailSlowKind::GpuDegradation => "GPU Degradation",
             FailSlowKind::NetworkCongestion => "Network Congestion",
+            FailSlowKind::CommHang => "Communication Hang",
         }
     }
 
     pub fn is_compute(self) -> bool {
-        !matches!(self, FailSlowKind::NetworkCongestion)
+        !matches!(self, FailSlowKind::NetworkCongestion | FailSlowKind::CommHang)
     }
 }
 
@@ -116,6 +124,13 @@ impl FailSlowEvent {
             (FailSlowKind::NetworkCongestion, Target::Link(a, b)) => {
                 cluster.set_pair_scale(a, b, self.scale);
             }
+            (FailSlowKind::CommHang, Target::Link(a, b)) => {
+                cluster.set_path_hang(a, b, true);
+            }
+            (FailSlowKind::CommHang, Target::Uplink(u)) => {
+                // Degenerate (u, u) key: wedge every path touching node u.
+                cluster.set_path_hang(u, u, true);
+            }
             // audit:allow(panic-budget): kind/target pairs are validated
             // when the fault script is parsed; a mismatch here is a bug in
             // event construction, not recoverable state.
@@ -137,6 +152,12 @@ impl FailSlowEvent {
             }
             (FailSlowKind::NetworkCongestion, Target::Link(a, b)) => {
                 cluster.set_pair_scale(a, b, 1.0);
+            }
+            (FailSlowKind::CommHang, Target::Link(a, b)) => {
+                cluster.set_path_hang(a, b, false);
+            }
+            (FailSlowKind::CommHang, Target::Uplink(u)) => {
+                cluster.set_path_hang(u, u, false);
             }
             // audit:allow(panic-budget): revert sees exactly the pairs
             // apply accepted; any other combination cannot be constructed.
@@ -296,6 +317,28 @@ mod tests {
     }
 
     #[test]
+    fn hang_apply_revert_round_trip() {
+        let mut c = Cluster::new(ClusterSpec::new(4, 2, GpuClass::H800));
+        let link = FailSlowEvent {
+            kind: FailSlowKind::CommHang,
+            target: Target::Link(0, 2),
+            start: 0,
+            duration: MINUTE,
+            scale: 1.0,
+        };
+        link.apply(&mut c);
+        assert!(c.hung_paths.contains(&(0, 2)));
+        link.revert(&mut c);
+        assert!(c.hung_paths.is_empty());
+        let uplink = FailSlowEvent { target: Target::Uplink(3), ..link };
+        uplink.apply(&mut c);
+        assert!(c.hung_paths.contains(&(3, 3)), "uplink hang uses the degenerate key");
+        uplink.revert(&mut c);
+        assert!(c.hung_paths.is_empty());
+        assert!(!FailSlowKind::CommHang.is_compute());
+    }
+
+    #[test]
     fn active_window() {
         let ev = FailSlowEvent {
             kind: FailSlowKind::CpuContention,
@@ -324,6 +367,7 @@ mod tests {
                     FailSlowKind::CpuContention => cpu += 1,
                     FailSlowKind::GpuDegradation => gpu += 1,
                     FailSlowKind::NetworkCongestion => net += 1,
+                    FailSlowKind::CommHang => panic!("campaign never samples hangs"),
                 }
             }
         }

@@ -13,7 +13,11 @@
 //! a fault script (or a whole fleet campaign) from one TOML document or
 //! the built-in library. [`whatif`] adds counterfactual analysis on top:
 //! record a run, replay it with one fault removed or one decision
-//! changed, and attribute the delay (`falcon whatif <scenario>`). The
+//! changed, and attribute the delay (`falcon whatif <scenario>`).
+//! [`diagnose`] closes the hang-vs-slow gap: scripted `hang` faults block
+//! collectives at a watchdog instead of stretching them, and an op-trace
+//! taxonomy pins the culprit and routes hangs straight to restart
+//! (`falcon report diagnosis`, docs/DIAGNOSIS.md). The
 //! determinism conventions all of this rests on are machine-checked by
 //! [`audit`] (`falcon audit`), a dependency-free static-analysis pass
 //! over this crate's own source. See the top-level README.md for the
@@ -29,6 +33,7 @@ pub mod cluster;
 pub mod collectives;
 pub mod coordinator;
 pub mod detect;
+pub mod diagnose;
 pub mod fabric;
 pub mod fleet;
 pub mod inject;

@@ -5,7 +5,9 @@
 //! ```text
 //! report <id|all> [--iters N] [--seed S] [--fast true|false]
 //!     Regenerate a paper table/figure (fig1..fig20, tab1..tab7), or a
-//!     beyond-paper report (fleet, fleet_cluster).
+//!     beyond-paper report (fleet, fleet_cluster, whatif, diagnosis —
+//!     the last scores the hang-vs-slow taxonomy against scripted
+//!     ground truth; see docs/DIAGNOSIS.md).
 //! train [--preset tiny|small|base] [--dp D] [--steps N] [--inject true]
 //!     Live data-parallel training through the AOT PJRT artifacts with
 //!     FALCON detection + mitigation in the loop.
@@ -24,7 +26,7 @@
 //!     worker threads; fleet scenarios report contention blame instead.
 //! scenarios
 //!     List the built-in scenario library with descriptions.
-//! sim [--tp T] [--dp D] [--pp P] [--iters N] [--inject gpu|cpu|net]
+//! sim [--tp T] [--dp D] [--pp P] [--iters N] [--inject gpu|cpu|net|hang]
 //!     One simulated hybrid-parallel job with FALCON attached (a thin
 //!     builder-API shortcut over `falcon run`).
 //! fleet [--jobs N] [--iters I] [--seed S] [--workers W] [--boost B]
@@ -432,13 +434,21 @@ fn run_sim(args: &Args) {
             0.4,
             args.f64_or("scale", 0.25),
         )),
+        // A hang blocks the path outright (scale is carried but unused).
+        Some("hang") => spec.fault(FaultSpec::new(
+            FailSlowKind::CommHang,
+            Target::Link(0, 1),
+            0.25,
+            0.4,
+            1.0,
+        )),
         _ => spec,
     };
     match spec.run() {
         Ok(outcome) => println!("{}", outcome.render()),
         Err(e) => eprintln!(
-            "sim scenario invalid: {e}\n(hint: --inject net needs a job spanning \
-             at least 2 nodes, e.g. --dp 16)"
+            "sim scenario invalid: {e}\n(hint: --inject net or hang needs a job \
+             spanning at least 2 nodes, e.g. --dp 16)"
         ),
     }
 }

@@ -22,6 +22,9 @@
 //! - [`whatif`] — beyond-paper counterfactual attribution (`whatif` id):
 //!   record a run, replay fault-removed/mitigation-changed variants, and
 //!   attribute the JCT delay (see [`crate::whatif`]).
+//! - [`diagnosis`] — beyond-paper hang-vs-slow taxonomy scorecard
+//!   (`diagnosis` id): per-class precision/recall/latency and a confusion
+//!   matrix against scripted ground truth (see [`crate::diagnose`]).
 //!
 //! Conventions: every generator takes [`Args`] (knobs like `--iters`,
 //! `--seed`, `--fast`) and returns a self-contained string — no generator
@@ -30,6 +33,7 @@
 pub mod campaign;
 pub mod cases;
 pub mod detection;
+pub mod diagnosis;
 pub mod fleet;
 pub mod mitigation;
 pub mod overhead;
@@ -47,7 +51,7 @@ pub const ALL: &[&str] = &[
 
 /// Beyond-paper report ids (kept out of [`ALL`] so `report all` stays the
 /// paper set; `falcon list` prints them under their own section).
-pub const BEYOND_PAPER: &[&str] = &["fleet", "fleet_cluster", "whatif"];
+pub const BEYOND_PAPER: &[&str] = &["fleet", "fleet_cluster", "whatif", "diagnosis"];
 
 /// Generate one report by id. `args` supplies knobs like `--iters`,
 /// `--seed`, `--fast`.
@@ -80,6 +84,7 @@ pub fn generate(id: &str, args: &Args) -> String {
         "fleet" => fleet::fleet(args),
         "fleet_cluster" => fleet::fleet_cluster(args),
         "whatif" => whatif::whatif(args),
+        "diagnosis" => diagnosis::diagnosis(args),
         other => format!(
             "unknown report '{other}'; available: {ALL:?} \
              plus beyond-paper: {BEYOND_PAPER:?}\n"
@@ -116,5 +121,6 @@ mod tests {
         let out = generate("fig99", &Args::parse([]));
         assert!(out.contains("unknown report"));
         assert!(out.contains("fleet_cluster"), "beyond-paper ids must be mentioned: {out}");
+        assert!(out.contains("diagnosis"), "beyond-paper ids must be mentioned: {out}");
     }
 }

@@ -18,6 +18,9 @@ pub const LIBRARY: &[&str] = &[
     "transient-spikes",
     "cascading-leaf-congestion",
     "correlated-storm",
+    "hang",
+    "hang-then-recover",
+    "slow-masking-a-hang",
     "multi-tenant-burst",
     "fleet-breathing",
     "noisy-neighbor",
@@ -25,7 +28,9 @@ pub const LIBRARY: &[&str] = &[
 
 /// Build one library scenario by name (`None` for unknown names).
 pub fn find(name: &str) -> Option<ScenarioSpec> {
-    use FailSlowKind::{CpuContention as Cpu, GpuDegradation as Gpu, NetworkCongestion as Net};
+    use FailSlowKind::{
+        CommHang as Hang, CpuContention as Cpu, GpuDegradation as Gpu, NetworkCongestion as Net,
+    };
     Some(match name {
         // --- the paper's §3 case studies ---------------------------------
         "cpu-contention" => ScenarioSpec::new(name, 2, 1, 2)
@@ -94,6 +99,27 @@ pub fn find(name: &str) -> Option<ScenarioSpec> {
             .fault(FaultSpec::new(Net, Target::Uplink(1), 0.30, 0.25, 0.40))
             .fault(FaultSpec::new(Gpu, Target::Gpu(4), 0.32, 0.22, 0.55))
             .fault(FaultSpec::new(Gpu, Target::Gpu(5), 0.34, 0.20, 0.60)),
+        // --- hang-vs-slow taxonomy (CCL-D, PAPERS.md) --------------------
+        "hang" => ScenarioSpec::new(name, 2, 4, 1)
+            .describe("permanent comm hang: the node1-node2 path wedges; only S4 clears it")
+            .nodes(4)
+            .iters(500)
+            .seed(21)
+            .fault(FaultSpec::new(Hang, Target::Link(1, 2), 0.3, 0.7, 1.0)),
+        "hang-then-recover" => ScenarioSpec::new(name, 2, 4, 1)
+            .describe("transient uplink hang that un-wedges on its own; no mitigation")
+            .nodes(4)
+            .iters(500)
+            .seed(22)
+            .mitigate(false)
+            .fault(FaultSpec::new(Hang, Target::Uplink(2), 0.2, 0.65, 1.0)),
+        "slow-masking-a-hang" => ScenarioSpec::new(name, 2, 4, 1)
+            .describe("a degraded GPU drags iterations, then a link hang hides underneath")
+            .nodes(4)
+            .iters(500)
+            .seed(23)
+            .fault(FaultSpec::new(Gpu, Target::Gpu(2), 0.15, 0.75, 0.55))
+            .fault(FaultSpec::new(Hang, Target::Link(0, 3), 0.45, 0.45, 1.0)),
         // --- fleet / shared-cluster scenarios ----------------------------
         "multi-tenant-burst" => ScenarioSpec::new(name, 2, 4, 1)
             .describe("24 tenants burst onto one packed shared cluster at heavy injection")
@@ -160,7 +186,7 @@ mod tests {
             assert!(!spec.description.is_empty(), "{} has no description", spec.name);
             assert!(LIBRARY.contains(&spec.name.as_str()));
         }
-        assert_eq!(LIBRARY.len(), 12);
+        assert_eq!(LIBRARY.len(), 15);
         assert!(find("no-such-scenario").is_none());
     }
 

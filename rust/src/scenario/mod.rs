@@ -32,7 +32,7 @@ mod outcome;
 mod parse;
 
 pub use library::{find, LIBRARY};
-pub use outcome::{FleetOutcome, Outcome, OutcomeAction};
+pub use outcome::{FleetOutcome, Outcome, OutcomeAction, OutcomeDiagnosis};
 
 use crate::cluster::Policy;
 use crate::coordinator::{run_with_falcon, FalconConfig};
@@ -675,6 +675,8 @@ fn validate_fault(
         (FailSlowKind::CpuContention, Target::Node(n)) => n < nodes,
         (FailSlowKind::NetworkCongestion, Target::Uplink(u)) => u < nodes,
         (FailSlowKind::NetworkCongestion, Target::Link(a, b)) => a < nodes && b < nodes && a != b,
+        (FailSlowKind::CommHang, Target::Uplink(u)) => u < nodes,
+        (FailSlowKind::CommHang, Target::Link(a, b)) => a < nodes && b < nodes && a != b,
         _ => {
             return Err(ScenarioError::field(
                 field,
@@ -701,6 +703,7 @@ pub(crate) fn kind_token(k: FailSlowKind) -> &'static str {
         FailSlowKind::CpuContention => "cpu",
         FailSlowKind::GpuDegradation => "gpu",
         FailSlowKind::NetworkCongestion => "net",
+        FailSlowKind::CommHang => "hang",
     }
 }
 
@@ -709,6 +712,7 @@ pub(crate) fn parse_kind(s: &str) -> Option<FailSlowKind> {
         "cpu" => Some(FailSlowKind::CpuContention),
         "gpu" => Some(FailSlowKind::GpuDegradation),
         "net" => Some(FailSlowKind::NetworkCongestion),
+        "hang" => Some(FailSlowKind::CommHang),
         _ => None,
     }
 }
@@ -920,6 +924,7 @@ mod tests {
             FailSlowKind::CpuContention,
             FailSlowKind::GpuDegradation,
             FailSlowKind::NetworkCongestion,
+            FailSlowKind::CommHang,
         ] {
             assert_eq!(parse_kind(kind_token(k)), Some(k));
         }

@@ -21,6 +21,26 @@ pub struct OutcomeAction {
     pub kind: String,
 }
 
+/// One op-trace episode verdict (`crate::diagnose`), flattened for JSON:
+/// the hang-vs-slow class token, the pinned culprit label, and the
+/// evidence behind them.
+#[derive(Clone, Debug, PartialEq)]
+pub struct OutcomeDiagnosis {
+    pub t_min: f64,
+    pub iter: usize,
+    /// Class token: `compute-slow`, `comm-slow`, `comm-hang`, or
+    /// `slow-masking-hang`.
+    pub class: String,
+    /// Culprit label: `gpu:N`, `node:N`, `link:A-B`, or `uplink:N`.
+    pub culprit: String,
+    /// Sim-time span (seconds) of the evidence window folded.
+    pub window_s: (f64, f64),
+    /// Worst ring-edge ratio vs the healthy twin in the window.
+    pub comm_ratio: f64,
+    /// Worst replica makespan ratio vs the healthy twin in the window.
+    pub compute_ratio: f64,
+}
+
 /// Fleet-level results (None for single-job scenarios). Wall-clock fields
 /// are deliberately excluded so the outcome is deterministic for a fixed
 /// spec.
@@ -83,6 +103,10 @@ pub struct Outcome {
     pub actions: Vec<OutcomeAction>,
     pub timeline_mins: Vec<f64>,
     pub timeline_thpt: Vec<f64>,
+    /// Op-trace episode verdicts (hang-vs-slow taxonomy; empty for fleet
+    /// scenarios — fleet jobs diagnose internally but the report
+    /// aggregates counts only).
+    pub diagnosis: Vec<OutcomeDiagnosis>,
     pub fleet: Option<FleetOutcome>,
     /// What-if attribution (per-fault delay, mitigation benefit, JCT-delay
     /// %), attached by `falcon whatif` / [`crate::whatif::attribute`];
@@ -133,6 +157,22 @@ impl Outcome {
                 .collect(),
             timeline_mins: sim.timeline.xs_mins(),
             timeline_thpt: sim.timeline.ys(),
+            diagnosis: falcon
+                .episode_diagnoses
+                .iter()
+                .map(|d| OutcomeDiagnosis {
+                    t_min: crate::simkit::mins(d.at),
+                    iter: d.iter,
+                    class: d.verdict.class.token().to_string(),
+                    culprit: d.verdict.culprit.label(),
+                    window_s: (
+                        crate::simkit::secs(d.verdict.window.0),
+                        crate::simkit::secs(d.verdict.window.1),
+                    ),
+                    comm_ratio: d.verdict.comm_ratio,
+                    compute_ratio: d.verdict.compute_ratio,
+                })
+                .collect(),
             fleet: None,
             attribution: None,
         }
@@ -195,6 +235,7 @@ impl Outcome {
             actions: Vec::new(),
             timeline_mins: Vec::new(),
             timeline_thpt: Vec::new(),
+            diagnosis: Vec::new(),
             fleet: Some(fleet),
             attribution: None,
         }
@@ -232,6 +273,25 @@ impl Outcome {
             ),
             ("timeline_mins", Json::arr_f64(&self.timeline_mins)),
             ("timeline_thpt", Json::arr_f64(&self.timeline_thpt)),
+            (
+                "diagnosis",
+                Json::Arr(
+                    self.diagnosis
+                        .iter()
+                        .map(|d| {
+                            Json::obj(vec![
+                                ("t_min", Json::Num(d.t_min)),
+                                ("iter", Json::Num(d.iter as f64)),
+                                ("class", Json::str(&d.class)),
+                                ("culprit", Json::str(&d.culprit)),
+                                ("window_s", Json::arr_f64(&[d.window_s.0, d.window_s.1])),
+                                ("comm_ratio", Json::Num(d.comm_ratio)),
+                                ("compute_ratio", Json::Num(d.compute_ratio)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
         ];
         let fleet = match &self.fleet {
             None => Json::Null,
@@ -293,6 +353,15 @@ impl Outcome {
             out.push_str("actions:\n");
             for a in &self.actions {
                 out.push_str(&format!("  t={:.1}min iter={} {}\n", a.t_min, a.iter, a.kind));
+            }
+        }
+        if !self.diagnosis.is_empty() {
+            out.push_str("diagnosis:\n");
+            for d in &self.diagnosis {
+                out.push_str(&format!(
+                    "  t={:.1}min iter={} {} culprit={} (comm x{:.2}, compute x{:.2})\n",
+                    d.t_min, d.iter, d.class, d.culprit, d.comm_ratio, d.compute_ratio
+                ));
             }
         }
         out.push_str(&format!(
@@ -377,6 +446,15 @@ mod tests {
             }],
             timeline_mins: vec![0.0, 2.0],
             timeline_thpt: vec![0.5, 0.25],
+            diagnosis: vec![OutcomeDiagnosis {
+                t_min: 1.6,
+                iter: 2,
+                class: "comm-hang".to_string(),
+                culprit: "link:1-2".to_string(),
+                window_s: (90.0, 96.0),
+                comm_ratio: 1.0,
+                compute_ratio: 1.5,
+            }],
             fleet: None,
             attribution: None,
         }
@@ -394,6 +472,9 @@ mod tests {
             "detection_latency_s": [12.5],
             "actions": [{"t_min": 1.5, "iter": 2, "kind": "episode_opened"}],
             "timeline_mins": [0, 2], "timeline_thpt": [0.5, 0.25],
+            "diagnosis": [{"t_min": 1.6, "iter": 2, "class": "comm-hang",
+                           "culprit": "link:1-2", "window_s": [90, 96],
+                           "comm_ratio": 1, "compute_ratio": 1.5}],
             "fleet": null, "attribution": null
         }"#;
         assert_eq!(Json::parse(expected).unwrap(), small_outcome().to_json());
@@ -426,5 +507,6 @@ mod tests {
         assert!(out.contains("scenario 'golden'"));
         assert!(out.contains("episodes: injected 1, detected 1"));
         assert!(out.contains("mean throughput 0.250"));
+        assert!(out.contains("comm-hang culprit=link:1-2"));
     }
 }

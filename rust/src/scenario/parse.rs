@@ -17,7 +17,7 @@
 //! mitigate = true                 # booleans: true/false
 //!
 //! [[fault]]                       # array of tables: the fault script
-//! kind = "net"                    # cpu | gpu | net
+//! kind = "net"                    # cpu | gpu | net | hang
 //! target = "uplink:1"             # gpu:N | node:N | uplink:N | link:A-B
 //! job = 2                         # fleet scenarios: which job it strikes
 //! start = 0.1                     # fractions of the horizon
@@ -258,7 +258,7 @@ pub(crate) fn parse(src: &str) -> Result<ScenarioSpec, ScenarioError> {
                     "kind" => {
                         let s = p_str(val, ln)?;
                         d.kind = Some(parse_kind(&s).ok_or_else(|| {
-                            perr(ln, format!("unknown kind '{s}' (want cpu, gpu, or net)"))
+                            perr(ln, format!("unknown kind '{s}' (want cpu, gpu, net, or hang)"))
                         })?);
                     }
                     "target" => {

@@ -27,12 +27,14 @@
 //! tests in `sim` (cached vs naive engine over the scenario library).
 
 use crate::collectives::{AllReducePlan, CommGroup, Topology};
+use crate::diagnose::{ComputeObs, Culprit, RingObs, TraceEntry, COMM_SLOW_RATIO};
 use crate::fabric::Cluster;
 use crate::monitor::group_id;
 use crate::pipeline::{
     microbatch_time_s, one_f1b_makespan_scratch, MakespanScratch, RankCoord, RankGrid, StageTimes,
     Workload,
 };
+use crate::simkit::Time;
 use crate::util::rng::Rng;
 
 /// Memoized 1F1B makespan of one DP replica.
@@ -46,6 +48,12 @@ struct ReplicaCache {
     m: usize,
     makespan: f64,
     valid: bool,
+    /// Micro-batch count `healthy_makespan` was computed with (0 = stale;
+    /// the healthy twin never mutates, so placement + `m` are the only
+    /// invalidators — see [`SimCaches::trace_entry`]).
+    healthy_m: usize,
+    /// This replica's 1F1B makespan on the pristine healthy twin.
+    healthy_makespan: f64,
 }
 
 /// Memoized all-reduce plan of one DP gradient ring (the tp = 0 ring of a
@@ -57,6 +65,10 @@ struct RingCache {
     stamp: u64,
     plan: AllReducePlan,
     valid: bool,
+    /// Per-edge nominal times on the pristine healthy twin, in edge order
+    /// (the op-trace's denominator). Invalidated only by rebinds.
+    healthy_edges: Vec<f64>,
+    healthy_valid: bool,
 }
 
 /// Placement- and health-independent op-log constants for one rank: the
@@ -107,6 +119,8 @@ impl SimCaches {
                 m: 0,
                 makespan: 0.0,
                 valid: false,
+                healthy_m: 0,
+                healthy_makespan: 0.0,
             })
             .collect();
         let rings = if cfg.dp > 1 {
@@ -120,6 +134,8 @@ impl SimCaches {
                         stamp: 0,
                         plan: AllReducePlan::default(),
                         valid: false,
+                        healthy_edges: Vec::new(),
+                        healthy_valid: false,
                     }
                 })
                 .collect()
@@ -160,6 +176,7 @@ impl SimCaches {
                 }
             }
             rc.valid = false;
+            rc.healthy_m = 0;
         }
         for ring in &mut self.rings {
             for i in 0..ring.group.ranks.len() {
@@ -172,6 +189,7 @@ impl SimCaches {
                 }
             }
             ring.valid = false;
+            ring.healthy_valid = false;
         }
         self.topo_gen = grid.generation();
         self.topo_bound = true;
@@ -293,5 +311,128 @@ impl SimCaches {
             }
         }
         dp_time
+    }
+
+    /// One iteration's op-trace entry: per-ring edge ratios against the
+    /// pristine `healthy` twin (plus which edges are hung) and the worst
+    /// replica's compute ratio with a telemetry-scan culprit. Call after
+    /// [`SimCaches::refresh`] — every numerator is a cached nominal, so
+    /// this draws no RNG and costs O(edges + replicas) per step. The
+    /// healthy denominators are memoized: replica baselines recompute only
+    /// when `m` moves or placement rebinds; ring baselines only on
+    /// rebinds (the twin's health never changes).
+    pub(super) fn trace_entry(
+        &mut self,
+        cluster: &Cluster,
+        healthy: &Cluster,
+        grid: &RankGrid,
+        wl: &Workload,
+        mfu: f64,
+        iter: usize,
+        now: Time,
+    ) -> TraceEntry {
+        // Compute evidence: worst makespan ratio across replicas.
+        let mut best = (0usize, f64::MIN);
+        for d in 0..self.replicas.len() {
+            let m = self.replicas[d].m.max(1);
+            if self.replicas[d].healthy_m != m {
+                let mk = Self::replica_makespan(
+                    healthy,
+                    grid,
+                    wl,
+                    mfu,
+                    d,
+                    m,
+                    &mut self.st,
+                    &mut self.scratch,
+                );
+                let rc = &mut self.replicas[d];
+                rc.healthy_makespan = mk;
+                rc.healthy_m = m;
+            }
+            let rc = &self.replicas[d];
+            let ratio =
+                if rc.healthy_makespan > 0.0 { rc.makespan / rc.healthy_makespan } else { 1.0 };
+            if ratio > best.1 {
+                best = (d, ratio);
+            }
+        }
+        let culprit = Self::compute_culprit(cluster, &self.replicas[best.0].nodes);
+        let compute = ComputeObs { replica: best.0, ratio: best.1, culprit };
+
+        // Comm evidence: per-edge ratio of each DP ring's frozen plan
+        // against the healthy twin, hung edges recorded separately (a
+        // hung edge's α–β nominal is unchanged — blocking is orthogonal
+        // evidence to stretching).
+        let bytes = wl.dp_bytes(grid.cfg);
+        let mut rings = Vec::with_capacity(self.rings.len());
+        for (stage, ring) in self.rings.iter_mut().enumerate() {
+            let n = ring.group.len();
+            if n <= 1 {
+                continue;
+            }
+            let chunk = bytes / n as f64;
+            if !ring.healthy_valid {
+                ring.healthy_edges.clear();
+                for i in 0..n {
+                    let (a, b) = (ring.group.gpus[i], ring.group.gpus[(i + 1) % n]);
+                    ring.healthy_edges.push(healthy.transfer_time_nominal_s(a, b, chunk));
+                }
+                ring.healthy_valid = true;
+            }
+            let mut obs =
+                RingObs { stage, worst_ratio: 0.0, slow: Vec::new(), blocked: Vec::new() };
+            for i in 0..n {
+                let (ga, gb) = (ring.group.gpus[i], ring.group.gpus[(i + 1) % n]);
+                let t = ring.plan.edges.get(i).map_or(0.0, |e| e.0);
+                let h = ring.healthy_edges.get(i).copied().unwrap_or(0.0);
+                let ratio = if h > 0.0 { t / h } else { 1.0 };
+                obs.worst_ratio = obs.worst_ratio.max(ratio);
+                if ga.node == gb.node {
+                    continue;
+                }
+                let pair = (ga.node.min(gb.node), ga.node.max(gb.node));
+                if ring.plan.hung_edges.contains(&i) {
+                    if !obs.blocked.contains(&pair) {
+                        obs.blocked.push(pair);
+                    }
+                } else if ratio >= COMM_SLOW_RATIO && !obs.slow.contains(&pair) {
+                    obs.slow.push(pair);
+                }
+            }
+            rings.push(obs);
+        }
+        TraceEntry { iter, at: now, rings, compute }
+    }
+
+    /// DCGM-style telemetry scan over one replica's nodes: the most
+    /// degraded GPU wins, else the most contended host CPU, else the
+    /// replica's first node as a neutral placeholder (only reported when
+    /// the makespan ratio clears the compute bar, which a healthy replica
+    /// never does).
+    fn compute_culprit(cluster: &Cluster, nodes: &[usize]) -> Culprit {
+        let gpn = cluster.spec.gpus_per_node;
+        let mut worst_gpu = (1.0f64, 0usize);
+        let mut worst_node = (1.0f64, 0usize);
+        for &n in nodes {
+            for i in 0..gpn {
+                let flat = n * gpn + i;
+                let scale = cluster.gpus.get(flat).map_or(1.0, |g| g.compute_scale);
+                if scale < worst_gpu.0 {
+                    worst_gpu = (scale, flat);
+                }
+            }
+            let sat = cluster.nodes.get(n).map_or(1.0, |s| s.cpu_satisfaction);
+            if sat < worst_node.0 {
+                worst_node = (sat, n);
+            }
+        }
+        if worst_gpu.0 < 0.9995 {
+            Culprit::Gpu(worst_gpu.1)
+        } else if worst_node.0 < 0.9995 {
+            Culprit::Node(worst_node.1)
+        } else {
+            Culprit::Node(nodes.first().copied().unwrap_or(0))
+        }
     }
 }

@@ -17,6 +17,7 @@ mod caches;
 use caches::SimCaches;
 
 use crate::collectives::{CollOp, CommGroup, Topology};
+use crate::diagnose::OpTrace;
 use crate::fabric::{Cluster, ClusterSpec, GpuClass};
 use crate::inject::{FailSlowEvent, Target};
 use crate::metrics::{JobOutcome, Timeline};
@@ -102,6 +103,10 @@ impl IterObs {
 pub struct TrainingSim {
     pub spec: JobSpec,
     pub cluster: Cluster,
+    /// Pristine twin of `cluster`, frozen at construction health and never
+    /// mutated: the op-trace's noise-free denominator (a healthy component
+    /// reads exactly ratio 1.0 against it, bitwise).
+    healthy: Cluster,
     pub grid: RankGrid,
     pub monitor: Monitor,
     pub rng: Rng,
@@ -117,6 +122,9 @@ pub struct TrainingSim {
     /// Whether the monitor shim is attached (adds its overhead — Fig 18).
     pub monitor_attached: bool,
     pub timeline: Timeline,
+    /// Per-iteration collective-level evidence for `crate::diagnose`
+    /// (bounded ring buffer; `op_trace.enabled` gates recording).
+    pub op_trace: OpTrace,
     /// Incremental-engine memos (makespans, ring plans, op-log ids).
     caches: SimCaches,
 }
@@ -138,6 +146,7 @@ impl TrainingSim {
         let caches = SimCaches::new(&grid);
         let mut sim = TrainingSim {
             spec,
+            healthy: cluster.clone(),
             cluster,
             grid,
             monitor,
@@ -150,6 +159,7 @@ impl TrainingSim {
             ideal_iter_s: 0.0,
             monitor_attached: true,
             timeline: Timeline::default(),
+            op_trace: OpTrace::default(),
             caches,
         };
         // Noiseless: touches no RNG, so the measurement stream starts
@@ -362,6 +372,7 @@ impl TrainingSim {
         // the signature seen in every case-study figure).
         let sm_util = (self.ideal_iter_s / total_s).min(1.0) * 0.95;
 
+        self.record_trace(start);
         self.emit_op_log(start, duration, dp_time);
 
         self.now += duration;
@@ -376,6 +387,36 @@ impl TrainingSim {
         self.iter += 1;
         self.timeline.push(start, 1.0 / total_s);
         obs
+    }
+
+    /// Record this iteration's op-trace entry: per-ring edge evidence and
+    /// the worst replica's compute evidence, each normalized against the
+    /// pristine `healthy` twin. Draws no RNG and reads only memoized
+    /// nominals, so tracing never perturbs the measurement stream. It
+    /// refreshes the memo layer itself — a no-op stamp sweep on the cached
+    /// engine, and exactly what makes the naive test engine (which skips
+    /// the memo layer) produce the identical trace.
+    fn record_trace(&mut self, start: Time) {
+        if !self.op_trace.enabled {
+            return;
+        }
+        self.caches.refresh(
+            &self.cluster,
+            &self.grid,
+            &self.spec.wl,
+            self.spec.mfu,
+            &self.microbatch_alloc,
+        );
+        let entry = self.caches.trace_entry(
+            &self.cluster,
+            &self.healthy,
+            &self.grid,
+            &self.spec.wl,
+            self.spec.mfu,
+            self.iter,
+            start,
+        );
+        self.op_trace.push(entry);
     }
 
     /// Emit the per-rank communication-op timeline for this iteration
@@ -889,6 +930,50 @@ mod tests {
         for _ in 0..5 {
             assert_eq!(s.step().duration, fresh.step().duration);
         }
+    }
+
+    #[test]
+    fn op_trace_records_hang_evidence_without_touching_the_stream() {
+        use crate::diagnose::{classify, AnomalyClass};
+        let ev = FailSlowEvent {
+            kind: FailSlowKind::CommHang,
+            target: Target::Link(0, 1),
+            start: 5 * SEC,
+            duration: 60 * MINUTE,
+            scale: 1.0,
+        };
+        let mut traced = sim(ParallelConfig::new(2, 8, 1)); // 2 nodes, rings cross
+        let mut untraced = sim(ParallelConfig::new(2, 8, 1));
+        untraced.op_trace.enabled = false;
+        traced.inject(vec![ev]);
+        untraced.inject(vec![ev]);
+        for i in 0..40 {
+            let a = traced.step();
+            let b = untraced.step();
+            assert_eq!(a.duration, b.duration, "iter {i}: tracing must be invisible");
+        }
+        assert_eq!(traced.op_trace.len(), 40);
+        assert_eq!(untraced.op_trace.len(), 0);
+        // The healthy prefix reads exactly 1.0 against the pristine twin —
+        // bitwise, not approximately: identical arithmetic on identical
+        // health produces identical floats.
+        let first = traced.op_trace.entries().next().expect("trace populated");
+        assert_eq!(first.compute.ratio.to_bits(), 1.0f64.to_bits());
+        for r in &first.rings {
+            assert_eq!(r.worst_ratio.to_bits(), 1.0f64.to_bits());
+            assert!(r.blocked.is_empty() && r.slow.is_empty());
+        }
+        // Once the hang lands, the wedged node pair shows as blocked and
+        // the window classifies as a pure comm-hang on that path.
+        let blocked: Vec<(usize, usize)> = traced
+            .op_trace
+            .entries()
+            .flat_map(|e| e.rings.iter().flat_map(|r| r.blocked.iter().copied()))
+            .collect();
+        assert!(blocked.contains(&(0, 1)), "hung pair recorded: {blocked:?}");
+        let c = classify(&traced.op_trace).expect("hang evidence classifies");
+        assert_eq!(c.class, AnomalyClass::CommHang);
+        assert_eq!(c.culprit.label(), "link:0-1");
     }
 
     #[test]

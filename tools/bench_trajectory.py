@@ -91,6 +91,23 @@ def whatif_sweep(doc):
     return (rate, speedup if isinstance(speedup, (int, float)) else None)
 
 
+def diagnosis(doc):
+    """(overall accuracy, trace overhead %) of the diagnosis section, or None.
+
+    Informational only — printed, never gated: the accuracy bar itself is
+    enforced in-tree by the class-labeled test suite; older artifacts
+    predate the section and are tolerated silently.
+    """
+    dx = doc.get("diagnosis")
+    if not isinstance(dx, dict):
+        return None
+    acc = dx.get("overall_accuracy")
+    if not isinstance(acc, (int, float)):
+        return None
+    overhead = (dx.get("trace_overhead") or {}).get("overhead_pct")
+    return (acc, overhead if isinstance(overhead, (int, float)) else None)
+
+
 def sparkline(values):
     ticks = "▁▂▃▄▅▆▇█"
     lo, hi = min(values), max(values)
@@ -136,7 +153,7 @@ def main(argv):
         if h is None:
             print(f"skipping {f}: no private engine runs recorded", file=sys.stderr)
             continue
-        points.append((f, h[0], h[1], policy_sweep(doc), whatif_sweep(doc)))
+        points.append((f, h[0], h[1], policy_sweep(doc), whatif_sweep(doc), diagnosis(doc)))
 
     if check_mode:
         return check(points)
@@ -149,7 +166,7 @@ def main(argv):
     print(f"fleet engine trajectory ({len(points)} recorded run(s)):\n")
     print(f"  {'artifact':<{width}}  {'jobs':>6}  {'jobs/sec':>9}  policy sweep")
     prev = None
-    for f, jobs, jps, sweep, _ws in points:
+    for f, jobs, jps, sweep, _ws, _dx in points:
         delta = "" if prev is None else f" ({100.0 * (jps / prev - 1.0):+.1f}%)"
         sweep_txt = (
             "  ".join(f"{p}={v:.0f}" for p, v in sorted(sweep.items())) or "-"
@@ -163,14 +180,24 @@ def main(argv):
     print(f"\n  trajectory: {sparkline(rates)}  "
           f"(first {rates[0]:.1f} -> last {rates[-1]:.1f} jobs/s, "
           f"{100.0 * (rates[-1] / rates[0] - 1.0):+.1f}%)")
-    # Informational (never gated): what-if counterfactual replay rate.
-    for f, *_rest, ws in points:
+    # Informational (never gated): what-if counterfactual replay rate and
+    # diagnosis accuracy / op-trace overhead.
+    for f, *_rest, ws, dx in points:
         if ws is not None:
             rate, speedup = ws
             extra = "" if speedup is None else f" ({speedup:.1f}x vs cold runs)"
             print(
                 f"  whatif sweep [{os.path.relpath(f)}]: "
                 f"{rate:.1f} counterfactuals/s{extra}"
+            )
+        if dx is not None:
+            acc, overhead = dx
+            extra = (
+                "" if overhead is None else f", op-trace overhead {overhead:+.1f}%"
+            )
+            print(
+                f"  diagnosis [{os.path.relpath(f)}]: "
+                f"accuracy {acc:.3f}{extra}"
             )
     return 0
 
