@@ -6,7 +6,7 @@
 CARGO ?= cargo
 RUST_DIR := rust
 
-.PHONY: verify test build fmt-check doc audit clippy bench-fleet fleet
+.PHONY: verify test build fmt-check doc audit audit-graph clippy bench-fleet fleet
 
 verify: build test
 
@@ -24,6 +24,13 @@ fmt-check:
 # non-zero on any violation. `-- audit --json true` for the machine form.
 audit:
 	cd $(RUST_DIR) && $(CARGO) run --release -- audit
+
+# Crate call-graph / module-DAG summary (docs/AUDIT.md): fn and call-site
+# counts, determinism roots, reachable set, per-module edges. Never
+# blocking; `-- audit --graph --dot` for graphviz, `--json true` for the
+# machine form CI uploads as falcon-audit-graph-<sha>.
+audit-graph:
+	cd $(RUST_DIR) && $(CARGO) run --release -- audit --graph
 
 # Mirrors the blocking CI clippy step (structural lints allowed there
 # via -A; run plain clippy locally to see everything).

@@ -1,7 +1,7 @@
 //! Fleet-engine throughput benchmark: jobs/sec for sharded fleet campaigns
 //! at a few sizes, a shared-cluster policy sweep, a what-if counterfactual
-//! sweep (replays/sec vs cold runs), and a determinism
-//! spot-check. Emits `BENCH_fleet.json` at the repo root so later PRs have
+//! sweep (replays/sec vs cold runs), falcon-audit scan throughput over
+//! `src/`, and a determinism spot-check. Emits `BENCH_fleet.json` at the repo root so later PRs have
 //! a perf trajectory to compare against (conventions: docs/BENCHMARKS.md);
 //! when a previous `BENCH_fleet.json` exists, prints a one-line jobs/sec
 //! delta against it.
@@ -220,6 +220,36 @@ fn bench_diagnosis() -> Json {
     ])
 }
 
+/// falcon-audit scan throughput over `src/`: whole-crate graph build +
+/// flow analysis + per-line rules, timed end to end. Informational — the
+/// blocking gate is the CI audit step, not this number — but it keeps a
+/// wall-time trajectory for the scanner alongside the sim engines.
+fn bench_audit() -> Json {
+    let src = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+    let t0 = std::time::Instant::now();
+    let audit = falcon::audit::audit_dir_graph(&src).expect("scan src/");
+    let total_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let files = audit.report.files;
+    let files_per_sec = files as f64 / (total_ms / 1e3).max(1e-9);
+    let violations = audit.report.violations.len();
+    let panic_sites: usize = audit.report.budget_used.iter().map(|(_, used, _)| used).sum();
+    println!(
+        "  {files} files in {total_ms:.1} ms ({files_per_sec:.0} files/sec): \
+         {} fns, {} call sites, {violations} violations, {panic_sites} budgeted panic sites",
+        audit.graph.fns.len(),
+        audit.graph.calls.len(),
+    );
+    Json::obj(vec![
+        ("files", Json::Num(files as f64)),
+        ("total_ms", Json::Num(total_ms)),
+        ("files_per_sec", Json::Num(files_per_sec)),
+        ("fns", Json::Num(audit.graph.fns.len() as f64)),
+        ("call_sites", Json::Num(audit.graph.calls.len() as f64)),
+        ("violations", Json::Num(violations as f64)),
+        ("panic_sites", Json::Num(panic_sites as f64)),
+    ])
+}
+
 const BENCH_PATH: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_fleet.json");
 
 /// jobs/sec of the headline (largest private) config in a BENCH_fleet.json
@@ -257,6 +287,9 @@ fn main() {
 
     section("diagnosis taxonomy: accuracy and op-trace overhead");
     let diagnosis = bench_diagnosis();
+
+    section("falcon-audit scan throughput (crate graph + rules over src/)");
+    let audit = bench_audit();
 
     section("fleet engine throughput (jobs/sec)");
     for (jobs, iters) in [(64usize, 60usize), (256, 60), (512, 120)] {
@@ -372,6 +405,7 @@ fn main() {
         ("single_job", single_job),
         ("whatif_sweep", whatif_sweep),
         ("diagnosis", diagnosis),
+        ("audit", audit),
         ("runs", Json::Arr(runs)),
     ]);
     match std::fs::write(BENCH_PATH, out.to_string() + "\n") {

@@ -1,0 +1,618 @@
+//! Interprocedural analyses over the [`super::graph::CrateGraph`]:
+//! digest-reachability, RNG taint, lock-order discipline, and the
+//! module-layering DAG.
+//!
+//! **Reachability** replaces the old hand-maintained path-exemption
+//! lists: `digest-determinism` and `clock-hygiene` fire exactly in
+//! functions transitively reachable from the determinism roots —
+//! `digest()`, `to_json()`, the whatif record/replay entry points, and
+//! `scenario::run` — plus module-scope lines of files that define at
+//! least one reachable fn. Resolution is over-approximate (see
+//! `graph.rs`), so the scope errs toward checking too much, never too
+//! little.
+//!
+//! **RNG taint** proves each `Rng::new(arg)` root derives from a run
+//! seed: the argument must carry a seed-bearing identifier (a token
+//! containing `seed`) or a parameter that *every* resolved call site
+//! proves seed-derived (greatest fixed point, so laundering a literal
+//! through a helper is caught). `Rng`'s own impl is the substrate and
+//! exempt; `.fork` is the blessed derivation and needs no proof.
+//!
+//! **Lock order** tracks `let`-bound guards of named `Mutex`es through
+//! brace depth and `drop()`, records pairwise acquisition-order edges,
+//! and flags inversions plus guards held across calls that (directly or
+//! transitively) reach the cluster arbiter's serialization points
+//! (`admit`/`arbitrate`/`file`). Limits: guards bound through `if let`
+//! or held in cycles longer than two locks are not modeled.
+//!
+//! **Module layering** checks every non-test `crate::X` edge against
+//! [`LAYERS`], the explicit allowed-dependency DAG (`util` and `simkit`
+//! are substrate, allowed everywhere).
+
+use super::graph::{tokens, CallKind, CrateGraph};
+use super::lexer::SourceModel;
+use super::Diagnostic;
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Fn names that root the digest/replay determinism surface anywhere.
+const ROOT_NAMES: &[&str] = &["digest", "to_json"];
+/// Whatif entry points (module-scoped roots).
+const WHATIF_ROOTS: &[&str] = &["record", "record_fleet", "replay", "replay_cold", "sweep"];
+/// Arbiter serialization points: fns by these names in `cluster`.
+const ARBITER_NAMES: &[&str] = &["admit", "arbitrate", "file"];
+
+/// The allowed module-dependency DAG. `util` and `simkit` are implicit
+/// everywhere; every other edge must be listed. Kept acyclic (unit
+/// tested) so the layering rule enforces a true hierarchy.
+pub const LAYERS: &[(&str, &[&str])] = &[
+    ("anyhow", &[]),
+    ("audit", &[]),
+    ("ckpt", &[]),
+    ("cluster", &["fabric", "mitigate"]),
+    ("collectives", &["fabric"]),
+    (
+        "coordinator",
+        &["collectives", "detect", "diagnose", "inject", "mitigate", "pipeline", "sim"],
+    ),
+    ("detect", &["collectives", "fabric"]),
+    ("diagnose", &[]),
+    ("fabric", &[]),
+    (
+        "fleet",
+        &["cluster", "coordinator", "fabric", "inject", "metrics", "mitigate", "pipeline", "sim"],
+    ),
+    ("inject", &["fabric"]),
+    ("lib", &[]),
+    (
+        "main",
+        &[
+            "audit", "cluster", "coordinator", "detect", "fleet", "inject", "mitigate",
+            "reports", "runtime", "scenario", "trainer", "whatif",
+        ],
+    ),
+    ("metrics", &[]),
+    ("mitigate", &["inject", "pipeline", "sim"]),
+    ("monitor", &["collectives"]),
+    ("pipeline", &["fabric"]),
+    (
+        "reports",
+        &[
+            "ckpt", "cluster", "coordinator", "detect", "diagnose", "fabric", "fleet", "inject",
+            "metrics", "mitigate", "pipeline", "scenario", "sim", "whatif",
+        ],
+    ),
+    ("runtime", &["anyhow", "xla"]),
+    (
+        "scenario",
+        &["cluster", "coordinator", "fabric", "fleet", "inject", "pipeline", "sim"],
+    ),
+    (
+        "sim",
+        &["collectives", "diagnose", "fabric", "inject", "metrics", "monitor", "pipeline"],
+    ),
+    ("simkit", &[]),
+    ("trainer", &["anyhow", "ckpt", "collectives", "runtime", "sim", "xla"]),
+    ("util", &[]),
+    ("whatif", &["cluster", "coordinator", "fleet", "inject", "mitigate", "scenario", "sim"]),
+    ("xla", &[]),
+];
+
+fn layer_allows(from: &str) -> Option<&'static [&'static str]> {
+    LAYERS.iter().find(|(m, _)| *m == from).map(|(_, d)| *d)
+}
+
+fn layer_known(m: &str) -> bool {
+    LAYERS.iter().any(|(k, _)| *k == m)
+}
+
+/// Whether the allowed-dependency graph in [`LAYERS`] is acyclic
+/// (Kahn's algorithm); pinned by a unit test so an edit that introduces
+/// a cycle fails fast.
+pub fn layers_acyclic() -> bool {
+    let mut indeg: BTreeMap<&str, usize> = LAYERS.iter().map(|(m, _)| (*m, 0)).collect();
+    for (_, deps) in LAYERS {
+        for d in *deps {
+            if let Some(n) = indeg.get_mut(d) {
+                *n += 1;
+            }
+        }
+    }
+    let mut ready: Vec<&str> = indeg
+        .iter()
+        .filter(|(_, n)| **n == 0)
+        .map(|(m, _)| *m)
+        .collect();
+    let mut seen = 0usize;
+    while let Some(m) = ready.pop() {
+        seen += 1;
+        if let Some(deps) = layer_allows(m) {
+            for d in deps {
+                if let Some(n) = indeg.get_mut(d) {
+                    *n -= 1;
+                    if *n == 0 {
+                        ready.push(d);
+                    }
+                }
+            }
+        }
+    }
+    seen == LAYERS.len()
+}
+
+/// The flow-analysis result the scoped rules and `--graph` consume.
+#[derive(Debug, Default)]
+pub struct FlowInfo {
+    /// Root fn indices (by name/module match, non-test).
+    pub roots: BTreeSet<usize>,
+    /// Fns transitively reachable from the roots.
+    pub reachable: BTreeSet<usize>,
+    /// Files defining at least one reachable fn (module-scope lines of
+    /// these files are in digest/clock scope).
+    pub reachable_files: BTreeSet<String>,
+    /// Pairwise lock acquisition-order edges: `(first, second) -> site`.
+    pub order_edges: BTreeMap<(String, String), (String, usize)>,
+}
+
+/// Run every interprocedural analysis. Returns the flow info plus raw
+/// diagnostics (suppression happens in the engine).
+pub fn analyze(graph: &CrateGraph, files: &[(String, SourceModel)]) -> (FlowInfo, Vec<Diagnostic>) {
+    let mut flow = FlowInfo::default();
+    let mut diags = Vec::new();
+    reachability(graph, &mut flow);
+    rng_taint(graph, &mut diags);
+    lock_order(graph, files, &mut flow, &mut diags);
+    layering(graph, &mut diags);
+    (flow, diags)
+}
+
+fn reachability(graph: &CrateGraph, flow: &mut FlowInfo) {
+    for (id, f) in graph.fns.iter().enumerate() {
+        if f.in_test {
+            continue;
+        }
+        let is_root = ROOT_NAMES.contains(&f.name.as_str())
+            || (f.module == "whatif" && WHATIF_ROOTS.contains(&f.name.as_str()))
+            || (f.module == "scenario" && f.name == "run");
+        if is_root {
+            flow.roots.insert(id);
+        }
+    }
+    let mut out_edges: BTreeMap<usize, BTreeSet<usize>> = BTreeMap::new();
+    for c in &graph.calls {
+        if let Some(caller) = c.caller {
+            for &r in &c.resolved {
+                out_edges.entry(caller).or_default().insert(r);
+            }
+        }
+    }
+    flow.reachable = flow.roots.clone();
+    let mut work: Vec<usize> = flow.roots.iter().copied().collect();
+    while let Some(f) = work.pop() {
+        if let Some(tos) = out_edges.get(&f) {
+            for &t in tos {
+                if flow.reachable.insert(t) {
+                    work.push(t);
+                }
+            }
+        }
+    }
+    for &id in &flow.reachable {
+        if let Some(f) = graph.fns.get(id) {
+            flow.reachable_files.insert(f.path.clone());
+        }
+    }
+}
+
+fn seedlike(tok: &str) -> bool {
+    tok.to_ascii_lowercase().contains("seed")
+}
+
+fn rng_taint(graph: &CrateGraph, diags: &mut Vec<Diagnostic>) {
+    // callers_of[f] = call sites resolving to f.
+    let mut callers_of: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+    for (ci, c) in graph.calls.iter().enumerate() {
+        for &r in &c.resolved {
+            callers_of.entry(r).or_default().push(ci);
+        }
+    }
+    let param_idx: Vec<BTreeMap<&str, usize>> = graph
+        .fns
+        .iter()
+        .map(|f| {
+            f.params
+                .iter()
+                .enumerate()
+                .map(|(i, p)| (p.as_str(), i))
+                .collect()
+        })
+        .collect();
+    // Greatest fixed point: a param is seed-tainted unless some call site
+    // fails to prove it. Fns with no known callers start untainted.
+    let mut tainted: BTreeMap<(usize, usize), bool> = BTreeMap::new();
+    for (fid, f) in graph.fns.iter().enumerate() {
+        let has_callers = callers_of.get(&fid).is_some_and(|v| !v.is_empty());
+        for i in 0..f.params.len() {
+            tainted.insert((fid, i), has_callers);
+        }
+    }
+    let arg_proven = |c: &super::graph::CallSite,
+                      ai: usize,
+                      tainted: &BTreeMap<(usize, usize), bool>|
+     -> bool {
+        let Some(atoks) = c.args.get(ai) else {
+            return false;
+        };
+        if atoks.iter().any(|t| seedlike(t)) {
+            return true;
+        }
+        if let Some(caller) = c.caller {
+            if let Some(pi) = param_idx.get(caller) {
+                return atoks.iter().any(|t| {
+                    pi.get(t.as_str())
+                        .is_some_and(|&i| tainted.get(&(caller, i)).copied().unwrap_or(false))
+                });
+            }
+        }
+        false
+    };
+    let mut changed = true;
+    while changed {
+        changed = false;
+        for (fid, f) in graph.fns.iter().enumerate() {
+            for i in 0..f.params.len() {
+                if !tainted.get(&(fid, i)).copied().unwrap_or(false) {
+                    continue;
+                }
+                let ok = callers_of.get(&fid).is_some_and(|sites| {
+                    sites.iter().all(|&ci| {
+                        let c = &graph.calls[ci];
+                        // `Type::method(self_expr, ...)` shifts args by 1.
+                        let ai = if f.is_method
+                            && c.kind == CallKind::TypeQualified
+                            && c.args.len() == f.params.len() + 1
+                        {
+                            i + 1
+                        } else {
+                            i
+                        };
+                        arg_proven(c, ai, &tainted)
+                    })
+                });
+                if !ok {
+                    tainted.insert((fid, i), false);
+                    changed = true;
+                }
+            }
+        }
+    }
+    for c in &graph.calls {
+        let is_rng_new = c.kind == CallKind::TypeQualified
+            && c.qualifier.as_deref() == Some("Rng")
+            && c.callee == "new";
+        if !is_rng_new || c.impl_type.as_deref() == Some("Rng") {
+            continue;
+        }
+        if arg_proven(c, 0, &tainted) {
+            continue;
+        }
+        diags.push(Diagnostic {
+            rule: "rng-taint",
+            path: c.path.clone(),
+            line: c.line,
+            msg: "RNG root not provably seed-derived: no seed-bearing token in the \
+                  argument and no call site proves the parameter seed-derived; derive \
+                  via .fork(tag) or thread the run's root seed through"
+                .to_string(),
+            snippet: String::new(),
+        });
+    }
+}
+
+fn lock_order(
+    graph: &CrateGraph,
+    files: &[(String, SourceModel)],
+    flow: &mut FlowInfo,
+    diags: &mut Vec<Diagnostic>,
+) {
+    // Fns that can (transitively) reach an arbiter serialization point.
+    let arbiter_fns: BTreeSet<usize> = graph
+        .fns
+        .iter()
+        .enumerate()
+        .filter(|(_, f)| {
+            !f.in_test && f.module == "cluster" && ARBITER_NAMES.contains(&f.name.as_str())
+        })
+        .map(|(id, _)| id)
+        .collect();
+    let mut rev: BTreeMap<usize, BTreeSet<usize>> = BTreeMap::new();
+    for c in &graph.calls {
+        if let Some(caller) = c.caller {
+            for &r in &c.resolved {
+                rev.entry(r).or_default().insert(caller);
+            }
+        }
+    }
+    let mut reaches_arbiter = arbiter_fns.clone();
+    let mut work: Vec<usize> = arbiter_fns.iter().copied().collect();
+    while let Some(f) = work.pop() {
+        if let Some(parents) = rev.get(&f) {
+            for &p in parents {
+                if reaches_arbiter.insert(p) {
+                    work.push(p);
+                }
+            }
+        }
+    }
+
+    // Index calls by (path, line) for the guard walk.
+    let mut calls_at: BTreeMap<(&str, usize), Vec<&super::graph::CallSite>> = BTreeMap::new();
+    for c in &graph.calls {
+        calls_at.entry((c.path.as_str(), c.line)).or_default().push(c);
+    }
+
+    for (path, model) in files {
+        let module = super::graph::top_module(path);
+        let mut depth = 0usize;
+        // Live guards: (var name, lock id, depth at binding).
+        let mut guards: Vec<(String, String, usize)> = Vec::new();
+        for (li, info) in model.lines.iter().enumerate() {
+            let line = li + 1;
+            if info.in_test {
+                for ch in info.code.chars() {
+                    match ch {
+                        '{' => depth += 1,
+                        '}' => {
+                            guards.retain(|g| g.2 < depth);
+                            depth = depth.saturating_sub(1);
+                        }
+                        _ => {}
+                    }
+                }
+                continue;
+            }
+            // Acquisitions on this line.
+            let mut acquired: Vec<(Option<String>, String)> = Vec::new();
+            let mut from = 0usize;
+            while let Some(off) = info.code[from..].find(".lock(") {
+                let p = from + off;
+                if let Some(name) = receiver_base(&info.code, p) {
+                    let lockid = format!("{module}::{name}");
+                    for g in &guards {
+                        if g.1 != lockid {
+                            let key = (g.1.clone(), lockid.clone());
+                            flow.order_edges
+                                .entry(key)
+                                .or_insert_with(|| (path.clone(), line));
+                        }
+                    }
+                    let stripped = info.code.trim_start();
+                    let var = stripped.strip_prefix("let ").and_then(|rest| {
+                        let toks = tokens(rest);
+                        match toks.first() {
+                            Some((_, t)) if t == "mut" => toks.get(1).map(|(_, t)| t.clone()),
+                            Some((_, t)) => Some(t.clone()),
+                            None => None,
+                        }
+                    });
+                    acquired.push((var, lockid));
+                }
+                from = p + 6;
+            }
+            // `drop(var)` releases early.
+            for (pos, word) in tokens(&info.code) {
+                if word == "drop"
+                    && info.code[pos + 4..].starts_with('(')
+                {
+                    let rest = &info.code[pos + 5..];
+                    let inner = match rest.find(')') {
+                        Some(close) => &rest[..close],
+                        None => rest,
+                    };
+                    let dropped: BTreeSet<String> =
+                        tokens(inner).into_iter().map(|(_, t)| t).collect();
+                    guards.retain(|g| !dropped.contains(&g.0));
+                }
+            }
+            // Calls under a live guard that reach an arbiter point.
+            if !guards.is_empty() {
+                if let Some(cs) = calls_at.get(&(path.as_str(), line)) {
+                    for c in cs {
+                        let direct = ARBITER_NAMES.contains(&c.callee.as_str())
+                            && (c.resolved.iter().any(|r| arbiter_fns.contains(r))
+                                || (c.kind == CallKind::Method && c.resolved.is_empty()));
+                        let transitive =
+                            c.resolved.iter().any(|r| reaches_arbiter.contains(r));
+                        if direct || transitive {
+                            let held: Vec<&str> =
+                                guards.iter().map(|g| g.1.as_str()).collect();
+                            diags.push(Diagnostic {
+                                rule: "lock-order",
+                                path: path.clone(),
+                                line,
+                                msg: format!(
+                                    "guard on {} held across a call into the arbiter \
+                                     serialization path (`{}`): file grants outside the lock",
+                                    held.join(", "),
+                                    c.callee
+                                ),
+                                snippet: info.code.trim().to_string(),
+                            });
+                        }
+                    }
+                }
+            }
+            for (var, lockid) in acquired {
+                if let Some(var) = var {
+                    guards.push((var, lockid, depth));
+                }
+            }
+            for ch in info.code.chars() {
+                match ch {
+                    '{' => depth += 1,
+                    '}' => {
+                        guards.retain(|g| g.2 < depth);
+                        depth = depth.saturating_sub(1);
+                    }
+                    _ => {}
+                }
+            }
+        }
+    }
+
+    // Inversions: both (a, b) and (b, a) recorded.
+    let edges: Vec<((String, String), (String, usize))> = flow
+        .order_edges
+        .iter()
+        .map(|(k, v)| (k.clone(), v.clone()))
+        .collect();
+    for ((a, b), (path, line)) in &edges {
+        if let Some((opath, oline)) = flow.order_edges.get(&(b.clone(), a.clone())) {
+            diags.push(Diagnostic {
+                rule: "lock-order",
+                path: path.clone(),
+                line: *line,
+                msg: format!(
+                    "lock-order inversion: {a} is held while acquiring {b} here, but \
+                     {b} is held while acquiring {a} at {opath}:{oline} — deadlock risk"
+                ),
+                snippet: String::new(),
+            });
+        }
+    }
+}
+
+/// Receiver base identifier of a `.lock(` at byte offset `dot`: skip
+/// back over one `[...]` index, then take the identifier.
+fn receiver_base(code: &str, dot: usize) -> Option<String> {
+    let cs: Vec<char> = code[..dot].chars().collect();
+    let mut k = cs.len();
+    while k > 0 && (cs[k - 1] == ' ' || cs[k - 1] == '\t') {
+        k -= 1;
+    }
+    if k > 0 && cs[k - 1] == ']' {
+        let mut d = 1usize;
+        k -= 1;
+        while k > 0 && d > 0 {
+            k -= 1;
+            match cs[k] {
+                ']' => d += 1,
+                '[' => d -= 1,
+                _ => {}
+            }
+        }
+    }
+    let end = k;
+    while k > 0 && (cs[k - 1].is_ascii_alphanumeric() || cs[k - 1] == '_') {
+        k -= 1;
+    }
+    if end > k {
+        Some(cs[k..end].iter().collect())
+    } else {
+        None
+    }
+}
+
+fn layering(graph: &CrateGraph, diags: &mut Vec<Diagnostic>) {
+    for ((from, to), (path, line)) in &graph.mod_edges {
+        if !layer_known(from) || !layer_known(to) {
+            continue;
+        }
+        if to == "util" || to == "simkit" {
+            continue;
+        }
+        let allowed = layer_allows(from).is_some_and(|deps| deps.contains(&to.as_str()));
+        if !allowed {
+            diags.push(Diagnostic {
+                rule: "module-layering",
+                path: path.clone(),
+                line: *line,
+                msg: format!(
+                    "module `{from}` may not depend on `{to}` (allowed: {})",
+                    layer_allows(from)
+                        .map(|d| d.join(", "))
+                        .unwrap_or_default()
+                ),
+                snippet: String::new(),
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::audit::graph;
+
+    fn analyze_src(files: &[(&str, &str)]) -> (FlowInfo, Vec<Diagnostic>) {
+        let parsed: Vec<(String, SourceModel)> = files
+            .iter()
+            .map(|(p, s)| (p.to_string(), SourceModel::parse(s)))
+            .collect();
+        let g = graph::build(&parsed);
+        analyze(&g, &parsed)
+    }
+
+    #[test]
+    fn layers_dag_is_acyclic() {
+        assert!(layers_acyclic());
+    }
+
+    #[test]
+    fn layers_cover_every_crate_module() {
+        // Every module lib.rs declares (plus the two crate roots) must
+        // have a layering entry, or the DAG silently stops constraining
+        // new code.
+        for m in [
+            "anyhow", "audit", "ckpt", "cluster", "collectives", "coordinator", "detect",
+            "diagnose", "fabric", "fleet", "inject", "lib", "main", "metrics", "mitigate",
+            "monitor", "pipeline", "reports", "runtime", "scenario", "sim", "simkit", "trainer",
+            "util", "whatif", "xla",
+        ] {
+            assert!(layer_known(m), "module {m} missing from LAYERS");
+        }
+    }
+
+    #[test]
+    fn reachability_follows_calls_from_roots() {
+        let (flow, _) = analyze_src(&[(
+            "m/a.rs",
+            "pub fn to_json() -> u64 {\n    helper()\n}\nfn helper() -> u64 {\n    1\n}\n\
+             fn unrelated() -> u64 {\n    2\n}\n",
+        )]);
+        assert_eq!(flow.roots.len(), 1);
+        assert_eq!(flow.reachable.len(), 2, "root + helper, not unrelated");
+    }
+
+    #[test]
+    fn rng_taint_flags_laundered_literal() {
+        let (_, diags) = analyze_src(&[(
+            "sim/a.rs",
+            "fn helper(tag: u64) -> u64 {\n    let r = Rng::new(tag);\n    tag\n}\n\
+             pub fn go(seed: u64) -> u64 {\n    helper(41) + Rng::new(seed).fork(1)\n}\n",
+        )]);
+        let taints: Vec<usize> = diags
+            .iter()
+            .filter(|d| d.rule == "rng-taint")
+            .map(|d| d.line)
+            .collect();
+        assert_eq!(taints, vec![2], "literal laundered through helper param");
+    }
+
+    #[test]
+    fn lock_inversion_is_flagged_both_ways() {
+        let src = "struct P {\n    a: std::sync::Mutex<u32>,\n    b: std::sync::Mutex<u32>,\n}\n\
+                   impl P {\n    fn ab(&self) {\n        let ga = self.a.lock();\n        \
+                   let gb = self.b.lock();\n    }\n    fn ba(&self) {\n        \
+                   let gb = self.b.lock();\n        let ga = self.a.lock();\n    }\n}\n";
+        let (flow, diags) = analyze_src(&[("fleet/l.rs", src)]);
+        assert_eq!(flow.order_edges.len(), 2);
+        assert_eq!(diags.iter().filter(|d| d.rule == "lock-order").count(), 2);
+    }
+
+    #[test]
+    fn layering_violation_is_flagged() {
+        let (_, diags) =
+            analyze_src(&[("diagnose/bad.rs", "use crate::whatif::Attribution;\n")]);
+        assert_eq!(diags.iter().filter(|d| d.rule == "module-layering").count(), 1);
+    }
+}

@@ -1,0 +1,869 @@
+//! Crate-wide item extraction and call-graph construction.
+//!
+//! Built on the blanked line model from [`super::lexer`], this walks every
+//! file once and extracts the items the interprocedural rules in
+//! [`super::flow`] need: `fn` definitions (with enclosing `impl` type and
+//! parameter names), call sites (with a best-effort qualifier and
+//! line-local argument tokens), `crate::` module-dependency edges, and
+//! named `Mutex` declarations. Resolution is name-based and deliberately
+//! over-approximate — `.step(` resolves to *every* method named `step` —
+//! which is sound for reachability scoping (a function is only exempted
+//! from a scoped rule when *no* resolution path reaches it) but must not
+//! be read as a proof that a specific dynamic call occurs.
+//!
+//! Everything here is itself digest-reachable (the `--graph --json`
+//! surface makes [`CrateGraph::to_json`] a root), so this module obeys
+//! the rules it powers: `BTreeMap`/`BTreeSet` only, no wall clock, no
+//! panicking calls.
+
+use super::lexer::SourceModel;
+use crate::util::json::Json;
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Whole-word identifier tokens of a blanked line, with char positions.
+pub(super) fn tokens(code: &str) -> Vec<(usize, String)> {
+    let cs: Vec<char> = code.chars().collect();
+    let mut out = Vec::new();
+    let mut k = 0usize;
+    while k < cs.len() {
+        let c = cs[k];
+        if (c.is_ascii_alphabetic() || c == '_') && !(k > 0 && cs[k - 1].is_ascii_digit()) {
+            let start = k;
+            while k < cs.len() && (cs[k].is_ascii_alphanumeric() || cs[k] == '_') {
+                k += 1;
+            }
+            out.push((start, cs[start..k].iter().collect()));
+        } else {
+            k += 1;
+        }
+    }
+    out
+}
+
+pub(super) fn prev_nonspace(cs: &[char], mut k: usize) -> Option<char> {
+    while k > 0 {
+        k -= 1;
+        if cs[k] != ' ' && cs[k] != '\t' {
+            return Some(cs[k]);
+        }
+    }
+    None
+}
+
+pub(super) fn next_nonspace(cs: &[char], mut k: usize) -> Option<(usize, char)> {
+    while k < cs.len() {
+        if cs[k] != ' ' && cs[k] != '\t' {
+            return Some((k, cs[k]));
+        }
+        k += 1;
+    }
+    None
+}
+
+/// Keywords that look like calls when followed by `(`.
+const KEYWORDS: &[&str] = &[
+    "if", "while", "for", "match", "return", "loop", "fn", "let", "in", "as", "move", "ref",
+    "mut", "else", "break", "continue", "where", "impl", "pub", "use", "mod", "struct", "enum",
+    "trait", "type", "const", "static", "dyn", "crate", "super", "self", "true", "false",
+];
+
+/// One extracted function definition.
+#[derive(Clone, Debug)]
+pub struct FnItem {
+    pub name: String,
+    /// Top-level module (first path segment; `main.rs` -> `main`).
+    pub module: String,
+    pub path: String,
+    /// Enclosing `impl` type, if inside one.
+    pub impl_type: Option<String>,
+    /// Takes `self` in some form.
+    pub is_method: bool,
+    /// Non-`self` parameter names, in order.
+    pub params: Vec<String>,
+    /// 1-based line of the `fn` keyword.
+    pub line: usize,
+    pub in_test: bool,
+}
+
+/// How a call site names its callee.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CallKind {
+    /// `name(...)` with no qualifier.
+    Bare,
+    /// `.name(...)` on a receiver.
+    Method,
+    /// `Type::name(...)` (including `Self::`).
+    TypeQualified,
+    /// `module::name(...)` (lowercase path segment).
+    ModQualified,
+}
+
+/// One extracted call site (non-test lines only).
+#[derive(Clone, Debug)]
+pub struct CallSite {
+    /// Index into [`CrateGraph::fns`] of the enclosing fn, if any.
+    pub caller: Option<usize>,
+    pub path: String,
+    pub line: usize,
+    pub callee: String,
+    pub kind: CallKind,
+    /// The `Type`/`module` segment immediately before `::`, if any.
+    pub qualifier: Option<String>,
+    /// Enclosing `impl` type at the call site (resolves `Self::`).
+    pub impl_type: Option<String>,
+    /// Method call whose receiver token is literally `self`.
+    pub receiver_self: bool,
+    /// Identifier tokens per argument, line-local.
+    pub args: Vec<Vec<String>>,
+    /// Candidate callee fn indices after name-based resolution.
+    pub resolved: Vec<usize>,
+}
+
+/// One named `Mutex` field/static declaration (non-test lines only).
+#[derive(Clone, Debug)]
+pub struct LockDecl {
+    pub module: String,
+    pub name: String,
+    pub path: String,
+    pub line: usize,
+}
+
+/// Per-line context the scoped rules need.
+#[derive(Clone, Debug, Default)]
+pub struct LineCtx {
+    /// Enclosing fn (index into [`CrateGraph::fns`]); `None` at module
+    /// scope.
+    pub fn_id: Option<usize>,
+    /// Enclosing `impl` type.
+    pub impl_type: Option<String>,
+}
+
+/// The crate-wide item graph.
+#[derive(Debug, Default)]
+pub struct CrateGraph {
+    pub fns: Vec<FnItem>,
+    pub calls: Vec<CallSite>,
+    /// `(from module, to module) -> first site`, non-test lines only.
+    pub mod_edges: BTreeMap<(String, String), (String, usize)>,
+    pub locks: Vec<LockDecl>,
+    /// Per file: one [`LineCtx`] per line.
+    pub line_ctx: BTreeMap<String, Vec<LineCtx>>,
+    /// Top-level modules seen across the scanned files.
+    pub modules: BTreeSet<String>,
+    /// `impl` type -> method names it defines (for the panic-budget
+    /// self-method resolution).
+    pub impl_methods: BTreeMap<String, BTreeSet<String>>,
+}
+
+/// Top-level module of a root-relative path: `fleet/mod.rs` -> `fleet`,
+/// `main.rs` -> `main`.
+pub fn top_module(path: &str) -> String {
+    match path.split_once('/') {
+        Some((head, _)) => head.to_string(),
+        None => path.strip_suffix(".rs").unwrap_or(path).to_string(),
+    }
+}
+
+/// Parse an `impl` header's remainder-of-line into the implemented type:
+/// the first capitalized token, or the first after `for` in
+/// `impl Trait for Type`.
+fn impl_type_of(rest: &str) -> Option<String> {
+    let toks = tokens(rest);
+    let names: Vec<&str> = toks.iter().map(|(_, t)| t.as_str()).collect();
+    let from = match names.iter().position(|t| *t == "for") {
+        Some(i) => i + 1,
+        None => 0,
+    };
+    names[from..]
+        .iter()
+        .find(|t| t.starts_with(|c: char| c.is_ascii_uppercase()))
+        .map(|t| t.to_string())
+}
+
+/// Parse a signature buffer (everything between the fn name and its body
+/// `{` / terminating `;`) into parameter names and method-ness.
+fn parse_sig(sig: &str) -> (Vec<String>, bool) {
+    let cs: Vec<char> = sig.chars().collect();
+    let mut k = 0usize;
+    // Skip a leading generics group, ignoring `->` arrowheads inside it.
+    if let Some((p, '<')) = next_nonspace(&cs, 0) {
+        let mut depth = 1usize;
+        k = p + 1;
+        while k < cs.len() && depth > 0 {
+            match cs[k] {
+                '<' => depth += 1,
+                '>' if k > 0 && cs[k - 1] != '-' => depth -= 1,
+                _ => {}
+            }
+            k += 1;
+        }
+    }
+    // The parameter list is the first balanced (...) group after that.
+    let mut start = None;
+    while k < cs.len() {
+        if cs[k] == '(' {
+            start = Some(k + 1);
+            break;
+        }
+        k += 1;
+    }
+    let Some(start) = start else {
+        return (Vec::new(), false);
+    };
+    let mut depth = 1usize;
+    let mut end = cs.len();
+    let mut j = start;
+    while j < cs.len() {
+        match cs[j] {
+            '(' | '<' | '[' => depth += 1,
+            ')' | ']' => {
+                depth -= 1;
+                if depth == 0 {
+                    end = j;
+                    break;
+                }
+            }
+            '>' if j > 0 && cs[j - 1] != '-' => depth = depth.saturating_sub(1),
+            _ => {}
+        }
+        j += 1;
+    }
+    let params_text: String = cs[start..end].iter().collect();
+    let mut params = Vec::new();
+    let mut is_method = false;
+    let mut part = String::new();
+    let mut d = 0usize;
+    let mut parts = Vec::new();
+    for ch in params_text.chars() {
+        match ch {
+            '(' | '<' | '[' | '{' => d += 1,
+            ')' | '>' | ']' | '}' => d = d.saturating_sub(1),
+            ',' if d == 0 => {
+                parts.push(std::mem::take(&mut part));
+                continue;
+            }
+            _ => {}
+        }
+        part.push(ch);
+    }
+    if !part.trim().is_empty() {
+        parts.push(part);
+    }
+    for p in parts {
+        let toks = tokens(&p);
+        let names: Vec<&str> = toks.iter().map(|(_, t)| t.as_str()).collect();
+        if names.iter().take(2).any(|t| *t == "self") {
+            is_method = true;
+            continue;
+        }
+        if let Some(name) = names.iter().find(|t| **t != "mut") {
+            if p.contains(':') {
+                params.push(name.to_string());
+            }
+        }
+    }
+    (params, is_method)
+}
+
+/// A pending fn definition whose signature is still being accumulated.
+struct PendingFn {
+    name: String,
+    line: usize,
+    sig: String,
+}
+
+/// Build the crate graph from parsed sources. `files` must be
+/// root-relative paths with `/` separators, sorted (the caller's walk
+/// already guarantees this).
+pub fn build(files: &[(String, SourceModel)]) -> CrateGraph {
+    let mut g = CrateGraph::default();
+    for (path, model) in files {
+        extract_file(&mut g, path, model);
+    }
+    for f in &g.fns {
+        if let Some(ty) = &f.impl_type {
+            g.impl_methods
+                .entry(ty.clone())
+                .or_default()
+                .insert(f.name.clone());
+        }
+    }
+    resolve(&mut g);
+    g
+}
+
+fn extract_file(g: &mut CrateGraph, path: &str, model: &SourceModel) {
+    let module = top_module(path);
+    g.modules.insert(module.clone());
+    let mut depth = 0usize;
+    let mut impl_stack: Vec<(String, usize)> = Vec::new();
+    let mut fn_stack: Vec<(usize, usize)> = Vec::new();
+    let mut pending_impl: Option<String> = None;
+    let mut pending_fn: Option<PendingFn> = None;
+    let mut ctxs: Vec<LineCtx> = Vec::with_capacity(model.lines.len());
+
+    for (li, info) in model.lines.iter().enumerate() {
+        let line = li + 1;
+        let start_fn = fn_stack.last().map(|&(id, _)| id);
+        let start_impl = impl_stack.last().map(|(t, _)| t.clone());
+        let mut pushed_fn: Option<usize> = None;
+        let mut pushed_impl: Option<String> = None;
+
+        let cs: Vec<char> = info.code.chars().collect();
+        let mut k = 0usize;
+        let mut after_fn_kw = false;
+        while k < cs.len() {
+            let ch = cs[k];
+            if (ch.is_ascii_alphanumeric() || ch == '_') && !ch.is_ascii_digit() {
+                let start = k;
+                while k < cs.len() && (cs[k].is_ascii_alphanumeric() || cs[k] == '_') {
+                    k += 1;
+                }
+                let word: String = cs[start..k].iter().collect();
+                if pending_fn.is_some() {
+                    // Signature accumulation swallows everything below.
+                } else if word == "fn" {
+                    after_fn_kw = true;
+                    continue;
+                } else if after_fn_kw {
+                    after_fn_kw = false;
+                    pending_fn = Some(PendingFn { name: word, line, sig: String::new() });
+                    continue;
+                } else if word == "impl" {
+                    let rest: String = cs[k..].iter().collect();
+                    pending_impl = impl_type_of(&rest);
+                    continue;
+                }
+                if let Some(p) = pending_fn.as_mut() {
+                    p.sig.push_str(&word);
+                }
+                continue;
+            }
+            match ch {
+                '{' => {
+                    depth += 1;
+                    if let Some(p) = pending_fn.take() {
+                        let (params, is_method) = parse_sig(&p.sig);
+                        let id = g.fns.len();
+                        g.fns.push(FnItem {
+                            name: p.name,
+                            module: module.clone(),
+                            path: path.to_string(),
+                            impl_type: impl_stack.last().map(|(t, _)| t.clone()),
+                            is_method,
+                            params,
+                            line: p.line,
+                            in_test: info.in_test,
+                        });
+                        fn_stack.push((id, depth));
+                        pushed_fn = Some(id);
+                    } else if let Some(ty) = pending_impl.take() {
+                        impl_stack.push((ty.clone(), depth));
+                        pushed_impl = Some(ty);
+                    }
+                }
+                '}' => {
+                    while fn_stack.last().is_some_and(|&(_, d)| d == depth) {
+                        fn_stack.pop();
+                    }
+                    while impl_stack.last().is_some_and(|&(_, d)| d == depth) {
+                        impl_stack.pop();
+                    }
+                    depth = depth.saturating_sub(1);
+                }
+                ';' => {
+                    // Bodyless fn (trait decl) or non-impl item; a `;`
+                    // inside the signature's parens stays part of it.
+                    let done = pending_fn
+                        .as_ref()
+                        .is_some_and(|p| !p.sig.contains('(') || balanced(&p.sig));
+                    if done {
+                        pending_fn = None;
+                    } else if let Some(p) = pending_fn.as_mut() {
+                        p.sig.push(ch);
+                    }
+                    pending_impl = None;
+                }
+                _ => {
+                    if let Some(p) = pending_fn.as_mut() {
+                        p.sig.push(ch);
+                    }
+                }
+            }
+            k += 1;
+        }
+
+        let line_fn = pushed_fn.or(start_fn);
+        let line_impl = pushed_impl.or(start_impl);
+        ctxs.push(LineCtx { fn_id: line_fn, impl_type: line_impl.clone() });
+
+        if !info.in_test {
+            extract_line(g, path, &module, line, &info.code, line_fn, line_impl.as_deref());
+        }
+    }
+    g.line_ctx.insert(path.to_string(), ctxs);
+}
+
+/// Whether a signature buffer's parens are balanced (so a `;` terminates
+/// the item rather than sitting inside a default expression).
+fn balanced(sig: &str) -> bool {
+    let mut d = 0i64;
+    for ch in sig.chars() {
+        match ch {
+            '(' => d += 1,
+            ')' => d -= 1,
+            _ => {}
+        }
+    }
+    d <= 0
+}
+
+/// Extract call sites, module edges, and lock declarations from one
+/// non-test line.
+fn extract_line(
+    g: &mut CrateGraph,
+    path: &str,
+    module: &str,
+    line: usize,
+    code: &str,
+    line_fn: Option<usize>,
+    line_impl: Option<&str>,
+) {
+    let cs: Vec<char> = code.chars().collect();
+    let toks = tokens(code);
+    for (i, &(pos, ref word)) in toks.iter().enumerate() {
+        let after = pos + word.len();
+        // Module-dependency edge: `crate::X` (or `falcon::X` from the
+        // binary crate), plus grouped `use crate::{a, b::c}`.
+        if (word == "crate" || (word == "falcon" && module == "main"))
+            && cs.get(after) == Some(&':')
+            && cs.get(after + 1) == Some(&':')
+        {
+            if let Some(&(np, ref next)) = toks.get(i + 1) {
+                if np == after + 2 {
+                    record_mod_edge(g, module, next, path, line);
+                }
+            }
+            if cs.get(after + 2) == Some(&'{') {
+                let rest: String = cs[after + 3..].iter().collect();
+                let inner = match rest.find('}') {
+                    Some(close) => &rest[..close],
+                    None => rest.as_str(),
+                };
+                for part in inner.split(',') {
+                    if let Some((_, first)) = tokens(part).first() {
+                        record_mod_edge(g, module, first, path, line);
+                    }
+                }
+            }
+        }
+        // Lock declaration: `name: Mutex<...>` (possibly wrapped, possibly
+        // `std::sync::`-qualified). The field name sits before the last
+        // *type* colon — a `:` that is not part of a `::` path separator.
+        if word == "Mutex" && cs.get(after) == Some(&'<') {
+            let mut colon = None;
+            for j in 0..pos {
+                if cs[j] == ':'
+                    && cs.get(j + 1) != Some(&':')
+                    && (j == 0 || cs[j - 1] != ':')
+                {
+                    colon = Some(j);
+                }
+            }
+            if let Some(colon) = colon {
+                let head: String = cs[..colon].iter().collect();
+                if let Some(&(_, ref name)) = tokens(&head).last() {
+                    g.locks.push(LockDecl {
+                        module: module.to_string(),
+                        name: name.clone(),
+                        path: path.to_string(),
+                        line,
+                    });
+                }
+            }
+        }
+        // Call site: ident immediately followed by `(`, lowercase-initial,
+        // not a keyword, not a definition.
+        if cs.get(after) != Some(&'(')
+            || word.starts_with(|c: char| c.is_ascii_uppercase())
+            || KEYWORDS.contains(&word.as_str())
+        {
+            continue;
+        }
+        if i > 0 && toks[i - 1].1 == "fn" {
+            continue;
+        }
+        let before: String = cs[..pos].iter().collect();
+        let trimmed = before.trim_end();
+        let (kind, qualifier, receiver_self) = if trimmed.ends_with("::") {
+            let head = &trimmed[..trimmed.len() - 2];
+            match tokens(head).last() {
+                Some(&(qp, ref q)) if qp + q.len() == head.len() => {
+                    if q == "crate" || q == "super" || q == "falcon" {
+                        (CallKind::Bare, None, false)
+                    } else if q.starts_with(|c: char| c.is_ascii_uppercase()) {
+                        (CallKind::TypeQualified, Some(q.clone()), false)
+                    } else {
+                        (CallKind::ModQualified, Some(q.clone()), false)
+                    }
+                }
+                _ => (CallKind::Bare, None, false),
+            }
+        } else if trimmed.ends_with('.') {
+            let recv = trimmed[..trimmed.len() - 1].trim_end();
+            let is_self = tokens(recv)
+                .last()
+                .is_some_and(|&(rp, ref r)| r == "self" && rp + r.len() == recv.len());
+            (CallKind::Method, None, is_self)
+        } else {
+            (CallKind::Bare, None, false)
+        };
+        // Line-local argument token lists.
+        let mut d = 0usize;
+        let mut j = after;
+        let mut close = cs.len();
+        while j < cs.len() {
+            match cs[j] {
+                '(' => d += 1,
+                ')' => {
+                    d -= 1;
+                    if d == 0 {
+                        close = j;
+                        break;
+                    }
+                }
+                _ => {}
+            }
+            j += 1;
+        }
+        let argtext: String = cs[after + 1..close.min(cs.len())].iter().collect();
+        let mut args = Vec::new();
+        let mut cur = String::new();
+        let mut d2 = 0i64;
+        for ch in argtext.chars() {
+            match ch {
+                '(' | '[' | '{' | '<' => d2 += 1,
+                ')' | ']' | '}' | '>' => d2 -= 1,
+                ',' if d2 <= 0 => {
+                    args.push(std::mem::take(&mut cur));
+                    continue;
+                }
+                _ => {}
+            }
+            cur.push(ch);
+        }
+        if !cur.trim().is_empty() {
+            args.push(cur);
+        }
+        g.calls.push(CallSite {
+            caller: line_fn,
+            path: path.to_string(),
+            line,
+            callee: word.clone(),
+            kind,
+            qualifier,
+            impl_type: line_impl.map(|s| s.to_string()),
+            receiver_self,
+            args: args
+                .iter()
+                .map(|a| tokens(a).into_iter().map(|(_, t)| t).collect())
+                .collect(),
+            resolved: Vec::new(),
+        });
+    }
+}
+
+fn record_mod_edge(g: &mut CrateGraph, module: &str, target: &str, path: &str, line: usize) {
+    if target == module || target.is_empty() {
+        return;
+    }
+    g.mod_edges
+        .entry((module.to_string(), target.to_string()))
+        .or_insert_with(|| (path.to_string(), line));
+}
+
+/// Name-based resolution: fill each call site's candidate list.
+fn resolve(g: &mut CrateGraph) {
+    let mut by_impl: BTreeMap<(String, String), Vec<usize>> = BTreeMap::new();
+    let mut by_mod: BTreeMap<(String, String), Vec<usize>> = BTreeMap::new();
+    let mut by_file: BTreeMap<(String, String), Vec<usize>> = BTreeMap::new();
+    let mut by_name: BTreeMap<String, Vec<usize>> = BTreeMap::new();
+    let mut methods: BTreeMap<String, Vec<usize>> = BTreeMap::new();
+    for (id, f) in g.fns.iter().enumerate() {
+        if f.in_test {
+            continue;
+        }
+        if let Some(ty) = &f.impl_type {
+            by_impl.entry((ty.clone(), f.name.clone())).or_default().push(id);
+        }
+        by_mod.entry((f.module.clone(), f.name.clone())).or_default().push(id);
+        by_file.entry((f.path.clone(), f.name.clone())).or_default().push(id);
+        by_name.entry(f.name.clone()).or_default().push(id);
+        if f.is_method {
+            methods.entry(f.name.clone()).or_default().push(id);
+        }
+    }
+    let empty: Vec<usize> = Vec::new();
+    // Collect (index, resolved) first: the file-match fallback needs
+    // immutable access to `g.fns`.
+    let mut resolutions: Vec<Vec<usize>> = Vec::with_capacity(g.calls.len());
+    for c in &g.calls {
+        let res: &Vec<usize> = match c.kind {
+            CallKind::TypeQualified => {
+                let ty = match c.qualifier.as_deref() {
+                    Some("Self") => c.impl_type.clone().unwrap_or_default(),
+                    Some(q) => q.to_string(),
+                    None => String::new(),
+                };
+                by_impl.get(&(ty, c.callee.clone())).unwrap_or(&empty)
+            }
+            CallKind::ModQualified => {
+                let q = c.qualifier.clone().unwrap_or_default();
+                match by_mod.get(&(q.clone(), c.callee.clone())) {
+                    Some(v) => v,
+                    None => {
+                        // Submodule path segment: match by file name.
+                        let file_rs = format!("{q}.rs");
+                        let slash_rs = format!("/{q}.rs");
+                        let dir = format!("{q}/");
+                        let in_dir = format!("/{q}/");
+                        resolutions.push(
+                            g.fns
+                                .iter()
+                                .enumerate()
+                                .filter(|(_, f)| {
+                                    !f.in_test
+                                        && f.name == c.callee
+                                        && (f.path == file_rs
+                                            || f.path.ends_with(&slash_rs)
+                                            || f.path.starts_with(&dir)
+                                            || f.path.contains(&in_dir))
+                                })
+                                .map(|(id, _)| id)
+                                .collect(),
+                        );
+                        continue;
+                    }
+                }
+            }
+            CallKind::Method => methods.get(&c.callee).unwrap_or(&empty),
+            CallKind::Bare => {
+                let in_file = by_file.get(&(c.path.clone(), c.callee.clone()));
+                match in_file {
+                    Some(v) if !v.is_empty() => v,
+                    _ => {
+                        let m = top_module(&c.path);
+                        match by_mod.get(&(m, c.callee.clone())) {
+                            Some(v) if !v.is_empty() => v,
+                            _ => by_name.get(&c.callee).unwrap_or(&empty),
+                        }
+                    }
+                }
+            }
+        };
+        resolutions.push(res.clone());
+    }
+    for (c, res) in g.calls.iter_mut().zip(resolutions) {
+        c.resolved = res;
+    }
+}
+
+impl CrateGraph {
+    /// Non-test fn count.
+    pub fn live_fns(&self) -> usize {
+        self.fns.iter().filter(|f| !f.in_test).count()
+    }
+
+    /// Distinct resolved caller->callee edges.
+    pub fn call_edges(&self) -> BTreeSet<(usize, usize)> {
+        let mut out = BTreeSet::new();
+        for c in &self.calls {
+            if let Some(caller) = c.caller {
+                for &r in &c.resolved {
+                    out.insert((caller, r));
+                }
+            }
+        }
+        out
+    }
+
+    /// JSON form of the call graph + module DAG (`falcon audit --graph
+    /// --json`). Takes the flow result so reachability is included.
+    pub fn to_json(&self, flow: &super::flow::FlowInfo) -> Json {
+        let mut per_module: BTreeMap<&str, usize> = BTreeMap::new();
+        for f in &self.fns {
+            if !f.in_test {
+                *per_module.entry(f.module.as_str()).or_default() += 1;
+            }
+        }
+        Json::obj(vec![
+            ("files", Json::Num(self.line_ctx.len() as f64)),
+            ("fns", Json::Num(self.live_fns() as f64)),
+            ("call_sites", Json::Num(self.calls.len() as f64)),
+            ("call_edges", Json::Num(self.call_edges().len() as f64)),
+            ("roots", Json::Num(flow.roots.len() as f64)),
+            ("reachable", Json::Num(flow.reachable.len() as f64)),
+            (
+                "modules",
+                Json::Arr(
+                    per_module
+                        .iter()
+                        .map(|(m, n)| {
+                            Json::obj(vec![("name", Json::str(m)), ("fns", Json::Num(*n as f64))])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "module_edges",
+                Json::Arr(
+                    self.mod_edges
+                        .iter()
+                        .map(|((a, b), (p, l))| {
+                            Json::obj(vec![
+                                ("from", Json::str(a)),
+                                ("to", Json::str(b)),
+                                ("site", Json::str(&format!("{p}:{l}"))),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "locks",
+                Json::Arr(
+                    self.locks
+                        .iter()
+                        .map(|l| {
+                            Json::obj(vec![
+                                ("id", Json::str(&format!("{}::{}", l.module, l.name))),
+                                ("site", Json::str(&format!("{}:{}", l.path, l.line))),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Graphviz form of the module-dependency DAG (`--graph --dot`).
+    pub fn to_dot(&self) -> String {
+        let mut s = String::from("digraph falcon_modules {\n  rankdir=LR;\n");
+        for m in &self.modules {
+            s.push_str(&format!("  \"{m}\";\n"));
+        }
+        for (a, b) in self.mod_edges.keys() {
+            s.push_str(&format!("  \"{a}\" -> \"{b}\";\n"));
+        }
+        s.push_str("}\n");
+        s
+    }
+
+    /// Human summary for `--graph` without a format flag.
+    pub fn render(&self, flow: &super::flow::FlowInfo) -> String {
+        let mut s = String::new();
+        s.push_str(&format!(
+            "crate graph: {} files, {} fns ({} non-test), {} call sites, {} resolved edges\n",
+            self.line_ctx.len(),
+            self.fns.len(),
+            self.live_fns(),
+            self.calls.len(),
+            self.call_edges().len(),
+        ));
+        s.push_str(&format!(
+            "reachability: {} roots -> {} reachable fns across {} files\n",
+            flow.roots.len(),
+            flow.reachable.len(),
+            flow.reachable_files.len(),
+        ));
+        s.push_str(&format!(
+            "module DAG: {} modules, {} edges; locks: {}\n",
+            self.modules.len(),
+            self.mod_edges.len(),
+            self.locks.len(),
+        ));
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model(src: &str) -> SourceModel {
+        SourceModel::parse(src)
+    }
+
+    #[test]
+    fn extracts_fns_with_impl_and_params() {
+        let src = "impl Foo {\n    pub fn bar(&self, seed: u64, n: usize) -> u64 {\n        \
+                   helper(seed)\n    }\n}\nfn helper(x: u64) -> u64 {\n    x\n}\n";
+        let g = build(&[("m/a.rs".to_string(), model(src))]);
+        assert_eq!(g.fns.len(), 2);
+        assert_eq!(g.fns[0].name, "bar");
+        assert_eq!(g.fns[0].impl_type.as_deref(), Some("Foo"));
+        assert!(g.fns[0].is_method);
+        assert_eq!(g.fns[0].params, vec!["seed", "n"]);
+        assert_eq!(g.fns[1].name, "helper");
+        assert!(!g.fns[1].is_method);
+    }
+
+    #[test]
+    fn resolves_bare_calls_in_file_first() {
+        let src = "fn a() {\n    b();\n}\nfn b() {}\n";
+        let g = build(&[("m/a.rs".to_string(), model(src))]);
+        let call = g.calls.iter().find(|c| c.callee == "b");
+        assert!(call.is_some_and(|c| c.resolved == vec![1]));
+    }
+
+    #[test]
+    fn resolves_type_qualified_and_self() {
+        let src = "impl Foo {\n    fn new() -> Foo {\n        Foo\n    }\n    fn dup(&self) {\n        \
+                   let _ = Self::new();\n    }\n}\n";
+        let g = build(&[("m/a.rs".to_string(), model(src))]);
+        let call = g.calls.iter().find(|c| c.callee == "new");
+        assert!(call.is_some_and(|c| c.kind == CallKind::TypeQualified && c.resolved == vec![0]));
+    }
+
+    #[test]
+    fn method_calls_resolve_by_name_over_approx() {
+        let a = "impl A {\n    pub fn step(&self) {}\n}\n";
+        let b = "impl B {\n    pub fn step(&self) {}\n}\nfn go(x: &B) {\n    x.step();\n}\n";
+        let g = build(&[("m/a.rs".to_string(), model(a)), ("n/b.rs".to_string(), model(b))]);
+        let call = g.calls.iter().find(|c| c.callee == "step");
+        assert!(call.is_some_and(|c| c.resolved.len() == 2), "both impls are candidates");
+    }
+
+    #[test]
+    fn module_edges_and_grouped_use() {
+        let src = "use crate::fabric::Cluster;\nuse crate::{inject, sim::TrainingSim};\n\
+                   fn f() {\n    crate::util::stats::mean(&[]);\n}\n";
+        let g = build(&[("fleet/mod.rs".to_string(), model(src))]);
+        let tos: Vec<&str> = g.mod_edges.keys().map(|(_, b)| b.as_str()).collect();
+        assert_eq!(tos, vec!["fabric", "inject", "sim", "util"]);
+    }
+
+    #[test]
+    fn test_lines_are_excluded() {
+        let src = "fn live() {\n    x();\n}\n#[cfg(test)]\nmod tests {\n    fn t() {\n        \
+                   y();\n    }\n}\n";
+        let g = build(&[("m/a.rs".to_string(), model(src))]);
+        assert!(g.calls.iter().all(|c| c.callee != "y"));
+        assert_eq!(g.fns.iter().filter(|f| f.in_test).count(), 1);
+    }
+
+    #[test]
+    fn lock_decls_are_named() {
+        let src = "struct S {\n    slots: std::sync::Mutex<Vec<u32>>,\n    jobs: Vec<std::sync::Mutex<u8>>,\n}\n";
+        let g = build(&[("fleet/mod.rs".to_string(), model(src))]);
+        let names: Vec<&str> = g.locks.iter().map(|l| l.name.as_str()).collect();
+        assert_eq!(names, vec!["slots", "jobs"]);
+    }
+
+    #[test]
+    fn multi_line_signatures_parse_params() {
+        let src = "fn spawn(\n    cfg: &Cfg,\n    seed: u64,\n) -> u64 {\n    seed\n}\n";
+        let g = build(&[("m/a.rs".to_string(), model(src))]);
+        assert_eq!(g.fns[0].params, vec!["cfg", "seed"]);
+    }
+}

@@ -10,28 +10,38 @@
 //! digest or serialized report, (c) keeps wall-clock time out of sim
 //! paths, and (d) derives every RNG stream from the run's root seed via
 //! [`crate::util::rng::Rng::fork`]. This module is the checker that
-//! makes those conventions enforceable: a dependency-free AST-lite
-//! scanner (same hand-rolled style as the TOML/JSON code) over
-//! `src/**/*.rs`, a six-rule registry, and an inline allow grammar
+//! makes those conventions enforceable — and since v2 the *scope* of
+//! each check is derived from the crate's own call structure, not from
+//! hand-maintained path lists: a dependency-free AST-lite scanner (same
+//! style as the TOML/JSON code) over `src/**/*.rs` feeds an item/graph
+//! layer ([`graph`]) and interprocedural analyses ([`flow`]) —
+//! digest-reachability, RNG taint, lock-order discipline, and an
+//! enforced module-layering DAG — on top of the nine-rule registry and
+//! the inline allow grammar
 //!
 //! ```text
 //! // audit:allow(rule-id): reason the invariant still holds here
 //! ```
 //!
 //! where the reason is mandatory — a bare allow is itself a violation
-//! (`allow-grammar`). `unwrap`/`expect`/`panic!` sites are additionally
-//! metered by [`PANIC_BUDGET`], a per-module ratchet: entry-point and
-//! substrate modules get a fixed allowance that CI fails on exceeding,
-//! so the count can only go down. See `docs/AUDIT.md` for the rule
-//! catalog and `tests/audit.rs` for the fixture suite; the self-audit
-//! test keeps `src/` violation-free.
+//! (`allow-grammar`), and an allow that no longer suppresses anything
+//! is flagged as stale so the list of exceptions can only shrink.
+//! `unwrap`/`expect`/`panic!` sites are additionally metered by
+//! [`PANIC_BUDGET`], a per-module ratchet: entry-point and substrate
+//! modules get a fixed allowance that CI fails on exceeding, so the
+//! count can only go down. See `docs/AUDIT.md` for the rule catalog and
+//! `tests/audit.rs` for the fixture suite; the self-audit test keeps
+//! `src/` violation-free.
 
+pub mod flow;
+pub mod graph;
 mod lexer;
 mod rules;
 
 pub use lexer::SourceModel;
 
 use crate::util::json::Json;
+use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
 /// One registry entry: a stable rule id plus the invariant it protects.
@@ -49,18 +59,33 @@ pub const RULES: &[RuleInfo] = &[
     },
     RuleInfo {
         id: "digest-determinism",
-        summary: "no HashMap/HashSet where iteration order can reach a \
-                  digest, serialized report, or replay decision",
+        summary: "no HashMap/HashSet in code reachable from a digest, \
+                  serialized report, or replay entry point",
     },
     RuleInfo {
         id: "clock-hygiene",
-        summary: "no wall-clock (Instant/SystemTime) outside annotated \
-                  overhead-measurement sites; sim time is simkit::Time",
+        summary: "no wall-clock (Instant/SystemTime) in digest/replay- \
+                  reachable code; sim time is simkit::Time",
     },
     RuleInfo {
         id: "rng-stream",
-        summary: "every RNG stream forks from the run's root seed; no \
-                  ambient or ad-hoc stream construction",
+        summary: "no ambient or external-crate RNG construction; the \
+                  tree's substrate is util::rng",
+    },
+    RuleInfo {
+        id: "rng-taint",
+        summary: "every Rng::new root provably derives from a run seed \
+                  (interprocedural taint through params)",
+    },
+    RuleInfo {
+        id: "lock-order",
+        summary: "named Mutex guards follow one global acquisition order \
+                  and are never held across arbiter serialization points",
+    },
+    RuleInfo {
+        id: "module-layering",
+        summary: "crate:: dependencies respect the explicit module DAG \
+                  in audit::flow::LAYERS",
     },
     RuleInfo {
         id: "panic-budget",
@@ -69,8 +94,8 @@ pub const RULES: &[RuleInfo] = &[
     },
     RuleInfo {
         id: "allow-grammar",
-        summary: "every audit:allow names a known rule and carries a \
-                  written reason",
+        summary: "every audit:allow names a known rule, carries a written \
+                  reason, and still suppresses a real finding",
     },
 ];
 
@@ -81,18 +106,18 @@ pub const RULES: &[RuleInfo] = &[
 pub const PANIC_BUDGET: &[(&str, usize, &str)] = &[
     (
         "main.rs",
-        4,
+        3,
         "CLI entry point: fail-fast with a message is the intended UX",
     ),
     (
         "util/",
-        11,
-        "dependency substrate (json/stats/cli): panics are programming \
-         errors, pinned by unit tests",
+        1,
+        "dependency substrate: one pinned invariant in prop.rs; \
+         everything else degrades gracefully",
     ),
     (
         "reports/",
-        12,
+        6,
         "rendering layer over already-validated outcomes",
     ),
     (
@@ -151,26 +176,94 @@ pub struct FileFindings {
     pub allowed: usize,
 }
 
-/// Scan one file's source. `path` is the root-relative path rules use
-/// for scoping (fixtures pass virtual paths like `fleet/bad.rs`).
-pub fn audit_source(path: &str, text: &str) -> FileFindings {
-    let model = SourceModel::parse(text);
-    let mut out = FileFindings::default();
-    for d in rules::check(path, &model) {
-        let suppressed = d.rule != "allow-grammar"
-            && model
-                .lines
-                .get(d.line - 1)
-                .is_some_and(|l| l.allows.iter().any(|a| a.rule == d.rule && a.has_reason));
-        if suppressed {
-            out.allowed += 1;
-        } else if d.rule == "panic-budget" {
-            out.panic_sites.push(d);
-        } else {
-            out.violations.push(d);
-        }
+/// Run the full analysis over a set of parsed sources: build the crate
+/// graph, run the interprocedural rules, then the per-line rules with
+/// graph-derived scope, then the stale-allow pass and suppression.
+fn analyze_parsed(
+    parsed: &[(String, SourceModel)],
+) -> (graph::CrateGraph, flow::FlowInfo, Vec<(String, FileFindings)>) {
+    let g = graph::build(parsed);
+    let (fl, inter) = flow::analyze(&g, parsed);
+    let scope = rules::Scope { graph: &g, flow: &fl };
+    let mut inter_by_path: BTreeMap<String, Vec<Diagnostic>> = BTreeMap::new();
+    for d in inter {
+        inter_by_path.entry(d.path.clone()).or_default().push(d);
     }
-    out
+    let mut out = Vec::with_capacity(parsed.len());
+    for (path, model) in parsed {
+        let mut raw = rules::check(path, model, &scope);
+        if let Some(extra) = inter_by_path.remove(path) {
+            raw.extend(extra);
+        }
+        // Stale-allow pass: a well-formed allow on a non-test line that
+        // suppresses no finding is itself a finding, so the exception
+        // list can only shrink.
+        let mut stale = Vec::new();
+        for (idx, info) in model.lines.iter().enumerate() {
+            if info.in_test {
+                continue;
+            }
+            let line = idx + 1;
+            for allow in &info.allows {
+                let well_formed = allow.has_reason
+                    && allow.rule != "allow-grammar"
+                    && RULES.iter().any(|r| r.id == allow.rule);
+                if !well_formed {
+                    continue; // already an allow-grammar finding
+                }
+                let hits = raw
+                    .iter()
+                    .any(|d| d.rule == allow.rule && d.line == line);
+                if !hits {
+                    stale.push(Diagnostic {
+                        rule: "allow-grammar",
+                        path: path.clone(),
+                        line: allow.at_line,
+                        msg: format!(
+                            "stale allow({}): no {} finding on its target line — \
+                             delete the annotation",
+                            allow.rule, allow.rule
+                        ),
+                        snippet: info.code.trim().to_string(),
+                    });
+                }
+            }
+        }
+        raw.extend(stale);
+        let mut found = FileFindings::default();
+        for d in raw {
+            let suppressed = d.rule != "allow-grammar"
+                && model
+                    .lines
+                    .get(d.line - 1)
+                    .is_some_and(|l| l.allows.iter().any(|a| a.rule == d.rule && a.has_reason));
+            if suppressed {
+                found.allowed += 1;
+            } else if d.rule == "panic-budget" {
+                found.panic_sites.push(d);
+            } else {
+                found.violations.push(d);
+            }
+        }
+        found
+            .violations
+            .sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+        found.panic_sites.sort_by_key(|d| d.line);
+        out.push((path.clone(), found));
+    }
+    (g, fl, out)
+}
+
+/// Scan one file's source in isolation. `path` is the root-relative path
+/// rules use for scoping (fixtures pass virtual paths like
+/// `fleet/bad.rs`); reachability is computed over this file alone.
+pub fn audit_source(path: &str, text: &str) -> FileFindings {
+    let parsed = vec![(path.to_string(), SourceModel::parse(text))];
+    let (_, _, mut files) = analyze_parsed(&parsed);
+    match files.pop() {
+        Some((_, found)) => found,
+        None => FileFindings::default(),
+    }
 }
 
 /// The whole-tree audit result.
@@ -182,6 +275,15 @@ pub struct AuditReport {
     /// `(prefix, sites used, allowance)` for each [`PANIC_BUDGET`] entry
     /// with at least one site.
     pub budget_used: Vec<(String, usize, usize)>,
+}
+
+/// An [`AuditReport`] plus the crate graph and flow analysis it was
+/// scoped by (the `--graph` surface).
+#[derive(Debug, Default)]
+pub struct CrateAudit {
+    pub report: AuditReport,
+    pub graph: graph::CrateGraph,
+    pub flow: flow::FlowInfo,
 }
 
 impl AuditReport {
@@ -285,26 +387,22 @@ fn budget_for(path: &str) -> Option<usize> {
     })
 }
 
-/// Audit every `.rs` file under `root` (recursively, sorted walk), apply
-/// the panic budget, and return the aggregate report.
-pub fn audit_dir(root: &Path) -> std::io::Result<AuditReport> {
-    let mut files = Vec::new();
-    collect_rs(root, &mut files)?;
+/// Audit a set of in-memory sources as one crate: the whole-graph
+/// equivalent of [`audit_source`], with panic-budget metering.
+pub fn audit_sources(sources: &[(String, String)]) -> CrateAudit {
+    let parsed: Vec<(String, SourceModel)> = sources
+        .iter()
+        .map(|(p, t)| (p.clone(), SourceModel::parse(t)))
+        .collect();
+    let (g, fl, files) = analyze_parsed(&parsed);
     let mut report = AuditReport::default();
     let mut metered: Vec<Vec<Diagnostic>> = PANIC_BUDGET.iter().map(|_| Vec::new()).collect();
-    for f in &files {
-        let text = std::fs::read_to_string(f)?;
-        let rel = f
-            .strip_prefix(root)
-            .unwrap_or(f.as_path())
-            .to_string_lossy()
-            .replace('\\', "/");
-        let found = audit_source(&rel, &text);
+    for (path, found) in files {
         report.files += 1;
         report.allowed += found.allowed;
         report.violations.extend(found.violations);
         for site in found.panic_sites {
-            match budget_for(&rel) {
+            match budget_for(&path) {
                 Some(i) => metered[i].push(site),
                 // Outside every budgeted module: a hard violation.
                 None => report.violations.push(site),
@@ -331,5 +429,28 @@ pub fn audit_dir(root: &Path) -> std::io::Result<AuditReport> {
     report
         .violations
         .sort_by(|a, b| (&a.path, a.line, a.rule).cmp(&(&b.path, b.line, b.rule)));
-    Ok(report)
+    CrateAudit { report, graph: g, flow: fl }
+}
+
+/// Audit every `.rs` file under `root` (recursively, sorted walk) as one
+/// crate, returning the report plus the graph/flow surfaces.
+pub fn audit_dir_graph(root: &Path) -> std::io::Result<CrateAudit> {
+    let mut files = Vec::new();
+    collect_rs(root, &mut files)?;
+    let mut sources = Vec::with_capacity(files.len());
+    for f in &files {
+        let text = std::fs::read_to_string(f)?;
+        let rel = f
+            .strip_prefix(root)
+            .unwrap_or(f.as_path())
+            .to_string_lossy()
+            .replace('\\', "/");
+        sources.push((rel, text));
+    }
+    Ok(audit_sources(&sources))
+}
+
+/// Audit every `.rs` file under `root`, report only.
+pub fn audit_dir(root: &Path) -> std::io::Result<AuditReport> {
+    Ok(audit_dir_graph(root)?.report)
 }

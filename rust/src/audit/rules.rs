@@ -1,11 +1,17 @@
-//! The audit rule registry.
+//! The per-line rule registry.
 //!
-//! Each rule is a pure function over one [`LineInfo`] (plus the file's
-//! repo-relative path); the engine in `mod.rs` handles allow suppression
-//! and the panic budget. Rules are scoped by *exclusion* — a file is in
-//! scope unless its path is listed — so fixture files under arbitrary
-//! paths still fire.
+//! Each rule here is a pure function over one [`LineInfo`] plus the
+//! crate-wide [`Scope`] computed by `graph.rs`/`flow.rs`. There are no
+//! path-exemption lists: `digest-determinism` and `clock-hygiene` are
+//! scoped by *reachability from the determinism roots* (see
+//! `flow.rs`), so fixture files under arbitrary paths fire whenever
+//! their own call structure makes them reachable, and nothing is
+//! silently exempted by a stale prefix. The interprocedural rules
+//! (`rng-taint`, `lock-order`, `module-layering`) live in `flow.rs`;
+//! this module holds the lexical ones.
 
+use super::flow::FlowInfo;
+use super::graph::{next_nonspace, prev_nonspace, tokens, CrateGraph, LineCtx};
 use super::lexer::{LineInfo, SourceModel};
 use super::{Diagnostic, RULES};
 
@@ -35,68 +41,41 @@ const BLESSED_SETTERS: &[&str] = &[
     "heal_all",
 ];
 
-/// Paths exempt from `digest-determinism` (no digest/replay-reachable
-/// state): the substrate, this scanner, the CLI shell, and the
-/// pjrt-gated live path.
-const DIGEST_EXEMPT: &[&str] =
-    &["util/", "audit/", "trainer/", "runtime/", "main.rs", "xla.rs", "anyhow.rs"];
-
-/// Paths allowed to construct RNG roots freely: the RNG substrate and
-/// everything outside the deterministic sim/replay surface.
-const RNG_EXEMPT: &[&str] =
-    &["util/", "audit/", "reports/", "trainer/", "runtime/", "main.rs", "xla.rs", "anyhow.rs"];
-
 /// Ambient / ad-hoc RNG constructors that break replayability anywhere.
 const RNG_AMBIENT: &[&str] = &["thread_rng", "from_entropy", "seed_from_u64"];
 
-fn exempt(path: &str, list: &[&str]) -> bool {
-    list.iter().any(|p| {
-        if p.ends_with('/') {
-            path.starts_with(p)
-        } else {
-            path == *p
-        }
-    })
+/// Crate-wide context the lexical rules consult: the call graph (for
+/// per-line fn attribution and the panic-budget self-method check) and
+/// the flow result (for reachability scoping).
+pub struct Scope<'a> {
+    pub graph: &'a CrateGraph,
+    pub flow: &'a FlowInfo,
 }
 
-/// Whole-word identifier tokens of a blanked line, with char positions.
-fn tokens(code: &str) -> Vec<(usize, String)> {
-    let cs: Vec<char> = code.chars().collect();
-    let mut out = Vec::new();
-    let mut k = 0usize;
-    while k < cs.len() {
-        let c = cs[k];
-        if (c.is_ascii_alphabetic() || c == '_') && !(k > 0 && cs[k - 1].is_ascii_digit()) {
-            let start = k;
-            while k < cs.len() && (cs[k].is_ascii_alphanumeric() || cs[k] == '_') {
-                k += 1;
-            }
-            out.push((start, cs[start..k].iter().collect()));
-        } else {
-            k += 1;
-        }
+impl Scope<'_> {
+    fn line_ctx(&self, path: &str, line: usize) -> Option<&LineCtx> {
+        self.graph.line_ctx.get(path).and_then(|v| v.get(line - 1))
     }
-    out
-}
 
-fn prev_nonspace(cs: &[char], mut k: usize) -> Option<char> {
-    while k > 0 {
-        k -= 1;
-        if cs[k] != ' ' && cs[k] != '\t' {
-            return Some(cs[k]);
+    /// Whether a line is in digest/clock scope: inside a fn reachable
+    /// from the determinism roots, or at module scope in a file that
+    /// defines at least one reachable fn.
+    fn in_reach_scope(&self, path: &str, line: usize) -> bool {
+        match self.line_ctx(path, line).and_then(|c| c.fn_id) {
+            Some(id) => self.flow.reachable.contains(&id),
+            None => self.flow.reachable_files.contains(path),
         }
     }
-    None
-}
 
-fn next_nonspace(cs: &[char], mut k: usize) -> Option<(usize, char)> {
-    while k < cs.len() {
-        if cs[k] != ' ' && cs[k] != '\t' {
-            return Some((k, cs[k]));
-        }
-        k += 1;
+    /// Whether `self.<method>(...)` at this line resolves to a method the
+    /// enclosing impl defines — an in-crate call, not `Option::expect` /
+    /// `Result::unwrap`.
+    fn self_method(&self, path: &str, line: usize, name: &str) -> bool {
+        self.line_ctx(path, line)
+            .and_then(|c| c.impl_type.as_deref())
+            .and_then(|ty| self.graph.impl_methods.get(ty))
+            .is_some_and(|methods| methods.contains(name))
     }
-    None
 }
 
 /// After a field token (and optional `[index]`), is the next operator a
@@ -135,9 +114,10 @@ fn diag(rule: &'static str, path: &str, line: usize, msg: String, code: &str) ->
     }
 }
 
-/// Run every rule over one parsed file. Allow suppression happens in the
-/// engine; this returns raw findings (including `allow-grammar` ones).
-pub fn check(path: &str, model: &SourceModel) -> Vec<Diagnostic> {
+/// Run every lexical rule over one parsed file. Allow suppression
+/// happens in the engine; this returns raw findings (including
+/// `allow-grammar` ones).
+pub fn check(path: &str, model: &SourceModel, scope: &Scope) -> Vec<Diagnostic> {
     let mut out = Vec::new();
     for (idx, info) in model.lines.iter().enumerate() {
         let line = idx + 1;
@@ -151,10 +131,12 @@ pub fn check(path: &str, model: &SourceModel) -> Vec<Diagnostic> {
         }
         let cs: Vec<char> = info.code.chars().collect();
         check_generation(path, line, info, &toks, &cs, &mut out);
-        check_digest(path, line, info, &toks, &mut out);
-        check_clock(path, line, info, &toks, &mut out);
+        if scope.in_reach_scope(path, line) {
+            check_digest(path, line, info, &toks, &mut out);
+            check_clock(path, line, info, &toks, &mut out);
+        }
         check_rng(path, line, info, &toks, &cs, &mut out);
-        check_panic(path, line, info, &toks, &cs, &mut out);
+        check_panic(path, line, info, &toks, &cs, scope, &mut out);
     }
     out
 }
@@ -236,9 +218,6 @@ fn check_digest(
     toks: &[(usize, String)],
     out: &mut Vec<Diagnostic>,
 ) {
-    if exempt(path, DIGEST_EXEMPT) {
-        return;
-    }
     for &(_, ref word) in toks {
         if word == "HashMap" || word == "HashSet" {
             out.push(diag(
@@ -269,8 +248,8 @@ fn check_clock(
                 path,
                 line,
                 format!(
-                    "{word} (wall clock) in library code: sim time must come from \
-                     simkit::Time; annotate real overhead-measurement sites"
+                    "{word} (wall clock) in digest/replay-reachable code: sim time must \
+                     come from simkit::Time; annotate real overhead-measurement sites"
                 ),
                 &info.code,
             ));
@@ -286,7 +265,7 @@ fn check_rng(
     cs: &[char],
     out: &mut Vec<Diagnostic>,
 ) {
-    for (i, &(pos, ref word)) in toks.iter().enumerate() {
+    for &(pos, ref word) in toks {
         if RNG_AMBIENT.contains(&word.as_str()) {
             out.push(diag(
                 "rng-stream",
@@ -297,33 +276,16 @@ fn check_rng(
             ));
             continue;
         }
-        // `rand::` — the external crate's ambient entry points.
+        // `rand::` — the external crate's ambient entry points. Fresh
+        // `Rng::new` roots are the `rng-taint` rule's job now: it proves
+        // seed derivation interprocedurally instead of flagging the
+        // constructor textually.
         if word == "rand" && cs.get(pos + word.len()) == Some(&':') {
             out.push(diag(
                 "rng-stream",
                 path,
                 line,
                 "external `rand::` usage: the tree's RNG substrate is util::rng".to_string(),
-                &info.code,
-            ));
-            continue;
-        }
-        // `Rng::new(...)` — a fresh root stream. Forking (`.fork(n)`) is
-        // the blessed derivation; new roots need an allow outside the
-        // exempt paths.
-        if word == "Rng"
-            && !exempt(path, RNG_EXEMPT)
-            && toks.get(i + 1).is_some_and(|&(p, ref t)| {
-                t == "new" && p == pos + word.len() + 2 && cs.get(pos + word.len()) == Some(&':')
-            })
-        {
-            out.push(diag(
-                "rng-stream",
-                path,
-                line,
-                "new RNG root stream: derive via .fork(tag) from the run's root seed, \
-                 or annotate the blessed root-derivation site"
-                    .to_string(),
                 &info.code,
             ));
         }
@@ -336,13 +298,18 @@ fn check_panic(
     info: &LineInfo,
     toks: &[(usize, String)],
     cs: &[char],
+    scope: &Scope,
     out: &mut Vec<Diagnostic>,
 ) {
     for &(pos, ref word) in toks {
         let after = pos + word.len();
         let hit = match word.as_str() {
             "unwrap" | "expect" => {
-                prev_nonspace(cs, pos) == Some('.') && cs.get(after) == Some(&'(')
+                let call = prev_nonspace(cs, pos) == Some('.') && cs.get(after) == Some(&'(');
+                // `self.expect(...)` where the enclosing impl defines
+                // `expect` is an in-crate method call (e.g. the JSON
+                // parser), proven by the call graph — not a panic site.
+                call && !(receiver_is_self(cs, pos) && scope.self_method(path, line, word))
             }
             "panic" | "unreachable" | "todo" | "unimplemented" => cs.get(after) == Some(&'!'),
             _ => false,
@@ -358,4 +325,26 @@ fn check_panic(
             ));
         }
     }
+}
+
+/// Whether the receiver chain immediately before `.word(` is literally
+/// the token `self`.
+fn receiver_is_self(cs: &[char], pos: usize) -> bool {
+    let mut k = pos;
+    while k > 0 && (cs[k - 1] == ' ' || cs[k - 1] == '\t') {
+        k -= 1;
+    }
+    if k == 0 || cs[k - 1] != '.' {
+        return false;
+    }
+    k -= 1;
+    while k > 0 && (cs[k - 1] == ' ' || cs[k - 1] == '\t') {
+        k -= 1;
+    }
+    let end = k;
+    while k > 0 && (cs[k - 1].is_ascii_alphanumeric() || cs[k - 1] == '_') {
+        k -= 1;
+    }
+    let recv: String = cs[k..end].iter().collect();
+    recv == "self" && (k == 0 || cs[k - 1] != '.')
 }

@@ -27,14 +27,14 @@ impl MemoryStore {
 
     /// Dump a buffer; returns elapsed seconds.
     pub fn dump(&mut self, key: &str, data: &[u8]) -> f64 {
-        let t0 = Instant::now(); // audit:allow(clock-hygiene): real I/O measurement
+        let t0 = Instant::now();
         self.slots.insert(key.to_string(), data.to_vec());
         t0.elapsed().as_secs_f64()
     }
 
     /// Restore into a caller buffer; returns elapsed seconds.
     pub fn load(&self, key: &str, out: &mut Vec<u8>) -> Result<f64> {
-        let t0 = Instant::now(); // audit:allow(clock-hygiene): real I/O measurement
+        let t0 = Instant::now();
         let src = self
             .slots
             .get(key)
@@ -73,7 +73,7 @@ impl DiskStore {
     /// Dump with fsync (a checkpoint that can be lost is not a checkpoint);
     /// returns elapsed seconds.
     pub fn dump(&self, key: &str, data: &[u8]) -> Result<f64> {
-        let t0 = Instant::now(); // audit:allow(clock-hygiene): real I/O measurement
+        let t0 = Instant::now();
         let mut f = std::fs::File::create(self.path(key))?;
         f.write_all(data)?;
         f.sync_all()?;
@@ -81,7 +81,7 @@ impl DiskStore {
     }
 
     pub fn load(&self, key: &str, out: &mut Vec<u8>) -> Result<f64> {
-        let t0 = Instant::now(); // audit:allow(clock-hygiene): real I/O measurement
+        let t0 = Instant::now();
         let mut f = std::fs::File::open(self.path(key))
             .map_err(|e| Error::new(e.kind(), format!("open checkpoint {key}: {e}")))?;
         out.clear();

@@ -295,8 +295,8 @@ pub struct FleetTrace {
 /// Heterogeneous job palette: small 1–2-node strategies (the fleet's bread
 /// and butter — §3's probe classes) with varied models and noise profiles.
 pub fn job_spec(fleet_seed: u64, job_id: usize) -> JobSpec {
-    // audit:allow(rng-stream): blessed derivation — the fleet seed is the
-    // root, tagged and forked per job so job streams never alias.
+    // The fleet seed is the root, tagged and forked per job so job
+    // streams never alias (rng-taint proves the derivation).
     let mut rng = Rng::new(fleet_seed ^ 0xF1EE7).fork(job_id as u64);
     const CFGS: [(usize, usize, usize); 5] =
         [(1, 4, 1), (2, 2, 1), (1, 8, 1), (2, 4, 1), (2, 2, 2)];
@@ -341,8 +341,8 @@ fn sample_events(
     spec: &JobSpec,
     horizon: Time,
 ) -> Vec<FailSlowEvent> {
-    // audit:allow(rng-stream): blessed derivation — fault traces get their
-    // own tagged stream off the fleet seed, independent of sim streams.
+    // Fault traces get their own tagged stream off the fleet seed,
+    // independent of sim streams.
     let mut ev_rng = Rng::new(cfg.seed ^ 0xE7E47).fork(job_id as u64);
     let mut events = fleet_injection_model(cfg.failslow_boost).sample_job(
         spec.n_nodes(),
@@ -575,8 +575,7 @@ fn run_fleet_shared(
             if span_epochs == 0 {
                 0
             } else {
-                // audit:allow(rng-stream): blessed derivation — stagger
-                // offsets fork per job off the tagged fleet seed.
+                // Stagger offsets fork per job off the tagged fleet seed.
                 let mut rng = Rng::new(cfg.seed ^ 0x57A6_6E7).fork(i as u64);
                 rng.below(span_epochs as u64 + 1) as usize
             }

@@ -41,10 +41,13 @@
 //!     the pool breathes).
 //! campaign [--fast true|false]
 //!     The §3 characterization campaign (Fig 1 + Table 1).
-//! audit [--src DIR] [--json true]
-//!     Run the in-tree invariant lint (determinism, RNG-stream, and
-//!     cache-coherence discipline) over the crate's own source; exits
-//!     non-zero on any violation. Rule catalog: docs/AUDIT.md.
+//! audit [--src DIR] [--json true] [--graph [--dot|--json]]
+//!     Run the in-tree invariant lint (determinism, RNG-taint,
+//!     lock-order, module-layering, and cache-coherence discipline)
+//!     over the crate's own source; exits non-zero on any violation.
+//!     Rule scope is derived from a crate-wide call graph; --graph
+//!     emits that graph (human summary, Graphviz with --dot, or JSON
+//!     with --json). Rule catalog: docs/AUDIT.md.
 //! list
 //!     List available report ids (paper set plus beyond-paper reports).
 //! ```
@@ -80,7 +83,9 @@ fn main() {
         "whatif" => run_whatif(&args),
         "scenarios" => {
             for &name in falcon::scenario::LIBRARY {
-                let spec = falcon::scenario::find(name).expect("library names build");
+                let Some(spec) = falcon::scenario::find(name) else {
+                    continue;
+                };
                 let tag = if spec.fleet.is_some() { " [fleet]" } else { "" };
                 println!("{name:<26} {}{tag}", spec.description);
             }
@@ -482,14 +487,35 @@ fn run_audit(args: &Args) {
     } else {
         src
     };
-    match falcon::audit::audit_dir(std::path::Path::new(&root)) {
-        Ok(report) => {
-            if args.bool_or("json", false) {
-                println!("{}", report.to_json());
-            } else {
-                print!("{}", report.render());
+    let t0 = std::time::Instant::now();
+    match falcon::audit::audit_dir_graph(std::path::Path::new(&root)) {
+        Ok(audit) => {
+            let ms = t0.elapsed().as_secs_f64() * 1000.0;
+            if args.bool_or("graph", false) {
+                if args.bool_or("dot", false) {
+                    print!("{}", audit.graph.to_dot());
+                } else if args.bool_or("json", false) {
+                    println!("{}", audit.graph.to_json(&audit.flow));
+                } else {
+                    print!("{}", audit.graph.render(&audit.flow));
+                }
+                return;
             }
-            if !report.clean() {
+            if args.bool_or("json", false) {
+                println!("{}", audit.report.to_json());
+            } else {
+                print!("{}", audit.report.render());
+                let fps = if ms > 0.0 {
+                    audit.report.files as f64 / (ms / 1000.0)
+                } else {
+                    0.0
+                };
+                println!(
+                    "scan: {} files in {ms:.1} ms ({fps:.0} files/sec)",
+                    audit.report.files
+                );
+            }
+            if !audit.report.clean() {
                 std::process::exit(1);
             }
         }

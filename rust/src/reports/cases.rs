@@ -52,8 +52,13 @@ fn run_case(
 /// library's `cpu-contention` entry IS this figure's fault script.
 pub fn fig2(args: &Args) -> String {
     let iters = args.usize_or("iters", 600);
-    let spec = crate::scenario::find("cpu-contention").expect("library scenario").iters(iters);
-    let mut sim = spec.build_sim().expect("library scenario is valid");
+    let Some(spec) = crate::scenario::find("cpu-contention") else {
+        return "figure 2 unavailable: library scenario `cpu-contention` missing\n".to_string();
+    };
+    let mut sim = match spec.iters(iters).build_sim() {
+        Ok(sim) => sim,
+        Err(e) => return format!("figure 2 unavailable: {e}\n"),
+    };
     let (t, thpt, sm, cpu) = run_case(&mut sim, iters, |s| s.cluster.nodes[0].cpu_satisfaction);
     let jobs: Vec<f64> =
         cpu.iter().map(|&c| if c < 0.99 { (1.0 - c) * 20.0 } else { 1.0 }).collect();
@@ -107,8 +112,13 @@ pub fn fig3(args: &Args) -> String {
 /// `net-congestion` scenario.
 pub fn fig4(args: &Args) -> String {
     let iters = args.usize_or("iters", 700);
-    let spec = crate::scenario::find("net-congestion").expect("library scenario").iters(iters);
-    let mut sim = spec.build_sim().expect("library scenario is valid");
+    let Some(spec) = crate::scenario::find("net-congestion") else {
+        return "figure 4 unavailable: library scenario `net-congestion` missing\n".to_string();
+    };
+    let mut sim = match spec.iters(iters).build_sim() {
+        Ok(sim) => sim,
+        Err(e) => return format!("figure 4 unavailable: {e}\n"),
+    };
     let mut last_cnp = 0u64;
     let (t, thpt, sm, cnp_rate) = run_case(&mut sim, iters, |s| {
         let total: u64 = s.cluster.uplinks.iter().map(|u| u.cnp_count).sum();
@@ -135,7 +145,8 @@ pub fn fig4(args: &Args) -> String {
 /// campaign's congestion episodes (that's what makes its CoV 0.29-class).
 pub fn tab2(args: &Args) -> String {
     let n = args.usize_or("samples", 4000);
-    let mut rng = Rng::new(args.u64_or("seed", 7));
+    let seed = args.u64_or("seed", 7);
+    let mut rng = Rng::new(seed);
     let mut cluster = Cluster::new(ClusterSpec::new(4, 8, GpuClass::A100));
     let bytes = 64.0 * 1024.0 * 1024.0;
 

@@ -69,7 +69,9 @@ pub fn fleet_cluster(args: &Args) -> String {
     base.policy = None;
     let private = run_fleet(&base);
 
-    let c = shared.cluster.as_ref().expect("shared mode emits a cluster summary");
+    let Some(c) = shared.cluster.as_ref() else {
+        return "FLEET_CLUSTER unavailable: shared mode emitted no cluster summary\n".to_string();
+    };
     let contention_slowdown = if private.mean_slowdown > 0.0 {
         shared.mean_slowdown / private.mean_slowdown
     } else {

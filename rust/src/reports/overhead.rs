@@ -8,9 +8,9 @@ use crate::sim::{JobSpec, TrainingSim};
 use crate::util::cli::Args;
 use crate::util::plot;
 use crate::util::rng::Rng;
-// audit:allow(clock-hygiene): this report *is* the overhead measurement
-// (Fig 18/20) — wall-clock here is the figure's y-axis, and it is
-// excluded from every deterministic digest.
+// Wall-clock is fine here: this report *is* the overhead measurement
+// (Fig 18/20) and nothing in it is reachable from a digest or replay
+// root, so clock-hygiene's reachability scope excludes it.
 use std::time::Instant;
 
 /// Fig 18 — detector overhead across parallel strategies: iteration time
@@ -62,14 +62,14 @@ pub fn fig18(args: &Args) -> String {
 /// Table 6 — time to find the optimal micro-batch distribution vs DP count.
 /// Our exact greedy replaces the paper's cvxpy QP; the table shows both.
 pub fn tab6(args: &Args) -> String {
-    let mut rng = Rng::new(args.u64_or("seed", 6));
+    let seed = args.u64_or("seed", 6);
+    let mut rng = Rng::new(seed);
     let mut rows = Vec::new();
     for d in [16usize, 32, 64, 128, 256, 512] {
         let times: Vec<f64> = (0..d).map(|_| 0.5 + rng.f64()).collect();
         let total = d * 8;
         // Warm up + time repeated solves for a stable measurement.
         let reps = 50;
-        // audit:allow(clock-hygiene): real solver wall-time measurement.
         let t0 = Instant::now();
         let mut sink = 0usize;
         for _ in 0..reps {

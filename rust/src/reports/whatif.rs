@@ -31,7 +31,13 @@ pub fn whatif(args: &Args) -> String {
                 "note: --scenario '{name}' {why}; the single-job attribution \
                  uses the default 'slow-leak-gpu'\n",
             ));
-            find("slow-leak-gpu").expect("library scenario")
+            match find("slow-leak-gpu") {
+                Some(s) => s,
+                None => {
+                    out.push_str("library scenario `slow-leak-gpu` missing\n");
+                    return out;
+                }
+            }
         }
     };
     let iters = args.usize_or("iters", spec.run.iters.min(300));

@@ -32,7 +32,9 @@ mod outcome;
 mod parse;
 
 pub use library::{find, LIBRARY};
-pub use outcome::{FleetOutcome, Outcome, OutcomeAction, OutcomeDiagnosis};
+pub use outcome::{
+    Attribution, FaultAttribution, FleetOutcome, Outcome, OutcomeAction, OutcomeDiagnosis,
+};
 
 use crate::cluster::Policy;
 use crate::coordinator::{run_with_falcon, FalconConfig};

@@ -138,8 +138,8 @@ impl TrainingSim {
         ));
         let grid = RankGrid::new(spec.cfg, spec.gpus_per_node);
         let world = spec.cfg.world();
-        // audit:allow(rng-stream): THE root stream — every other stream in
-        // the sim (and its replays) forks from this one seed.
+        // THE root stream — every other stream in the sim (and its
+        // replays) forks from this one seed.
         let rng = Rng::new(spec.seed);
         let monitor = Monitor::new(world, 4096);
         let alloc = even_alloc(spec.wl.microbatches * spec.cfg.dp, spec.cfg.dp);

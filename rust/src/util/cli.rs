@@ -27,9 +27,10 @@ impl Args {
                     .map(|n| !n.starts_with("--"))
                     .unwrap_or(false)
                 {
-                    let v = it.next().unwrap();
-                    out.flags.insert(rest.to_string(), v);
-                    out.present.push(rest.to_string());
+                    if let Some(v) = it.next() {
+                        out.flags.insert(rest.to_string(), v);
+                        out.present.push(rest.to_string());
+                    }
                 } else {
                     out.flags.insert(rest.to_string(), "true".to_string());
                     out.present.push(rest.to_string());

@@ -260,7 +260,7 @@ impl<'a> Parser<'a> {
                     // Copy one UTF-8 scalar.
                     let s = std::str::from_utf8(&self.b[self.i..])
                         .map_err(|_| "invalid utf8")?;
-                    let c = s.chars().next().unwrap();
+                    let c = s.chars().next().ok_or("invalid utf8")?;
                     out.push(c);
                     self.i += c.len_utf8();
                 }

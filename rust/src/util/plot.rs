@@ -29,7 +29,7 @@ pub fn line_chart(title: &str, xs: &[f64], ys: &[f64], width: usize, height: usi
     for (i, row) in grid.iter().enumerate() {
         let yval = ymax - span * i as f64 / (height - 1) as f64;
         out.push_str(&format!("{yval:>10.3} |"));
-        out.push_str(std::str::from_utf8(row).unwrap());
+        out.push_str(std::str::from_utf8(row).unwrap_or(""));
         out.push('\n');
     }
     out.push_str(&format!(
@@ -37,8 +37,8 @@ pub fn line_chart(title: &str, xs: &[f64], ys: &[f64], width: usize, height: usi
         "",
         "-".repeat(width),
         "",
-        xs.first().unwrap(),
-        xs.last().unwrap()
+        xs.first().copied().unwrap_or(0.0),
+        xs.last().copied().unwrap_or(0.0)
     ));
     out
 }

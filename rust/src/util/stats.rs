@@ -40,7 +40,7 @@ fn nan_last(a: &f64, b: &f64) -> std::cmp::Ordering {
         (true, true) => std::cmp::Ordering::Equal,
         (true, false) => std::cmp::Ordering::Greater,
         (false, true) => std::cmp::Ordering::Less,
-        (false, false) => a.partial_cmp(b).expect("both finite-or-inf"),
+        (false, false) => a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal),
     }
 }
 

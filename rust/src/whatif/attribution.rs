@@ -5,103 +5,13 @@
 use std::collections::BTreeMap;
 
 use crate::fleet::FleetTrace;
-use crate::util::json::Json;
+// The `Attribution`/`FaultAttribution` result types live in
+// `crate::scenario::outcome` (they are part of the Outcome shape);
+// this module computes them.
+use crate::scenario::{Attribution, FaultAttribution};
 
 use super::trace::RunTrace;
 use super::{sweep, Edit, WhatifError};
-
-/// Delay attributed to one `[[fault]]` entry: baseline JCT minus the JCT
-/// of the replay with that fault dropped. Positive = the fault cost time.
-#[derive(Clone, Debug, PartialEq)]
-pub struct FaultAttribution {
-    /// Index into the spec's fault script.
-    pub fault: usize,
-    /// Compact description, e.g. `gpu gpu:3 @0.10`.
-    pub label: String,
-    /// Events the fault expanded to (ramp steps, recurrences).
-    pub events: usize,
-    pub delay_s: f64,
-    /// `delay_s` as a percentage of the ideal JCT.
-    pub delay_pct: f64,
-}
-
-/// The what-if attribution of one recorded single-job run.
-#[derive(Clone, Debug, PartialEq)]
-pub struct Attribution {
-    pub baseline_jct_s: f64,
-    /// Fault-free, pause-free JCT (`iters * ideal_iter_s`).
-    pub ideal_jct_s: f64,
-    /// Paper-style aggregate: `100 * (baseline - ideal) / ideal`.
-    pub jct_delay_pct: f64,
-    pub faults: Vec<FaultAttribution>,
-    /// JCT excess of the `NoMitigation` replay over the baseline: what
-    /// FALCON-MITIGATE saved (negative = mitigation cost more than it
-    /// bought on this trace). 0 for detection-only runs.
-    pub mitigation_benefit_s: f64,
-    pub mitigation_benefit_pct: f64,
-    /// `(baseline - ideal) - Σ fault delays`: measurement jitter, stall
-    /// spikes, detection/validation pauses, and fault interaction.
-    pub unattributed_s: f64,
-    /// Counterfactual replays executed to produce this attribution.
-    pub replays: usize,
-}
-
-impl Attribution {
-    pub fn to_json(&self) -> Json {
-        Json::obj(vec![
-            ("baseline_jct_s", Json::Num(self.baseline_jct_s)),
-            ("ideal_jct_s", Json::Num(self.ideal_jct_s)),
-            ("jct_delay_pct", Json::Num(self.jct_delay_pct)),
-            (
-                "faults",
-                Json::Arr(
-                    self.faults
-                        .iter()
-                        .map(|f| {
-                            Json::obj(vec![
-                                ("fault", Json::Num(f.fault as f64)),
-                                ("label", Json::str(&f.label)),
-                                ("events", Json::Num(f.events as f64)),
-                                ("delay_s", Json::Num(f.delay_s)),
-                                ("delay_pct", Json::Num(f.delay_pct)),
-                            ])
-                        })
-                        .collect(),
-                ),
-            ),
-            ("mitigation_benefit_s", Json::Num(self.mitigation_benefit_s)),
-            ("mitigation_benefit_pct", Json::Num(self.mitigation_benefit_pct)),
-            ("unattributed_s", Json::Num(self.unattributed_s)),
-            ("replays", Json::Num(self.replays as f64)),
-        ])
-    }
-
-    /// Human-readable attribution block (appended to `Outcome::render`).
-    pub fn render(&self) -> String {
-        let mut out = format!(
-            "what-if attribution ({} replays): JCT {:.1} s vs ideal {:.1} s \
-             ({:+.2}% delay)\n",
-            self.replays, self.baseline_jct_s, self.ideal_jct_s, self.jct_delay_pct
-        );
-        for f in &self.faults {
-            out.push_str(&format!(
-                "  fault[{}] {} ({} events): {:+.1} s ({:+.2}%)\n",
-                f.fault, f.label, f.events, f.delay_s, f.delay_pct
-            ));
-        }
-        if self.mitigation_benefit_s != 0.0 {
-            out.push_str(&format!(
-                "  mitigation benefit: {:+.1} s ({:+.2}%)\n",
-                self.mitigation_benefit_s, self.mitigation_benefit_pct
-            ));
-        }
-        out.push_str(&format!(
-            "  unattributed (jitter/spikes/pauses/interaction): {:+.1} s\n",
-            self.unattributed_s
-        ));
-        out
-    }
-}
 
 /// Full attribution of a recorded run: one fault-removed replay per
 /// `[[fault]]` entry plus (when the run mitigates) a `NoMitigation`
@@ -245,6 +155,7 @@ mod tests {
     use super::*;
     use crate::fleet::ContentionSample;
     use crate::scenario::{find, FleetSpec, ScenarioSpec};
+    use crate::util::json::Json;
 
     #[test]
     fn attribution_blames_the_slow_leak() {

@@ -48,9 +48,11 @@ mod attribution;
 mod replay;
 mod trace;
 
-pub use attribution::{
-    attribute, contention_blame, render_blame, Attribution, BlameEntry, FaultAttribution,
-};
+pub use attribution::{attribute, contention_blame, render_blame, BlameEntry};
+// Re-exported for back-compat: the attribution result types moved into
+// the Outcome shape (`crate::scenario::outcome`) so `scenario` does not
+// depend on `whatif`.
+pub use crate::scenario::{Attribution, FaultAttribution};
 pub use replay::{replay_cold, sweep};
 pub use trace::{
     record, record_fleet, FleetRecord, IterRecord, RunTrace, TraceConfig, MAX_SNAPSHOTS,

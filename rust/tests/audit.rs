@@ -4,9 +4,14 @@
 //!
 //! Fixture files live in a subdirectory so cargo never compiles them —
 //! they are scanned as text, under *virtual* paths chosen to put each
-//! one in the rule's scope.
+//! one in the rule's scope. Since v2 the scanner is crate-aware: the
+//! digest/clock rules key off call-graph reachability from digest and
+//! replay roots, not off hand-maintained path lists, so the same fixture
+//! must pin the same findings regardless of the path it is scanned under.
 
-use falcon::audit::{audit_dir, audit_source, FileFindings, PANIC_BUDGET, RULES};
+use falcon::audit::{
+    audit_dir, audit_dir_graph, audit_source, audit_sources, FileFindings, PANIC_BUDGET, RULES,
+};
 
 fn fired(path: &str, fixture: &str) -> Vec<(&'static str, usize)> {
     let f = audit_source(path, fixture);
@@ -42,42 +47,82 @@ fn generation_discipline_blesses_the_setters_themselves() {
 }
 
 #[test]
-fn digest_determinism_fires_on_hash_collections() {
+fn digest_determinism_fires_wherever_a_digest_root_reaches() {
     let fx = include_str!("audit_fixtures/digest_determinism.rs");
-    assert_eq!(
-        fired("fleet/mod.rs", fx),
-        vec![("digest-determinism", 3), ("digest-determinism", 6)]
-    );
-    // The substrate is exempt: no digest-reachable state there.
-    assert_eq!(fired("util/stats.rs", fx), vec![]);
+    let pins = vec![("digest-determinism", 3), ("digest-determinism", 6)];
+    assert_eq!(fired("fleet/mod.rs", fx), pins);
+    // v1 exempted util/ by path; reachability replaces that list, so a
+    // digest root under util/ is now in scope like anywhere else.
+    assert_eq!(fired("util/stats.rs", fx), pins);
 }
 
 #[test]
-fn clock_hygiene_fires_on_wall_clock() {
+fn digest_rules_scope_by_reachability_not_path() {
+    let fx = include_str!("audit_fixtures/digest_reachability.rs");
+    // `tally` is reachable from the `digest` root -> its HashMap fires,
+    // even under the previously-exempt util/ prefix; `cold_path` is
+    // unreachable, so its HashSet on line 17 stays quiet.
+    assert_eq!(fired("util/maps.rs", fx), vec![("digest-determinism", 9)]);
+}
+
+#[test]
+fn clock_hygiene_fires_only_in_digest_reachable_fns() {
     let fx = include_str!("audit_fixtures/clock_hygiene.rs");
+    // `step_time` is reachable from the `to_json` root.
     assert_eq!(
         fired("sim/mod.rs", fx),
-        vec![("clock-hygiene", 4), ("clock-hygiene", 5)]
+        vec![("clock-hygiene", 8), ("clock-hygiene", 9)]
     );
+    // The same body with no root calling it is out of scope entirely.
+    let cold = "fn step_time() -> f64 {\n    \
+                let t0 = std::time::Instant::now();\n    \
+                t0.elapsed().as_secs_f64()\n}\n";
+    assert_eq!(fired("sim/mod.rs", cold), vec![]);
 }
 
 #[test]
-fn rng_stream_fires_on_adhoc_roots() {
+fn rng_stream_and_taint_fire_on_adhoc_roots() {
     let fx = include_str!("audit_fixtures/rng_stream.rs");
+    let pins = vec![
+        ("rng-taint", 4),  // Rng::new(0xDEAD): literal seed, no derivation
+        ("rng-stream", 5), // rand:: crate
+        ("rng-stream", 6), // thread_rng
+    ];
+    assert_eq!(fired("sim/mod.rs", fx), pins);
+    // v1 let reports/ seed its own streams by path exemption; the taint
+    // rule replaces that list and holds every module to the same proof.
+    assert_eq!(fired("reports/overhead.rs", fx), pins);
+}
+
+#[test]
+fn rng_taint_traces_literals_through_helper_params() {
+    let fx = include_str!("audit_fixtures/rng_taint.rs");
+    // `helper(41)` launders a literal into `Rng::new(tag)` -> line 4
+    // fires; `Rng::new(seed)` and `helper(seed)` both prove their
+    // derivation and stay quiet.
+    assert_eq!(fired("sim/taint.rs", fx), vec![("rng-taint", 4)]);
+}
+
+#[test]
+fn lock_order_flags_inversions_and_guards_across_the_arbiter() {
+    let fx = include_str!("audit_fixtures/lock_order.rs");
     assert_eq!(
-        fired("sim/mod.rs", fx),
+        fired("fleet/locks.rs", fx),
         vec![
-            ("rng-stream", 4), // Rng::new root
-            ("rng-stream", 5), // rand:: crate
-            ("rng-stream", 6), // thread_rng
+            ("lock-order", 12), // slots -> jobs ...
+            ("lock-order", 18), // ... and jobs -> slots: inversion pair
+            ("lock-order", 24), // admit() called under a live guard
         ]
     );
-    // reports/ may seed its own illustrative streams (exempt from the
-    // root-stream rule), but ambient RNG is banned everywhere.
-    assert_eq!(
-        fired("reports/cases.rs", fx),
-        vec![("rng-stream", 5), ("rng-stream", 6)]
-    );
+}
+
+#[test]
+fn module_layering_enforces_the_dependency_dag() {
+    let fx = include_str!("audit_fixtures/module_layering.rs");
+    // diagnose may not import whatif...
+    assert_eq!(fired("diagnose/bad.rs", fx), vec![("module-layering", 3)]);
+    // ...but reports may: the same text is clean under an allowed edge.
+    assert_eq!(fired("reports/bad.rs", fx), vec![]);
 }
 
 #[test]
@@ -86,20 +131,22 @@ fn panic_budget_meters_sites_separately() {
     let f: FileFindings = audit_source("fleet/mod.rs", fx);
     assert!(f.violations.is_empty(), "{:?}", f.violations);
     let sites: Vec<(&str, usize)> = f.panic_sites.iter().map(|d| (d.rule, d.line)).collect();
-    // `.unwrap(` and `panic!` fire; `unwrap_or` on line 16 must not.
+    // `.unwrap(` and `panic!` fire; `unwrap_or` on line 16 must not, and
+    // `self.expect("x")` resolves to Parser's own method — no site.
     assert_eq!(sites, vec![("panic-budget", 4), ("panic-budget", 11)]);
 }
 
 #[test]
-fn allow_grammar_flags_malformed_directives() {
+fn allow_grammar_flags_malformed_and_stale_directives() {
     let fx = include_str!("audit_fixtures/allow_grammar.rs");
     assert_eq!(
         fired("sim/mod.rs", fx),
         vec![
-            ("allow-grammar", 4),  // reason-less allow
-            ("clock-hygiene", 5),  // ...which therefore does not suppress
-            ("allow-grammar", 6),  // unknown rule id
-            ("clock-hygiene", 7),  // ...ditto
+            ("allow-grammar", 4), // reason-less allow
+            ("clock-hygiene", 5), // ...which therefore does not suppress
+            ("allow-grammar", 6), // unknown rule id
+            ("clock-hygiene", 7), // ...ditto
+            ("allow-grammar", 8), // well-formed but stale: suppresses nothing
         ]
     );
 }
@@ -121,12 +168,108 @@ fn every_rule_has_a_registry_entry_and_vice_versa() {
         "digest-determinism",
         "clock-hygiene",
         "rng-stream",
+        "rng-taint",
+        "lock-order",
+        "module-layering",
         "panic-budget",
         "allow-grammar",
     ] {
         assert!(ids.contains(&id), "missing registry entry for {id}");
     }
-    assert_eq!(ids.len(), 6);
+    assert_eq!(ids.len(), 9);
+}
+
+#[test]
+fn path_exemption_lists_stay_deleted() {
+    // v2 derives scope from the call graph; the v1 hand-maintained
+    // path lists must not come back.
+    let rules_src = include_str!("../src/audit/rules.rs");
+    assert!(
+        !rules_src.contains("DIGEST_EXEMPT") && !rules_src.contains("RNG_EXEMPT"),
+        "path-exemption lists have returned to rules.rs; scope comes from reachability"
+    );
+}
+
+#[test]
+fn graph_snapshot_of_a_known_crate_is_exact() {
+    let sources = vec![
+        ("lib.rs".to_string(), "pub mod fabric;\npub mod sim;\n".to_string()),
+        (
+            "fabric/mod.rs".to_string(),
+            "pub struct Net;\n\nimpl Net {\n    pub fn scale(&self) -> f64 {\n        1.0\n    }\n}\n"
+                .to_string(),
+        ),
+        (
+            "sim/mod.rs".to_string(),
+            "use crate::fabric::Net;\n\npub fn digest(n: &Net) -> f64 {\n    helper(n)\n}\n\n\
+             fn helper(n: &Net) -> f64 {\n    n.scale()\n}\n"
+                .to_string(),
+        ),
+    ];
+    let audit = audit_sources(&sources);
+    assert!(audit.report.clean(), "{}", audit.report.render());
+    assert_eq!(audit.graph.fns.len(), 3, "scale, digest, helper");
+    assert_eq!(audit.graph.calls.len(), 2, "helper(n) and n.scale()");
+    assert_eq!(audit.graph.call_edges().len(), 2);
+    let mods: Vec<&str> = audit.graph.modules.iter().map(|m| m.as_str()).collect();
+    assert_eq!(mods, vec!["fabric", "lib", "sim"]);
+    let edges: Vec<(&str, &str)> = audit
+        .graph
+        .mod_edges
+        .keys()
+        .map(|(a, b)| (a.as_str(), b.as_str()))
+        .collect();
+    assert_eq!(edges, vec![("sim", "fabric")]);
+    // digest is the sole root; helper and Net::scale are reachable from it.
+    assert_eq!(audit.flow.roots.len(), 1);
+    assert_eq!(audit.flow.reachable.len(), 3);
+    // The graph serializes with the sections the CI artifact relies on.
+    let json = audit.graph.to_json(&audit.flow).to_string();
+    for key in ["\"fns\":", "\"call_sites\":", "\"call_edges\":", "\"roots\":", "\"module_edges\":"] {
+        assert!(json.contains(key), "missing {key} in {json}");
+    }
+}
+
+#[test]
+fn graph_snapshot_of_src_stays_in_band() {
+    let src = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+    let audit = audit_dir_graph(&src).expect("scan src/");
+    let g = &audit.graph;
+    let mods: Vec<&str> = g.modules.iter().map(|m| m.as_str()).collect();
+    assert_eq!(
+        mods,
+        vec![
+            "anyhow", "audit", "ckpt", "cluster", "collectives", "coordinator", "detect",
+            "diagnose", "fabric", "fleet", "inject", "lib", "main", "metrics", "mitigate",
+            "monitor", "pipeline", "reports", "runtime", "scenario", "sim", "simkit", "trainer",
+            "util", "whatif", "xla",
+        ]
+    );
+    // Size bands around the current snapshot (63 files, ~1015 fns,
+    // ~5138 call sites, ~3086 resolved edges, 14 roots, ~298 reachable,
+    // ~103 module edges): wide enough to absorb normal growth, tight
+    // enough that a broken extractor cannot pass.
+    let fns = g.fns.len();
+    assert!((800..=1400).contains(&fns), "fn count out of band: {fns}");
+    let calls = g.calls.len();
+    assert!((4000..=7000).contains(&calls), "call sites out of band: {calls}");
+    let edges = g.call_edges().len();
+    assert!((2300..=4200).contains(&edges), "call edges out of band: {edges}");
+    let roots = audit.flow.roots.len();
+    assert!((10..=22).contains(&roots), "roots out of band: {roots}");
+    let reach = audit.flow.reachable.len();
+    assert!((200..=450).contains(&reach), "reachable out of band: {reach}");
+    let med = g.mod_edges.len();
+    assert!((70..=150).contains(&med), "module edges out of band: {med}");
+    // The fleet admission locks are the crate's only named Mutexes.
+    let locks: Vec<String> = g.locks.iter().map(|l| format!("{}::{}", l.module, l.name)).collect();
+    assert!(locks.contains(&"fleet::slots".to_string()), "{locks:?}");
+    assert!(locks.contains(&"fleet::jobs".to_string()), "{locks:?}");
+    // Reachability sanity: the digest surface is in, the report
+    // generators (no digest/replay roots) are out.
+    assert!(audit.flow.reachable_files.contains("fleet/mod.rs"));
+    assert!(audit.flow.reachable_files.contains("whatif/replay.rs"));
+    assert!(!audit.flow.reachable_files.contains("reports/overhead.rs"));
 }
 
 #[test]

@@ -1,9 +1,11 @@
-//! Fixture: malformed allow directives are themselves findings.
+//! Fixture: malformed or stale allow directives are themselves findings.
 
-pub fn bad() -> f64 {
+pub fn to_json() -> f64 {
     // audit:allow(clock-hygiene)
     let t0 = std::time::Instant::now();
     // audit:allow(no-such-rule): a reason does not save an unknown id
     let t1 = std::time::Instant::now();
-    t0.elapsed().as_secs_f64() + t1.elapsed().as_secs_f64()
+    // audit:allow(digest-determinism): stale — nothing here touches a map
+    let dt = t0.elapsed().as_secs_f64() + t1.elapsed().as_secs_f64();
+    dt
 }

@@ -1,7 +1,7 @@
 //! Fixture: a well-formed allow suppresses exactly its rule on its line,
 //! and `#[cfg(test)]` regions are out of scope.
 
-pub fn measured() -> f64 {
+pub fn to_json() -> f64 {
     // audit:allow(clock-hygiene): fixture models a real measurement site
     let t0 = std::time::Instant::now();
     t0.elapsed().as_secs_f64()

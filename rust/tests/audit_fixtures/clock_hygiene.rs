@@ -1,6 +1,10 @@
-//! Fixture: wall-clock reads inside the deterministic sim surface.
+//! Fixture: wall-clock reads inside the digest-reachable sim surface.
 
-pub fn step_time() -> f64 {
+pub fn to_json() -> f64 {
+    step_time()
+}
+
+fn step_time() -> f64 {
     let t0 = std::time::Instant::now();
     let wall = std::time::SystemTime::now();
     let _ = wall;

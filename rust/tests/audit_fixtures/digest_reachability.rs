@@ -1,0 +1,19 @@
+//! Fixture: reachability puts digest rules in scope even under paths the
+//! old exemption lists skipped, and keeps unreachable helpers out.
+
+pub fn digest(xs: &[u64]) -> u64 {
+    tally(xs)
+}
+
+fn tally(xs: &[u64]) -> u64 {
+    let mut m = std::collections::HashMap::new();
+    for &x in xs {
+        *m.entry(x).or_insert(0u64) += 1;
+    }
+    m.len() as u64
+}
+
+fn cold_path() -> usize {
+    let s: std::collections::HashSet<u32> = std::collections::HashSet::new();
+    s.len()
+}

@@ -1,0 +1,27 @@
+//! Fixture: a lock-order inversion pair and a guard held across a call
+//! into the arbiter serialization path.
+
+pub struct Pair {
+    slots: std::sync::Mutex<u32>,
+    jobs: std::sync::Mutex<u32>,
+}
+
+impl Pair {
+    pub fn ab(&self) -> u32 {
+        let ga = self.slots.lock().unwrap_or_else(|e| e.into_inner());
+        let gb = self.jobs.lock().unwrap_or_else(|e| e.into_inner());
+        *ga + *gb
+    }
+
+    pub fn ba(&self) -> u32 {
+        let gb = self.jobs.lock().unwrap_or_else(|e| e.into_inner());
+        let ga = self.slots.lock().unwrap_or_else(|e| e.into_inner());
+        *ga + *gb
+    }
+
+    pub fn grant(&self) -> u32 {
+        let g = self.slots.lock().unwrap_or_else(|e| e.into_inner());
+        self.admit(3);
+        *g
+    }
+}

@@ -1,0 +1,7 @@
+//! Fixture: a module edge outside the allowed dependency DAG.
+
+use crate::whatif::Edit;
+
+pub fn kind(_e: &Edit) -> u32 {
+    0
+}

@@ -15,3 +15,17 @@ pub fn mode(name: &str) -> u32 {
 pub fn soft(v: &[u32]) -> u32 {
     v.first().copied().unwrap_or(0)
 }
+
+pub struct Parser;
+
+impl Parser {
+    fn expect(&self, tag: &str) -> u32 {
+        tag.len() as u32
+    }
+
+    /// `self.expect` resolves to the in-crate method above, not
+    /// `Option::expect` — the call graph proves it is no panic site.
+    pub fn run(&self) -> u32 {
+        self.expect("x")
+    }
+}

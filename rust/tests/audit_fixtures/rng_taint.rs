@@ -1,0 +1,13 @@
+//! Fixture: a literal RNG root laundered through a helper parameter.
+
+fn helper(tag: u64) -> u64 {
+    let r = Rng::new(tag);
+    let _ = r;
+    tag
+}
+
+pub fn seeded(seed: u64) -> u64 {
+    let direct = Rng::new(seed);
+    let _ = direct;
+    helper(41) ^ helper(seed)
+}

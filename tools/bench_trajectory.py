@@ -108,6 +108,30 @@ def diagnosis(doc):
     return (acc, overhead if isinstance(overhead, (int, float)) else None)
 
 
+def audit(doc):
+    """(total ms, files/sec, violations, panic sites) of the audit scan, or None.
+
+    Informational only — printed, never gated: the blocking audit gate is
+    its own CI step; older artifacts predate the section and are tolerated
+    silently.
+    """
+    au = doc.get("audit")
+    if not isinstance(au, dict):
+        return None
+    ms = au.get("total_ms")
+    fps = au.get("files_per_sec")
+    if not isinstance(ms, (int, float)) or not isinstance(fps, (int, float)):
+        return None
+    violations = au.get("violations")
+    sites = au.get("panic_sites")
+    return (
+        ms,
+        fps,
+        violations if isinstance(violations, (int, float)) else None,
+        sites if isinstance(sites, (int, float)) else None,
+    )
+
+
 def sparkline(values):
     ticks = "▁▂▃▄▅▆▇█"
     lo, hi = min(values), max(values)
@@ -153,7 +177,9 @@ def main(argv):
         if h is None:
             print(f"skipping {f}: no private engine runs recorded", file=sys.stderr)
             continue
-        points.append((f, h[0], h[1], policy_sweep(doc), whatif_sweep(doc), diagnosis(doc)))
+        points.append(
+            (f, h[0], h[1], policy_sweep(doc), whatif_sweep(doc), diagnosis(doc), audit(doc))
+        )
 
     if check_mode:
         return check(points)
@@ -166,7 +192,7 @@ def main(argv):
     print(f"fleet engine trajectory ({len(points)} recorded run(s)):\n")
     print(f"  {'artifact':<{width}}  {'jobs':>6}  {'jobs/sec':>9}  policy sweep")
     prev = None
-    for f, jobs, jps, sweep, _ws, _dx in points:
+    for f, jobs, jps, sweep, _ws, _dx, _au in points:
         delta = "" if prev is None else f" ({100.0 * (jps / prev - 1.0):+.1f}%)"
         sweep_txt = (
             "  ".join(f"{p}={v:.0f}" for p, v in sorted(sweep.items())) or "-"
@@ -180,9 +206,9 @@ def main(argv):
     print(f"\n  trajectory: {sparkline(rates)}  "
           f"(first {rates[0]:.1f} -> last {rates[-1]:.1f} jobs/s, "
           f"{100.0 * (rates[-1] / rates[0] - 1.0):+.1f}%)")
-    # Informational (never gated): what-if counterfactual replay rate and
-    # diagnosis accuracy / op-trace overhead.
-    for f, *_rest, ws, dx in points:
+    # Informational (never gated): what-if counterfactual replay rate,
+    # diagnosis accuracy / op-trace overhead, and audit scan wall-time.
+    for f, *_rest, ws, dx, au in points:
         if ws is not None:
             rate, speedup = ws
             extra = "" if speedup is None else f" ({speedup:.1f}x vs cold runs)"
@@ -198,6 +224,17 @@ def main(argv):
             print(
                 f"  diagnosis [{os.path.relpath(f)}]: "
                 f"accuracy {acc:.3f}{extra}"
+            )
+        if au is not None:
+            ms, fps, violations, sites = au
+            counts = ""
+            if violations is not None:
+                counts += f", {violations:.0f} violations"
+            if sites is not None:
+                counts += f", {sites:.0f} budgeted panic sites"
+            print(
+                f"  audit scan [{os.path.relpath(f)}]: "
+                f"{ms:.1f} ms ({fps:.0f} files/sec{counts})"
             )
     return 0
 
