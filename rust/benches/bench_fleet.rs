@@ -250,6 +250,85 @@ fn bench_audit() -> Json {
     ])
 }
 
+/// S5 replan microbench: planner solves/sec on a congested 4-node job (the
+/// greedy in-place swap search + asymmetric micro-batch re-split a denied
+/// grant triggers), plus the end-to-end slowdown S5 recovers in a
+/// saturated-pool run where every S3/S4 request is denied. Informational —
+/// the blocking trajectory gate stays headline jobs/sec.
+fn bench_replan() -> Json {
+    use falcon::coordinator::{Falcon, FalconConfig};
+    use falcon::inject::{FailSlowEvent, FailSlowKind, Target};
+    use falcon::mitigate::plan_replan;
+    use falcon::simkit::{from_secs, MINUTE};
+
+    let congested = |seed: u64| {
+        let mut spec = demo_spec(ParallelConfig::new(8, 2, 2), seed);
+        spec.jitter = 0.0;
+        spec.spike_p = 0.0;
+        let mut sim = TrainingSim::new(spec);
+        let ideal = sim.ideal_iter_s;
+        sim.inject(vec![FailSlowEvent {
+            kind: FailSlowKind::NetworkCongestion,
+            target: Target::Link(0, 1),
+            start: from_secs(ideal * 20.0),
+            duration: 600 * MINUTE,
+            scale: 0.15,
+        }]);
+        sim
+    };
+
+    // Planner rate: plan() trial-applies and reverts internally, so every
+    // solve sees the identical congested layout.
+    let mut sim = congested(2024);
+    for _ in 0..25 {
+        sim.step(); // past the onset, congestion live
+    }
+    let solves = 200usize;
+    let t0 = std::time::Instant::now();
+    let mut improvement = 0.0f64;
+    for _ in 0..solves {
+        improvement = plan_replan(&mut sim, 2).improvement();
+    }
+    let solves_per_sec = solves as f64 / t0.elapsed().as_secs_f64().max(1e-9);
+
+    // End-to-end recovery with the pool exhausted: deny every request.
+    let iters = 400usize;
+    let run = |mitigate: bool, replan: bool| {
+        let mut sim = congested(2024);
+        let mut fc = FalconConfig::default();
+        fc.mitigate = mitigate;
+        fc.defer_heavy = true;
+        fc.replan = replan;
+        fc.overheads.adjust_topology_s = 10.0;
+        fc.overheads.replan_s = 30.0;
+        fc.overheads.ckpt_restart_s = 50_000.0;
+        fc.replan_pause = from_secs(30.0);
+        let mut falcon = Falcon::new(fc);
+        for _ in 0..iters {
+            let obs = sim.step();
+            falcon.on_iteration(&mut sim, obs.iter, obs.duration_s());
+            if let Some(req) = falcon.take_request() {
+                falcon.note_grant(&mut sim, req, false);
+            }
+        }
+        (sim.timeline.mean_throughput(), 1.0 / sim.ideal_iter_s)
+    };
+    let (t_off, healthy) = run(false, false);
+    let (t_s5, _) = run(true, true);
+    let recovered_pct = 100.0 * (t_s5 - t_off) / (healthy - t_off).max(1e-12);
+    println!(
+        "  planner: {solves_per_sec:>7.1} solves/s (predicted gain {:.1}%); \
+         saturated-pool run x {iters} iters: {recovered_pct:.1}% of slowdown recovered",
+        100.0 * improvement
+    );
+    Json::obj(vec![
+        ("solves_per_sec", Json::Num(solves_per_sec)),
+        ("plan_improvement", Json::Num(improvement)),
+        ("iters", Json::Num(iters as f64)),
+        ("recovered_slowdown_pct", Json::Num(recovered_pct)),
+    ])
+}
+
 const BENCH_PATH: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_fleet.json");
 
 /// jobs/sec of the headline (largest private) config in a BENCH_fleet.json
@@ -290,6 +369,9 @@ fn main() {
 
     section("falcon-audit scan throughput (crate graph + rules over src/)");
     let audit = bench_audit();
+
+    section("S5 replan: planner rate and saturated-pool recovery");
+    let replan = bench_replan();
 
     section("fleet engine throughput (jobs/sec)");
     for (jobs, iters) in [(64usize, 60usize), (256, 60), (512, 120)] {
@@ -406,6 +488,7 @@ fn main() {
         ("whatif_sweep", whatif_sweep),
         ("diagnosis", diagnosis),
         ("audit", audit),
+        ("replan", replan),
         ("runs", Json::Arr(runs)),
     ]);
     match std::fs::write(BENCH_PATH, out.to_string() + "\n") {

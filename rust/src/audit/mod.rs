@@ -127,6 +127,13 @@ pub const PANIC_BUDGET: &[(&str, usize, &str)] = &[
          already validated, so any panic is a bug — the budget is zero",
     ),
     (
+        "mitigate/",
+        0,
+        "mitigation planners and the S5 replan solver run inside the \
+         coordinator loop on degraded clusters: they must degrade \
+         gracefully (guards and let-else), never panic",
+    ),
+    (
         "trainer/",
         1,
         "pjrt-gated live-training path; not part of the deterministic sim",

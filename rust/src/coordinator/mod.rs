@@ -23,6 +23,7 @@ use crate::diagnose::{self, EpisodeDiagnosis};
 use crate::inject::FailSlowKind;
 use crate::mitigate::microbatch;
 use crate::mitigate::planner::{MitigationPlanner, Overheads, Strategy};
+use crate::mitigate::replan::{self, ReplanPlan};
 use crate::mitigate::topology;
 use crate::sim::TrainingSim;
 use crate::simkit::{from_secs, Time};
@@ -53,6 +54,16 @@ pub struct FalconConfig {
     pub topology_pause: Time,
     /// Cost of an S4 checkpoint-restart.
     pub restart_cost: Time,
+    /// Enable the S5 malleable-parallelism tier (beyond the paper): the
+    /// ski-rental ladder gains `Strategy::ReplanParallelism` at its own
+    /// overhead slot, and a denied S3/S4 grant triggers an immediate
+    /// re-plan within the existing allocation — graceful degradation when
+    /// the healthy-node pool is exhausted. Off (the default) leaves every
+    /// run bit-identical to the four-tier ladder.
+    pub replan: bool,
+    /// Cost of an S5 re-plan pause (dump to memory, migrate the affected
+    /// stages in place, re-split, restore — a few minutes).
+    pub replan_pause: Time,
 }
 
 impl Default for FalconConfig {
@@ -66,6 +77,8 @@ impl Default for FalconConfig {
             validation_pause: from_secs(5.0),
             topology_pause: from_secs(45.0),
             restart_cost: from_secs(20.0 * 60.0),
+            replan: false,
+            replan_pause: from_secs(3.0 * 60.0),
         }
     }
 }
@@ -98,8 +111,10 @@ pub enum ActionKind {
     /// The arbiter granted the request (fresh nodes or in-place).
     Granted(Strategy),
     /// The arbiter denied the request — the healthy-node pool was
-    /// exhausted; escalation continues on accumulated impact.
-    Denied(Strategy),
+    /// exhausted; escalation continues on accumulated impact. The second
+    /// field is the episode's consecutive-denial streak at this denial
+    /// (1-based), the dead-end hysteresis the S5 fallback keys off.
+    Denied(Strategy, usize),
     EpisodeClosed,
 }
 
@@ -127,6 +142,14 @@ pub struct Falcon {
     /// A hang verdict's S4 held back by `mitigation_delay_iters`: the
     /// iteration at which the restart fires (`None` = nothing pending).
     hang_restart_due: Option<usize>,
+    /// The S5 re-plan currently applied to the job, if any — the job is in
+    /// the malleable degradation mode and [`replan::revert`] restores the
+    /// nominal layout bit-for-bit once the hardware heals.
+    replan_active: Option<ReplanPlan>,
+    /// Whether S5 was already attempted this episode (a failed attempt
+    /// still pays a partial pause; retrying every denial would pay it over
+    /// and over for the same verdict).
+    replan_tried: bool,
 }
 
 impl Falcon {
@@ -142,6 +165,18 @@ impl Falcon {
             episode_open_iter: None,
             episode_diagnoses: Vec::new(),
             hang_restart_due: None,
+            replan_active: None,
+            replan_tried: false,
+        }
+    }
+
+    /// Episode planner for a fresh diagnosis: the four-tier ladder, or the
+    /// five-tier one when the S5 malleable tier is enabled.
+    fn make_planner(&self, kind: FailSlowKind) -> MitigationPlanner {
+        if self.cfg.replan {
+            MitigationPlanner::with_replan(kind, self.cfg.overheads)
+        } else {
+            MitigationPlanner::new(kind, self.cfg.overheads)
         }
     }
 
@@ -153,8 +188,9 @@ impl Falcon {
             Some(true) => {
                 self.actions.push(Action { at: sim.now, iter, what: ActionKind::EpisodeOpened });
                 self.episode_open_iter = Some(iter);
+                self.replan_tried = false;
                 let diag = self.diagnose(sim);
-                self.planner = Some(MitigationPlanner::new(diag.kind, self.cfg.overheads));
+                self.planner = Some(self.make_planner(diag.kind));
                 self.actions.push(Action {
                     at: sim.now,
                     iter,
@@ -169,7 +205,12 @@ impl Falcon {
                 self.diagnosis = None;
                 self.episode_open_iter = None;
                 self.hang_restart_due = None;
-                if self.cfg.mitigate {
+                self.replan_tried = false;
+                // S5 exit check first: if the hardware healed, the nominal
+                // layout comes back bit-for-bit; if the relief came from
+                // the re-plan itself, the plan stays (no oscillation).
+                self.maybe_exit_replan(sim);
+                if self.cfg.mitigate && self.replan_active.is_none() {
                     // Re-solve the allocation for the *current* replica
                     // speeds: if the underlying degradation healed this is
                     // even again; if the relief came from S2 itself, the
@@ -203,7 +244,10 @@ impl Falcon {
             if self.detector.take_escalation() {
                 let diag = self.diagnose(sim);
                 if self.diagnosis.as_ref().map(|d| d.kind) != Some(diag.kind) {
-                    self.planner = Some(MitigationPlanner::new(diag.kind, self.cfg.overheads));
+                    self.planner = Some(self.make_planner(diag.kind));
+                    // A new root cause may be re-plannable even though the
+                    // first was not (or vice versa): give S5 a fresh shot.
+                    self.replan_tried = false;
                 }
                 self.actions.push(Action {
                     at: sim.now,
@@ -222,15 +266,45 @@ impl Falcon {
                 self.apply(sim, iter, strategy);
             }
         } else if self.cfg.mitigate && !self.detector.slow_now() && iter % 20 == 19 {
-            // Housekeeping while healthy: drop stale S2 skew once the
-            // replicas are homogeneous again (episodes can close while a
-            // later-expiring event still held the skew in place).
-            let times = sim.replica_microbatch_times();
-            let total = sim.spec.wl.microbatches * sim.spec.cfg.dp;
-            let solved = microbatch::solve(&times, total).m;
-            if solved != sim.microbatch_alloc {
-                sim.set_microbatch_alloc(solved);
+            // Housekeeping while healthy: first give a kept S5 plan its
+            // periodic exit check (an episode can close while the fault
+            // persists, then the fault expires without re-opening one)...
+            self.maybe_exit_replan(sim);
+            if self.replan_active.is_none() {
+                // ...then drop stale S2 skew once the replicas are
+                // homogeneous again (episodes can close while a
+                // later-expiring event still held the skew in place).
+                let times = sim.replica_microbatch_times();
+                let total = sim.spec.wl.microbatches * sim.spec.cfg.dp;
+                let solved = microbatch::solve(&times, total).m;
+                if solved != sim.microbatch_alloc {
+                    sim.set_microbatch_alloc(solved);
+                }
             }
+        }
+    }
+
+    /// Exit check for the S5 degradation mode: tentatively revert to the
+    /// nominal layout and keep the reversion only if nominal is no slower —
+    /// i.e. the hardware actually healed. If the relief is coming from the
+    /// plan itself (the fault persists), re-enter the mode unchanged so the
+    /// close/re-open cycle cannot oscillate. Noise-free estimates only; a
+    /// disabled S5 (`replan_active == None`) makes this a strict no-op.
+    fn maybe_exit_replan(&mut self, sim: &mut TrainingSim) {
+        let Some(p) = self.replan_active.take() else { return };
+        let with_plan = sim.estimate_iter_time_s();
+        replan::revert(sim, &p);
+        let nominal = sim.estimate_iter_time_s();
+        if nominal > with_plan * 1.02 {
+            // Still degraded without the plan: stay in the mode.
+            for &(a, b) in &p.swaps {
+                sim.grid.swap_nodes(a, b);
+            }
+            let total = sim.spec.wl.microbatches * sim.spec.cfg.dp;
+            if p.alloc.len() == sim.spec.cfg.dp && p.alloc.iter().sum::<usize>() == total {
+                sim.set_microbatch_alloc(p.alloc.clone());
+            }
+            self.replan_active = Some(p);
         }
     }
 
@@ -376,6 +450,10 @@ impl Falcon {
     pub fn execute_granted_in_place(&mut self, sim: &mut TrainingSim) {
         let (iter, s) = (sim.iter, Strategy::CkptRestart);
         self.actions.push(Action { at: sim.now, iter, what: ActionKind::Granted(s) });
+        if let Some(p) = self.replan_active.take() {
+            // A restart reschedules from the nominal plan: unwind S5 first.
+            replan::revert(sim, &p);
+        }
         sim.restart_in_place(self.cfg.restart_cost);
         self.restarts += 1;
         self.planner = None;
@@ -386,18 +464,32 @@ impl Falcon {
     /// Record a grant outcome the fleet driver executed (or refused)
     /// itself: `granted = true` logs grant + application (the driver
     /// already mutated the sim, e.g. swapped the degraded node's hardware
-    /// for a spare); `false` logs a denial and tells the planner so
-    /// escalation proceeds on accumulated impact without assuming S3 ever
-    /// succeeds.
-    pub fn note_grant(&mut self, sim: &TrainingSim, strategy: Strategy, granted: bool) {
+    /// for a spare); `false` logs a denial — with the episode's
+    /// consecutive-denial streak — and tells the planner so escalation
+    /// proceeds on accumulated impact without assuming S3 ever succeeds.
+    /// With the S5 tier enabled, the first denial of an episode is the
+    /// dead-end signal: the pool is exhausted, so re-plan the
+    /// parallelization within the existing allocation right away instead
+    /// of waiting for the next impact threshold.
+    pub fn note_grant(&mut self, sim: &mut TrainingSim, strategy: Strategy, granted: bool) {
         let (at, iter) = (sim.now, sim.iter);
         if granted {
             self.actions.push(Action { at, iter, what: ActionKind::Granted(strategy) });
             self.actions.push(Action { at, iter, what: ActionKind::Applied(strategy) });
-        } else {
-            self.actions.push(Action { at, iter, what: ActionKind::Denied(strategy) });
             if let Some(p) = self.planner.as_mut() {
-                p.on_denied(strategy);
+                p.on_granted();
+            }
+        } else {
+            let streak = match self.planner.as_mut() {
+                Some(p) => {
+                    p.on_denied(strategy);
+                    p.denied_streak()
+                }
+                None => 1,
+            };
+            self.actions.push(Action { at, iter, what: ActionKind::Denied(strategy, streak) });
+            if self.cfg.mitigate && self.cfg.replan && !self.replan_tried {
+                self.execute(sim, iter, Strategy::ReplanParallelism);
             }
         }
     }
@@ -430,10 +522,27 @@ impl Falcon {
                 }
             }
             Strategy::CkptRestart => {
+                if let Some(p) = self.replan_active.take() {
+                    // A restart reschedules from the nominal plan: unwind S5 first.
+                    replan::revert(sim, &p);
+                }
                 sim.restart(self.cfg.restart_cost);
                 self.restarts += 1;
                 self.planner = None;
                 self.diagnosis = None;
+            }
+            Strategy::ReplanParallelism => {
+                self.replan_tried = true;
+                let plan = replan::plan(sim, 2);
+                if plan.is_worthwhile() {
+                    replan::apply(sim, &plan, self.cfg.replan_pause);
+                    self.replan_active = Some(match self.replan_active.take() {
+                        Some(prev) => prev.merge(plan),
+                        None => plan,
+                    });
+                } else {
+                    sim.now += self.cfg.replan_pause / 4; // aborted pause
+                }
             }
         }
         self.actions.push(Action { at: sim.now, iter, what: ActionKind::Applied(strategy) });
@@ -682,5 +791,145 @@ mod tests {
         cfg.restart_cost = from_secs(120.0);
         let falcon = run_with_falcon(&mut sim, cfg, 400);
         assert!(falcon.restarts() >= 1, "{:?}", falcon.applied_strategies());
+    }
+
+    fn congestion_event(start_s: f64, dur_min: u64) -> FailSlowEvent {
+        FailSlowEvent {
+            kind: FailSlowKind::NetworkCongestion,
+            target: Target::Link(0, 1),
+            start: from_secs(start_s),
+            duration: dur_min * MINUTE,
+            scale: 0.15,
+        }
+    }
+
+    #[test]
+    fn saturated_pool_reaches_s5_and_recovers_throughput() {
+        // Shared-cluster dead end: every S3/S4 grant is denied (healthy-node
+        // pool exhausted), so the only relief left is the S5 replan within
+        // the existing allocation. The malleable tier must recover a large
+        // fraction of the congestion-induced slowdown without any grant.
+        let run = |mitigate: bool, replan: bool| {
+            let mut spec = demo_spec(ParallelConfig::new(8, 2, 2), 51);
+            spec.jitter = 0.0;
+            spec.spike_p = 0.0;
+            let mut sim = TrainingSim::new(spec);
+            let ideal = sim.ideal_iter_s;
+            sim.inject(vec![congestion_event(ideal * 20.0, 600)]);
+            let mut cfg = FalconConfig::default();
+            cfg.mitigate = mitigate;
+            cfg.defer_heavy = true;
+            cfg.replan = replan;
+            cfg.overheads.adjust_topology_s = 10.0;
+            cfg.overheads.replan_s = 30.0;
+            cfg.overheads.ckpt_restart_s = 50_000.0;
+            cfg.replan_pause = from_secs(30.0);
+            let mut falcon = Falcon::new(cfg);
+            for _ in 0..400 {
+                let obs = sim.step();
+                falcon.on_iteration(&mut sim, obs.iter, obs.duration_s());
+                if let Some(req) = falcon.take_request() {
+                    falcon.note_grant(&mut sim, req, false); // pool exhausted
+                }
+            }
+            (falcon, sim.timeline.mean_throughput(), ideal)
+        };
+        let (off, thpt_off, ideal) = run(false, false);
+        let (s5, thpt_s5, _) = run(true, true);
+        assert_eq!(off.restarts(), 0);
+        assert_eq!(s5.restarts(), 0, "denied S4 must not restart");
+        let applied = s5.applied_strategies();
+        assert!(applied.contains(&Strategy::ReplanParallelism), "{applied:?}");
+        assert!(
+            s5.actions.iter().any(|a| matches!(a.what, ActionKind::Denied(_, _))),
+            "the dead end must be on record"
+        );
+        assert!(
+            !s5.actions.iter().any(|a| matches!(a.what, ActionKind::Granted(_))),
+            "no grants in a saturated pool"
+        );
+        // Recover at least 40% of the slowdown relative to the healthy rate.
+        let healthy = 1.0 / ideal;
+        let recovery = (thpt_s5 - thpt_off) / (healthy - thpt_off);
+        assert!(recovery >= 0.40, "recovered {recovery:.2} ({thpt_off} -> {thpt_s5}, healthy {healthy})");
+    }
+
+    #[test]
+    fn s5_reverts_to_nominal_layout_after_heal() {
+        let mut spec = demo_spec(ParallelConfig::new(8, 2, 2), 53);
+        spec.jitter = 0.0;
+        spec.spike_p = 0.0;
+        let mut sim = TrainingSim::new(spec);
+        let ideal = sim.ideal_iter_s;
+        // Finite congestion: S5 enters via the ski-rental ladder, then the
+        // fault heals and the nominal layout must come back bit-identical.
+        sim.inject(vec![FailSlowEvent {
+            kind: FailSlowKind::NetworkCongestion,
+            target: Target::Link(0, 1),
+            start: from_secs(ideal * 20.0),
+            duration: from_secs(ideal * 150.0),
+            scale: 0.15,
+        }]);
+        let nominal_map = sim.grid.node_map.clone();
+        let nominal_alloc = sim.microbatch_alloc.clone();
+        let mut cfg = FalconConfig::default();
+        cfg.replan = true;
+        // S3 priced out so the grid is only ever permuted by S5; S4 priced
+        // out so no restart resets the comparison.
+        cfg.overheads.adjust_topology_s = 5_000.0;
+        cfg.overheads.replan_s = 20.0;
+        cfg.overheads.ckpt_restart_s = 500_000.0;
+        cfg.replan_pause = from_secs(20.0);
+        let falcon = run_with_falcon(&mut sim, cfg, 500);
+        let applied = falcon.applied_strategies();
+        assert!(applied.contains(&Strategy::ReplanParallelism), "{applied:?}");
+        assert_eq!(falcon.restarts(), 0);
+        assert_eq!(sim.grid.node_map, nominal_map, "swap not unwound after heal");
+        assert_eq!(sim.microbatch_alloc, nominal_alloc, "alloc not evened after heal");
+    }
+
+    #[test]
+    fn denied_streak_surfaces_in_action_log() {
+        // Uniform node-wide contention: S5 has nothing to rebalance, so the
+        // episode persists and escalation keeps filing requests. Each
+        // consecutive denial must carry its 1-based streak count.
+        let mut sim = TrainingSim::new(demo_spec(ParallelConfig::new(1, 4, 1), 57));
+        let onset = sim.ideal_iter_s * 20.0;
+        sim.inject(vec![FailSlowEvent {
+            kind: FailSlowKind::CpuContention,
+            target: Target::Node(0),
+            start: from_secs(onset),
+            duration: 100_000 * MINUTE,
+            scale: 0.5,
+        }]);
+        let mut cfg = FalconConfig::default();
+        cfg.defer_heavy = true;
+        cfg.replan = true;
+        cfg.overheads.adjust_microbatch_s = 2.0;
+        cfg.overheads.adjust_topology_s = 10.0;
+        cfg.overheads.replan_s = 30.0;
+        cfg.overheads.ckpt_restart_s = 100.0;
+        let mut falcon = Falcon::new(cfg);
+        for _ in 0..300 {
+            let obs = sim.step();
+            falcon.on_iteration(&mut sim, obs.iter, obs.duration_s());
+            if let Some(req) = falcon.take_request() {
+                falcon.note_grant(&mut sim, req, false);
+            }
+        }
+        assert_eq!(falcon.restarts(), 0, "denied S4 must not restart");
+        let denied: Vec<(Strategy, usize)> = falcon
+            .actions
+            .iter()
+            .filter_map(|a| match a.what {
+                ActionKind::Denied(s, n) => Some((s, n)),
+                _ => None,
+            })
+            .collect();
+        assert!(denied.contains(&(Strategy::AdjustTopology, 1)), "{denied:?}");
+        assert!(denied.contains(&(Strategy::CkptRestart, 2)), "{denied:?}");
+        // The dead-end fallback fired (even if the replan found no gain,
+        // the attempt is on the record).
+        assert!(falcon.applied_strategies().contains(&Strategy::ReplanParallelism));
     }
 }

@@ -1134,6 +1134,7 @@ mod tests {
         cfg.falcon.overheads = Overheads {
             adjust_microbatch_s: 0.5,
             adjust_topology_s: 2.0,
+            replan_s: 4.0,
             ckpt_restart_s: 10.0,
         };
         cfg.falcon.topology_pause = from_secs(5.0);
@@ -1221,6 +1222,31 @@ mod tests {
         assert_eq!(digests[0], digests[1], "1 vs 4 workers");
         assert_eq!(digests[1], digests[2], "4 vs 8 workers");
         assert!(requests > 0, "scenario never exercised the arbiter");
+    }
+
+    #[test]
+    fn shared_digest_identical_across_workers_with_replan() {
+        // S5 enabled on an exhausted pool: every denial triggers the
+        // in-allocation replan fallback, and the whole campaign must stay
+        // bit-identical across worker counts (plans, merges, and reverts
+        // are all RNG-free and sharding-independent).
+        let mut cfg = shared_cfg();
+        cfg.falcon.replan = true;
+        cfg.falcon.replan_pause = from_secs(5.0);
+        cfg.spare_frac = 0.0;
+        cfg.failslow_boost = 25.0;
+        let mut digests = Vec::new();
+        let mut denied = 0;
+        for w in [1usize, 4, 8] {
+            let mut c = cfg.clone();
+            c.workers = w;
+            let r = run_fleet(&c);
+            denied = r.cluster.as_ref().map_or(0, |c| c.s3_denied);
+            digests.push(r.digest());
+        }
+        assert_eq!(digests[0], digests[1], "1 vs 4 workers");
+        assert_eq!(digests[1], digests[2], "4 vs 8 workers");
+        assert!(denied > 0, "exhausted pool produced no denials to fall back from");
     }
 
     #[test]

@@ -11,7 +11,7 @@
 //! train [--preset tiny|small|base] [--dp D] [--steps N] [--inject true]
 //!     Live data-parallel training through the AOT PJRT artifacts with
 //!     FALCON detection + mitigation in the loop.
-//! run <file|name> [--iters N] [--seed S] [--json true]
+//! run <file|name> [--iters N] [--seed S] [--replan true] [--json true]
 //!     Execute a declarative scenario: either a built-in library name
 //!     (`falcon scenarios` lists them) or a TOML spec file (format:
 //!     docs/SCENARIOS.md). Prints the structured Outcome as ASCII, or as
@@ -161,6 +161,9 @@ fn load_spec(args: &Args, usage: &str) -> Option<ScenarioSpec> {
     if args.has("mitigate") {
         spec = spec.mitigate(args.bool_or("mitigate", spec.run.mitigate));
     }
+    if args.has("replan") {
+        spec = spec.replan(args.bool_or("replan", spec.run.replan));
+    }
     Some(spec)
 }
 
@@ -250,7 +253,7 @@ fn run_whatif(args: &Args) {
             None => (v, 0.5),
         };
         let Some(strategy) = parse_strategy(s) else {
-            eprintln!("--force wants S1|S2|S3|S4[@frac], got '{v}'");
+            eprintln!("--force wants S1|S2|S3|S4|S5[@frac], got '{v}'");
             return;
         };
         edits.push(Edit::ForceLevel { strategy, at_frac: at });
@@ -393,7 +396,7 @@ fn run_whatif(args: &Args) {
     }
 }
 
-/// Parse a mitigation-level token (`S1`..`S4`, case-insensitive).
+/// Parse a mitigation-level token (`S1`..`S5`, case-insensitive).
 fn parse_strategy(s: &str) -> Option<falcon::mitigate::Strategy> {
     use falcon::mitigate::Strategy;
     match s.to_ascii_lowercase().as_str() {
@@ -401,6 +404,7 @@ fn parse_strategy(s: &str) -> Option<falcon::mitigate::Strategy> {
         "s2" | "microbatch" => Some(Strategy::AdjustMicrobatch),
         "s3" | "topology" => Some(Strategy::AdjustTopology),
         "s4" | "restart" => Some(Strategy::CkptRestart),
+        "s5" | "replan" => Some(Strategy::ReplanParallelism),
         _ => None,
     }
 }
@@ -416,7 +420,8 @@ fn run_sim(args: &Args) {
     )
     .iters(args.usize_or("iters", 300))
     .seed(args.u64_or("seed", 1))
-    .mitigate(args.bool_or("mitigate", true));
+    .mitigate(args.bool_or("mitigate", true))
+    .replan(args.bool_or("replan", false));
     spec = match args.get("inject") {
         Some("gpu") => spec.fault(FaultSpec::new(
             FailSlowKind::GpuDegradation,

@@ -4,12 +4,16 @@
 //! `microbatch` solves Eq. 1 exactly (S2); `topology` plans node swaps for
 //! congestion reassignment and straggler consolidation (S3); S4 uses
 //! `crate::ckpt` for its cost and `TrainingSim::restart` / the live
-//! trainer's reload path for its effect.
+//! trainer's reload path for its effect. `replan` adds the beyond-paper S5
+//! malleable-parallelism tier — graceful, reversible degradation within
+//! the existing allocation when the healthy-node pool is exhausted.
 
 pub mod microbatch;
 pub mod planner;
+pub mod replan;
 pub mod topology;
 
 pub use microbatch::{solve as solve_microbatch, Allocation};
-pub use planner::{find_strategies, MitigationPlanner, Overheads, Strategy};
+pub use planner::{find_strategies, find_strategies_with_replan, MitigationPlanner, Overheads, Strategy};
+pub use replan::{plan as plan_replan, resplit, ReplanPlan};
 pub use topology::{plan as plan_topology, TopologyPlan};

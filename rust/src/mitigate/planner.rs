@@ -19,6 +19,12 @@ pub enum Strategy {
     AdjustTopology,
     /// S4 — checkpoint and restart on healthy nodes.
     CkptRestart,
+    /// S5 — re-plan the parallelization itself (beyond the paper;
+    /// Malleus-style): stage migration within the existing allocation plus
+    /// an asymmetric micro-batch re-split. Needs no cluster grant, so it is
+    /// the graceful-degradation fallback when the healthy-node pool is
+    /// exhausted and S3/S4 grants are denied.
+    ReplanParallelism,
 }
 
 impl Strategy {
@@ -28,16 +34,20 @@ impl Strategy {
             Strategy::AdjustMicrobatch => "S2:AdjustMicrobatch",
             Strategy::AdjustTopology => "S3:AdjustTopology",
             Strategy::CkptRestart => "S4:CkptRestart",
+            Strategy::ReplanParallelism => "S5:ReplanParallelism",
         }
     }
 
     /// Whether the strategy can help the given root cause (Table 3):
-    /// micro-batch adjustment cannot fix a congested link.
+    /// micro-batch adjustment cannot fix a congested link. S5 re-plans
+    /// around both slow compute (re-split) and slow links (migration).
     pub fn effective_against(self, kind: FailSlowKind) -> bool {
         match self {
             Strategy::Ignore => true,
             Strategy::AdjustMicrobatch => kind.is_compute(),
-            Strategy::AdjustTopology | Strategy::CkptRestart => true,
+            Strategy::AdjustTopology
+            | Strategy::CkptRestart
+            | Strategy::ReplanParallelism => true,
         }
     }
 }
@@ -50,6 +60,10 @@ pub struct Overheads {
     pub adjust_microbatch_s: f64,
     pub adjust_topology_s: f64,
     pub ckpt_restart_s: f64,
+    /// S5 pause: dump to memory, migrate the affected stages within the
+    /// existing allocation, re-split, restore — a few minutes, between S3's
+    /// sub-minute pause and S4's full checkpoint-restart.
+    pub replan_s: f64,
 }
 
 impl Default for Overheads {
@@ -58,6 +72,7 @@ impl Default for Overheads {
             adjust_microbatch_s: 2.0,
             adjust_topology_s: 45.0,
             ckpt_restart_s: 20.0 * 60.0,
+            replan_s: 3.0 * 60.0,
         }
     }
 }
@@ -69,6 +84,7 @@ impl Overheads {
             Strategy::AdjustMicrobatch => self.adjust_microbatch_s,
             Strategy::AdjustTopology => self.adjust_topology_s,
             Strategy::CkptRestart => self.ckpt_restart_s,
+            Strategy::ReplanParallelism => self.replan_s,
         }
     }
 }
@@ -81,6 +97,25 @@ pub fn find_strategies(kind: FailSlowKind, ov: &Overheads) -> Vec<Strategy> {
         Strategy::AdjustMicrobatch,
         Strategy::AdjustTopology,
         Strategy::CkptRestart,
+    ]
+    .into_iter()
+    .filter(|s| s.effective_against(kind))
+    .collect();
+    cands.sort_by(|a, b| ov.of(*a).total_cmp(&ov.of(*b)));
+    cands
+}
+
+/// FindStrategies over the five-tier ladder including the S5 malleable
+/// tier (enabled by `FalconConfig::replan`): same applicability filter,
+/// same overhead sort. With default overheads S5 slots between S3's
+/// sub-minute pause and S4's full restart.
+pub fn find_strategies_with_replan(kind: FailSlowKind, ov: &Overheads) -> Vec<Strategy> {
+    let mut cands: Vec<Strategy> = [
+        Strategy::Ignore,
+        Strategy::AdjustMicrobatch,
+        Strategy::AdjustTopology,
+        Strategy::CkptRestart,
+        Strategy::ReplanParallelism,
     ]
     .into_iter()
     .filter(|s| s.effective_against(kind))
@@ -105,6 +140,11 @@ pub struct MitigationPlanner {
     /// strategy helped: the accumulated impact keeps growing untouched, so
     /// the next level still fires once its own overhead is matched.
     pub denied: Vec<Strategy>,
+    /// Consecutive denials in this episode with no grant in between — the
+    /// dead-end hysteresis S5 entry keys off (a streak means the pool is
+    /// *exhausted*, not merely momentarily busy). A grant or a reset
+    /// clears it.
+    denied_streak: usize,
 }
 
 impl MitigationPlanner {
@@ -116,16 +156,46 @@ impl MitigationPlanner {
             impact_s: 0.0,
             applied: Vec::new(),
             denied: Vec::new(),
+            denied_streak: 0,
+        }
+    }
+
+    /// Like [`MitigationPlanner::new`] but escalating over the five-tier
+    /// ladder: the S5 malleable-parallelism tier joins at its own overhead
+    /// slot, so a persistent episode reaches it even when no grant is ever
+    /// denied (e.g. the arbiter simply queues forever).
+    pub fn with_replan(kind: FailSlowKind, overheads: Overheads) -> Self {
+        MitigationPlanner {
+            candidates: find_strategies_with_replan(kind, &overheads),
+            overheads,
+            id: 0,
+            impact_s: 0.0,
+            applied: Vec::new(),
+            denied: Vec::new(),
+            denied_streak: 0,
         }
     }
 
     /// Record that a shared cluster denied `strategy`'s resource grant.
     /// The planner's escalation cursor already moved past it when the
-    /// request fired, so the only effect is bookkeeping — but making the
-    /// denial explicit lets callers assert that a saturated pool forces
-    /// S3 to be skipped and S4 reached on impact alone.
+    /// request fired, so escalation-wise this is bookkeeping — but the
+    /// denial list lets callers assert that a saturated pool forces S3 to
+    /// be skipped, and the consecutive-denial streak is the deterministic
+    /// signal the S5 dead-end fallback keys off.
     pub fn on_denied(&mut self, strategy: Strategy) {
         self.denied.push(strategy);
+        self.denied_streak += 1;
+    }
+
+    /// A grant came through after all: the pool is not exhausted, so the
+    /// dead-end streak resets (the denial *history* is kept).
+    pub fn on_granted(&mut self) {
+        self.denied_streak = 0;
+    }
+
+    /// Consecutive denials with no grant in between (this episode).
+    pub fn denied_streak(&self) -> usize {
+        self.denied_streak
     }
 
     /// Account one slow iteration (Algorithm 1, lines 9–11) and decide
@@ -158,6 +228,7 @@ impl MitigationPlanner {
         self.impact_s = 0.0;
         self.applied.clear();
         self.denied.clear();
+        self.denied_streak = 0;
     }
 }
 
@@ -204,8 +275,12 @@ mod tests {
 
     #[test]
     fn escalates_as_impact_accumulates() {
-        let ov =
-            Overheads { adjust_microbatch_s: 2.0, adjust_topology_s: 40.0, ckpt_restart_s: 300.0 };
+        let ov = Overheads {
+            adjust_microbatch_s: 2.0,
+            adjust_topology_s: 40.0,
+            ckpt_restart_s: 300.0,
+            replan_s: 150.0,
+        };
         let mut p = MitigationPlanner::new(FailSlowKind::GpuDegradation, ov);
         let mut seen = Vec::new();
         // 1 s of excess per slow iteration.
@@ -242,6 +317,7 @@ mod tests {
             adjust_microbatch_s: 10.0,
             adjust_topology_s: 100.0,
             ckpt_restart_s: 1000.0,
+            replan_s: 300.0,
         };
         for dur in [5usize, 50, 500, 5000] {
             let mut p = MitigationPlanner::new(FailSlowKind::GpuDegradation, ov);
@@ -268,6 +344,7 @@ mod tests {
             adjust_microbatch_s: 2.0,
             adjust_topology_s: 40.0,
             ckpt_restart_s: 300.0,
+            replan_s: 150.0,
         };
         let mut p = MitigationPlanner::new(FailSlowKind::GpuDegradation, ov);
         let mut seen = Vec::new();
@@ -300,5 +377,77 @@ mod tests {
         assert_eq!(p.impact_s(), 0.0);
         assert!(p.applied.is_empty());
         assert_eq!(p.on_slow_iter(3.0, 1.0), Some(Strategy::Ignore));
+    }
+
+    #[test]
+    fn replan_ladder_slots_s5_between_s3_and_s4() {
+        let ov = Overheads::default();
+        let s = find_strategies_with_replan(FailSlowKind::GpuDegradation, &ov);
+        assert_eq!(
+            s,
+            vec![
+                Strategy::Ignore,
+                Strategy::AdjustMicrobatch,
+                Strategy::AdjustTopology,
+                Strategy::ReplanParallelism,
+                Strategy::CkptRestart
+            ]
+        );
+        // S5 re-plans around slow links too, unlike S2 (Table 3).
+        let c = find_strategies_with_replan(FailSlowKind::NetworkCongestion, &ov);
+        assert!(!c.contains(&Strategy::AdjustMicrobatch));
+        assert!(c.contains(&Strategy::ReplanParallelism));
+        // The four-tier ladder is untouched by the new tier.
+        assert_eq!(find_strategies(FailSlowKind::GpuDegradation, &ov).len(), 4);
+    }
+
+    #[test]
+    fn with_replan_escalation_reaches_s5_before_s4() {
+        let ov = Overheads {
+            adjust_microbatch_s: 2.0,
+            adjust_topology_s: 40.0,
+            ckpt_restart_s: 300.0,
+            replan_s: 150.0,
+        };
+        let mut p = MitigationPlanner::with_replan(FailSlowKind::GpuDegradation, ov);
+        let mut seen = Vec::new();
+        for _ in 0..400 {
+            if let Some(s) = p.on_slow_iter(2.0, 1.0) {
+                seen.push((s, p.impact_s()));
+            }
+        }
+        let order: Vec<Strategy> = seen.iter().map(|&(s, _)| s).collect();
+        assert_eq!(
+            order,
+            vec![
+                Strategy::Ignore,
+                Strategy::AdjustMicrobatch,
+                Strategy::AdjustTopology,
+                Strategy::ReplanParallelism,
+                Strategy::CkptRestart
+            ]
+        );
+        // Ski-rental holds for the inserted tier as well.
+        for &(s, at) in &seen {
+            assert!(at >= ov.of(s), "{s:?} fired early at {at}");
+            assert!(at <= ov.of(s) + 2.0, "{s:?} fired late at {at}");
+        }
+    }
+
+    #[test]
+    fn denied_streak_counts_consecutive_denials_only() {
+        let mut p = MitigationPlanner::with_replan(FailSlowKind::GpuDegradation, Overheads::default());
+        assert_eq!(p.denied_streak(), 0);
+        p.on_denied(Strategy::AdjustTopology);
+        p.on_denied(Strategy::CkptRestart);
+        assert_eq!(p.denied_streak(), 2);
+        p.on_granted(); // pool freed up after all
+        assert_eq!(p.denied_streak(), 0, "a grant breaks the streak");
+        assert_eq!(p.denied.len(), 2, "the denial history is kept");
+        p.on_denied(Strategy::AdjustTopology);
+        assert_eq!(p.denied_streak(), 1);
+        p.reset();
+        assert_eq!(p.denied_streak(), 0);
+        assert!(p.denied.is_empty());
     }
 }

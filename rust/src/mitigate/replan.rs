@@ -1,0 +1,531 @@
+//! S5 — malleable-parallelism re-planning (beyond the paper; the
+//! Malleus-style fallback for an exhausted healthy-node pool).
+//!
+//! The S1–S4 ladder dead-ends when the shared cluster has no spares: the
+//! arbiter denies every S3/S4 grant and the job just eats the slowdown
+//! until a node frees up. S5 converts that dead end into bounded,
+//! *reversible* degradation using only resources the job already owns:
+//!
+//! 1. **Stage migration within the existing allocation** — logical-node
+//!    swaps move pipeline stages off degraded nodes (and heavy DP rings off
+//!    congested links) without asking the arbiter for replacement hardware.
+//! 2. **Asymmetric micro-batch re-split** — [`resplit`] generalizes
+//!    `mitigate/microbatch::solve` (Eq. 1) to replicas with unequal fixed
+//!    offsets (the pipeline fill/drain each replica pays under the migrated
+//!    layout): minimize max_i (fixed_i + m_i·t_i) subject to Σ m_i = M.
+//!
+//! The two are solved *jointly*: every candidate swap is scored with its
+//! own re-solved split through the simulator's noise-free iteration-time
+//! estimate, so any improvement the plan claims is real under the current
+//! health picture. The plan is fully reversible — [`revert`] restores the
+//! nominal node map (swaps are involutions, undone LIFO) and the
+//! construction-time even split bit-for-bit — because S5 is a degradation
+//! *mode* the job enters while the pool is exhausted and exits on heal.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use crate::mitigate::microbatch::{self, Allocation};
+use crate::sim::TrainingSim;
+use crate::simkit::Time;
+
+/// Minimum relative gain before a candidate swap is worth keeping and
+/// before the executor considers the plan worth its pause at all.
+const MIN_GAIN: f64 = 1e-3;
+
+/// A malleable re-plan: node swaps (stage migration within the existing
+/// allocation) plus the asymmetric micro-batch split solved for the
+/// migrated layout.
+#[derive(Clone, Debug)]
+pub struct ReplanPlan {
+    /// Logical-node swaps, in application order.
+    pub swaps: Vec<(usize, usize)>,
+    /// Per-replica micro-batch shares under the re-planned layout.
+    pub alloc: Vec<usize>,
+    pub predicted_iter_s: f64,
+    pub baseline_iter_s: f64,
+}
+
+impl ReplanPlan {
+    /// Predicted relative improvement vs leaving the layout alone.
+    pub fn improvement(&self) -> f64 {
+        if self.baseline_iter_s <= 0.0 {
+            return 0.0;
+        }
+        1.0 - self.predicted_iter_s / self.baseline_iter_s
+    }
+
+    /// Whether applying the plan would recover enough to justify its pause.
+    pub fn is_worthwhile(&self) -> bool {
+        self.improvement() > MIN_GAIN
+    }
+
+    /// Fold a later re-plan (computed from the already-replanned state) into
+    /// this one so a single [`revert`] unwinds both: swaps concatenate (the
+    /// LIFO undo stays exact), the split and prediction come from the later
+    /// plan, the baseline from the first.
+    pub fn merge(self, later: ReplanPlan) -> ReplanPlan {
+        let mut swaps = self.swaps;
+        swaps.extend(later.swaps);
+        ReplanPlan {
+            swaps,
+            alloc: later.alloc,
+            predicted_iter_s: later.predicted_iter_s,
+            baseline_iter_s: self.baseline_iter_s,
+        }
+    }
+}
+
+/// Generalized Eq. 1 for asymmetric replicas: minimize
+/// max_i (fixed_i + m_i·t_i) subject to Σ m_i = M and m_i >= 1, where
+/// `fixed[i]` is replica i's per-iteration offset (pipeline fill/drain
+/// under a migrated stage layout) and `times[i]` its per-micro-batch time.
+/// With all offsets zero this reduces exactly — same greedy, same
+/// tie-breaking — to `microbatch::solve`.
+///
+/// The greedy that hands the next micro-batch to the replica whose
+/// completion time stays smallest is optimal here too: each replica's
+/// completion is a separable increasing linear function of its share, so
+/// the classic exchange argument carries over unchanged (pinned against a
+/// brute-force oracle below).
+///
+/// Degenerate profiles are clamped, never crashed on: non-finite times or
+/// offsets read as a large suspect sentinel (load sheds away), non-positive
+/// times as a small epsilon, negative offsets as zero. When `total` is
+/// smaller than the replica count the m_i >= 1 constraint is unsatisfiable
+/// and the scarce micro-batches go to the earliest-finishing replicas.
+pub fn resplit(times: &[f64], fixed: &[f64], total: usize) -> Allocation {
+    let d = times.len();
+    if d == 0 || fixed.len() != d {
+        return Allocation { m: Vec::new(), makespan: 0.0 };
+    }
+    const T_EPS: f64 = 1e-9;
+    const T_SUSPECT: f64 = 1e6;
+    let times: Vec<f64> = times
+        .iter()
+        .map(|&t| {
+            if !t.is_finite() {
+                T_SUSPECT
+            } else if t <= 0.0 {
+                T_EPS
+            } else {
+                t
+            }
+        })
+        .collect();
+    let fixed: Vec<f64> = fixed
+        .iter()
+        .map(|&f| {
+            if !f.is_finite() {
+                T_SUSPECT
+            } else if f < 0.0 {
+                0.0
+            } else {
+                f
+            }
+        })
+        .collect();
+
+    let completion = |m: &[usize]| -> f64 {
+        m.iter()
+            .enumerate()
+            .map(|(i, &mi)| if mi == 0 { 0.0 } else { fixed[i] + mi as f64 * times[i] })
+            .fold(0.0, f64::max)
+    };
+
+    if total < d {
+        // One micro-batch each to the replicas that finish a single
+        // micro-batch soonest (offset included).
+        let mut order: Vec<usize> = (0..d).collect();
+        order.sort_by(|&a, &b| {
+            (fixed[a] + times[a]).total_cmp(&(fixed[b] + times[b])).then(a.cmp(&b))
+        });
+        let mut m = vec![0usize; d];
+        for &i in order.iter().take(total) {
+            m[i] = 1;
+        }
+        let makespan = completion(&m);
+        return Allocation { m, makespan };
+    }
+
+    // Min-heap on (completion time if given one more, index).
+    #[derive(PartialEq)]
+    struct Slot(f64, usize);
+    impl Eq for Slot {}
+    impl PartialOrd for Slot {
+        fn partial_cmp(&self, o: &Self) -> Option<std::cmp::Ordering> {
+            Some(self.cmp(o))
+        }
+    }
+    impl Ord for Slot {
+        fn cmp(&self, o: &Self) -> std::cmp::Ordering {
+            self.0.total_cmp(&o.0).then(self.1.cmp(&o.1))
+        }
+    }
+
+    let mut m = vec![1usize; d];
+    let mut heap: BinaryHeap<Reverse<Slot>> = (0..d)
+        .map(|i| Reverse(Slot(fixed[i] + 2.0 * times[i], i))) // completion if given a 2nd
+        .collect();
+    let mut left = total - d;
+    while left > 0 {
+        // The heap always holds exactly d slots (every pop is followed by a
+        // push), so the else arm is unreachable — kept as a graceful exit
+        // rather than an unwrap.
+        let Some(Reverse(Slot(_, i))) = heap.pop() else { break };
+        m[i] += 1;
+        left -= 1;
+        heap.push(Reverse(Slot(fixed[i] + (m[i] + 1) as f64 * times[i], i)));
+    }
+    let makespan = completion(&m);
+    Allocation { m, makespan }
+}
+
+/// Best micro-batch split for the *current* grid layout, by the simulator's
+/// own noise-free estimate: the asymmetric re-split (pipeline fill modeled
+/// as (pp-1)·t_i per replica), the flat Eq. 1 solve, and the incumbent
+/// split compete; ties keep the incumbent, so a no-change layout scores
+/// exactly its current estimate and the plan's predicted improvement can
+/// never be negative.
+fn best_split(sim: &mut TrainingSim, total: usize) -> (f64, Vec<usize>) {
+    let dp = sim.spec.cfg.dp;
+    let pp = sim.spec.cfg.pp;
+    let times = sim.replica_microbatch_times();
+    let fill: Vec<f64> = times.iter().map(|&t| (pp as f64 - 1.0) * t).collect();
+    let incumbent = sim.microbatch_alloc.clone();
+    let candidates = [
+        incumbent.clone(),
+        resplit(&times, &fill, total).m,
+        microbatch::solve(&times, total).m,
+    ];
+    let mut best_t = f64::INFINITY;
+    let mut best_m = incumbent.clone();
+    for cand in candidates {
+        if cand.len() != dp || cand.iter().sum::<usize>() != total {
+            continue;
+        }
+        sim.set_microbatch_alloc(cand.clone());
+        let t = sim.estimate_iter_time_s();
+        if t < best_t {
+            best_t = t;
+            best_m = cand;
+        }
+    }
+    sim.set_microbatch_alloc(incumbent);
+    (best_t, best_m)
+}
+
+/// Joint greedy search: each round tries every logical-node pair, scoring
+/// the swapped layout *with its own re-solved micro-batch split*, keeps the
+/// best pair that improves the running best by more than [`MIN_GAIN`], and
+/// repeats up to `max_swaps` rounds. The sim is restored exactly before
+/// returning — planning only; [`apply`] charges the pause.
+pub fn plan(sim: &mut TrainingSim, max_swaps: usize) -> ReplanPlan {
+    let total = sim.spec.wl.microbatches * sim.spec.cfg.dp;
+    let baseline = sim.estimate_iter_time_s();
+    let (mut best_t, mut best_alloc) = best_split(sim, total);
+    let n = sim.grid.n_nodes();
+    let mut swaps: Vec<(usize, usize)> = Vec::new();
+
+    for _round in 0..max_swaps {
+        let mut round_best: Option<(usize, usize, f64, Vec<usize>)> = None;
+        for a in 0..n {
+            for b in a + 1..n {
+                sim.grid.swap_nodes(a, b);
+                let (t, alloc) = best_split(sim, total);
+                sim.grid.swap_nodes(a, b); // revert trial
+                if t < best_t * (1.0 - MIN_GAIN)
+                    && round_best.as_ref().map(|r| t < r.2).unwrap_or(true)
+                {
+                    round_best = Some((a, b, t, alloc));
+                }
+            }
+        }
+        match round_best {
+            Some((a, b, t, alloc)) => {
+                sim.grid.swap_nodes(a, b);
+                swaps.push((a, b));
+                best_t = t;
+                best_alloc = alloc;
+            }
+            None => break,
+        }
+    }
+    // Leave the grid as found (planning only).
+    for &(a, b) in swaps.iter().rev() {
+        sim.grid.swap_nodes(a, b);
+    }
+    ReplanPlan { swaps, alloc: best_alloc, predicted_iter_s: best_t, baseline_iter_s: baseline }
+}
+
+/// Enter the degradation mode: replay the swaps (each bumps the grid's
+/// placement generation, so the sim's memo layer invalidates exactly),
+/// install the asymmetric split, and charge the pause. A malformed split
+/// (wrong length or sum) is skipped rather than asserted on — the swaps
+/// alone still stand.
+pub fn apply(sim: &mut TrainingSim, plan: &ReplanPlan, pause: Time) {
+    for &(a, b) in &plan.swaps {
+        sim.grid.swap_nodes(a, b);
+    }
+    let total = sim.spec.wl.microbatches * sim.spec.cfg.dp;
+    if plan.alloc.len() == sim.spec.cfg.dp && plan.alloc.iter().sum::<usize>() == total {
+        sim.set_microbatch_alloc(plan.alloc.clone());
+    }
+    sim.now += pause;
+}
+
+/// Exit the degradation mode: undo the swaps in reverse order and restore
+/// the nominal even split. Bit-for-bit: swaps are involutions applied LIFO,
+/// and the split equals the construction-time `even_alloc`.
+pub fn revert(sim: &mut TrainingSim, plan: &ReplanPlan) {
+    for &(a, b) in plan.swaps.iter().rev() {
+        sim.grid.swap_nodes(a, b);
+    }
+    let total = sim.spec.wl.microbatches * sim.spec.cfg.dp;
+    sim.set_microbatch_alloc(crate::sim::even_alloc(total, sim.spec.cfg.dp));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::inject::{FailSlowEvent, FailSlowKind, Target};
+    use crate::pipeline::ParallelConfig;
+    use crate::sim::{demo_spec, even_alloc, TrainingSim};
+    use crate::simkit::{MINUTE, SEC};
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    /// Brute-force oracle: best makespan over all compositions m_i >= 1.
+    fn resplit_brute(times: &[f64], fixed: &[f64], total: usize) -> f64 {
+        fn rec(
+            i: usize,
+            remaining: usize,
+            m: &mut Vec<usize>,
+            times: &[f64],
+            fixed: &[f64],
+            best: &mut f64,
+        ) {
+            let d = times.len();
+            if i == d - 1 {
+                m[i] = 1 + remaining;
+                let makespan = m
+                    .iter()
+                    .enumerate()
+                    .map(|(j, &mj)| fixed[j] + mj as f64 * times[j])
+                    .fold(0.0, f64::max);
+                if makespan < *best {
+                    *best = makespan;
+                }
+                return;
+            }
+            for extra in 0..=remaining {
+                m[i] = 1 + extra;
+                rec(i + 1, remaining - extra, m, times, fixed, best);
+            }
+        }
+        let mut m = vec![1usize; times.len()];
+        let mut best = f64::INFINITY;
+        rec(0, total - times.len(), &mut m, times, fixed, &mut best);
+        best
+    }
+
+    fn congested_sim(seed: u64) -> TrainingSim {
+        // Fig 10's layout: 4 nodes, stage-0 DP traffic crosses the 0-1
+        // path; congesting it is exactly the case a denied S3 leaves behind.
+        let mut spec = demo_spec(ParallelConfig::new(8, 2, 2), seed);
+        spec.jitter = 0.0;
+        spec.spike_p = 0.0;
+        let mut sim = TrainingSim::new(spec);
+        sim.inject(vec![FailSlowEvent {
+            kind: FailSlowKind::NetworkCongestion,
+            target: Target::Link(0, 1),
+            start: 0,
+            duration: 600 * MINUTE,
+            scale: 0.15,
+        }]);
+        sim.step();
+        sim
+    }
+
+    #[test]
+    fn reduces_to_eq1_without_offsets() {
+        // fixed = 0 must reproduce microbatch::solve exactly — same greedy,
+        // same tie-breaking, bitwise makespan.
+        let times = [2.0, 1.0, 1.0, 0.7];
+        let a = resplit(&times, &[0.0; 4], 32);
+        let b = microbatch::solve(&times, 32);
+        assert_eq!(a.m, b.m);
+        assert_eq!(a.makespan.to_bits(), b.makespan.to_bits());
+    }
+
+    #[test]
+    fn matches_brute_force_with_offsets() {
+        prop::check(
+            "resplit-optimal",
+            0x5A1C0,
+            300,
+            |rng: &mut Rng| {
+                let d = 2 + rng.below(3) as usize;
+                let total = d + rng.below(11) as usize;
+                let times: Vec<f64> = (0..d).map(|_| 0.2 + rng.f64() * 3.0).collect();
+                let fixed: Vec<f64> = (0..d).map(|_| rng.f64() * 5.0).collect();
+                (times, fixed, total)
+            },
+            |(times, fixed, total)| {
+                let g = resplit(times, fixed, *total);
+                let b = resplit_brute(times, fixed, *total);
+                if (g.makespan - b).abs() < 1e-9 {
+                    Ok(())
+                } else {
+                    Err(format!("greedy {} vs brute {b}", g.makespan))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn conserves_batch_with_min_one() {
+        prop::check(
+            "resplit-sum",
+            11,
+            200,
+            |rng: &mut Rng| {
+                let d = 1 + rng.below(32) as usize;
+                let total = d + rng.below(128) as usize;
+                let times: Vec<f64> = (0..d).map(|_| 0.1 + rng.f64() * 4.0).collect();
+                let fixed: Vec<f64> = (0..d).map(|_| rng.f64() * 8.0).collect();
+                (times, fixed, total)
+            },
+            |(times, fixed, total)| {
+                let a = resplit(times, fixed, *total);
+                if a.m.iter().sum::<usize>() == *total && a.m.iter().all(|&m| m >= 1) {
+                    Ok(())
+                } else {
+                    Err(format!("bad allocation {:?}", a.m))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn high_offset_replica_sheds_load() {
+        // Replica 0 pays a heavy fixed fill (deep migrated stage): it must
+        // receive fewer micro-batches than an offset-free equal-speed peer.
+        let a = resplit(&[1.0, 1.0], &[6.0, 0.0], 16);
+        assert!(a.m[0] < a.m[1], "{:?}", a.m);
+        assert_eq!(a.m.iter().sum::<usize>(), 16);
+    }
+
+    #[test]
+    fn degenerate_inputs_clamped_not_crashed() {
+        let a = resplit(&[0.0, f64::NAN, 1.0], &[f64::INFINITY, -1.0, 0.5], 10);
+        assert_eq!(a.m.iter().sum::<usize>(), 10);
+        assert!(a.makespan.is_finite());
+        // Suspect entries (NaN time, inf offset) keep the mandatory minimum.
+        assert_eq!(a.m[1], 1, "{:?}", a.m);
+        let mismatched = resplit(&[1.0, 1.0], &[0.0], 8);
+        assert!(mismatched.m.is_empty());
+    }
+
+    #[test]
+    fn scarce_microbatches_go_to_earliest_finishers() {
+        // total < d: offsets count — replica 1 finishes one micro-batch at
+        // 2.0, replica 0 not before 6.0.
+        let a = resplit(&[1.0, 2.0], &[5.0, 0.0], 1);
+        assert_eq!(a.m, vec![0, 1]);
+    }
+
+    #[test]
+    fn congestion_replan_recovers_without_a_grant() {
+        let mut sim = congested_sim(7);
+        let p = plan(&mut sim, 2);
+        assert!(
+            p.improvement() > 0.05,
+            "replan must relieve congestion locally: {:?} improvement {}",
+            p.swaps,
+            p.improvement()
+        );
+        assert!(!p.swaps.is_empty(), "congestion relief needs stage migration");
+    }
+
+    #[test]
+    fn degraded_gpu_replan_shifts_load_on_single_node() {
+        // One node: no swaps possible, so the whole recovery must come from
+        // the asymmetric re-split.
+        let mut sim = TrainingSim::new(demo_spec(ParallelConfig::new(1, 4, 1), 19));
+        sim.inject(vec![FailSlowEvent {
+            kind: FailSlowKind::GpuDegradation,
+            target: Target::Gpu(0),
+            start: 0,
+            duration: 600 * MINUTE,
+            scale: 0.5,
+        }]);
+        sim.step();
+        let p = plan(&mut sim, 2);
+        assert!(p.swaps.is_empty(), "{:?}", p.swaps);
+        assert!(p.improvement() > 0.05, "improvement {}", p.improvement());
+        assert!(p.alloc[0] < p.alloc[1], "{:?}", p.alloc);
+    }
+
+    #[test]
+    fn healthy_sim_plans_nothing() {
+        let mut spec = demo_spec(ParallelConfig::new(8, 2, 2), 9);
+        spec.jitter = 0.0;
+        let mut sim = TrainingSim::new(spec);
+        sim.step();
+        let p = plan(&mut sim, 2);
+        assert!(p.swaps.is_empty(), "{:?}", p.swaps);
+        // Ties keep the incumbent split, so the prediction IS the baseline.
+        assert_eq!(p.predicted_iter_s.to_bits(), p.baseline_iter_s.to_bits());
+        assert!(!p.is_worthwhile());
+    }
+
+    #[test]
+    fn plan_does_not_mutate_sim() {
+        let mut sim = congested_sim(11);
+        let map_before = sim.grid.node_map.clone();
+        let alloc_before = sim.microbatch_alloc.clone();
+        let est_before = sim.estimate_iter_time_s();
+        let _ = plan(&mut sim, 2);
+        assert_eq!(sim.grid.node_map, map_before);
+        assert_eq!(sim.microbatch_alloc, alloc_before);
+        assert_eq!(sim.estimate_iter_time_s().to_bits(), est_before.to_bits());
+    }
+
+    #[test]
+    fn apply_then_revert_restores_nominal_layout_bitwise() {
+        let mut sim = congested_sim(13);
+        let nominal_map = sim.grid.node_map.clone();
+        let nominal_alloc =
+            even_alloc(sim.spec.wl.microbatches * sim.spec.cfg.dp, sim.spec.cfg.dp);
+        assert_eq!(sim.microbatch_alloc, nominal_alloc);
+        let degraded = sim.estimate_iter_time_s();
+
+        let p = plan(&mut sim, 2);
+        assert!(p.is_worthwhile());
+        let t0 = sim.now;
+        apply(&mut sim, &p, 30 * SEC);
+        assert_eq!(sim.now - t0, 30 * SEC, "apply charges exactly the pause");
+        assert_ne!(sim.grid.node_map, nominal_map, "stage migration happened");
+        let replanned = sim.estimate_iter_time_s();
+        assert!(replanned < degraded, "{replanned} vs {degraded}");
+
+        revert(&mut sim, &p);
+        assert_eq!(sim.grid.node_map, nominal_map, "node map restored bitwise");
+        assert_eq!(sim.microbatch_alloc, nominal_alloc, "even split restored");
+        assert_eq!(sim.estimate_iter_time_s().to_bits(), degraded.to_bits());
+    }
+
+    #[test]
+    fn merged_plans_revert_in_one_step() {
+        let mut sim = congested_sim(17);
+        let nominal_map = sim.grid.node_map.clone();
+        let first = plan(&mut sim, 1);
+        apply(&mut sim, &first, SEC);
+        let second = plan(&mut sim, 1);
+        apply(&mut sim, &second, SEC);
+        let merged = first.merge(second);
+        revert(&mut sim, &merged);
+        assert_eq!(sim.grid.node_map, nominal_map);
+    }
+}

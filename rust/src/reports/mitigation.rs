@@ -1,10 +1,11 @@
-//! Mitigation effectiveness experiments: Fig 13–17.
+//! Mitigation effectiveness experiments: Fig 13–17, plus the beyond-paper
+//! S5 malleable-parallelism demo (`replan`).
 
-use crate::coordinator::{run_with_falcon, FalconConfig};
+use crate::coordinator::{run_with_falcon, ActionKind, Falcon, FalconConfig};
 use crate::inject::{FailSlowEvent, FailSlowKind, Severity, Target};
-use crate::mitigate::microbatch;
+use crate::mitigate::{microbatch, Strategy};
 use crate::pipeline::{ModelDims, ParallelConfig, Workload};
-use crate::sim::{JobSpec, TrainingSim};
+use crate::sim::{demo_spec, JobSpec, TrainingSim};
 use crate::simkit::{from_secs, MINUTE};
 use crate::util::cli::Args;
 use crate::util::plot;
@@ -327,12 +328,123 @@ pub fn fig17(args: &Args) -> String {
     out
 }
 
+/// Beyond-paper — S5 malleable-parallelism replan under a saturated
+/// healthy-node pool. Every S3/S4 request the coordinator files is denied
+/// (no spares, no healthy restart target), so the only relief left is
+/// re-planning within the job's own allocation: in-place node swaps plus a
+/// non-uniform micro-batch re-split across the now-asymmetric replicas.
+/// Three arms share one fault script: mitigation off, the grant-denied
+/// ladder without S5, and the same dead end with S5 enabled.
+pub fn replan(args: &Args) -> String {
+    let iters = args.usize_or("iters", 400);
+    let run = |mitigate: bool, replan: bool| {
+        let mut spec = demo_spec(ParallelConfig::new(8, 2, 2), 51);
+        spec.jitter = 0.0;
+        spec.spike_p = 0.0;
+        let mut sim = TrainingSim::new(spec);
+        let ideal = sim.ideal_iter_s;
+        sim.inject(vec![FailSlowEvent {
+            kind: FailSlowKind::NetworkCongestion,
+            target: Target::Link(0, 1),
+            start: from_secs(ideal * 20.0),
+            duration: 600 * MINUTE,
+            scale: 0.15,
+        }]);
+        let mut fc = FalconConfig::default();
+        fc.mitigate = mitigate;
+        fc.defer_heavy = true;
+        fc.replan = replan;
+        fc.overheads.adjust_topology_s = 10.0;
+        fc.overheads.replan_s = 30.0;
+        fc.overheads.ckpt_restart_s = 50_000.0;
+        fc.replan_pause = from_secs(30.0);
+        let mut falcon = Falcon::new(fc);
+        for _ in 0..iters {
+            let obs = sim.step();
+            falcon.on_iteration(&mut sim, obs.iter, obs.duration_s());
+            if let Some(req) = falcon.take_request() {
+                falcon.note_grant(&mut sim, req, false); // pool exhausted
+            }
+        }
+        (sim, falcon)
+    };
+    let (sim_off, _) = run(false, false);
+    let (sim_s2, falcon_s2) = run(true, false);
+    let (sim_s5, falcon_s5) = run(true, true);
+
+    let mut out = String::from(
+        "S5 replan — graceful degradation with the healthy-node pool exhausted\n",
+    );
+    out.push_str(&plot::line_chart(
+        "throughput WITH S5 (iters/s)",
+        &sim_s5.timeline.xs_mins(),
+        &sim_s5.timeline.ys(),
+        64,
+        9,
+    ));
+    out.push_str(&plot::line_chart(
+        "throughput WITHOUT S5, grants denied (iters/s)",
+        &sim_s2.timeline.xs_mins(),
+        &sim_s2.timeline.ys(),
+        64,
+        9,
+    ));
+    let denials = |f: &Falcon| {
+        f.actions.iter().filter(|a| matches!(a.what, ActionKind::Denied(_, _))).count()
+    };
+    let replans = |f: &Falcon| {
+        f.applied_strategies()
+            .iter()
+            .filter(|&&s| s == Strategy::ReplanParallelism)
+            .count()
+    };
+    out.push_str(&format!(
+        "denials: {} without S5, {} with S5; S5 applications: {}\n",
+        denials(&falcon_s2),
+        denials(&falcon_s5),
+        replans(&falcon_s5),
+    ));
+    let healthy = 1.0 / sim_off.ideal_iter_s;
+    let t_off = sim_off.timeline.mean_throughput();
+    let t_s2 = sim_s2.timeline.mean_throughput();
+    let t_s5 = sim_s5.timeline.mean_throughput();
+    let recovery = |t: f64| 100.0 * (t - t_off) / (healthy - t_off).max(1e-12);
+    out.push_str(&format!(
+        "mean throughput: {t_off:.3} off, {t_s2:.3} denied ladder, {t_s5:.3} with S5 \
+         (healthy {healthy:.3})\n",
+    ));
+    out.push_str(&format!(
+        "slowdown recovered vs off: {:.1}% without S5, {:.1}% with S5 \
+         (target: >=40% with every grant denied)\n",
+        recovery(t_s2),
+        recovery(t_s5),
+    ));
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
     fn quick() -> Args {
         Args::parse(["--iters".to_string(), "40".into()])
+    }
+
+    #[test]
+    fn replan_report_recovers_under_denial() {
+        let out = replan(&Args::parse(["--iters".to_string(), "400".into()]));
+        let line = out.lines().find(|l| l.starts_with("slowdown recovered")).unwrap();
+        let with_s5: f64 = line
+            .split("without S5,")
+            .nth(1)
+            .unwrap()
+            .split('%')
+            .next()
+            .unwrap()
+            .trim()
+            .parse()
+            .unwrap();
+        assert!(with_s5 >= 40.0, "S5 recovery too low: {with_s5}%\n{out}");
     }
 
     #[test]

@@ -13,7 +13,10 @@
 //! - [`campaign`] — the §3 characterization campaign (Fig 1, Table 1).
 //! - [`cases`] — §3.2 case studies and monitor signatures (Fig 2–8, Tab 2).
 //! - [`detection`] — FALCON-DETECT accuracy (Fig 12, Tables 4–5).
-//! - [`mitigation`] — S2/S3 effectiveness and compound cases (Fig 13–17).
+//! - [`mitigation`] — S2/S3 effectiveness and compound cases (Fig 13–17),
+//!   plus the beyond-paper S5 malleable-parallelism demo (`replan` id):
+//!   every S3/S4 grant denied, relief from in-place swaps + an asymmetric
+//!   micro-batch re-split (see [`crate::mitigate::replan`]).
 //! - [`overhead`] — monitor/validation overhead (Fig 18–19, Table 6).
 //! - [`scale`] — scale sensitivity (Fig 20, Table 7).
 //! - [`fleet`] — beyond-paper fleet campaigns (`fleet`, `fleet_cluster`
@@ -51,7 +54,7 @@ pub const ALL: &[&str] = &[
 
 /// Beyond-paper report ids (kept out of [`ALL`] so `report all` stays the
 /// paper set; `falcon list` prints them under their own section).
-pub const BEYOND_PAPER: &[&str] = &["fleet", "fleet_cluster", "whatif", "diagnosis"];
+pub const BEYOND_PAPER: &[&str] = &["fleet", "fleet_cluster", "whatif", "diagnosis", "replan"];
 
 /// Generate one report by id. `args` supplies knobs like `--iters`,
 /// `--seed`, `--fast`.
@@ -85,6 +88,7 @@ pub fn generate(id: &str, args: &Args) -> String {
         "fleet_cluster" => fleet::fleet_cluster(args),
         "whatif" => whatif::whatif(args),
         "diagnosis" => diagnosis::diagnosis(args),
+        "replan" => mitigation::replan(args),
         other => format!(
             "unknown report '{other}'; available: {ALL:?} \
              plus beyond-paper: {BEYOND_PAPER:?}\n"

@@ -24,6 +24,8 @@ pub const LIBRARY: &[&str] = &[
     "multi-tenant-burst",
     "fleet-breathing",
     "noisy-neighbor",
+    "stage-straggler-persistent",
+    "no-spares-degradation",
 ];
 
 /// Build one library scenario by name (`None` for unknown names).
@@ -164,6 +166,30 @@ pub fn find(name: &str) -> Option<ScenarioSpec> {
                 epoch_len: 10,
                 stagger: 0.0,
             }),
+        // --- S5 malleable-parallelism scenarios --------------------------
+        "stage-straggler-persistent" => ScenarioSpec::new(name, 8, 2, 2)
+            .describe("one slow pipeline-stage node with spares exhausted; S5 replans in place")
+            .nodes(4)
+            .iters(400)
+            .seed(31)
+            .replan(true)
+            .fault(FaultSpec::new(Cpu, Target::Node(1), 0.15, 1.2, 0.5)),
+        "no-spares-degradation" => ScenarioSpec::new(name, 2, 4, 1)
+            .describe("saturated shared pool + persistent GPU degradation: every grant denied")
+            .iters(60)
+            .seed(32)
+            .replan(true)
+            .fault(FaultSpec::new(Gpu, Target::Gpu(0), 0.1, 1.5, 0.5).on_job(0))
+            .with_fleet(FleetSpec {
+                jobs: 8,
+                workers: 0,
+                boost: 4.0,
+                compare: false,
+                policy: Some(Policy::Packed),
+                spare: 0.0,
+                epoch_len: 10,
+                stagger: 0.0,
+            }),
         _ => return None,
     })
 }
@@ -186,7 +212,7 @@ mod tests {
             assert!(!spec.description.is_empty(), "{} has no description", spec.name);
             assert!(LIBRARY.contains(&spec.name.as_str()));
         }
-        assert_eq!(LIBRARY.len(), 15);
+        assert_eq!(LIBRARY.len(), 17);
         assert!(find("no-such-scenario").is_none());
     }
 

@@ -120,11 +120,16 @@ pub struct RunSpec {
     pub seed: u64,
     /// Run FALCON-MITIGATE (false = detection-only probe mode).
     pub mitigate: bool,
+    /// Enable the S5 malleable-parallelism tier (`mitigate::replan`):
+    /// ski-rental escalation gains the replan rung and denied grants fall
+    /// back to an in-allocation replan. Off by default — legacy scenarios
+    /// stay bit-identical.
+    pub replan: bool,
 }
 
 impl Default for RunSpec {
     fn default() -> Self {
-        RunSpec { iters: 300, seed: 1, mitigate: true }
+        RunSpec { iters: 300, seed: 1, mitigate: true, replan: false }
     }
 }
 
@@ -403,6 +408,11 @@ impl ScenarioSpec {
         self
     }
 
+    pub fn replan(mut self, b: bool) -> Self {
+        self.run.replan = b;
+        self
+    }
+
     pub fn fault(mut self, f: FaultSpec) -> Self {
         self.faults.push(f);
         self
@@ -582,6 +592,7 @@ impl ScenarioSpec {
     pub fn fleet_config(&self) -> Option<FleetConfig> {
         self.fleet.as_ref().map(|fs| {
             let mut cfg = fs.to_config(self.run.iters, self.run.seed);
+            cfg.falcon.replan = self.run.replan;
             for f in &self.faults {
                 // Validated specs always carry a job id here; tolerate an
                 // unvalidated caller by skipping the (invalid) fault
@@ -614,7 +625,11 @@ impl ScenarioSpec {
         let injected = sim.events.clone();
         let falcon = run_with_falcon(
             &mut sim,
-            FalconConfig { mitigate: self.run.mitigate, ..FalconConfig::default() },
+            FalconConfig {
+                mitigate: self.run.mitigate,
+                replan: self.run.replan,
+                ..FalconConfig::default()
+            },
             self.run.iters,
         );
         Ok(Outcome::from_single(self, &sim, &falcon, &injected))

@@ -5,6 +5,7 @@
 use crate::coordinator::{ActionKind, Falcon};
 use crate::fleet::{match_detection_latencies, FleetReport};
 use crate::inject::FailSlowEvent;
+use crate::mitigate::Strategy;
 use crate::sim::TrainingSim;
 use crate::util::json::Json;
 use crate::util::{plot, stats};
@@ -196,6 +197,9 @@ pub struct Outcome {
     pub detection_latency_s: Vec<f64>,
     /// Coordinator action log (empty for fleet scenarios).
     pub actions: Vec<OutcomeAction>,
+    /// Applied-mitigation tally per level, `[S1, S2, S3, S4, S5]` (empty
+    /// for fleet scenarios — the arbiter counters cover those).
+    pub applied_per_level: Vec<usize>,
     pub timeline_mins: Vec<f64>,
     pub timeline_thpt: Vec<f64>,
     /// Op-trace episode verdicts (hang-vs-slow taxonomy; empty for fleet
@@ -217,7 +221,18 @@ fn action_token(what: &ActionKind) -> String {
         ActionKind::Applied(s) => format!("applied:{}", s.name()),
         ActionKind::Requested(s) => format!("requested:{}", s.name()),
         ActionKind::Granted(s) => format!("granted:{}", s.name()),
-        ActionKind::Denied(s) => format!("denied:{}", s.name()),
+        ActionKind::Denied(s, streak) => format!("denied:{}#{streak}", s.name()),
+    }
+}
+
+/// Slot of a strategy in the `[S1, S2, S3, S4, S5]` tally.
+fn level_index(s: Strategy) -> usize {
+    match s {
+        Strategy::Ignore => 0,
+        Strategy::AdjustMicrobatch => 1,
+        Strategy::AdjustTopology => 2,
+        Strategy::CkptRestart => 3,
+        Strategy::ReplanParallelism => 4,
     }
 }
 
@@ -229,6 +244,12 @@ impl Outcome {
         injected: &[FailSlowEvent],
     ) -> Outcome {
         let latencies = match_detection_latencies(injected, &falcon.episode_opens());
+        let mut applied_per_level = vec![0usize; 5];
+        for a in &falcon.actions {
+            if let ActionKind::Applied(s) = a.what {
+                applied_per_level[level_index(s)] += 1;
+            }
+        }
         Outcome {
             scenario: spec.name.clone(),
             label: spec.cfg().label(),
@@ -250,6 +271,7 @@ impl Outcome {
                     kind: action_token(&a.what),
                 })
                 .collect(),
+            applied_per_level,
             timeline_mins: sim.timeline.xs_mins(),
             timeline_thpt: sim.timeline.ys(),
             diagnosis: falcon
@@ -328,6 +350,7 @@ impl Outcome {
             episodes_detected: report.episodes_detected,
             detection_latency_s: pooled,
             actions: Vec::new(),
+            applied_per_level: Vec::new(),
             timeline_mins: Vec::new(),
             timeline_thpt: Vec::new(),
             diagnosis: Vec::new(),
@@ -365,6 +388,10 @@ impl Outcome {
                         })
                         .collect(),
                 ),
+            ),
+            (
+                "applied_per_level",
+                Json::Arr(self.applied_per_level.iter().map(|&n| Json::Num(n as f64)).collect()),
             ),
             ("timeline_mins", Json::arr_f64(&self.timeline_mins)),
             ("timeline_thpt", Json::arr_f64(&self.timeline_thpt)),
@@ -449,6 +476,17 @@ impl Outcome {
             for a in &self.actions {
                 out.push_str(&format!("  t={:.1}min iter={} {}\n", a.t_min, a.iter, a.kind));
             }
+        }
+        if self.applied_per_level.iter().any(|&n| n > 0) {
+            let labels = ["S1", "S2", "S3", "S4", "S5"];
+            let parts: Vec<String> = self
+                .applied_per_level
+                .iter()
+                .zip(labels)
+                .filter(|(&n, _)| n > 0)
+                .map(|(&n, l)| format!("{l} x{n}"))
+                .collect();
+            out.push_str(&format!("applied per level: {}\n", parts.join(", ")));
         }
         if !self.diagnosis.is_empty() {
             out.push_str("diagnosis:\n");
@@ -539,6 +577,7 @@ mod tests {
                 iter: 2,
                 kind: "episode_opened".to_string(),
             }],
+            applied_per_level: vec![0, 1, 0, 0, 0],
             timeline_mins: vec![0.0, 2.0],
             timeline_thpt: vec![0.5, 0.25],
             diagnosis: vec![OutcomeDiagnosis {
@@ -566,6 +605,7 @@ mod tests {
             "injected": 1, "episodes_detected": 1,
             "detection_latency_s": [12.5],
             "actions": [{"t_min": 1.5, "iter": 2, "kind": "episode_opened"}],
+            "applied_per_level": [0, 1, 0, 0, 0],
             "timeline_mins": [0, 2], "timeline_thpt": [0.5, 0.25],
             "diagnosis": [{"t_min": 1.6, "iter": 2, "class": "comm-hang",
                            "culprit": "link:1-2", "window_s": [90, 96],
@@ -602,6 +642,7 @@ mod tests {
         assert!(out.contains("scenario 'golden'"));
         assert!(out.contains("episodes: injected 1, detected 1"));
         assert!(out.contains("mean throughput 0.250"));
+        assert!(out.contains("applied per level: S2 x1"));
         assert!(out.contains("comm-hang culprit=link:1-2"));
     }
 }

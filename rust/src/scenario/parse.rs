@@ -224,6 +224,7 @@ pub(crate) fn parse(src: &str) -> Result<ScenarioSpec, ScenarioError> {
                 "iters" => spec.run.iters = p_usize(val, ln)?,
                 "seed" => spec.run.seed = p_u64(val, ln)?,
                 "mitigate" => spec.run.mitigate = p_bool(val, ln)?,
+                "replan" => spec.run.replan = p_bool(val, ln)?,
                 _ => return Err(perr(ln, format!("unknown [run] key '{key}'"))),
             },
             Section::Fleet => {
@@ -317,6 +318,7 @@ pub(crate) fn render(spec: &ScenarioSpec) -> String {
     let _ = writeln!(out, "iters = {}", spec.run.iters);
     let _ = writeln!(out, "seed = {}", spec.run.seed);
     let _ = writeln!(out, "mitigate = {}", spec.run.mitigate);
+    let _ = writeln!(out, "replan = {}", spec.run.replan);
 
     for f in &spec.faults {
         out.push_str("\n[[fault]]\n");

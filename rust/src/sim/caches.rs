@@ -25,6 +25,11 @@
 //! Correctness bar: every value produced through this layer is
 //! bit-identical to a from-scratch recompute — pinned by the equivalence
 //! tests in `sim` (cached vs naive engine over the scenario library).
+//! Mitigations exercise both invalidation paths at once: an S3 swap or an
+//! S5 replan permutes the node map (generation bump → full rebind) while
+//! the S2/S5 re-split moves per-replica micro-batch counts (per-entry `m`
+//! mismatch → targeted recompute); `sim`'s
+//! `replan_apply_revert_stays_cache_coherent` pins the combined case.
 
 use crate::collectives::{AllReducePlan, CommGroup, Topology};
 use crate::diagnose::{ComputeObs, Culprit, RingObs, TraceEntry, COMM_SLOW_RATIO};

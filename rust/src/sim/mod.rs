@@ -1002,6 +1002,53 @@ mod tests {
             }
         }
     }
+
+    #[test]
+    fn replan_apply_revert_stays_cache_coherent() {
+        // S5 hits the two memo invalidation paths at once: its swaps bump
+        // `RankGrid::generation` (full rebind) and its re-split moves each
+        // replica's `m` (per-entry recompute). A twin forced to recompute
+        // every memo from scratch must step bit-identically through plan,
+        // apply, and revert — and revert must land on the nominal layout.
+        use crate::mitigate::replan;
+        let ev = FailSlowEvent {
+            kind: FailSlowKind::NetworkCongestion,
+            target: Target::Link(0, 1),
+            start: 0,
+            duration: 600 * MINUTE,
+            scale: 0.15,
+        };
+        let mut spec = demo_spec(ParallelConfig::new(8, 2, 2), 71);
+        spec.jitter = 0.0;
+        spec.spike_p = 0.0;
+        let mut cached = TrainingSim::new(spec.clone());
+        let mut naive = TrainingSim::new(spec);
+        cached.inject(vec![ev]);
+        naive.inject(vec![ev]);
+        fn lockstep(a: &mut TrainingSim, b: &mut TrainingSim, label: &str) {
+            for i in 0..10 {
+                b.invalidate_caches();
+                let x = a.step();
+                let y = b.step();
+                assert_eq!(x.duration, y.duration, "{label} iter {i}");
+                for (p, q) in x.replica_makespan.iter().zip(&y.replica_makespan) {
+                    assert_eq!(p.to_bits(), q.to_bits(), "{label} iter {i}");
+                }
+            }
+        }
+        lockstep(&mut cached, &mut naive, "congested");
+        let plan = replan::plan(&mut cached, 2);
+        assert!(plan.is_worthwhile(), "congested layout leaves headroom");
+        replan::apply(&mut cached, &plan, 30 * SEC);
+        replan::apply(&mut naive, &plan, 30 * SEC);
+        lockstep(&mut cached, &mut naive, "replanned");
+        replan::revert(&mut cached, &plan);
+        replan::revert(&mut naive, &plan);
+        lockstep(&mut cached, &mut naive, "reverted");
+        let nominal = TrainingSim::new(demo_spec(ParallelConfig::new(8, 2, 2), 71));
+        assert_eq!(cached.grid.node_map, nominal.grid.node_map);
+        assert_eq!(cached.microbatch_alloc, nominal.microbatch_alloc);
+    }
 }
 
 #[cfg(test)]

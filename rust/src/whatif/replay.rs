@@ -220,6 +220,7 @@ pub fn replay_cold(spec: &ScenarioSpec, edits: &[Edit]) -> Result<Outcome, Whati
     let event_fault = spec.event_fault_indices(horizon_s);
     let mut falcon = Falcon::new(crate::coordinator::FalconConfig {
         mitigate: spec.run.mitigate,
+        replan: spec.run.replan,
         ..Default::default()
     });
     let (injected, forced) = apply_edits(
@@ -369,6 +370,7 @@ mod tests {
             vec![Edit::NoMitigation],
             vec![Edit::DelayMitigation(30)],
             vec![Edit::ForceLevel { strategy: Strategy::AdjustMicrobatch, at_frac: 0.5 }],
+            vec![Edit::ForceLevel { strategy: Strategy::ReplanParallelism, at_frac: 0.5 }],
         ] {
             let warm = trace.replay(&edits).unwrap().to_json().to_string();
             let cold = replay_cold(&spec, &edits).unwrap().to_json().to_string();

@@ -124,6 +124,7 @@ pub fn record(spec: &ScenarioSpec, cfg: &TraceConfig) -> Result<RunTrace, Scenar
 
     let mut falcon = Falcon::new(FalconConfig {
         mitigate: spec.run.mitigate,
+        replan: spec.run.replan,
         ..FalconConfig::default()
     });
     let total = spec.run.iters;

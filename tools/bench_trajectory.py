@@ -132,6 +132,23 @@ def audit(doc):
     )
 
 
+def replan(doc):
+    """(solves/sec, recovered slowdown %) of the S5 replan section, or None.
+
+    Informational only — printed, never gated: the recovery floor is
+    enforced in-tree by the saturated-pool tests; older artifacts predate
+    the section and are tolerated silently.
+    """
+    rp = doc.get("replan")
+    if not isinstance(rp, dict):
+        return None
+    solves = rp.get("solves_per_sec")
+    if not isinstance(solves, (int, float)):
+        return None
+    recovered = rp.get("recovered_slowdown_pct")
+    return (solves, recovered if isinstance(recovered, (int, float)) else None)
+
+
 def sparkline(values):
     ticks = "▁▂▃▄▅▆▇█"
     lo, hi = min(values), max(values)
@@ -178,7 +195,16 @@ def main(argv):
             print(f"skipping {f}: no private engine runs recorded", file=sys.stderr)
             continue
         points.append(
-            (f, h[0], h[1], policy_sweep(doc), whatif_sweep(doc), diagnosis(doc), audit(doc))
+            (
+                f,
+                h[0],
+                h[1],
+                policy_sweep(doc),
+                whatif_sweep(doc),
+                diagnosis(doc),
+                audit(doc),
+                replan(doc),
+            )
         )
 
     if check_mode:
@@ -192,7 +218,7 @@ def main(argv):
     print(f"fleet engine trajectory ({len(points)} recorded run(s)):\n")
     print(f"  {'artifact':<{width}}  {'jobs':>6}  {'jobs/sec':>9}  policy sweep")
     prev = None
-    for f, jobs, jps, sweep, _ws, _dx, _au in points:
+    for f, jobs, jps, sweep, _ws, _dx, _au, _rp in points:
         delta = "" if prev is None else f" ({100.0 * (jps / prev - 1.0):+.1f}%)"
         sweep_txt = (
             "  ".join(f"{p}={v:.0f}" for p, v in sorted(sweep.items())) or "-"
@@ -207,8 +233,9 @@ def main(argv):
           f"(first {rates[0]:.1f} -> last {rates[-1]:.1f} jobs/s, "
           f"{100.0 * (rates[-1] / rates[0] - 1.0):+.1f}%)")
     # Informational (never gated): what-if counterfactual replay rate,
-    # diagnosis accuracy / op-trace overhead, and audit scan wall-time.
-    for f, *_rest, ws, dx, au in points:
+    # diagnosis accuracy / op-trace overhead, audit scan wall-time, and the
+    # S5 replan planner rate / saturated-pool recovery.
+    for f, *_rest, ws, dx, au, rp in points:
         if ws is not None:
             rate, speedup = ws
             extra = "" if speedup is None else f" ({speedup:.1f}x vs cold runs)"
@@ -235,6 +262,17 @@ def main(argv):
             print(
                 f"  audit scan [{os.path.relpath(f)}]: "
                 f"{ms:.1f} ms ({fps:.0f} files/sec{counts})"
+            )
+        if rp is not None:
+            solves, recovered = rp
+            extra = (
+                ""
+                if recovered is None
+                else f", {recovered:.1f}% slowdown recovered under denial"
+            )
+            print(
+                f"  s5 replan [{os.path.relpath(f)}]: "
+                f"{solves:.1f} solves/s{extra}"
             )
     return 0
 
