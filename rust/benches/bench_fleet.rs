@@ -1,7 +1,8 @@
 //! Fleet-engine throughput benchmark: jobs/sec for sharded fleet campaigns
 //! at a few sizes, a shared-cluster policy sweep, a what-if counterfactual
 //! sweep (replays/sec vs cold runs), falcon-audit scan throughput over
-//! `src/`, and a determinism spot-check. Emits `BENCH_fleet.json` at the repo root so later PRs have
+//! `src/`, a node-health ledger overhead check, and a determinism
+//! spot-check. Emits `BENCH_fleet.json` at the repo root so later PRs have
 //! a perf trajectory to compare against (conventions: docs/BENCHMARKS.md);
 //! when a previous `BENCH_fleet.json` exists, prints a one-line jobs/sec
 //! delta against it.
@@ -329,6 +330,75 @@ fn bench_replan() -> Json {
     ])
 }
 
+/// Node-health ledger microbench: jobs/sec for the same flaky shared fleet
+/// with the ledger off vs on (observer mode — same policy, so the gap is
+/// pure bookkeeping cost; the memoryless contract makes the training
+/// outcomes bit-identical, asserted via mean slowdown), plus the
+/// repeat-incident reduction predictive quarantine buys on that fleet.
+fn bench_ledger() -> Json {
+    let base = FleetConfig {
+        jobs: 64,
+        iters: 60,
+        seed: 2024,
+        workers: 0,
+        failslow_boost: 8.0,
+        compare: false,
+        policy: Some(Policy::StragglerAware),
+        spare_frac: 0.25,
+        epoch_len: 10,
+        stagger: 1.0,
+        flaky_frac: 0.4,
+        flaky_alpha: 1.1,
+        ..FleetConfig::default()
+    };
+    let off = run_fleet(&base);
+    let on = run_fleet(&FleetConfig { ledger: true, ..base.clone() });
+    assert_eq!(
+        off.mean_slowdown.to_bits(),
+        on.mean_slowdown.to_bits(),
+        "observer-mode ledger must not perturb training outcomes"
+    );
+    let overhead_pct = 100.0 * (off.jobs_per_sec / on.jobs_per_sec.max(1e-9) - 1.0);
+    let l = on.ledger.as_ref().expect("ledger-on run emits a ledger");
+    let (obs_total, obs_repeat) = (l.total_incidents(), l.repeat_incidents());
+
+    let pq = run_fleet(&FleetConfig {
+        ledger: true,
+        policy: Some(Policy::PredictiveQuarantine),
+        ..base.clone()
+    });
+    let pl = pq.ledger.as_ref().expect("predictive run emits a ledger");
+    let (pq_total, pq_repeat) = (pl.total_incidents(), pl.repeat_incidents());
+    let reduction_pct = if obs_repeat > 0 {
+        100.0 * (1.0 - pq_repeat as f64 / obs_repeat as f64)
+    } else {
+        0.0
+    };
+    println!(
+        "  {} jobs x {} iters, flaky {:.0}%: {:>8.1} jobs/s off, {:>8.1} jobs/s on \
+         ({overhead_pct:+.1}% overhead); incidents {obs_total} ({obs_repeat} repeat) observer \
+         -> {pq_total} ({pq_repeat} repeat) predictive ({reduction_pct:.1}% repeat reduction)",
+        base.jobs,
+        base.iters,
+        100.0 * base.flaky_frac,
+        off.jobs_per_sec,
+        on.jobs_per_sec,
+    );
+    Json::obj(vec![
+        ("jobs", Json::Num(base.jobs as f64)),
+        ("iters", Json::Num(base.iters as f64)),
+        ("flaky_frac", Json::Num(base.flaky_frac)),
+        ("jobs_per_sec_off", Json::Num(off.jobs_per_sec)),
+        ("jobs_per_sec_on", Json::Num(on.jobs_per_sec)),
+        ("overhead_pct", Json::Num(overhead_pct)),
+        ("observer_incidents", Json::Num(obs_total as f64)),
+        ("observer_repeat", Json::Num(obs_repeat as f64)),
+        ("predictive_incidents", Json::Num(pq_total as f64)),
+        ("predictive_repeat", Json::Num(pq_repeat as f64)),
+        ("repeat_reduction_pct", Json::Num(reduction_pct)),
+    ])
+}
+
 const BENCH_PATH: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_fleet.json");
 
 /// jobs/sec of the headline (largest private) config in a BENCH_fleet.json
@@ -372,6 +442,9 @@ fn main() {
 
     section("S5 replan: planner rate and saturated-pool recovery");
     let replan = bench_replan();
+
+    section("node-health ledger: observer overhead and predictive quarantine");
+    let ledger = bench_ledger();
 
     section("fleet engine throughput (jobs/sec)");
     for (jobs, iters) in [(64usize, 60usize), (256, 60), (512, 120)] {
@@ -489,6 +562,7 @@ fn main() {
         ("diagnosis", diagnosis),
         ("audit", audit),
         ("replan", replan),
+        ("ledger", ledger),
         ("runs", Json::Arr(runs)),
     ]);
     match std::fs::write(BENCH_PATH, out.to_string() + "\n") {

@@ -48,7 +48,7 @@ pub const LAYERS: &[(&str, &[&str])] = &[
     ("anyhow", &[]),
     ("audit", &[]),
     ("ckpt", &[]),
-    ("cluster", &["fabric", "mitigate"]),
+    ("cluster", &["diagnose", "fabric", "ledger", "mitigate"]),
     ("collectives", &["fabric"]),
     (
         "coordinator",
@@ -59,15 +59,19 @@ pub const LAYERS: &[(&str, &[&str])] = &[
     ("fabric", &[]),
     (
         "fleet",
-        &["cluster", "coordinator", "fabric", "inject", "metrics", "mitigate", "pipeline", "sim"],
+        &[
+            "cluster", "coordinator", "diagnose", "fabric", "inject", "ledger", "metrics",
+            "mitigate", "pipeline", "sim",
+        ],
     ),
     ("inject", &["fabric"]),
+    ("ledger", &["diagnose"]),
     ("lib", &[]),
     (
         "main",
         &[
-            "audit", "cluster", "coordinator", "detect", "fleet", "inject", "mitigate",
-            "reports", "runtime", "scenario", "trainer", "whatif",
+            "audit", "cluster", "coordinator", "detect", "fleet", "inject", "ledger",
+            "mitigate", "reports", "runtime", "scenario", "trainer", "whatif",
         ],
     ),
     ("metrics", &[]),
@@ -78,13 +82,13 @@ pub const LAYERS: &[(&str, &[&str])] = &[
         "reports",
         &[
             "ckpt", "cluster", "coordinator", "detect", "diagnose", "fabric", "fleet", "inject",
-            "metrics", "mitigate", "pipeline", "scenario", "sim", "whatif",
+            "ledger", "metrics", "mitigate", "pipeline", "scenario", "sim", "whatif",
         ],
     ),
     ("runtime", &["anyhow", "xla"]),
     (
         "scenario",
-        &["cluster", "coordinator", "fabric", "fleet", "inject", "pipeline", "sim"],
+        &["cluster", "coordinator", "fabric", "fleet", "inject", "ledger", "pipeline", "sim"],
     ),
     (
         "sim",
@@ -93,7 +97,10 @@ pub const LAYERS: &[(&str, &[&str])] = &[
     ("simkit", &[]),
     ("trainer", &["anyhow", "ckpt", "collectives", "runtime", "sim", "xla"]),
     ("util", &[]),
-    ("whatif", &["cluster", "coordinator", "fleet", "inject", "mitigate", "scenario", "sim"]),
+    (
+        "whatif",
+        &["cluster", "coordinator", "fleet", "inject", "ledger", "mitigate", "scenario", "sim"],
+    ),
     ("xla", &[]),
 ];
 
@@ -564,7 +571,8 @@ mod tests {
         // new code.
         for m in [
             "anyhow", "audit", "ckpt", "cluster", "collectives", "coordinator", "detect",
-            "diagnose", "fabric", "fleet", "inject", "lib", "main", "metrics", "mitigate",
+            "diagnose", "fabric", "fleet", "inject", "ledger", "lib", "main", "metrics",
+            "mitigate",
             "monitor", "pipeline", "reports", "runtime", "scenario", "sim", "simkit", "trainer",
             "util", "whatif", "xla",
         ] {

@@ -127,6 +127,12 @@ pub const PANIC_BUDGET: &[(&str, usize, &str)] = &[
          already validated, so any panic is a bug — the budget is zero",
     ),
     (
+        "ledger/",
+        0,
+        "bookkeeping over already-validated fleet state; snapshot parsing \
+         returns Result — any panic is a bug, the budget is zero",
+    ),
+    (
         "mitigate/",
         0,
         "mitigation planners and the S5 replan solver run inside the \

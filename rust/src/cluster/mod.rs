@@ -19,8 +19,16 @@
 //!   job's congestion.
 //!
 //! - [`Policy`] — pluggable admission/placement policies (`first-fit`,
-//!   `packed`, `spread`, `straggler-aware`) deciding which leaves a job's
-//!   nodes land on and which spares a mitigation grant hands out.
+//!   `packed`, `spread`, `straggler-aware`, `health-weighted`,
+//!   `predictive-quarantine`) deciding which leaves a job's nodes land on
+//!   and which spares a mitigation grant hands out. The last two consume
+//!   the persistent node-health ledger ([`crate::ledger`]) when the fleet
+//!   attaches one via [`ClusterState::ledger`]: `health-weighted` prefers
+//!   high-score nodes (ties break by node id), `predictive-quarantine`
+//!   additionally refuses to place onto nodes whose predicted
+//!   next-incident epoch falls inside the requesting job's horizon.
+//!   Without a ledger every score reads 1.0 and both reduce to
+//!   `first-fit`.
 //!
 //! - [`Arbiter`] — the gate all S3/S4 mitigation requests pass through.
 //!   Requests compete for the same spare pool and can be **granted**,
@@ -37,6 +45,7 @@
 use std::collections::BTreeMap;
 
 use crate::fabric::GpuClass;
+use crate::ledger::NodeLedger;
 use crate::mitigate::Strategy;
 
 /// Nodes per leaf switch (spine-leaf: one shared uplink per leaf).
@@ -66,11 +75,25 @@ pub enum Policy {
     Spread,
     /// Avoid leaves with degraded/quarantined hardware, then balance.
     StragglerAware,
+    /// Prefer nodes with the highest ledger health score (ties break by
+    /// node id). Needs [`ClusterState::ledger`]; without one it reduces
+    /// to [`Policy::FirstFit`].
+    HealthWeighted,
+    /// Health-weighted placement plus predictive admission: refuse nodes
+    /// whose ledger-predicted next-incident epoch falls inside the
+    /// requesting job's registered horizon.
+    PredictiveQuarantine,
 }
 
 impl Policy {
-    pub const ALL: [Policy; 4] =
-        [Policy::FirstFit, Policy::Packed, Policy::Spread, Policy::StragglerAware];
+    pub const ALL: [Policy; 6] = [
+        Policy::FirstFit,
+        Policy::Packed,
+        Policy::Spread,
+        Policy::StragglerAware,
+        Policy::HealthWeighted,
+        Policy::PredictiveQuarantine,
+    ];
 
     pub fn name(self) -> &'static str {
         match self {
@@ -78,6 +101,8 @@ impl Policy {
             Policy::Packed => "packed",
             Policy::Spread => "spread",
             Policy::StragglerAware => "straggler-aware",
+            Policy::HealthWeighted => "health-weighted",
+            Policy::PredictiveQuarantine => "predictive-quarantine",
         }
     }
 
@@ -88,6 +113,10 @@ impl Policy {
             "packed" | "pack" => Some(Policy::Packed),
             "spread" => Some(Policy::Spread),
             "straggler-aware" | "straggler" | "sa" => Some(Policy::StragglerAware),
+            "health-weighted" | "health" | "hw" => Some(Policy::HealthWeighted),
+            "predictive-quarantine" | "predictive" | "pq" => {
+                Some(Policy::PredictiveQuarantine)
+            }
             _ => None,
         }
     }
@@ -129,6 +158,15 @@ pub struct ClusterState {
     /// [`ClusterState::contention_scale_for`] to the flat co-residency
     /// formula.
     job_volume: BTreeMap<usize, f64>,
+    /// Persistent node-health ledger, when the fleet attaches one. Drives
+    /// quarantine durations in [`ClusterState::release`] and the
+    /// health-aware policies; `None` keeps the memoryless behavior
+    /// bit-identical.
+    pub ledger: Option<NodeLedger>,
+    /// Job → expected final fleet epoch, registered at admission so
+    /// [`Policy::PredictiveQuarantine`] can test predicted incidents
+    /// against the job's remaining horizon.
+    job_horizon: BTreeMap<usize, usize>,
 }
 
 impl ClusterState {
@@ -142,7 +180,25 @@ impl ClusterState {
             leaf_size: leaf_size.max(1),
             contention_alpha: CONTENTION_ALPHA,
             job_volume: BTreeMap::new(),
+            ledger: None,
+            job_horizon: BTreeMap::new(),
         }
+    }
+
+    /// Register the fleet epoch a job is expected to finish by, for
+    /// predictive-quarantine admission. Cleared on job completion.
+    pub fn set_job_horizon(&mut self, job: usize, end_epoch: usize) {
+        self.job_horizon.insert(job, end_epoch);
+    }
+
+    /// Forget a finished job's horizon.
+    pub fn clear_job_horizon(&mut self, job: usize) {
+        self.job_horizon.remove(&job);
+    }
+
+    /// Ledger health score of a node; 1.0 without a ledger or history.
+    pub fn health_score(&self, node: usize) -> f64 {
+        self.ledger.as_ref().map_or(1.0, |l| l.score(node))
     }
 
     /// Register a job's inter-node communication volume for contention
@@ -262,13 +318,22 @@ impl ClusterState {
     }
 
     /// Release a node; degraded hardware goes to repair until
-    /// `epoch + QUARANTINE_EPOCHS`.
+    /// `epoch + QUARANTINE_EPOCHS` — or, with a ledger attached, for the
+    /// ledger's score-driven duration ([`NodeLedger::quarantine_epochs`],
+    /// which still answers the same 4-epoch floor for clean nodes and in
+    /// non-predictive mode). The ledger also closes the node's open
+    /// incident here.
     pub fn release(&mut self, node: usize, epoch: usize) {
+        let quarantine =
+            self.ledger.as_ref().map_or(QUARANTINE_EPOCHS, |l| l.quarantine_epochs(node));
         let n = &mut self.nodes[node];
         n.owner = None;
         if n.flagged {
             n.flagged = false;
-            n.quarantined_until = epoch + QUARANTINE_EPOCHS;
+            n.quarantined_until = epoch + quarantine;
+            if let Some(ledger) = self.ledger.as_mut() {
+                ledger.record_release(node, epoch);
+            }
         }
     }
 
@@ -297,8 +362,55 @@ impl ClusterState {
                     (self.degraded_in_leaf(l, epoch), self.co_resident_jobs(l), allocated(l), l)
                 });
             }
+            // Node-level (not leaf-level) policies: picked by health in
+            // `pick_spares_by_health`, so the leaf order is immaterial.
+            Policy::HealthWeighted | Policy::PredictiveQuarantine => {}
         }
         leaves
+    }
+
+    /// Would placing `job` on `node` land inside the node's predicted
+    /// next incident? Only predictive ledgers with a registered job
+    /// horizon ever say yes.
+    fn predicted_risky(&self, node: usize, job: usize, epoch: usize) -> bool {
+        let ledger = match &self.ledger {
+            Some(l) if l.predictive => l,
+            _ => return false,
+        };
+        let horizon = match self.job_horizon.get(&job) {
+            Some(&h) => h,
+            None => return false,
+        };
+        match ledger.predicted_next_incident(node) {
+            Some(next) => next >= epoch && next < horizon,
+            None => false,
+        }
+    }
+
+    /// Spare pick for the ledger-consuming policies: every eligible node
+    /// ranked by (health score desc, node id) — the deterministic
+    /// tie-break the ledger docs pin. [`Policy::PredictiveQuarantine`]
+    /// additionally filters out predicted-risky nodes, so a too-small
+    /// surviving pool surfaces as a `Denied`/`Queued` decision upstream.
+    fn pick_spares_by_health(
+        &self,
+        policy: Policy,
+        job: usize,
+        n: usize,
+        epoch: usize,
+    ) -> Option<Vec<usize>> {
+        let mut candidates: Vec<usize> = (0..self.nodes.len())
+            .filter(|&node| self.nodes[node].spare_at(epoch))
+            .filter(|&node| {
+                policy != Policy::PredictiveQuarantine
+                    || !self.predicted_risky(node, job, epoch)
+            })
+            .collect();
+        candidates.sort_by(|&a, &b| {
+            self.health_score(b).total_cmp(&self.health_score(a)).then(a.cmp(&b))
+        });
+        candidates.truncate(n);
+        (candidates.len() == n).then_some(candidates)
     }
 
     /// Pick `n` healthy spare nodes for `job` per the policy; `None` when
@@ -310,6 +422,9 @@ impl ClusterState {
         n: usize,
         epoch: usize,
     ) -> Option<Vec<usize>> {
+        if matches!(policy, Policy::HealthWeighted | Policy::PredictiveQuarantine) {
+            return self.pick_spares_by_health(policy, job, n, epoch);
+        }
         let mut picked = Vec::with_capacity(n);
         for leaf in self.leaf_order(policy, job, epoch) {
             for node in self.leaf_nodes(leaf) {
@@ -685,6 +800,86 @@ mod tests {
         assert_eq!(arb.queue[0].strategy, Strategy::CkptRestart);
         assert!(arb.cancel(0));
         assert!(!arb.cancel(0));
+    }
+
+    #[test]
+    fn health_weighted_prefers_high_score_nodes() {
+        use crate::diagnose::AnomalyClass;
+        let mut c = two_leaf_cluster();
+        let mut ledger = NodeLedger::default();
+        ledger.record_flag(0, 1, AnomalyClass::ComputeSlow);
+        ledger.record_flag(1, 1, AnomalyClass::ComputeSlow);
+        c.ledger = Some(ledger);
+        // The battered nodes 0/1 rank behind every pristine node.
+        let picked = c.pick_spares(Policy::HealthWeighted, 0, 2, 0).unwrap();
+        assert_eq!(picked, vec![2, 3]);
+        // Without a ledger every score is 1.0: exactly first-fit.
+        let plain = two_leaf_cluster();
+        assert_eq!(
+            plain.pick_spares(Policy::HealthWeighted, 0, 3, 0),
+            plain.pick_spares(Policy::FirstFit, 0, 3, 0),
+        );
+    }
+
+    #[test]
+    fn predictive_quarantine_denies_risky_nodes_inside_horizon() {
+        use crate::diagnose::AnomalyClass;
+        let mut c = ClusterState::with_leaf_size(3, 4);
+        let mut ledger = NodeLedger::default();
+        ledger.predictive = true;
+        // Node 0: incidents open at 2 and 8 → predicted next at 14.
+        ledger.record_flag(0, 2, AnomalyClass::ComputeSlow);
+        ledger.record_release(0, 3);
+        ledger.record_flag(0, 8, AnomalyClass::ComputeSlow);
+        ledger.record_release(0, 9);
+        c.ledger = Some(ledger);
+        // Job 7 runs through epoch 20 — the predicted incident at 14 is
+        // inside its horizon, so node 0 is refused and 3 nodes can't be
+        // supplied from the 2 survivors.
+        c.set_job_horizon(7, 20);
+        assert!(c.pick_spares(Policy::PredictiveQuarantine, 7, 3, 10).is_none());
+        assert_eq!(c.pick_spares(Policy::PredictiveQuarantine, 7, 2, 10), Some(vec![1, 2]));
+        // A job ending before the predicted incident may still use node 0
+        // (last: its score is battered).
+        c.set_job_horizon(8, 12);
+        assert_eq!(
+            c.pick_spares(Policy::PredictiveQuarantine, 8, 3, 10),
+            Some(vec![1, 2, 0])
+        );
+    }
+
+    #[test]
+    fn ledger_driven_release_extends_quarantine_for_repeat_offenders() {
+        use crate::diagnose::AnomalyClass;
+        let mut c = two_leaf_cluster();
+        let mut ledger = NodeLedger::default();
+        ledger.predictive = true;
+        ledger.record_flag(3, 0, AnomalyClass::ComputeSlow);
+        ledger.record_release(3, 1);
+        ledger.record_flag(3, 5, AnomalyClass::ComputeSlow);
+        c.ledger = Some(ledger);
+        c.nodes[3].owner = Some(0);
+        c.nodes[3].flagged = true;
+        c.release(3, 6);
+        assert!(
+            !c.nodes[3].spare_at(6 + QUARANTINE_EPOCHS),
+            "repeat offender must quarantine past the memoryless floor"
+        );
+        // The release also closed the open incident in the ledger.
+        assert_eq!(c.ledger.as_ref().unwrap().total_incidents(), 2);
+
+        // A non-predictive (shadow) ledger keeps the memoryless floor.
+        let mut shadow = two_leaf_cluster();
+        let mut obs = NodeLedger::default();
+        obs.record_flag(2, 0, AnomalyClass::ComputeSlow);
+        obs.record_release(2, 1);
+        obs.record_flag(2, 5, AnomalyClass::ComputeSlow);
+        shadow.ledger = Some(obs);
+        shadow.nodes[2].owner = Some(0);
+        shadow.nodes[2].flagged = true;
+        shadow.release(2, 6);
+        assert!(!shadow.nodes[2].spare_at(6 + QUARANTINE_EPOCHS - 1));
+        assert!(shadow.nodes[2].spare_at(6 + QUARANTINE_EPOCHS));
     }
 
     #[test]

@@ -60,13 +60,16 @@
 //! only — in shared mode the counterfactual is the private-cluster
 //! baseline itself, see the `fleet_cluster` report).
 
+use std::collections::{BTreeMap, BTreeSet};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 use crate::cluster::{Arbiter, ClusterState, Decision, GrantRequest, Policy};
 use crate::coordinator::{run_with_falcon, Falcon, FalconConfig};
+use crate::diagnose::AnomalyClass;
 use crate::fabric::GpuClass;
-use crate::inject::{FailSlowEvent, InjectionModel};
+use crate::inject::{FailSlowEvent, FailSlowKind, InjectionModel, Target};
+use crate::ledger::NodeLedger;
 use crate::metrics::LatencySummary;
 use crate::mitigate::{topology, Strategy};
 use crate::pipeline::{ModelDims, ParallelConfig, Workload};
@@ -120,6 +123,27 @@ pub struct FleetConfig {
     /// Per-job coordinator configuration (overheads, pauses, BOCD knobs).
     /// `mitigate`/`defer_heavy` are forced per engine mode.
     pub falcon: FalconConfig,
+    /// Attach a persistent node-health ledger to the shared cluster
+    /// (see [`crate::ledger`]): incidents, recurrence gaps, and decaying
+    /// scores are recorded at every epoch boundary, quarantine durations
+    /// become ledger-driven under [`Policy::PredictiveQuarantine`], and
+    /// the final ledger lands in [`FleetReport::ledger`]. `false` (the
+    /// default) keeps the memoryless engine bit-identical. Ignored in
+    /// private mode.
+    pub ledger: bool,
+    /// Seed the ledger from a prior campaign's snapshot (implies
+    /// `ledger`; the `predictive` flag is re-derived from this campaign's
+    /// policy).
+    pub ledger_init: Option<NodeLedger>,
+    /// Fraction of shared nodes that are chronically flaky (the
+    /// heavy-tailed recurrence generator, arxiv 2512.09685): each flaky
+    /// node flares repeatedly with Pareto-distributed inter-arrival gaps,
+    /// striking whichever job is placed on it. 0.0 (default) disables the
+    /// generator entirely — no RNG stream is even created.
+    pub flaky_frac: f64,
+    /// Pareto tail index of the flare inter-arrival gaps; smaller =
+    /// heavier tail (a minority of nodes relapse rapidly).
+    pub flaky_alpha: f64,
 }
 
 impl Default for FleetConfig {
@@ -137,6 +161,10 @@ impl Default for FleetConfig {
             stagger: 0.0,
             scripted: Vec::new(),
             falcon: FalconConfig::default(),
+            ledger: false,
+            ledger_init: None,
+            flaky_frac: 0.0,
+            flaky_alpha: 1.2,
         }
     }
 }
@@ -259,6 +287,10 @@ pub struct FleetReport {
     pub jobs_per_sec: f64,
     /// Shared-cluster accounting (None in private mode).
     pub cluster: Option<ClusterSummary>,
+    /// Final node-health ledger ([`FleetConfig::ledger`]; None when the
+    /// ledger is disabled — the default — so the digest of a memoryless
+    /// run is untouched).
+    pub ledger: Option<NodeLedger>,
     pub results: Vec<JobResult>,
 }
 
@@ -290,6 +322,10 @@ pub struct FleetTrace {
     pub contention: Vec<ContentionSample>,
     /// Healthy iteration seconds per job (exposure weighting for blame).
     pub job_ideal_iter_s: Vec<f64>,
+    /// Final shared-node placement per job (job id → shared node ids),
+    /// so contention blame can be charged back to the *nodes* a culprit
+    /// job sat on (`whatif::attribution::ledger_blame`).
+    pub placements: BTreeMap<usize, Vec<usize>>,
 }
 
 /// Heterogeneous job palette: small 1–2-node strategies (the fleet's bread
@@ -493,7 +529,7 @@ fn run_fleet_private(cfg: &FleetConfig) -> FleetReport {
         // is filled; a hole is a scheduler bug worth crashing on.
         .map(|r| r.expect("every job completes"))
         .collect();
-    aggregate(cfg, workers, results, wall_s, None)
+    aggregate(cfg, workers, results, wall_s, None, None)
 }
 
 // ---------------------------------------------------------------------------
@@ -556,6 +592,64 @@ fn node_degraded(sim: &TrainingSim, k: usize) -> bool {
     (0..gpn).any(|g| c.gpus[k * gpn + g].compute_scale < 1.0)
 }
 
+/// Diagnosis-taxonomy fault kind for a degraded logical node, for the
+/// ledger's incident records: uplink trouble reads as comm-slow,
+/// everything else (GPU/CPU) as compute-slow.
+fn degraded_kind(sim: &TrainingSim, k: usize) -> AnomalyClass {
+    if sim.cluster.uplinks[k].bandwidth_scale < 1.0 {
+        AnomalyClass::CommSlow
+    } else {
+        AnomalyClass::ComputeSlow
+    }
+}
+
+/// One chronic-hardware flare: the shared node runs degraded for
+/// `[start_epoch, end_epoch)` fleet epochs at the given compute scale.
+#[derive(Clone, Copy, Debug)]
+struct Flare {
+    start_epoch: usize,
+    end_epoch: usize,
+    /// Residual GPU compute scale in (0, 1) while flaring.
+    scale: f64,
+}
+
+/// Heavy-tailed per-node recurrence generator (arxiv 2512.09685): each
+/// shared node is chronically flaky with probability
+/// [`FleetConfig::flaky_frac`]; a flaky node's flare inter-arrival gaps
+/// are Pareto([`FleetConfig::flaky_alpha`]) distributed, so a minority of
+/// nodes relapse rapidly while most stay quiet for long stretches —
+/// exactly the regime where a persistent ledger beats memoryless
+/// policies. Deterministic in `(cfg.seed, node)`.
+fn flare_schedules(cfg: &FleetConfig, n_nodes: usize, horizon_epochs: usize) -> Vec<Vec<Flare>> {
+    let mut schedules = vec![Vec::new(); n_nodes];
+    if cfg.flaky_frac <= 0.0 {
+        return schedules;
+    }
+    let alpha = cfg.flaky_alpha.max(0.1);
+    for (node, sched) in schedules.iter_mut().enumerate() {
+        // Flare streams fork per node off the tagged fleet seed.
+        let mut rng = Rng::new(cfg.seed ^ 0x1ED6E4).fork(node as u64);
+        if !rng.bernoulli(cfg.flaky_frac) {
+            continue;
+        }
+        let mut at = 1 + rng.below(6) as usize;
+        while at < horizon_epochs {
+            let dur = 1 + rng.below(3) as usize;
+            let end = (at + dur).min(horizon_epochs);
+            sched.push(Flare {
+                start_epoch: at,
+                end_epoch: end,
+                scale: rng.range_f64(0.35, 0.6),
+            });
+            // Pareto(alpha) with x_m = 1: gap = ceil(U^(-1/alpha)).
+            let u = rng.f64().max(1e-12);
+            let gap = (1.0 / u.powf(1.0 / alpha)).ceil() as usize;
+            at = end + gap.max(1);
+        }
+    }
+    schedules
+}
+
 fn run_fleet_shared(
     cfg: &FleetConfig,
     policy: Policy,
@@ -598,6 +692,22 @@ fn run_fleet_shared(
     let mut cluster = ClusterState::new(n_nodes);
     let mut arbiter = Arbiter::new(policy);
     let spares_initial = n_nodes - peak;
+
+    // --- persistent node-health ledger (opt-in; None keeps the
+    // memoryless engine bit-identical) --------------------------------------
+    if cfg.ledger || cfg.ledger_init.is_some() {
+        let mut ledger = cfg.ledger_init.clone().unwrap_or_default();
+        // Predictive behavior follows THIS campaign's policy, whatever
+        // mode the seeding snapshot ran under.
+        ledger.predictive = policy == Policy::PredictiveQuarantine;
+        cluster.ledger = Some(ledger);
+    }
+
+    // --- heavy-tailed chronic-node flare schedules (ledger scenario knob) --
+    let flares = flare_schedules(cfg, n_nodes, horizon_epochs + 16);
+    let has_flares = flares.iter().any(|s| !s.is_empty());
+    // (job, node, flare index) triples already injected into a job's sim.
+    let mut flares_injected: BTreeSet<(usize, usize, usize)> = BTreeSet::new();
 
     let mut jobs: Vec<Mutex<SharedJob>> = Vec::with_capacity(cfg.jobs);
     let mut ideal_iters: Vec<f64> = Vec::new(); // filled only when tracing
@@ -668,6 +778,18 @@ fn run_fleet_shared(
         }
 
         // --- serial boundary pass 1: release, admit, flags, contention ----
+        // Ledger bookkeeping brackets the pass: the pre-release flag state
+        // is what incident transitions diff against, and every clean node
+        // recovers once per boundary.
+        let ledger_on = cluster.ledger.is_some();
+        let prev_flagged: Vec<bool> = if ledger_on {
+            cluster.nodes.iter().map(|n| n.flagged).collect()
+        } else {
+            Vec::new()
+        };
+        if let Some(l) = cluster.ledger.as_mut() {
+            l.advance_epoch(epoch);
+        }
         // Finished jobs hand their nodes back (degraded ones quarantine),
         // making room for late arrivals and mitigation grants: the pool
         // breathes.
@@ -678,6 +800,7 @@ fn run_fleet_shared(
                     cluster.release(n, epoch);
                 }
                 cluster.clear_job_volume(id);
+                cluster.clear_job_horizon(id);
                 arbiter.cancel(id);
                 job.released = true;
             }
@@ -686,6 +809,9 @@ fn run_fleet_shared(
             let job = j.get_mut().unwrap_or_else(|e| e.into_inner());
             if job.admitted_epoch.is_none() && epoch >= job.start_epoch {
                 let wanted = job.sim.spec.n_nodes();
+                // Horizon first: predictive-quarantine admission tests
+                // predicted incidents against the job's remaining span.
+                cluster.set_job_horizon(id, epoch + base_epochs);
                 if let Some(placement) = arbiter.admit(&mut cluster, id, wanted, epoch) {
                     job.placement = placement;
                     job.admitted_epoch = Some(epoch);
@@ -695,9 +821,46 @@ fn run_fleet_shared(
                 // releases); retry next epoch — the job starts late.
             }
         }
+        // Chronic-node flares strike whichever job currently sits on the
+        // flaky node: the degradation event enters that job's own sim (in
+        // job-id order, so the injection set is deterministic) and flags
+        // re-derive from it at the next boundary like any other fault.
+        if has_flares {
+            for (id, j) in jobs.iter_mut().enumerate() {
+                let job = j.get_mut().unwrap_or_else(|e| e.into_inner());
+                if job.admitted_epoch.is_none() || job.done_iters >= cfg.iters {
+                    continue;
+                }
+                let gpn = job.sim.cluster.spec.gpus_per_node;
+                for (k, &shared) in job.placement.iter().enumerate() {
+                    for (fi, flare) in flares[shared].iter().enumerate() {
+                        if flare.start_epoch <= epoch
+                            && epoch < flare.end_epoch
+                            && flares_injected.insert((id, shared, fi))
+                        {
+                            // Remaining flare span, in this job's sim time.
+                            let dur_s = (flare.end_epoch - epoch) as f64
+                                * epoch_len as f64
+                                * job.sim.ideal_iter_s;
+                            let ev = FailSlowEvent {
+                                kind: FailSlowKind::GpuDegradation,
+                                target: Target::Gpu(k * gpn),
+                                start: job.sim.now,
+                                duration: from_secs(dur_s),
+                                scale: flare.scale,
+                            };
+                            job.sim.inject(std::iter::once(ev));
+                            job.events.push(ev);
+                        }
+                    }
+                }
+            }
+        }
         for node in &mut cluster.nodes {
             node.flagged = false;
         }
+        let mut flag_kinds: Vec<Option<AnomalyClass>> =
+            if ledger_on { vec![None; cluster.nodes.len()] } else { Vec::new() };
         for j in jobs.iter_mut() {
             let job = j.get_mut().unwrap_or_else(|e| e.into_inner());
             if job.admitted_epoch.is_none() || job.done_iters >= cfg.iters {
@@ -706,6 +869,30 @@ fn run_fleet_shared(
             for (k, &shared) in job.placement.iter().enumerate() {
                 if node_degraded(&job.sim, k) {
                     cluster.nodes[shared].flagged = true;
+                    if ledger_on && flag_kinds[shared].is_none() {
+                        flag_kinds[shared] = Some(degraded_kind(&job.sim, k));
+                    }
+                }
+            }
+        }
+        if ledger_on {
+            // Incident transitions, in node order (deterministic): a node
+            // newly flagged opens an incident with the kind observed by
+            // the lowest-id job on it; a node whose flag dropped without
+            // going through `release` (the flare ended in place) closes
+            // its open incident here.
+            for node in 0..cluster.nodes.len() {
+                let now_flagged = cluster.nodes[node].flagged;
+                if now_flagged == prev_flagged[node] {
+                    continue;
+                }
+                if let Some(l) = cluster.ledger.as_mut() {
+                    if now_flagged {
+                        let kind = flag_kinds[node].unwrap_or(AnomalyClass::ComputeSlow);
+                        l.record_flag(node, epoch, kind);
+                    } else {
+                        l.record_release(node, epoch);
+                    }
                 }
             }
         }
@@ -884,7 +1071,12 @@ fn run_fleet_shared(
         tr.epoch_len = epoch_len;
         tr.epochs = epoch;
         tr.job_ideal_iter_s = ideal_iters;
+        for (id, j) in jobs.iter_mut().enumerate() {
+            let job = j.get_mut().unwrap_or_else(|e| e.into_inner());
+            tr.placements.insert(id, job.placement.clone());
+        }
     }
+    let ledger = cluster.ledger.take();
     summary.preempted = arbiter.preempted;
     summary.grant_wait = LatencySummary::from_samples(&grant_waits);
     summary.mean_contention_scale =
@@ -915,7 +1107,7 @@ fn run_fleet_shared(
         })
         .collect();
     let wall_s = t0.elapsed().as_secs_f64();
-    aggregate(cfg, workers, results, wall_s, Some(summary))
+    aggregate(cfg, workers, results, wall_s, Some(summary), ledger)
 }
 
 fn aggregate(
@@ -924,6 +1116,7 @@ fn aggregate(
     results: Vec<JobResult>,
     wall_s: f64,
     cluster: Option<ClusterSummary>,
+    ledger: Option<NodeLedger>,
 ) -> FleetReport {
     let jobs = results.len();
     let gpus: usize = results.iter().map(|r| r.world).sum();
@@ -973,6 +1166,7 @@ fn aggregate(
         wall_s,
         jobs_per_sec: jobs as f64 / wall_s.max(1e-9),
         cluster,
+        ledger,
         results,
     }
 }
@@ -1010,6 +1204,24 @@ impl FleetReport {
             mix(r.arb.cancelled as u64);
             for &w in &r.grant_wait_s {
                 mix(w.to_bits());
+            }
+        }
+        // Ledger state folds in only when the ledger ran: a memoryless
+        // campaign's digest is byte-for-byte what it was before the
+        // ledger existed.
+        if let Some(ledger) = &self.ledger {
+            mix(ledger.epoch as u64);
+            mix(ledger.predictive as u64);
+            for (&node, health) in &ledger.nodes {
+                mix(node as u64);
+                mix(health.score.to_bits());
+                mix(health.repeats as u64);
+                mix(health.incidents.len() as u64);
+                for inc in &health.incidents {
+                    mix(inc.epoch as u64);
+                    mix(inc.duration_epochs as u64);
+                    mix(inc.gap_epochs.map_or(u64::MAX, |g| g as u64));
+                }
             }
         }
         h
@@ -1087,6 +1299,16 @@ impl FleetReport {
                 c.grant_wait.p99,
                 c.grant_wait.n,
                 100.0 * c.denial_rate()
+            ));
+        }
+        if let Some(l) = &self.ledger {
+            out.push_str(&format!(
+                "node-health ledger: {} tracked nodes, {} incidents ({} repeat), \
+                 predictive quarantine {}\n",
+                l.len(),
+                l.total_incidents(),
+                l.repeat_incidents(),
+                if l.predictive { "on" } else { "off" }
             ));
         }
         out.push_str(&format!(
@@ -1247,6 +1469,58 @@ mod tests {
         assert_eq!(digests[0], digests[1], "1 vs 4 workers");
         assert_eq!(digests[1], digests[2], "4 vs 8 workers");
         assert!(denied > 0, "exhausted pool produced no denials to fall back from");
+    }
+
+    #[test]
+    fn ledger_digest_identical_across_1_4_8_workers() {
+        // Satellite: ledger + heavy-tailed flares + both ledger-consuming
+        // policies stay bit-identical across worker counts, and the
+        // campaign actually records incidents for the ledger to learn from.
+        for policy in [Policy::HealthWeighted, Policy::PredictiveQuarantine] {
+            let mut cfg = shared_cfg();
+            cfg.jobs = 10;
+            cfg.iters = 60;
+            cfg.policy = Some(policy);
+            cfg.ledger = true;
+            cfg.flaky_frac = 0.4;
+            cfg.flaky_alpha = 1.1;
+            let mut digests = Vec::new();
+            let mut incidents = 0;
+            for w in [1usize, 4, 8] {
+                let mut c = cfg.clone();
+                c.workers = w;
+                let r = run_fleet(&c);
+                let ledger =
+                    r.ledger.as_ref().expect("ledger campaign returns a ledger");
+                incidents = ledger.total_incidents();
+                digests.push(r.digest());
+            }
+            assert_eq!(digests[0], digests[1], "{policy:?}: 1 vs 4 workers");
+            assert_eq!(digests[1], digests[2], "{policy:?}: 4 vs 8 workers");
+            assert!(incidents > 0, "{policy:?}: campaign recorded no incidents");
+        }
+    }
+
+    #[test]
+    fn ledger_disabled_fleet_is_memoryless_and_unchanged() {
+        // Acceptance gate: the default campaign carries no ledger, and a
+        // non-predictive ledger under the same policy is a pure observer —
+        // every training outcome bit-identical to the memoryless run.
+        let cfg = shared_cfg();
+        let r = run_fleet(&cfg);
+        assert!(r.ledger.is_none(), "default campaign must stay memoryless");
+        let mut with = cfg.clone();
+        with.ledger = true;
+        let rl = run_fleet(&with);
+        assert!(rl.ledger.is_some(), "opt-in campaign must return its ledger");
+        for (a, b) in r.results.iter().zip(rl.results.iter()) {
+            assert_eq!(
+                a.mean_thpt.to_bits(),
+                b.mean_thpt.to_bits(),
+                "shadow ledger perturbed job {}",
+                a.job_id
+            );
+        }
     }
 
     #[test]

@@ -1,0 +1,588 @@
+//! Fleet-wide node-health ledger (Guard, arxiv 2605.17879).
+//!
+//! FALCON's shared cluster treats nodes as memoryless: a degraded node
+//! quarantines for a fixed 4 epochs and re-enters the pool as if nothing
+//! happened, even though the paper's §2 characterization (and the
+//! homogeneous-GPU recurrence study, arxiv 2512.09685) shows fail-slows
+//! recur on the *same* hardware for hours with heavy-tailed intervals.
+//! This module gives every shared node a persistent health history that
+//! outlives individual jobs and accrues across fleet epochs:
+//!
+//! - [`NodeLedger`] — per-node incident records (fault kind from the
+//!   diagnosis taxonomy, duration, recurrence gap), a blame account fed
+//!   from the what-if contention attribution, and an exponentially
+//!   decaying health score: every incident multiplies the score by
+//!   `1 - penalty`, every clean epoch recovers it toward 1.0 by
+//!   `recovery * (1 - score)`.
+//! - **Predictive quarantine** — [`NodeLedger::quarantine_epochs`]
+//!   replaces the fixed `QUARANTINE_EPOCHS` with a score-driven duration:
+//!   repeat offenders (≥ 2 recorded incidents) quarantine for
+//!   `floor + round((1 - score) * scale)` epochs (capped), clean and
+//!   first-time nodes keep the 4-epoch floor. With `predictive` off the
+//!   ledger is a pure shadow observer and always answers the floor, so
+//!   memoryless behavior is bit-identical.
+//! - **Snapshot persistence** — [`NodeLedger::to_json`] /
+//!   [`NodeLedger::parse`] round-trip the full ledger through the house
+//!   JSON substrate so a campaign can seed from a prior campaign's ledger
+//!   (`--ledger-file`).
+//!
+//! Determinism contract: the ledger draws no RNG, stores nodes in a
+//! `BTreeMap`, and is only ever updated from the fleet's *serial* epoch
+//! boundary passes in job-id order, so `FleetReport::digest` stays
+//! bit-identical across worker counts (`falcon-audit` pins this module
+//! into the digest-determinism scope with a panic budget of 0).
+
+use std::collections::BTreeMap;
+
+use crate::diagnose::AnomalyClass;
+use crate::util::json::Json;
+
+/// Minimum quarantine duration in fleet epochs — identical to the
+/// memoryless `cluster::QUARANTINE_EPOCHS` so clean nodes behave exactly
+/// as they did before the ledger existed.
+pub const FLOOR_EPOCHS: usize = 4;
+
+/// Upper bound on a predictive quarantine, no matter how low the score.
+pub const MAX_EPOCHS: usize = 32;
+
+/// Scale factor from health deficit to extra quarantine epochs:
+/// `extra = round((1 - score) * QUARANTINE_SCALE)`.
+pub const QUARANTINE_SCALE: f64 = 16.0;
+
+/// Per-epoch recovery rate toward 1.0 for nodes with no open incident.
+pub const RECOVERY_RATE: f64 = 0.02;
+
+/// Multiplicative score penalty applied when an incident opens.
+pub const INCIDENT_PENALTY: f64 = 0.35;
+
+/// Tunable decay-model constants. The defaults above are what every
+/// fleet run uses; the struct exists so the bench and tests can probe
+/// the formulas without re-deriving them.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LedgerConfig {
+    /// Quarantine floor in epochs (memoryless behavior).
+    pub floor_epochs: usize,
+    /// Predictive quarantine cap in epochs.
+    pub max_epochs: usize,
+    /// Health-deficit → extra-epochs scale.
+    pub quarantine_scale: f64,
+    /// Per-clean-epoch recovery rate toward 1.0.
+    pub recovery: f64,
+    /// Multiplicative penalty per incident.
+    pub penalty: f64,
+}
+
+impl Default for LedgerConfig {
+    fn default() -> Self {
+        LedgerConfig {
+            floor_epochs: FLOOR_EPOCHS,
+            max_epochs: MAX_EPOCHS,
+            quarantine_scale: QUARANTINE_SCALE,
+            recovery: RECOVERY_RATE,
+            penalty: INCIDENT_PENALTY,
+        }
+    }
+}
+
+/// One closed incident on a node: when it opened, what the diagnosis
+/// taxonomy called it, how long it lasted, and how long after the
+/// previous incident it recurred (`None` for a node's first incident).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Incident {
+    /// Fleet epoch the incident opened.
+    pub epoch: usize,
+    /// Fault kind from the hang-vs-slow taxonomy.
+    pub kind: AnomalyClass,
+    /// Epochs from open to release (≥ 1).
+    pub duration_epochs: usize,
+    /// Epochs since the previous incident opened; `None` for the first.
+    pub gap_epochs: Option<usize>,
+}
+
+/// Per-node health state: decaying score, closed incident history, the
+/// currently open incident (if any), and the contention-blame account.
+#[derive(Clone, Debug, PartialEq)]
+pub struct NodeHealth {
+    /// Exponentially decaying health in (0, 1]; 1.0 is pristine.
+    pub score: f64,
+    /// Closed incidents, oldest first.
+    pub incidents: Vec<Incident>,
+    /// Epoch of the currently open incident, if one is open.
+    pub open_since: Option<usize>,
+    /// Fault kind of the currently open incident.
+    pub open_kind: Option<AnomalyClass>,
+    /// Open epoch of the most recent incident (open or closed).
+    pub last_incident_epoch: Option<usize>,
+    /// Seconds of victim time the what-if attribution blames on jobs
+    /// placed on this node (fed by `whatif::attribution::ledger_blame`).
+    pub blame_s: f64,
+    /// Incidents that opened on a node with ≥ 1 prior *closed* incident
+    /// — the repeat-offender count the ledger report pins.
+    pub repeats: u32,
+}
+
+impl NodeHealth {
+    fn pristine() -> Self {
+        NodeHealth {
+            score: 1.0,
+            incidents: Vec::new(),
+            open_since: None,
+            open_kind: None,
+            last_incident_epoch: None,
+            blame_s: 0.0,
+            repeats: 0,
+        }
+    }
+
+    /// Mean recurrence gap over closed incidents, if ≥ 1 gap is recorded.
+    fn mean_gap(&self) -> Option<f64> {
+        let gaps: Vec<f64> = self
+            .incidents
+            .iter()
+            .filter_map(|i| i.gap_epochs.map(|g| g as f64))
+            .collect();
+        if gaps.is_empty() {
+            None
+        } else {
+            Some(gaps.iter().sum::<f64>() / gaps.len() as f64)
+        }
+    }
+}
+
+/// The fleet-wide ledger: node id → health, plus the clock and mode.
+#[derive(Clone, Debug, PartialEq)]
+pub struct NodeLedger {
+    /// Decay-model constants.
+    pub cfg: LedgerConfig,
+    /// Per-node health, keyed by shared-pool node id (BTree for
+    /// deterministic iteration — audit-pinned).
+    pub nodes: BTreeMap<usize, NodeHealth>,
+    /// Last fleet epoch the ledger advanced to.
+    pub epoch: usize,
+    /// When false the ledger is a shadow observer: it records incidents
+    /// but `quarantine_epochs` always answers the memoryless floor and
+    /// no admission is denied.
+    pub predictive: bool,
+}
+
+impl Default for NodeLedger {
+    fn default() -> Self {
+        NodeLedger::new(LedgerConfig::default())
+    }
+}
+
+impl NodeLedger {
+    pub fn new(cfg: LedgerConfig) -> Self {
+        NodeLedger { cfg, nodes: BTreeMap::new(), epoch: 0, predictive: false }
+    }
+
+    /// Number of nodes with any recorded history.
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// Advance the fleet clock one boundary: every node *without* an open
+    /// incident recovers toward 1.0. Called once per epoch boundary from
+    /// the serial pass.
+    pub fn advance_epoch(&mut self, epoch: usize) {
+        self.epoch = epoch;
+        for health in self.nodes.values_mut() {
+            if health.open_since.is_none() {
+                health.score += (1.0 - health.score) * self.cfg.recovery;
+                health.score = health.score.min(1.0);
+            }
+        }
+    }
+
+    /// A node transitioned healthy → flagged: open an incident and take
+    /// the score penalty. Idempotent while the incident stays open.
+    pub fn record_flag(&mut self, node: usize, epoch: usize, kind: AnomalyClass) {
+        let health = self.nodes.entry(node).or_insert_with(NodeHealth::pristine);
+        if health.open_since.is_some() {
+            return;
+        }
+        if !health.incidents.is_empty() {
+            health.repeats += 1;
+        }
+        health.open_since = Some(epoch);
+        health.open_kind = Some(kind);
+        health.score *= 1.0 - self.cfg.penalty;
+    }
+
+    /// A node transitioned flagged → healthy (flare ended or hardware
+    /// replaced): close the open incident, recording duration and the
+    /// recurrence gap since the previous incident's open epoch.
+    pub fn record_release(&mut self, node: usize, epoch: usize) {
+        let health = match self.nodes.get_mut(&node) {
+            Some(h) => h,
+            None => return,
+        };
+        let start = match health.open_since.take() {
+            Some(s) => s,
+            None => return,
+        };
+        let kind = health.open_kind.take().unwrap_or(AnomalyClass::ComputeSlow);
+        let gap = health.last_incident_epoch.map(|prev| start.saturating_sub(prev));
+        health.incidents.push(Incident {
+            epoch: start,
+            kind,
+            duration_epochs: epoch.saturating_sub(start).max(1),
+            gap_epochs: gap,
+        });
+        health.last_incident_epoch = Some(start);
+    }
+
+    /// Credit contention blame (victim-seconds) to a node.
+    pub fn add_blame(&mut self, node: usize, lost_s: f64) {
+        let health = self.nodes.entry(node).or_insert_with(NodeHealth::pristine);
+        health.blame_s += lost_s;
+    }
+
+    /// Current health score; nodes with no history are pristine (1.0).
+    pub fn score(&self, node: usize) -> f64 {
+        self.nodes.get(&node).map_or(1.0, |h| h.score)
+    }
+
+    /// Quarantine duration for a node being released while flagged.
+    ///
+    /// Memoryless mode (`predictive == false`), clean nodes, and
+    /// first-time offenders all get the floor (the old fixed 4 epochs).
+    /// Repeat offenders (≥ 2 recorded incidents, open or closed) get
+    /// `floor + round((1 - score) * scale)`, capped at `max_epochs` —
+    /// short recurrence intervals keep the score low (recovery never
+    /// catches up), so fast repeaters quarantine longest.
+    pub fn quarantine_epochs(&self, node: usize) -> usize {
+        if !self.predictive {
+            return self.cfg.floor_epochs;
+        }
+        let health = match self.nodes.get(&node) {
+            Some(h) => h,
+            None => return self.cfg.floor_epochs,
+        };
+        let total = health.incidents.len() + usize::from(health.open_since.is_some());
+        if total < 2 {
+            return self.cfg.floor_epochs;
+        }
+        let extra = ((1.0 - health.score) * self.cfg.quarantine_scale).round();
+        let extra = if extra.is_finite() && extra > 0.0 { extra as usize } else { 0 };
+        (self.cfg.floor_epochs + extra).min(self.cfg.max_epochs)
+    }
+
+    /// Predicted open epoch of the node's *next* incident: the last
+    /// incident's open epoch plus the mean recurrence gap. `None` until
+    /// the node has recorded at least one gap (two incidents).
+    pub fn predicted_next_incident(&self, node: usize) -> Option<usize> {
+        let health = self.nodes.get(&node)?;
+        let last = health.last_incident_epoch?;
+        let gap = health.mean_gap()?;
+        Some(last + gap.round().max(1.0) as usize)
+    }
+
+    /// Total closed + open incidents across the fleet.
+    pub fn total_incidents(&self) -> usize {
+        self.nodes
+            .values()
+            .map(|h| h.incidents.len() + usize::from(h.open_since.is_some()))
+            .sum()
+    }
+
+    /// Fleet-wide repeat-offender incident count (the report metric).
+    pub fn repeat_incidents(&self) -> u32 {
+        self.nodes.values().map(|h| h.repeats).sum()
+    }
+
+    // -- persistence -------------------------------------------------------
+
+    /// Serializable snapshot in the house JSON substrate. BTree iteration
+    /// order makes the output deterministic; `parse` round-trips it
+    /// bit-identically (pinned below).
+    pub fn to_json(&self) -> Json {
+        let nodes: Vec<Json> = self
+            .nodes
+            .iter()
+            .map(|(&node, h)| {
+                let incidents: Vec<Json> = h
+                    .incidents
+                    .iter()
+                    .map(|i| {
+                        Json::obj(vec![
+                            ("epoch", Json::Num(i.epoch as f64)),
+                            ("kind", Json::str(i.kind.token())),
+                            ("duration_epochs", Json::Num(i.duration_epochs as f64)),
+                            (
+                                "gap_epochs",
+                                i.gap_epochs.map_or(Json::Null, |g| Json::Num(g as f64)),
+                            ),
+                        ])
+                    })
+                    .collect();
+                Json::obj(vec![
+                    ("node", Json::Num(node as f64)),
+                    ("score", Json::Num(h.score)),
+                    ("incidents", Json::Arr(incidents)),
+                    (
+                        "open_since",
+                        h.open_since.map_or(Json::Null, |e| Json::Num(e as f64)),
+                    ),
+                    (
+                        "open_kind",
+                        h.open_kind.map_or(Json::Null, |k| Json::str(k.token())),
+                    ),
+                    (
+                        "last_incident_epoch",
+                        h.last_incident_epoch.map_or(Json::Null, |e| Json::Num(e as f64)),
+                    ),
+                    ("blame_s", Json::Num(h.blame_s)),
+                    ("repeats", Json::Num(h.repeats as f64)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("epoch", Json::Num(self.epoch as f64)),
+            ("predictive", Json::Bool(self.predictive)),
+            (
+                "config",
+                Json::obj(vec![
+                    ("floor_epochs", Json::Num(self.cfg.floor_epochs as f64)),
+                    ("max_epochs", Json::Num(self.cfg.max_epochs as f64)),
+                    ("quarantine_scale", Json::Num(self.cfg.quarantine_scale)),
+                    ("recovery", Json::Num(self.cfg.recovery)),
+                    ("penalty", Json::Num(self.cfg.penalty)),
+                ]),
+            ),
+            ("nodes", Json::Arr(nodes)),
+        ])
+    }
+
+    /// Parse a snapshot produced by [`to_json`]. Errors name the missing
+    /// or malformed field so a corrupt `--ledger-file` fails loudly.
+    pub fn parse(s: &str) -> Result<NodeLedger, String> {
+        let doc = Json::parse(s).map_err(|e| format!("ledger snapshot: {e}"))?;
+        let num = |j: &Json, key: &str| -> Result<f64, String> {
+            j.get(key)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| format!("ledger snapshot: missing number '{key}'"))
+        };
+        let opt_num = |j: &Json, key: &str| -> Option<usize> {
+            j.get(key).and_then(Json::as_f64).map(|n| n as usize)
+        };
+        let cfg_doc = doc
+            .get("config")
+            .ok_or_else(|| "ledger snapshot: missing 'config'".to_string())?;
+        let cfg = LedgerConfig {
+            floor_epochs: num(cfg_doc, "floor_epochs")? as usize,
+            max_epochs: num(cfg_doc, "max_epochs")? as usize,
+            quarantine_scale: num(cfg_doc, "quarantine_scale")?,
+            recovery: num(cfg_doc, "recovery")?,
+            penalty: num(cfg_doc, "penalty")?,
+        };
+        let mut ledger = NodeLedger::new(cfg);
+        ledger.epoch = num(&doc, "epoch")? as usize;
+        ledger.predictive = doc
+            .get("predictive")
+            .and_then(Json::as_bool)
+            .ok_or_else(|| "ledger snapshot: missing bool 'predictive'".to_string())?;
+        let nodes = doc
+            .get("nodes")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| "ledger snapshot: missing array 'nodes'".to_string())?;
+        for entry in nodes {
+            let node = num(entry, "node")? as usize;
+            let mut health = NodeHealth::pristine();
+            health.score = num(entry, "score")?;
+            health.blame_s = num(entry, "blame_s")?;
+            health.repeats = num(entry, "repeats")? as u32;
+            health.open_since = opt_num(entry, "open_since");
+            health.open_kind = match entry.get("open_kind").and_then(Json::as_str) {
+                Some(tok) => Some(parse_kind(tok)?),
+                None => None,
+            };
+            health.last_incident_epoch = opt_num(entry, "last_incident_epoch");
+            let incidents = entry
+                .get("incidents")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| "ledger snapshot: node missing 'incidents'".to_string())?;
+            for inc in incidents {
+                let tok = inc
+                    .get("kind")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| "ledger snapshot: incident missing 'kind'".to_string())?;
+                health.incidents.push(Incident {
+                    epoch: num(inc, "epoch")? as usize,
+                    kind: parse_kind(tok)?,
+                    duration_epochs: num(inc, "duration_epochs")? as usize,
+                    gap_epochs: opt_num(inc, "gap_epochs"),
+                });
+            }
+            ledger.nodes.insert(node, health);
+        }
+        Ok(ledger)
+    }
+}
+
+/// Inverse of [`AnomalyClass::token`] for snapshot parsing.
+fn parse_kind(tok: &str) -> Result<AnomalyClass, String> {
+    match tok {
+        "compute-slow" => Ok(AnomalyClass::ComputeSlow),
+        "comm-slow" => Ok(AnomalyClass::CommSlow),
+        "comm-hang" => Ok(AnomalyClass::CommHang),
+        "slow-masking-hang" => Ok(AnomalyClass::SlowMaskingHang),
+        other => Err(format!("ledger snapshot: unknown fault kind '{other}'")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn exercised_ledger() -> NodeLedger {
+        let mut ledger = NodeLedger::default();
+        ledger.predictive = true;
+        // Node 3: two incidents with a 6-epoch recurrence gap, then blame.
+        ledger.record_flag(3, 2, AnomalyClass::ComputeSlow);
+        ledger.advance_epoch(3);
+        ledger.record_release(3, 4);
+        ledger.advance_epoch(5);
+        ledger.record_flag(3, 8, AnomalyClass::CommSlow);
+        ledger.record_release(3, 9);
+        ledger.add_blame(3, 42.5);
+        // Node 7: one open incident, never released.
+        ledger.record_flag(7, 6, AnomalyClass::CommHang);
+        ledger.advance_epoch(10);
+        ledger
+    }
+
+    #[test]
+    fn score_decays_on_incident_and_recovers_when_clean() {
+        let mut ledger = NodeLedger::default();
+        assert_eq!(ledger.score(0), 1.0);
+        ledger.record_flag(0, 1, AnomalyClass::ComputeSlow);
+        let hit = ledger.score(0);
+        assert!((hit - (1.0 - INCIDENT_PENALTY)).abs() < 1e-12);
+        // Open incidents do not recover.
+        ledger.advance_epoch(2);
+        assert_eq!(ledger.score(0), hit);
+        // Released nodes recover toward 1.0 but never pass it.
+        ledger.record_release(0, 3);
+        ledger.advance_epoch(4);
+        assert!(ledger.score(0) > hit);
+        for e in 5..5000 {
+            ledger.advance_epoch(e);
+        }
+        assert!(ledger.score(0) <= 1.0 && ledger.score(0) > 0.999);
+    }
+
+    #[test]
+    fn record_flag_is_idempotent_while_open() {
+        let mut ledger = NodeLedger::default();
+        ledger.record_flag(0, 1, AnomalyClass::ComputeSlow);
+        let once = ledger.score(0);
+        ledger.record_flag(0, 2, AnomalyClass::ComputeSlow);
+        assert_eq!(ledger.score(0), once);
+        assert_eq!(ledger.total_incidents(), 1);
+        assert_eq!(ledger.repeat_incidents(), 0);
+    }
+
+    #[test]
+    fn repeat_incidents_count_reopens_only() {
+        let mut ledger = NodeLedger::default();
+        ledger.record_flag(0, 1, AnomalyClass::ComputeSlow);
+        ledger.record_release(0, 2);
+        assert_eq!(ledger.repeat_incidents(), 0);
+        ledger.record_flag(0, 6, AnomalyClass::ComputeSlow);
+        assert_eq!(ledger.repeat_incidents(), 1);
+        let gap = ledger.nodes[&0].incidents[0].gap_epochs;
+        assert_eq!(gap, None);
+        ledger.record_release(0, 7);
+        assert_eq!(ledger.nodes[&0].incidents[1].gap_epochs, Some(5));
+    }
+
+    #[test]
+    fn memoryless_mode_always_answers_the_floor() {
+        let mut ledger = exercised_ledger();
+        ledger.predictive = false;
+        assert_eq!(ledger.quarantine_epochs(3), FLOOR_EPOCHS);
+        assert_eq!(ledger.quarantine_epochs(7), FLOOR_EPOCHS);
+        assert_eq!(ledger.quarantine_epochs(99), FLOOR_EPOCHS);
+    }
+
+    #[test]
+    fn predictive_quarantine_scales_with_health_deficit() {
+        let ledger = exercised_ledger();
+        // Node 3 is a repeat offender with a battered score: longer than
+        // the floor, still under the cap.
+        let q = ledger.quarantine_epochs(3);
+        assert!(q > FLOOR_EPOCHS && q <= MAX_EPOCHS, "q = {q}");
+        // Node 7 has a single (open) incident: floor.
+        assert_eq!(ledger.quarantine_epochs(7), FLOOR_EPOCHS);
+        // Unknown nodes: floor.
+        assert_eq!(ledger.quarantine_epochs(99), FLOOR_EPOCHS);
+        // A hammered score pins at the cap.
+        let mut worst = ledger.clone();
+        for e in 0..60 {
+            worst.record_flag(3, 100 + 2 * e, AnomalyClass::ComputeSlow);
+            worst.record_release(3, 101 + 2 * e);
+        }
+        assert_eq!(worst.quarantine_epochs(3), MAX_EPOCHS);
+    }
+
+    #[test]
+    fn predicted_next_incident_needs_two_incidents() {
+        let ledger = exercised_ledger();
+        // Node 3: incidents opened at 2 and 8 → mean gap 6 → next at 14.
+        assert_eq!(ledger.predicted_next_incident(3), Some(14));
+        // Node 7 has no closed gap yet.
+        assert_eq!(ledger.predicted_next_incident(7), None);
+        assert_eq!(ledger.predicted_next_incident(99), None);
+    }
+
+    #[test]
+    fn snapshot_round_trip_is_bit_identical() {
+        let ledger = exercised_ledger();
+        let text = ledger.to_json().to_string();
+        let back = NodeLedger::parse(&text).expect("round trip");
+        assert_eq!(back, ledger);
+        // And the re-serialization is byte-identical (snapshot stability).
+        assert_eq!(back.to_json().to_string(), text);
+    }
+
+    #[test]
+    fn snapshot_format_is_pinned() {
+        let mut ledger = NodeLedger::default();
+        ledger.predictive = true;
+        ledger.record_flag(1, 2, AnomalyClass::CommSlow);
+        ledger.record_release(1, 3);
+        ledger.epoch = 3;
+        assert_eq!(
+            ledger.to_json().to_string(),
+            concat!(
+                "{\"config\":{\"floor_epochs\":4,\"max_epochs\":32,",
+                "\"penalty\":0.35,\"quarantine_scale\":16,\"recovery\":0.02},",
+                "\"epoch\":3,\"nodes\":[{\"blame_s\":0,\"incidents\":",
+                "[{\"duration_epochs\":1,\"epoch\":2,\"gap_epochs\":null,",
+                "\"kind\":\"comm-slow\"}],\"last_incident_epoch\":2,",
+                "\"node\":1,\"open_kind\":null,\"open_since\":null,",
+                "\"repeats\":0,\"score\":0.65}],\"predictive\":true}"
+            )
+        );
+    }
+
+    #[test]
+    fn parse_rejects_corrupt_snapshots() {
+        assert!(NodeLedger::parse("not json").is_err());
+        assert!(NodeLedger::parse("{}").is_err());
+        let bad_kind = "{\"config\":{\"floor_epochs\":4,\"max_epochs\":32,\
+                        \"penalty\":0.35,\"quarantine_scale\":16,\"recovery\":0.02},\
+                        \"epoch\":0,\"nodes\":[{\"blame_s\":0,\"incidents\":\
+                        [{\"duration_epochs\":1,\"epoch\":2,\"gap_epochs\":null,\
+                        \"kind\":\"gremlins\"}],\"last_incident_epoch\":2,\"node\":1,\
+                        \"open_kind\":null,\"open_since\":null,\"repeats\":0,\
+                        \"score\":0.65}],\"predictive\":false}";
+        let err = NodeLedger::parse(bad_kind).unwrap_err();
+        assert!(err.contains("gremlins"), "{err}");
+    }
+}

@@ -17,7 +17,11 @@
 //! [`diagnose`] closes the hang-vs-slow gap: scripted `hang` faults block
 //! collectives at a watchdog instead of stretching them, and an op-trace
 //! taxonomy pins the culprit and routes hangs straight to restart
-//! (`falcon report diagnosis`, docs/DIAGNOSIS.md). The
+//! (`falcon report diagnosis`, docs/DIAGNOSIS.md). [`ledger`] gives the
+//! shared pool memory across jobs: a persistent per-node health ledger
+//! with decaying scores, predictive quarantine, and health-aware
+//! placement/admission policies (`falcon report ledger`, docs/LEDGER.md).
+//! The
 //! determinism conventions all of this rests on are machine-checked by
 //! [`audit`] (`falcon audit`), a dependency-free static-analysis pass
 //! over this crate's own source. See the top-level README.md for the
@@ -38,6 +42,7 @@ pub mod fabric;
 pub mod fleet;
 pub mod inject;
 pub mod ckpt;
+pub mod ledger;
 pub mod metrics;
 pub mod mitigate;
 pub mod monitor;

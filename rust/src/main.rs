@@ -5,9 +5,11 @@
 //! ```text
 //! report <id|all> [--iters N] [--seed S] [--fast true|false]
 //!     Regenerate a paper table/figure (fig1..fig20, tab1..tab7), or a
-//!     beyond-paper report (fleet, fleet_cluster, whatif, diagnosis —
-//!     the last scores the hang-vs-slow taxonomy against scripted
-//!     ground truth; see docs/DIAGNOSIS.md).
+//!     beyond-paper report (fleet, fleet_cluster, whatif, diagnosis,
+//!     ledger — diagnosis scores the hang-vs-slow taxonomy against
+//!     scripted ground truth, see docs/DIAGNOSIS.md; ledger compares
+//!     memoryless vs health-aware policies on a chronically flaky
+//!     fleet, see docs/LEDGER.md).
 //! train [--preset tiny|small|base] [--dp D] [--steps N] [--inject true]
 //!     Live data-parallel training through the AOT PJRT artifacts with
 //!     FALCON detection + mitigation in the loop.
@@ -31,14 +33,19 @@
 //!     builder-API shortcut over `falcon run`).
 //! fleet [--jobs N] [--iters I] [--seed S] [--workers W] [--boost B]
 //!       [--compare true|false] [--spare F] [--epoch-len L] [--stagger G]
-//!       [--policy first-fit|packed|spread|straggler-aware|private]
+//!       [--policy first-fit|packed|spread|straggler-aware|
+//!                 health-weighted|predictive-quarantine|private]
+//!       [--ledger true] [--flaky F] [--alpha A] [--ledger-file PATH]
 //!     Fleet campaign: N concurrent simulated jobs sharded across worker
 //!     threads, with a deterministic cross-job aggregate report.
 //!     --policy moves the fleet onto ONE shared cluster: jobs contend
 //!     for spine-leaf uplink bandwidth and every S3/S4 mitigation must
 //!     win a grant from the cluster arbiter (--spare sizes the healthy
 //!     spare pool; 0.0 saturates it; --stagger spreads job start epochs so
-//!     the pool breathes).
+//!     the pool breathes). --ledger attaches the persistent node-health
+//!     ledger (docs/LEDGER.md); --flaky/--alpha make a slice of the pool
+//!     chronically flaky on heavy-tailed gaps; --ledger-file seeds the
+//!     campaign from a prior snapshot and writes the evolved ledger back.
 //! campaign [--fast true|false]
 //!     The §3 characterization campaign (Fig 1 + Table 1).
 //! audit [--src DIR] [--json true] [--graph [--dot|--json]]
@@ -464,7 +471,31 @@ fn run_sim(args: &Args) {
 }
 
 fn run_fleet_cmd(args: &Args) {
-    let cfg = falcon::reports::fleet::config_from_args(args);
+    let mut cfg = falcon::reports::fleet::config_from_args(args);
+    // --ledger-file seeds the campaign from a prior snapshot and writes
+    // the evolved ledger back afterwards, so fleet health persists across
+    // `falcon fleet` invocations (implies --ledger).
+    let ledger_file = args.get("ledger-file").map(str::to_string);
+    if let Some(path) = &ledger_file {
+        match std::fs::read_to_string(path) {
+            Ok(text) => match falcon::ledger::NodeLedger::parse(&text) {
+                Ok(l) => {
+                    eprintln!(
+                        "[fleet] seeding ledger from {path}: {} tracked nodes, {} incidents",
+                        l.len(),
+                        l.total_incidents()
+                    );
+                    cfg.ledger_init = Some(l);
+                }
+                Err(e) => {
+                    eprintln!("[fleet] ignoring corrupt ledger snapshot {path}: {e}");
+                    cfg.ledger = true;
+                }
+            },
+            // A missing file just starts a fresh ledger (first campaign).
+            Err(_) => cfg.ledger = true,
+        }
+    }
     eprintln!(
         "[fleet] {} jobs x {} iters, seed {}, workers {} (0 = auto), compare {}, cluster {}",
         cfg.jobs,
@@ -476,6 +507,12 @@ fn run_fleet_cmd(args: &Args) {
     );
     let report = falcon::fleet::run_fleet(&cfg);
     println!("{}", report.render());
+    if let (Some(path), Some(ledger)) = (&ledger_file, &report.ledger) {
+        match std::fs::write(path, ledger.to_json().to_string()) {
+            Ok(()) => eprintln!("[fleet] ledger snapshot written to {path}"),
+            Err(e) => eprintln!("[fleet] failed to write ledger snapshot {path}: {e}"),
+        }
+    }
 }
 
 /// `falcon audit`: run the invariant lint over the crate source (or

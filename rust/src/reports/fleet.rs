@@ -31,7 +31,8 @@ pub fn config_from_args(args: &Args) -> FleetConfig {
             None => {
                 eprintln!(
                     "[fleet] unknown --policy '{p}' (want first-fit|packed|spread|\
-                     straggler-aware|private); falling back to private clusters"
+                     straggler-aware|health-weighted|predictive-quarantine|private); \
+                     falling back to private clusters"
                 );
                 None
             }
@@ -47,7 +48,13 @@ pub fn config_from_args(args: &Args) -> FleetConfig {
         epoch_len: args.usize_or("epoch-len", d.epoch_len),
         stagger: args.f64_or("stagger", 0.0),
     };
-    spec.to_config(args.usize_or("iters", d.iters), args.u64_or("seed", d.seed))
+    let mut cfg = spec.to_config(args.usize_or("iters", d.iters), args.u64_or("seed", d.seed));
+    // Ledger knobs ride along (`--ledger true`, `--flaky 0.3`, `--alpha
+    // 1.1`); `falcon fleet --ledger-file` seeding is layered on in main.
+    cfg.ledger = args.bool_or("ledger", d.ledger);
+    cfg.flaky_frac = args.f64_or("flaky", d.flaky_frac);
+    cfg.flaky_alpha = args.f64_or("alpha", d.flaky_alpha);
+    cfg
 }
 
 pub fn fleet(args: &Args) -> String {
@@ -134,6 +141,21 @@ mod tests {
         }
         assert_eq!(config_from_args(&parse(&["--policy", "private"])).policy, None);
         assert_eq!(config_from_args(&parse(&["--policy", "bogus"])).policy, None);
+    }
+
+    #[test]
+    fn ledger_flags_lower_onto_the_config() {
+        let cfg = config_from_args(&parse(&[
+            "--policy", "health-weighted", "--ledger", "true", "--flaky", "0.3",
+            "--alpha", "1.1",
+        ]));
+        assert_eq!(cfg.policy, Some(Policy::HealthWeighted));
+        assert!(cfg.ledger);
+        assert_eq!(cfg.flaky_frac, 0.3);
+        assert_eq!(cfg.flaky_alpha, 1.1);
+        let cfg = config_from_args(&parse(&["--policy", "predictive-quarantine"]));
+        assert_eq!(cfg.policy, Some(Policy::PredictiveQuarantine));
+        assert!(!cfg.ledger, "ledger stays off unless asked");
     }
 
     #[test]

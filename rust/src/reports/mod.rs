@@ -28,6 +28,9 @@
 //! - [`diagnosis`] — beyond-paper hang-vs-slow taxonomy scorecard
 //!   (`diagnosis` id): per-class precision/recall/latency and a confusion
 //!   matrix against scripted ground truth (see [`crate::diagnose`]).
+//! - [`ledger`] — beyond-paper node-health ledger campaign (`ledger` id):
+//!   a chronically flaky fleet under memoryless, health-weighted, and
+//!   predictive-quarantine policies (see [`crate::ledger`]).
 //!
 //! Conventions: every generator takes [`Args`] (knobs like `--iters`,
 //! `--seed`, `--fast`) and returns a self-contained string — no generator
@@ -38,6 +41,7 @@ pub mod cases;
 pub mod detection;
 pub mod diagnosis;
 pub mod fleet;
+pub mod ledger;
 pub mod mitigation;
 pub mod overhead;
 pub mod scale;
@@ -54,7 +58,8 @@ pub const ALL: &[&str] = &[
 
 /// Beyond-paper report ids (kept out of [`ALL`] so `report all` stays the
 /// paper set; `falcon list` prints them under their own section).
-pub const BEYOND_PAPER: &[&str] = &["fleet", "fleet_cluster", "whatif", "diagnosis", "replan"];
+pub const BEYOND_PAPER: &[&str] =
+    &["fleet", "fleet_cluster", "whatif", "diagnosis", "replan", "ledger"];
 
 /// Generate one report by id. `args` supplies knobs like `--iters`,
 /// `--seed`, `--fast`.
@@ -89,6 +94,7 @@ pub fn generate(id: &str, args: &Args) -> String {
         "whatif" => whatif::whatif(args),
         "diagnosis" => diagnosis::diagnosis(args),
         "replan" => mitigation::replan(args),
+        "ledger" => ledger::ledger(args),
         other => format!(
             "unknown report '{other}'; available: {ALL:?} \
              plus beyond-paper: {BEYOND_PAPER:?}\n"
@@ -126,5 +132,6 @@ mod tests {
         assert!(out.contains("unknown report"));
         assert!(out.contains("fleet_cluster"), "beyond-paper ids must be mentioned: {out}");
         assert!(out.contains("diagnosis"), "beyond-paper ids must be mentioned: {out}");
+        assert!(out.contains("ledger"), "beyond-paper ids must be mentioned: {out}");
     }
 }

@@ -5,7 +5,7 @@
 use crate::cluster::Policy;
 use crate::inject::{FailSlowKind, Target};
 
-use super::{FaultSpec, FleetSpec, ScenarioSpec};
+use super::{FaultSpec, FleetSpec, LedgerSpec, ScenarioSpec};
 
 /// Names of the built-in scenarios, in presentation order.
 pub const LIBRARY: &[&str] = &[
@@ -26,6 +26,8 @@ pub const LIBRARY: &[&str] = &[
     "noisy-neighbor",
     "stage-straggler-persistent",
     "no-spares-degradation",
+    "recurrent-flaky-node",
+    "heavy-tailed-fleet",
 ];
 
 /// Build one library scenario by name (`None` for unknown names).
@@ -190,6 +192,37 @@ pub fn find(name: &str) -> Option<ScenarioSpec> {
                 epoch_len: 10,
                 stagger: 0.0,
             }),
+        // --- node-health ledger scenarios --------------------------------
+        "recurrent-flaky-node" => ScenarioSpec::new(name, 2, 4, 1)
+            .describe("chronically flaky nodes relapse; predictive quarantine learns them")
+            .iters(60)
+            .seed(41)
+            .with_fleet(FleetSpec {
+                jobs: 12,
+                workers: 0,
+                boost: 4.0,
+                compare: false,
+                policy: Some(Policy::PredictiveQuarantine),
+                spare: 0.25,
+                epoch_len: 10,
+                stagger: 1.0,
+            })
+            .with_ledger(LedgerSpec { enabled: true, flaky: 0.15, alpha: 1.2 }),
+        "heavy-tailed-fleet" => ScenarioSpec::new(name, 2, 4, 1)
+            .describe("a third of the pool flares on Pareto gaps; placement follows health")
+            .iters(60)
+            .seed(42)
+            .with_fleet(FleetSpec {
+                jobs: 16,
+                workers: 0,
+                boost: 2.0,
+                compare: false,
+                policy: Some(Policy::HealthWeighted),
+                spare: 0.3,
+                epoch_len: 10,
+                stagger: 1.5,
+            })
+            .with_ledger(LedgerSpec { enabled: true, flaky: 0.3, alpha: 1.1 }),
         _ => return None,
     })
 }
@@ -212,7 +245,7 @@ mod tests {
             assert!(!spec.description.is_empty(), "{} has no description", spec.name);
             assert!(LIBRARY.contains(&spec.name.as_str()));
         }
-        assert_eq!(LIBRARY.len(), 17);
+        assert_eq!(LIBRARY.len(), 19);
         assert!(find("no-such-scenario").is_none());
     }
 
@@ -261,6 +294,19 @@ mod tests {
         let (job, events) = &cfg.scripted[0];
         assert_eq!(*job, 0);
         assert_eq!(events.len(), 1, "one-shot fault expands to one event");
+    }
+
+    #[test]
+    fn ledger_scenarios_lower_onto_the_fleet_engine() {
+        let spec = find("recurrent-flaky-node").unwrap();
+        let cfg = spec.fleet_config().expect("fleet scenario");
+        assert!(cfg.ledger, "[ledger] must lower onto FleetConfig::ledger");
+        assert_eq!(cfg.flaky_frac, 0.15);
+        assert_eq!(cfg.policy, Some(Policy::PredictiveQuarantine));
+        let hw = find("heavy-tailed-fleet").unwrap().fleet_config().unwrap();
+        assert!(hw.ledger);
+        assert_eq!(hw.policy, Some(Policy::HealthWeighted));
+        assert_eq!(hw.flaky_alpha, 1.1);
     }
 
     #[test]

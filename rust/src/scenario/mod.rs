@@ -300,7 +300,9 @@ impl Default for FleetSpec {
 }
 
 impl FleetSpec {
-    /// Lower this spec onto the fleet engine's configuration.
+    /// Lower this spec onto the fleet engine's configuration. The
+    /// `[ledger]` section (if any) is layered on by
+    /// [`ScenarioSpec::fleet_config`].
     pub fn to_config(&self, iters: usize, seed: u64) -> FleetConfig {
         FleetConfig {
             jobs: self.jobs,
@@ -315,7 +317,34 @@ impl FleetSpec {
             stagger: self.stagger,
             scripted: Vec::new(),
             falcon: FalconConfig::default(),
+            ledger: false,
+            ledger_init: None,
+            flaky_frac: 0.0,
+            flaky_alpha: 1.2,
         }
+    }
+}
+
+/// `[ledger]` — attach the persistent node-health ledger
+/// ([`crate::ledger`]) to a shared-cluster fleet campaign, optionally
+/// with a chronically flaky slice of the node pool whose flares recur on
+/// heavy-tailed (Pareto) gaps.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LedgerSpec {
+    /// Attach the ledger (incident records, decaying scores, ledger-driven
+    /// quarantine under the predictive policy).
+    pub enabled: bool,
+    /// Fraction of shared nodes that are chronically flaky (0.0 = none;
+    /// flares then degrade whichever job sits on them).
+    pub flaky: f64,
+    /// Pareto tail index of flare recurrence gaps (smaller = heavier tail,
+    /// faster relapses).
+    pub alpha: f64,
+}
+
+impl Default for LedgerSpec {
+    fn default() -> Self {
+        LedgerSpec { enabled: true, flaky: 0.0, alpha: 1.2 }
     }
 }
 
@@ -328,6 +357,7 @@ pub struct ScenarioSpec {
     pub run: RunSpec,
     pub faults: Vec<FaultSpec>,
     pub fleet: Option<FleetSpec>,
+    pub ledger: Option<LedgerSpec>,
 }
 
 impl ScenarioSpec {
@@ -341,6 +371,7 @@ impl ScenarioSpec {
             run: RunSpec::default(),
             faults: Vec::new(),
             fleet: None,
+            ledger: None,
         }
     }
 
@@ -423,6 +454,11 @@ impl ScenarioSpec {
         self
     }
 
+    pub fn with_ledger(mut self, l: LedgerSpec) -> Self {
+        self.ledger = Some(l);
+        self
+    }
+
     // --- derived ----------------------------------------------------------
 
     pub fn cfg(&self) -> ParallelConfig {
@@ -474,6 +510,22 @@ impl ScenarioSpec {
         }
         if self.run.iters == 0 {
             return Err(ScenarioError::field("run.iters", "must be >= 1"));
+        }
+        if let Some(ls) = &self.ledger {
+            let shared = self.fleet.as_ref().is_some_and(|fs| fs.policy.is_some());
+            if !shared {
+                return Err(ScenarioError::field(
+                    "ledger",
+                    "[ledger] needs a [fleet] section with a shared policy \
+                     (the ledger lives on the shared node pool)",
+                ));
+            }
+            if !(0.0..1.0).contains(&ls.flaky) {
+                return Err(ScenarioError::field("ledger.flaky", "must be in [0, 1)"));
+            }
+            if !(ls.alpha > 0.0) {
+                return Err(ScenarioError::field("ledger.alpha", "must be > 0"));
+            }
         }
         if let Some(fs) = &self.fleet {
             if fs.jobs == 0 {
@@ -593,6 +645,11 @@ impl ScenarioSpec {
         self.fleet.as_ref().map(|fs| {
             let mut cfg = fs.to_config(self.run.iters, self.run.seed);
             cfg.falcon.replan = self.run.replan;
+            if let Some(ls) = &self.ledger {
+                cfg.ledger = ls.enabled;
+                cfg.flaky_frac = ls.flaky;
+                cfg.flaky_alpha = ls.alpha;
+            }
             for f in &self.faults {
                 // Validated specs always carry a job id here; tolerate an
                 // unvalidated caller by skipping the (invalid) fault

@@ -34,7 +34,7 @@ use crate::inject::{FailSlowKind, Target};
 
 use super::{
     gpu_class_token, kind_token, parse_gpu_class, parse_kind, parse_target, target_token,
-    FaultSpec, FleetSpec, ScenarioError, ScenarioSpec,
+    FaultSpec, FleetSpec, LedgerSpec, ScenarioError, ScenarioSpec,
 };
 
 fn perr(line: usize, msg: impl Into<String>) -> ScenarioError {
@@ -140,6 +140,7 @@ enum Section {
     Topology,
     Run,
     Fleet,
+    Ledger,
     Fault,
 }
 
@@ -151,6 +152,7 @@ pub(crate) fn parse(src: &str) -> Result<ScenarioSpec, ScenarioError> {
         run: Default::default(),
         faults: Vec::new(),
         fleet: None,
+        ledger: None,
     };
     let mut drafts: Vec<FaultDraft> = Vec::new();
     let mut section = Section::Top;
@@ -181,10 +183,18 @@ pub(crate) fn parse(src: &str) -> Result<ScenarioSpec, ScenarioError> {
                     }
                     Section::Fleet
                 }
+                "ledger" => {
+                    if spec.ledger.is_none() {
+                        spec.ledger = Some(LedgerSpec::default());
+                    }
+                    Section::Ledger
+                }
                 other => {
                     return Err(perr(
                         ln,
-                        format!("unknown section '[{other}]' (want topology, run, or fleet)"),
+                        format!(
+                            "unknown section '[{other}]' (want topology, run, fleet, or ledger)"
+                        ),
                     ))
                 }
             };
@@ -249,6 +259,17 @@ pub(crate) fn parse(src: &str) -> Result<ScenarioSpec, ScenarioError> {
                     "epoch_len" => f.epoch_len = p_usize(val, ln)?,
                     "stagger" => f.stagger = p_f64(val, ln)?,
                     _ => return Err(perr(ln, format!("unknown [fleet] key '{key}'"))),
+                }
+            }
+            Section::Ledger => {
+                let Some(l) = spec.ledger.as_mut() else {
+                    return Err(perr(ln, "[ledger] section lost its spec".to_string()));
+                };
+                match key {
+                    "enabled" => l.enabled = p_bool(val, ln)?,
+                    "flaky" => l.flaky = p_f64(val, ln)?,
+                    "alpha" => l.alpha = p_f64(val, ln)?,
+                    _ => return Err(perr(ln, format!("unknown [ledger] key '{key}'"))),
                 }
             }
             Section::Fault => {
@@ -352,6 +373,13 @@ pub(crate) fn render(spec: &ScenarioSpec) -> String {
         let _ = writeln!(out, "epoch_len = {}", f.epoch_len);
         let _ = writeln!(out, "stagger = {}", f.stagger);
     }
+
+    if let Some(l) = &spec.ledger {
+        out.push_str("\n[ledger]\n");
+        let _ = writeln!(out, "enabled = {}", l.enabled);
+        let _ = writeln!(out, "flaky = {}", l.flaky);
+        let _ = writeln!(out, "alpha = {}", l.alpha);
+    }
     out
 }
 
@@ -438,6 +466,27 @@ mod tests {
         }
         // Semantic problems surface as typed field errors.
         let bad = "name = \"x\"\n[topology]\nmodel = \"gpt9\"\n";
+        assert!(matches!(
+            ScenarioSpec::parse(bad),
+            Err(ScenarioError::Field { .. })
+        ));
+    }
+
+    #[test]
+    fn ledger_section_parses_and_validates() {
+        let src = "name = \"l\"\n[fleet]\npolicy = \"predictive\"\n\
+                   [ledger]\nflaky = 0.2\nalpha = 1.1\n";
+        let spec = ScenarioSpec::parse(src).unwrap();
+        let ls = spec.ledger.unwrap();
+        assert!(ls.enabled, "enabled defaults to true");
+        assert_eq!(ls.flaky, 0.2);
+        assert_eq!(ls.alpha, 1.1);
+        assert_eq!(
+            spec.fleet.unwrap().policy,
+            Some(Policy::PredictiveQuarantine)
+        );
+        // [ledger] without a shared-cluster fleet is a typed field error.
+        let bad = "name = \"l\"\n[ledger]\nflaky = 0.2\n";
         assert!(matches!(
             ScenarioSpec::parse(bad),
             Err(ScenarioError::Field { .. })

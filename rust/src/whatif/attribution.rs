@@ -5,6 +5,7 @@
 use std::collections::BTreeMap;
 
 use crate::fleet::FleetTrace;
+use crate::ledger::NodeLedger;
 // The `Attribution`/`FaultAttribution` result types live in
 // `crate::scenario::outcome` (they are part of the Outcome shape);
 // this module computes them.
@@ -130,6 +131,24 @@ pub fn contention_blame(trace: &FleetTrace) -> Vec<BlameEntry> {
     out
 }
 
+/// Fold contention blame into a node-health ledger: each culprit job's
+/// blamed seconds spread evenly over the shared nodes it sat on
+/// ([`FleetTrace::placements`]), accruing in the per-node `blame_s`
+/// counters the `falcon report ledger` campaign surfaces. Jobs with no
+/// recorded placement (never admitted) contribute nothing.
+pub fn ledger_blame(trace: &FleetTrace, ledger: &mut NodeLedger) {
+    for b in contention_blame(trace) {
+        let nodes = match trace.placements.get(&b.culprit) {
+            Some(p) if !p.is_empty() => p,
+            _ => continue,
+        };
+        let share = b.lost_s / nodes.len() as f64;
+        for &n in nodes {
+            ledger.add_blame(n, share);
+        }
+    }
+}
+
 /// Render the top `limit` blame pairs as text lines — the one formatter
 /// shared by the `falcon whatif` CLI and the `whatif` report.
 pub fn render_blame(blame: &[BlameEntry], limit: usize) -> String {
@@ -225,6 +244,7 @@ mod tests {
                 ContentionSample { epoch: 0, leaf: 0, job: 2, scale: 0.8, volume: 3e6 },
             ],
             job_ideal_iter_s: vec![2.0, 1.0, 1.0],
+            placements: BTreeMap::new(),
         };
         let blame = contention_blame(&trace);
         let get = |v: usize, c: usize| {
@@ -241,6 +261,34 @@ mod tests {
         assert!(blame.iter().all(|b| b.lost_s > 0.0));
         // Sorted by lost_s descending.
         assert!(blame.windows(2).all(|w| w[0].lost_s >= w[1].lost_s));
+    }
+
+    #[test]
+    fn ledger_blame_spreads_over_culprit_placements() {
+        // Same roster as above, now with recorded placements: job 1 sat on
+        // nodes {4, 5} (its 5 s of blame splits evenly), job 2 on node 6
+        // (all 15 s land there). Job 0 is a victim only.
+        let mut placements = BTreeMap::new();
+        placements.insert(1usize, vec![4usize, 5]);
+        placements.insert(2, vec![6]);
+        let trace = FleetTrace {
+            epoch_len: 10,
+            epochs: 1,
+            contention: vec![
+                ContentionSample { epoch: 0, leaf: 0, job: 0, scale: 0.5, volume: 1e6 },
+                ContentionSample { epoch: 0, leaf: 0, job: 1, scale: 0.8, volume: 1e6 },
+                ContentionSample { epoch: 0, leaf: 0, job: 2, scale: 0.8, volume: 3e6 },
+            ],
+            job_ideal_iter_s: vec![2.0, 1.0, 1.0],
+            placements,
+        };
+        let mut ledger = NodeLedger::default();
+        ledger_blame(&trace, &mut ledger);
+        let blame_on = |n: usize| ledger.nodes.get(&n).map_or(0.0, |h| h.blame_s);
+        assert!((blame_on(4) - 2.5).abs() < 1e-9, "{}", blame_on(4));
+        assert!((blame_on(5) - 2.5).abs() < 1e-9, "{}", blame_on(5));
+        assert!((blame_on(6) - 15.0).abs() < 1e-9, "{}", blame_on(6));
+        assert_eq!(blame_on(0), 0.0, "victims accrue no blame");
     }
 
     #[test]

@@ -240,9 +240,9 @@ fn graph_snapshot_of_src_stays_in_band() {
         mods,
         vec![
             "anyhow", "audit", "ckpt", "cluster", "collectives", "coordinator", "detect",
-            "diagnose", "fabric", "fleet", "inject", "lib", "main", "metrics", "mitigate",
-            "monitor", "pipeline", "reports", "runtime", "scenario", "sim", "simkit", "trainer",
-            "util", "whatif", "xla",
+            "diagnose", "fabric", "fleet", "inject", "ledger", "lib", "main", "metrics",
+            "mitigate", "monitor", "pipeline", "reports", "runtime", "scenario", "sim", "simkit",
+            "trainer", "util", "whatif", "xla",
         ]
     );
     // Size bands around the current snapshot (63 files, ~1015 fns,

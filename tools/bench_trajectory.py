@@ -149,6 +149,23 @@ def replan(doc):
     return (solves, recovered if isinstance(recovered, (int, float)) else None)
 
 
+def ledger(doc):
+    """(observer overhead %, repeat reduction %) of the ledger section, or None.
+
+    Informational only — printed, never gated: the repeat-incident floor is
+    enforced in-tree by the ledger report tests; older artifacts predate
+    the section and are tolerated silently.
+    """
+    lg = doc.get("ledger")
+    if not isinstance(lg, dict):
+        return None
+    overhead = lg.get("overhead_pct")
+    if not isinstance(overhead, (int, float)):
+        return None
+    reduction = lg.get("repeat_reduction_pct")
+    return (overhead, reduction if isinstance(reduction, (int, float)) else None)
+
+
 def sparkline(values):
     ticks = "▁▂▃▄▅▆▇█"
     lo, hi = min(values), max(values)
@@ -204,6 +221,7 @@ def main(argv):
                 diagnosis(doc),
                 audit(doc),
                 replan(doc),
+                ledger(doc),
             )
         )
 
@@ -218,7 +236,7 @@ def main(argv):
     print(f"fleet engine trajectory ({len(points)} recorded run(s)):\n")
     print(f"  {'artifact':<{width}}  {'jobs':>6}  {'jobs/sec':>9}  policy sweep")
     prev = None
-    for f, jobs, jps, sweep, _ws, _dx, _au, _rp in points:
+    for f, jobs, jps, sweep, _ws, _dx, _au, _rp, _lg in points:
         delta = "" if prev is None else f" ({100.0 * (jps / prev - 1.0):+.1f}%)"
         sweep_txt = (
             "  ".join(f"{p}={v:.0f}" for p, v in sorted(sweep.items())) or "-"
@@ -233,9 +251,10 @@ def main(argv):
           f"(first {rates[0]:.1f} -> last {rates[-1]:.1f} jobs/s, "
           f"{100.0 * (rates[-1] / rates[0] - 1.0):+.1f}%)")
     # Informational (never gated): what-if counterfactual replay rate,
-    # diagnosis accuracy / op-trace overhead, audit scan wall-time, and the
-    # S5 replan planner rate / saturated-pool recovery.
-    for f, *_rest, ws, dx, au, rp in points:
+    # diagnosis accuracy / op-trace overhead, audit scan wall-time, the
+    # S5 replan planner rate / saturated-pool recovery, and the node-health
+    # ledger observer overhead / repeat-incident reduction.
+    for f, *_rest, ws, dx, au, rp, lg in points:
         if ws is not None:
             rate, speedup = ws
             extra = "" if speedup is None else f" ({speedup:.1f}x vs cold runs)"
@@ -273,6 +292,17 @@ def main(argv):
             print(
                 f"  s5 replan [{os.path.relpath(f)}]: "
                 f"{solves:.1f} solves/s{extra}"
+            )
+        if lg is not None:
+            overhead, reduction = lg
+            extra = (
+                ""
+                if reduction is None
+                else f", {reduction:.1f}% repeat incidents prevented"
+            )
+            print(
+                f"  ledger [{os.path.relpath(f)}]: "
+                f"observer overhead {overhead:+.1f}%{extra}"
             )
     return 0
 
